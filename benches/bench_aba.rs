@@ -1,0 +1,82 @@
+//! End-to-end ABA benchmarks: runtime scaling in N, K, D; variant and
+//! hierarchical-decomposition ablations; solver ablation.
+//!
+//! Regenerates the *performance* claims of the paper at reduced scale:
+//! ABA is O(N(D + log N + K^2)) flat and O(N L K^(2/L)) decomposed
+//! (§4.5); decomposition buys ~2 orders of magnitude at large K for
+//! <0.1% objective loss (Figure 7's message).
+
+use aba::algo::{run_aba, run_hierarchical, AbaConfig, ClusterStats, Variant};
+use aba::assignment::SolverKind;
+use aba::data::synth::{generate, SynthKind};
+use aba::util::timer::timed;
+
+fn mk(n: usize, d: usize, seed: u64) -> aba::data::Dataset {
+    generate(SynthKind::GaussianMixture { components: 8, spread: 3.0 }, n, d, seed, "bench")
+}
+
+fn main() {
+    println!("# bench_aba — end-to-end runtime scaling");
+    println!("\n## N scaling (D=16, K=50, flat)");
+    for &n in &[10_000usize, 20_000, 40_000, 80_000] {
+        let ds = mk(n, 16, 1);
+        let cfg = AbaConfig { auto_hier: false, ..AbaConfig::default() };
+        let (labels, secs) = timed(|| run_aba(&ds, 50, &cfg).unwrap());
+        let ofv = ClusterStats::compute(&ds, &labels, 50).ssd_total();
+        println!("  n={n:>7}: {secs:>7.3}s  ofv={ofv:.1}");
+    }
+
+    println!("\n## K scaling (N=20000, D=16): flat vs auto-hierarchical");
+    for &k in &[50usize, 100, 200, 400, 800] {
+        let ds = mk(20_000, 16, 2);
+        let flat_cfg = AbaConfig { auto_hier: false, ..AbaConfig::default() };
+        let (flat_labels, flat_secs) = timed(|| run_aba(&ds, k, &flat_cfg).unwrap());
+        let auto_cfg = AbaConfig::default();
+        let (auto_labels, auto_secs) = timed(|| run_aba(&ds, k, &auto_cfg).unwrap());
+        let fo = ClusterStats::compute(&ds, &flat_labels, k).ssd_total();
+        let ao = ClusterStats::compute(&ds, &auto_labels, k).ssd_total();
+        println!(
+            "  k={k:>4}: flat {flat_secs:>7.3}s | auto {auto_secs:>7.3}s ({:>5.1}x) | ofv loss {:>7.4}%",
+            flat_secs / auto_secs.max(1e-9),
+            100.0 * (ao - fo) / fo
+        );
+    }
+
+    println!("\n## variant ablation (small anticlusters, N=8192, K=2048, i.e. size 4)");
+    {
+        let ds = mk(8_192, 16, 3);
+        for (name, variant) in [("base", Variant::Base), ("small", Variant::Small)] {
+            let cfg = AbaConfig { variant, hier: Some(vec![32, 64]), ..AbaConfig::default() };
+            let (labels, secs) = timed(|| run_aba(&ds, 2_048, &cfg).unwrap());
+            let ofv = ClusterStats::compute(&ds, &labels, 2_048).ssd_total();
+            println!("  {name:>6}: {secs:>7.3}s  ofv={ofv:.1}");
+        }
+    }
+
+    println!("\n## solver ablation (N=10000, D=16, K=100, flat)");
+    {
+        let ds = mk(10_000, 16, 4);
+        for (name, solver) in [
+            ("lapjv", SolverKind::Lapjv),
+            ("auction", SolverKind::Auction),
+            ("greedy", SolverKind::Greedy),
+        ] {
+            let cfg = AbaConfig { solver, auto_hier: false, ..AbaConfig::default() };
+            let (labels, secs) = timed(|| run_aba(&ds, 100, &cfg).unwrap());
+            let ofv = ClusterStats::compute(&ds, &labels, 100).ssd_total();
+            println!("  {name:>8}: {secs:>7.3}s  ofv={ofv:.1}");
+        }
+    }
+
+    println!("\n## 3-level decomposition (N=65536, D=32, K=4096, size 16)");
+    {
+        let ds = mk(65_536, 32, 5);
+        let cfg = AbaConfig { auto_hier: false, ..AbaConfig::default() };
+        for spec in [vec![64, 64], vec![16, 16, 16], vec![4, 32, 32]] {
+            let label = spec.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("x");
+            let (labels, secs) = timed(|| run_hierarchical(&ds, &spec, &cfg).unwrap());
+            let ofv = ClusterStats::compute(&ds, &labels, 4_096).ssd_total();
+            println!("  {label:>10}: {secs:>7.3}s  ofv={ofv:.1}");
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Assignment-solver microbenchmarks (custom harness; the offline vendor
+//! set has no criterion).
+//!
+//! Covers the paper's §4.5 claim that LAPJV dominates ABA's runtime at
+//! O(K^3) per batch, and the §6 future-work ablation (auction solver):
+//! time per solve and quality ratio vs exact, across K.
+
+use aba::assignment::{assignment_cost, auction, greedy, Lapjv};
+use aba::rng::Pcg32;
+use aba::util::timer::bench;
+
+fn main() {
+    println!("# bench_assignment — max-cost K x K solves (cost ~ squared distances)");
+    println!(
+        "{:>6} {:>14} {:>14} {:>14} {:>14} {:>12} {:>12}",
+        "K", "lapjv [ms]", "lapjv-cold", "auction [ms]", "greedy [ms]", "auc/opt", "grd/opt"
+    );
+    for &k in &[16usize, 32, 64, 128, 256, 512] {
+        let mut rng = Pcg32::new(k as u64);
+        let cost: Vec<f32> = (0..k * k).map(|_| rng.f32() * 100.0).collect();
+        let iters = if k >= 256 { 3 } else { 10 };
+
+        let mut solver = Lapjv::new();
+        let lapjv_stats = bench(1, iters, || solver.solve(&cost, k, k, true));
+        let mut cold = Lapjv::new();
+        cold.warm_start = false;
+        let cold_stats = bench(1, iters, || cold.solve(&cost, k, k, true));
+        let lapjv_assign = Lapjv::new().solve(&cost, k, k, true);
+        let opt = assignment_cost(&cost, k, &lapjv_assign);
+
+        let auction_stats = bench(1, iters, || auction::solve_max(&cost, k, k));
+        let auction_assign = auction::solve_max(&cost, k, k);
+        let auc_ratio = assignment_cost(&cost, k, &auction_assign) / opt;
+
+        let greedy_stats = bench(1, iters, || greedy::solve_max(&cost, k, k));
+        let greedy_assign = greedy::solve_max(&cost, k, k);
+        let grd_ratio = assignment_cost(&cost, k, &greedy_assign) / opt;
+
+        println!(
+            "{:>6} {:>14.3} {:>14.3} {:>14.3} {:>14.3} {:>12.6} {:>12.6}",
+            k,
+            lapjv_stats.mean * 1e3,
+            cold_stats.mean * 1e3,
+            auction_stats.mean * 1e3,
+            greedy_stats.mean * 1e3,
+            auc_ratio,
+            grd_ratio
+        );
+        assert!(auc_ratio > 0.999, "auction must stay near-optimal");
+        assert!(grd_ratio > 0.5, "greedy sanity");
+    }
+    println!("\n# rectangular (last ABA batch): nr = K/3 rows");
+    for &k in &[64usize, 256] {
+        let nr = k / 3;
+        let mut rng = Pcg32::new(k as u64 + 1);
+        let cost: Vec<f32> = (0..nr * k).map(|_| rng.f32() * 100.0).collect();
+        let mut solver = Lapjv::new();
+        let stats = bench(1, 10, || solver.solve(&cost, nr, k, true));
+        println!("  {nr}x{k}: lapjv {:.3} ms", stats.mean * 1e3);
+    }
+}

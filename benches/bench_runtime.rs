@@ -1,0 +1,81 @@
+//! Cost-backend benchmark: native Rust loops vs the AOT Pallas/JAX
+//! artifact through PJRT, across the shipped shape buckets.
+//!
+//! This quantifies the three-layer integration overhead on CPU (literal
+//! construction + PJRT dispatch + copy-out vs a plain loop). On a real
+//! TPU the same artifact dispatch amortizes onto the MXU; see
+//! EXPERIMENTS.md §Perf for the footprint estimates.
+
+use aba::runtime::{CostBackend, NativeBackend, XlaBackend};
+use aba::rng::Pcg32;
+use aba::util::timer::bench;
+
+fn main() {
+    println!("# bench_runtime — cost-matrix backends");
+    let mut native = NativeBackend::default();
+    let xla = XlaBackend::from_default_dir();
+    let mut xla = match xla {
+        Ok(b) => Some(b),
+        Err(e) => {
+            println!("(xla backend unavailable: {e:#}; run `make artifacts`)");
+            None
+        }
+    };
+
+    println!(
+        "{:>16} {:>14} {:>14} {:>10}",
+        "shape (m,k,d)", "native [µs]", "xla [µs]", "xla/nat"
+    );
+    for &(m, k, d) in &[
+        (64usize, 64usize, 16usize),
+        (128, 128, 32),
+        (128, 128, 64),
+        (256, 256, 64),
+        (256, 256, 128),
+        (100, 100, 20), // padded (exercises pad/crop)
+    ] {
+        let mut rng = Pcg32::new((m * k + d) as u64);
+        let x: Vec<f32> = (0..m * d).map(|_| rng.f32()).collect();
+        let c: Vec<f32> = (0..k * d).map(|_| rng.f32()).collect();
+        let mut out = Vec::new();
+        let nat = bench(2, 20, || native.batch_costs(&x, m, d, &c, k, &mut out));
+        let xla_mean = xla.as_mut().map(|b| {
+            let mut out = Vec::new();
+            bench(2, 20, || b.batch_costs(&x, m, d, &c, k, &mut out)).mean
+        });
+        match xla_mean {
+            Some(xm) => println!(
+                "{:>16} {:>14.1} {:>14.1} {:>10.2}",
+                format!("({m},{k},{d})"),
+                nat.mean * 1e6,
+                xm * 1e6,
+                xm / nat.mean
+            ),
+            None => println!(
+                "{:>16} {:>14.1} {:>14} {:>10}",
+                format!("({m},{k},{d})"),
+                nat.mean * 1e6,
+                "—",
+                "—"
+            ),
+        }
+    }
+
+    println!("\n# centroid-distance path (n=4096 chunked)");
+    let (n, d) = (4_096usize, 64usize);
+    let mut rng = Pcg32::new(9);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.f32()).collect();
+    let mu: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+    let mut out = Vec::new();
+    let nat = bench(2, 20, || native.centroid_distances(&x, n, d, &mu, &mut out));
+    println!("  native: {:.1} µs", nat.mean * 1e6);
+    if let Some(b) = xla.as_mut() {
+        let mut out = Vec::new();
+        let xs = bench(2, 20, || b.centroid_distances(&x, n, d, &mu, &mut out));
+        println!("  xla:    {:.1} µs ({:.2}x native)", xs.mean * 1e6, xs.mean / nat.mean);
+        println!(
+            "  xla telemetry: {} artifact calls, {} native fallbacks",
+            b.xla_calls, b.native_fallbacks
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! Table/figure regeneration bench: runs every paper table and figure at
+//! quick scale and reports wall time per experiment. `cargo bench`
+//! therefore exercises the entire harness end to end; full-scale runs
+//! are `aba table <id>` / `aba fig <id>` (see EXPERIMENTS.md).
+
+use aba::experiments::{common::ExpOptions, figs, t11, t4, t8, t9};
+use aba::util::timer::Timer;
+
+fn main() {
+    let opts = ExpOptions {
+        quick: true,
+        time_limit_secs: 30.0,
+        out_dir: std::path::PathBuf::from("results/quick"),
+        ..ExpOptions::default()
+    };
+    println!("# bench_tables — full harness at quick scale (CSV under results/quick/)");
+    let experiments: Vec<(&str, Box<dyn Fn() -> anyhow::Result<()>>)> = vec![
+        ("table t4", Box::new(|| t4::table4(&opts_clone()).map(|_| ()))),
+        ("table t6", Box::new(|| t4::table6(&opts_clone()).map(|_| ()))),
+        ("table t8", Box::new(|| t8::table8(&opts_clone()).map(|_| ()))),
+        ("table t9", Box::new(|| t9::table9(&opts_clone()).map(|_| ()))),
+        ("table t10", Box::new(|| t9::table10(&opts_clone()).map(|_| ()))),
+        ("table t11", Box::new(|| t11::table11(&opts_clone()).map(|_| ()))),
+        ("fig f5", Box::new(|| figs::fig5(&opts_clone()).map(|_| ()))),
+        ("fig f6", Box::new(|| figs::fig6(&opts_clone()).map(|_| ()))),
+        ("fig f7", Box::new(|| figs::fig7(&opts_clone()).map(|_| ()))),
+    ];
+    let _ = &opts;
+    let mut total = 0.0;
+    for (name, run) in experiments {
+        let t = Timer::start();
+        run().unwrap_or_else(|e| panic!("{name} failed: {e:#}"));
+        let secs = t.secs();
+        total += secs;
+        println!(">>> {name}: {secs:.2}s");
+    }
+    println!(">>> all experiments: {total:.2}s");
+}
+
+fn opts_clone() -> ExpOptions {
+    ExpOptions {
+        quick: true,
+        time_limit_secs: 30.0,
+        out_dir: std::path::PathBuf::from("results/quick"),
+        ..ExpOptions::default()
+    }
+}

@@ -1,0 +1,6 @@
+"""Root conftest: make the build-time python package importable when
+pytest is invoked from the repository root (`pytest python/tests/`)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,149 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+This script is the only place Python runs in the whole system, and it runs
+once, at build time (``make artifacts``). It lowers each L2 function at
+every shipped shape bucket and writes:
+
+    artifacts/<name>.hlo.txt   — HLO text, one per (function, bucket)
+    artifacts/manifest.json    — bucket registry the Rust runtime reads
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py, whose recipe this follows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.cost_matrix import vmem_bytes, mxu_flops
+
+# ---------------------------------------------------------------------------
+# Shape-bucket registry.
+#
+# The Rust runtime pads an (m, k, d) request up to the smallest bucket that
+# fits and crops the result; requests larger than every bucket fall back to
+# the native Rust backend. Buckets are chosen so the Pallas tile schedule
+# (<=128x128 tiles, full D resident) stays far below TPU VMEM (~16 MiB).
+# ---------------------------------------------------------------------------
+
+COST_BUCKETS = [
+    # (M, K, D)
+    (64, 64, 16),
+    (128, 128, 32),
+    (128, 128, 64),
+    (256, 256, 64),
+    (256, 256, 128),
+]
+
+DIST_BUCKETS = [
+    # (N, D) — centroid_distances chunks
+    (1024, 16),
+    (1024, 32),
+    (1024, 64),
+    (1024, 128),
+]
+
+CSUM_BUCKETS = DIST_BUCKETS  # chunk_centroid uses the same chunking
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_entries():
+    """Yield (name, lowered, meta) for every artifact to emit."""
+    for m, k, d in COST_BUCKETS:
+        name = f"cost_m{m}_k{k}_d{d}"
+        lowered = jax.jit(model.batch_costs).lower(_spec(m, d), _spec(k, d))
+        meta = {
+            "kind": "cost",
+            "m": m,
+            "k": k,
+            "d": d,
+            "inputs": [[m, d], [k, d]],
+            "output": [m, k],
+            "vmem_bytes_tile": vmem_bytes(min(m, 128), min(k, 128), d),
+            "mxu_flops": mxu_flops(m, k, d),
+        }
+        yield name, lowered, meta
+    for n, d in DIST_BUCKETS:
+        name = f"dist_n{n}_d{d}"
+        lowered = jax.jit(model.centroid_distances).lower(
+            _spec(n, d), _spec(1, d))
+        meta = {
+            "kind": "dist",
+            "n": n,
+            "d": d,
+            "inputs": [[n, d], [1, d]],
+            "output": [n],
+        }
+        yield name, lowered, meta
+    for n, d in CSUM_BUCKETS:
+        name = f"csum_n{n}_d{d}"
+        lowered = jax.jit(model.chunk_centroid).lower(_spec(n, d))
+        meta = {
+            "kind": "csum",
+            "n": n,
+            "d": d,
+            "inputs": [[n, d]],
+            "output": [1, d],
+        }
+        yield name, lowered, meta
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None,
+                    help="artifact directory (default: ../artifacts)")
+    # Back-compat with the scaffold Makefile's `--out path/model.hlo.txt`.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if out_dir is None and args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    if out_dir is None:
+        out_dir = os.path.join(os.path.dirname(__file__), "..", "..",
+                               "artifacts")
+    out_dir = os.path.abspath(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"format": 1, "entries": []}
+    for name, lowered, meta in build_entries():
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        meta = dict(meta, name=name, file=fname)
+        manifest["entries"].append(meta)
+        print(f"  wrote {fname}  ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json with {len(manifest['entries'])} entries "
+          f"to {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,122 @@
+"""L1 — Pallas kernel for the ABA cost matrix.
+
+The hot numeric kernel of the Assignment-Based Anticlustering algorithm:
+given a batch of objects ``X`` of shape ``(M, D)`` and the current
+anticluster centroids ``C`` of shape ``(K, D)``, compute the ``(M, K)``
+matrix of *squared Euclidean distances*
+
+    cost[i, k] = ||x_i - c_k||^2 = ||x_i||^2 + ||c_k||^2 - 2 <x_i, c_k>
+
+which Algorithm 1 of the paper hands to the LAPJV max-cost assignment
+solver once per batch.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the dominant term is the
+cross product ``X @ C.T`` — an MXU-shaped matmul — while the row/column
+norms are cheap VPU reductions broadcast over the tile. We tile ``M`` and
+``K`` with BlockSpec and keep the full feature dimension ``D`` resident in
+VMEM per tile; for the shipped buckets (D <= 128) a (128, D) x (D, 128)
+tile plus the (128, 128) output is well under 1 MB of VMEM, leaving room
+for double buffering.
+
+The kernel MUST be run with ``interpret=True`` on this CPU image: real TPU
+lowering emits a Mosaic custom-call that the CPU PJRT plugin cannot
+execute. ``interpret=True`` lowers to plain HLO, which is exactly what the
+Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cost_matrix_kernel(x_ref, c_ref, o_ref):
+    """One (bm, bk) output tile of the squared-distance matrix."""
+    x = x_ref[...]  # (bm, D) block of objects
+    c = c_ref[...]  # (bk, D) block of centroids
+    # Row norms ||x_i||^2 -> (bm, 1); column norms ||c_k||^2 -> (1, bk).
+    xn = jnp.sum(x * x, axis=1, keepdims=True)
+    cn = jnp.sum(c * c, axis=1, keepdims=True).T
+    # Cross term on the MXU: contract the feature dimension of both
+    # operands without materializing a transpose of C.
+    cross = jax.lax.dot_general(
+        x,
+        c,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # Clamp tiny negative values produced by cancellation so downstream
+    # consumers can rely on costs >= 0.
+    o_ref[...] = jnp.maximum(xn + cn - 2.0 * cross, 0.0)
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= target (grid must tile evenly)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk"))
+def _cost_matrix_jit(x, c, bm: int, bk: int):
+    m, d = x.shape
+    k, _ = c.shape
+    grid = (m // bm, k // bk)
+    return pl.pallas_call(
+        _cost_matrix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=True,
+    )(x, c)
+
+
+def cost_matrix(x: jax.Array, c: jax.Array, *, bm: int | None = None,
+                bk: int | None = None) -> jax.Array:
+    """Squared Euclidean distance matrix between rows of ``x`` and ``c``.
+
+    Args:
+      x: ``(M, D)`` float32 batch of objects.
+      c: ``(K, D)`` float32 anticluster centroids.
+      bm, bk: optional tile sizes; default picks the largest divisor of
+        M (resp. K) that is <= 128, matching the MXU-friendly schedule.
+
+    Returns:
+      ``(M, K)`` float32 matrix of non-negative squared distances.
+    """
+    if x.ndim != 2 or c.ndim != 2:
+        raise ValueError(f"expected 2-D operands, got {x.shape} and {c.shape}")
+    if x.shape[1] != c.shape[1]:
+        raise ValueError(
+            f"feature dims differ: x has D={x.shape[1]}, c has D={c.shape[1]}")
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    m, _ = x.shape
+    k, _ = c.shape
+    bm = bm if bm is not None else _pick_block(m, 128)
+    bk = bk if bk is not None else _pick_block(k, 128)
+    if m % bm != 0 or k % bk != 0:
+        raise ValueError(f"tile sizes ({bm},{bk}) must divide ({m},{k})")
+    return _cost_matrix_jit(x, c, bm, bk)
+
+
+def vmem_bytes(bm: int, bk: int, d: int) -> int:
+    """Estimated VMEM residency of one tile invocation (f32, single-buffered).
+
+    Used by DESIGN.md / EXPERIMENTS.md to report the TPU footprint of the
+    shipped shape buckets.
+    """
+    return 4 * (bm * d + bk * d + bm * bk)
+
+
+def mxu_flops(m: int, k: int, d: int) -> int:
+    """MXU FLOP count of the cross-term matmul for a full (m, k, d) call."""
+    return 2 * m * k * d

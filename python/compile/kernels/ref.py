@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *correctness references*: straightforward, obviously-right
+jax.numpy implementations against which the Pallas kernels are checked in
+``python/tests``. They are never exported to artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cost_matrix_ref(x, c):
+    """(M, K) squared Euclidean distances, the obvious way.
+
+    cost[i, k] = sum_d (x[i, d] - c[k, d])^2
+    """
+    x = jnp.asarray(x, jnp.float32)
+    c = jnp.asarray(c, jnp.float32)
+    diff = x[:, None, :] - c[None, :, :]  # (M, K, D)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def centroid_distances_ref(x, mu):
+    """(N,) squared Euclidean distances from each row of ``x`` to ``mu``."""
+    x = jnp.asarray(x, jnp.float32)
+    mu = jnp.asarray(mu, jnp.float32)
+    diff = x - mu[None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def global_centroid_ref(x):
+    """(D,) mean of the rows of ``x``."""
+    return jnp.mean(jnp.asarray(x, jnp.float32), axis=0)
+
+
+def within_group_ssd_ref(x, labels, k):
+    """Fact 1 left-hand side: sum over groups of pairwise squared distances.
+
+    Quadratic in group size — only usable for small test instances, which
+    is exactly the point: it is the independent ground truth for the
+    centroid-based objective used everywhere else.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    total = 0.0
+    for g in range(k):
+        pts = x[jnp.asarray(labels) == g]
+        n = pts.shape[0]
+        for i in range(n):
+            for j in range(i + 1, n):
+                d = pts[i] - pts[j]
+                total += float(jnp.dot(d, d))
+    return total

@@ -1,0 +1,53 @@
+"""L2 — JAX compute graphs for the ABA algorithm.
+
+These are the functions that get AOT-lowered (by ``aot.py``) to HLO text
+and executed from the Rust coordinator via PJRT. Each calls into the L1
+Pallas kernel where the hot compute lives:
+
+* ``batch_costs``        — the per-batch (M, K) object↔centroid squared
+                           distance matrix fed to LAPJV (Algorithm 1 inner
+                           loop). Cross term via the Pallas kernel.
+* ``centroid_distances`` — distances of a chunk of objects to the global
+                           centroid (Algorithm 1 preamble, used to build
+                           the sorted list N↓).
+* ``chunk_centroid``     — sum + count of a chunk of rows, for the
+                           streaming global-centroid computation.
+
+All functions return tuples so that the lowered HLO has a tuple root
+(``return_tuple=True``), which the Rust side unwraps with ``to_tuple1``.
+Shapes are fixed at lowering time; the Rust runtime pads/crops to the
+nearest shipped bucket (see DESIGN.md §Shape buckets).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.cost_matrix import cost_matrix
+
+
+def batch_costs(x, c):
+    """(M, K) squared-distance cost matrix for one assignment batch.
+
+    This is the request-path hot spot: Algorithm 1 calls it once per batch
+    (ceil(N/K) - 1 times per run).
+    """
+    return (cost_matrix(x, c),)
+
+
+def centroid_distances(x, mu):
+    """(N,) squared distances of each row of ``x`` to the centroid ``mu``.
+
+    ``mu`` arrives as shape (1, D) so the artifact I/O stays rank-2.
+    Implemented via the same Pallas kernel with K = 1: the cross term is a
+    (N, D) x (D, 1) matvec on the MXU.
+    """
+    d = cost_matrix(x, mu, bk=1)  # (N, 1)
+    return (d[:, 0],)
+
+
+def chunk_centroid(x):
+    """Column sums of a chunk of rows; Rust accumulates across chunks and
+    divides by N to obtain the global centroid without a second pass."""
+    return (jnp.sum(x, axis=0, keepdims=True),)

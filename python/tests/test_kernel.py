@@ -1,0 +1,179 @@
+"""L1 correctness: Pallas cost-matrix kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compile path: every artifact
+the Rust runtime executes is a lowering of the functions tested here.
+Hypothesis sweeps shapes, dtypes, scales and degenerate inputs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.cost_matrix import (
+    cost_matrix,
+    mxu_flops,
+    vmem_bytes,
+    _pick_block,
+)
+from compile.kernels.ref import (
+    centroid_distances_ref,
+    cost_matrix_ref,
+    global_centroid_ref,
+    within_group_ssd_ref,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(m, d, scale=1.0, dtype=np.float32):
+    return (RNG.standard_normal((m, d)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic fixed-shape checks (the shipped bucket shapes).
+# ---------------------------------------------------------------------------
+
+BUCKETS = [(64, 64, 16), (128, 128, 32), (128, 128, 64), (256, 256, 64),
+           (256, 256, 128)]
+
+
+@pytest.mark.parametrize("m,k,d", BUCKETS)
+def test_kernel_matches_ref_on_shipped_buckets(m, k, d):
+    x, c = _rand(m, d), _rand(k, d)
+    got = np.asarray(cost_matrix(x, c))
+    want = np.asarray(cost_matrix_ref(x, c))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_zero_distance_diagonal():
+    # Distance from a point to itself must be exactly clamped >= 0 and ~0.
+    x = _rand(32, 8)
+    got = np.asarray(cost_matrix(x, x))
+    assert np.all(got >= 0.0)
+    np.testing.assert_allclose(np.diag(got), 0.0, atol=1e-3)
+
+
+def test_kernel_single_centroid_column():
+    x = _rand(64, 16)
+    c = _rand(1, 16)
+    got = np.asarray(cost_matrix(x, c, bk=1))
+    want = np.asarray(centroid_distances_ref(x, c[0]))
+    np.testing.assert_allclose(got[:, 0], want, rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_rejects_mismatched_feature_dims():
+    with pytest.raises(ValueError, match="feature dims differ"):
+        cost_matrix(_rand(4, 3), _rand(4, 5))
+
+
+def test_kernel_rejects_rank1():
+    with pytest.raises(ValueError, match="2-D"):
+        cost_matrix(np.zeros(4, np.float32), _rand(4, 4))
+
+
+def test_kernel_rejects_nondividing_tiles():
+    with pytest.raises(ValueError, match="divide"):
+        cost_matrix(_rand(10, 4), _rand(10, 4), bm=3)
+
+
+def test_kernel_translation_invariance():
+    # Squared distances are invariant to a common translation.
+    x, c = _rand(32, 8), _rand(16, 8)
+    t = _rand(1, 8, scale=10.0)
+    a = np.asarray(cost_matrix(x, c))
+    b = np.asarray(cost_matrix(x + t, c + t))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-2)
+
+
+def test_kernel_accepts_float64_input_casts_to_f32():
+    x = _rand(16, 4, dtype=np.float64)
+    c = _rand(8, 4, dtype=np.float64)
+    got = np.asarray(cost_matrix(x, c))
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, cost_matrix_ref(x, c), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: random shapes, tile sizes, scales.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    d=st.integers(1, 48),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_random_shapes(m, k, d, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((m, d)) * scale).astype(np.float32)
+    c = (rng.standard_normal((k, d)) * scale).astype(np.float32)
+    got = np.asarray(cost_matrix(x, c))
+    want = np.asarray(cost_matrix_ref(x, c))
+    tol = 1e-3 * max(scale * scale, 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=tol)
+    assert np.all(got >= 0.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(2, 64),
+    d=st.integers(1, 32),
+    bm=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_tile_size_does_not_change_result(m, d, bm, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, d)).astype(np.float32)
+    c = rng.standard_normal((m, d)).astype(np.float32)
+    # Snap bm to a divisor of m so the request is valid.
+    bm = _pick_block(m, bm)
+    a = np.asarray(cost_matrix(x, c, bm=bm))
+    b = np.asarray(cost_matrix(x, c))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 40),
+    d=st.integers(1, 8),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fact1_pairwise_equals_centroid_form(n, d, k, seed):
+    """Fact 1: sum_{i<i'} ||xi - xi'||^2 == n_k * sum_i ||xi - mu_k||^2."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    labels = rng.integers(0, k, n)
+    lhs = within_group_ssd_ref(x, labels, k)
+    rhs = 0.0
+    for g in range(k):
+        pts = x[labels == g]
+        if len(pts) == 0:
+            continue
+        mu = pts.mean(axis=0)
+        rhs += len(pts) * float(((pts - mu) ** 2).sum())
+    assert lhs == pytest.approx(rhs, rel=1e-3, abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Footprint estimators used in DESIGN.md reporting.
+# ---------------------------------------------------------------------------
+
+def test_vmem_estimate_of_largest_bucket_fits_tpu_vmem():
+    # (256,256,128) runs as 128x128 tiles with full D resident.
+    assert vmem_bytes(128, 128, 128) < 16 * 2**20 / 8  # << 16 MiB VMEM
+
+
+def test_mxu_flops_counts_cross_term():
+    assert mxu_flops(2, 3, 4) == 2 * 2 * 3 * 4
+
+
+def test_pick_block_returns_divisor():
+    for n in range(1, 200):
+        b = _pick_block(n, 128)
+        assert n % b == 0 and 1 <= b <= min(n, 128)

@@ -1,0 +1,93 @@
+"""L2 correctness: model graphs (shapes, semantics) vs oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import (
+    centroid_distances_ref,
+    cost_matrix_ref,
+    global_centroid_ref,
+)
+
+RNG = np.random.default_rng(1)
+
+
+def test_batch_costs_returns_1tuple_with_expected_shape():
+    x = RNG.standard_normal((64, 16)).astype(np.float32)
+    c = RNG.standard_normal((64, 16)).astype(np.float32)
+    out = model.batch_costs(x, c)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (64, 64)
+    np.testing.assert_allclose(np.asarray(out[0]), cost_matrix_ref(x, c),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_centroid_distances_matches_ref():
+    x = RNG.standard_normal((128, 32)).astype(np.float32)
+    mu = RNG.standard_normal((1, 32)).astype(np.float32)
+    (got,) = model.centroid_distances(x, mu)
+    want = centroid_distances_ref(x, mu[0])
+    assert got.shape == (128,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_chunk_centroid_sums_columns():
+    x = RNG.standard_normal((64, 8)).astype(np.float32)
+    (got,) = model.chunk_centroid(x)
+    assert got.shape == (1, 8)
+    np.testing.assert_allclose(np.asarray(got)[0], x.sum(axis=0), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_chunked_centroid_accumulation_equals_global_mean():
+    """The Rust runtime sums csum chunks and divides by N — verify the
+    contract end to end in python."""
+    x = RNG.standard_normal((4 * 32, 8)).astype(np.float32)
+    acc = np.zeros((1, 8), np.float32)
+    for i in range(4):
+        (s,) = model.chunk_centroid(x[i * 32:(i + 1) * 32])
+        acc += np.asarray(s)
+    mu = acc[0] / x.shape[0]
+    np.testing.assert_allclose(mu, np.asarray(global_centroid_ref(x)),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 64), d=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+def test_centroid_distances_random(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    mu = rng.standard_normal((1, d)).astype(np.float32)
+    (got,) = model.centroid_distances(x, mu)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(centroid_distances_ref(x, mu[0])),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_zero_padding_d_preserves_distances():
+    """The Rust runtime zero-pads the feature dim up to a bucket's D; padding
+    both operands with zero columns must not change squared distances."""
+    x = RNG.standard_normal((32, 10)).astype(np.float32)
+    c = RNG.standard_normal((16, 10)).astype(np.float32)
+    xp = np.pad(x, ((0, 0), (0, 6)))
+    cp = np.pad(c, ((0, 0), (0, 6)))
+    a = np.asarray(model.batch_costs(x, c)[0])
+    b = np.asarray(model.batch_costs(xp, cp)[0])
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_row_padding_is_croppable():
+    """Padding extra object rows only appends rows; the top-left block is
+    unchanged, so the runtime can crop."""
+    x = RNG.standard_normal((24, 8)).astype(np.float32)
+    c = RNG.standard_normal((16, 8)).astype(np.float32)
+    xp = np.pad(x, ((0, 8), (0, 0)))
+    a = np.asarray(model.batch_costs(x, c)[0])
+    b = np.asarray(model.batch_costs(xp, c)[0])
+    np.testing.assert_allclose(a, b[:24], rtol=1e-5, atol=1e-5)

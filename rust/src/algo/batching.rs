@@ -1,0 +1,284 @@
+//! Batch-order construction (paper §4.1–§4.3).
+//!
+//! Algorithm 1 processes objects in a specific global order, cut into
+//! batches of size K. The order is what distinguishes the variants:
+//!
+//! * **Base (§4.1)** — indices sorted by *decreasing* squared distance to
+//!   the global centroid (`N↓`).
+//! * **Small anticlusters (§4.2)** — `N↓` interleaved across K sublists so
+//!   every batch spans the full distance spectrum (Figures 1–2).
+//! * **Categories (§4.3)** — `N↓` regrouped into per-category K-sized
+//!   blocks, concatenated round-robin, partial blocks last (Figure 3).
+
+use super::Variant;
+use crate::data::Dataset;
+use crate::runtime::CostBackend;
+
+/// Indices sorted by decreasing distance to the global centroid — the
+/// paper's `N↓`. Ties broken by index for determinism. Distances come
+/// from the backend (i.e. the AOT artifact when running `--backend xla`).
+pub fn sorted_by_centroid_distance(ds: &Dataset, backend: &mut dyn CostBackend) -> Vec<usize> {
+    let mu = ds.global_centroid();
+    let mut dist = Vec::with_capacity(ds.n);
+    backend.centroid_distances(&ds.x, ds.n, ds.d, &mu, &mut dist);
+    let mut idx: Vec<usize> = (0..ds.n).collect();
+    idx.sort_unstable_by(|&a, &b| dist[b].total_cmp(&dist[a]).then(a.cmp(&b)));
+    idx
+}
+
+/// Build the processing order for a variant (categorical rearrangement is
+/// applied on top when the dataset has categories; see `build_order`).
+pub fn build_order(ds: &Dataset, k: usize, variant: Variant, backend: &mut dyn CostBackend) -> Vec<usize> {
+    let sorted = sorted_by_centroid_distance(ds, backend);
+    if ds.categories.is_some() {
+        return rearrange_categorical(&sorted, ds.categories.as_ref().unwrap(), k);
+    }
+    match variant {
+        Variant::Base => sorted,
+        Variant::Small => rearrange_small(&sorted, k),
+        Variant::Auto => unreachable!("Auto resolved by caller"),
+    }
+}
+
+/// §4.2 rearrangement. Splits `sorted` into K sublists and interleaves
+/// them so each batch contains one object from every distance range.
+///
+/// When `n % k != 0`, the first `ceil(n/k)*k - n` sublists are short
+/// (length `floor(n/k)`) and the rest long (length `ceil(n/k)`); the long
+/// sublists' final elements form the last (partial) batch — they are
+/// closest to the global centroid and least likely to shift centroids
+/// (Figure 2).
+pub fn rearrange_small(sorted: &[usize], k: usize) -> Vec<usize> {
+    let n = sorted.len();
+    if k <= 1 || k >= n {
+        return sorted.to_vec();
+    }
+    let q = n / k;
+    let qbar = n.div_ceil(k);
+    let n_short = qbar * k - n; // sublists of length q
+    let mut out = Vec::with_capacity(n);
+    // Sublist s occupies a contiguous span of `sorted`.
+    let start_of = |s: usize| -> usize {
+        if s < n_short {
+            s * q
+        } else {
+            n_short * q + (s - n_short) * qbar
+        }
+    };
+    // Round-robin: q rounds over all K sublists.
+    for round in 0..q {
+        for s in 0..k {
+            out.push(sorted[start_of(s) + round]);
+        }
+    }
+    // Remaining objects (only when n % k != 0): the last element of each
+    // long sublist, appended in sublist order — they form the final
+    // partial batch B_B.
+    if qbar > q {
+        for s in n_short..k {
+            out.push(sorted[start_of(s) + q]);
+        }
+    }
+    debug_assert_eq!(out.len(), n);
+    out
+}
+
+/// §4.3 rearrangement for the categorical variant. Splits `sorted` into
+/// per-category sublists (preserving sort order), cuts each into K-sized
+/// blocks, and concatenates: all *full* blocks round-robin across
+/// categories first, then the partial blocks in the same order (Figure 3).
+pub fn rearrange_categorical(sorted: &[usize], categories: &[u32], k: usize) -> Vec<usize> {
+    let g = categories.iter().copied().max().map_or(0, |m| m as usize + 1);
+    if g <= 1 {
+        return sorted.to_vec();
+    }
+    // Per-category sublists in sorted order.
+    let mut sub: Vec<Vec<usize>> = vec![Vec::new(); g];
+    for &i in sorted {
+        sub[categories[i] as usize].push(i);
+    }
+    let mut out = Vec::with_capacity(sorted.len());
+    // Full K-sized blocks, round-robin across categories.
+    let max_blocks = sub.iter().map(|s| s.len().div_ceil(k)).max().unwrap_or(0);
+    for b in 0..max_blocks {
+        for s in sub.iter() {
+            let lo = b * k;
+            let hi = lo + k;
+            if hi <= s.len() {
+                out.extend_from_slice(&s[lo..hi]);
+            }
+        }
+    }
+    // Partial trailing blocks, same alternating order.
+    for s in sub.iter() {
+        let full = (s.len() / k) * k;
+        out.extend_from_slice(&s[full..]);
+    }
+    debug_assert_eq!(out.len(), sorted.len());
+    out
+}
+
+/// Batch boundaries: `ceil(n/k)` batches of size K (last may be short).
+pub fn batch_ranges(n: usize, k: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(n.div_ceil(k));
+    let mut start = 0;
+    while start < n {
+        let end = (start + k).min(n);
+        out.push((start, end));
+        start = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthKind};
+    use crate::data::Dataset;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn sorted_is_descending() {
+        let ds = generate(SynthKind::Uniform, 100, 3, 2, "u");
+        let mut be = NativeBackend::default();
+        let order = sorted_by_centroid_distance(&ds, &mut be);
+        let mu = ds.global_centroid();
+        let d = |i: usize| crate::data::dataset::sq_dist(ds.row(i), &mu);
+        for w in order.windows(2) {
+            assert!(d(w[0]) >= d(w[1]) - 1e-12);
+        }
+    }
+
+    /// Figure 1: N=18, K=6 — sublists of length 3; the rearranged list
+    /// interleaves them: positions 0,3,6,9,12,15 then 1,4,... etc.
+    #[test]
+    fn figure1_layout_exact() {
+        let sorted: Vec<usize> = (0..18).collect();
+        let got = rearrange_small(&sorted, 6);
+        let want = vec![
+            0, 3, 6, 9, 12, 15, //
+            1, 4, 7, 10, 13, 16, //
+            2, 5, 8, 11, 14, 17,
+        ];
+        assert_eq!(got, want);
+    }
+
+    /// Figure 2: N=22, K=6 — Q=3, Q̄=4; the first Q̄K−N = 2 sublists are
+    /// short (len 3), the remaining 4 long (len 4). Sublist starts:
+    /// 0,3,6,10,14,18. Three round-robin rounds, then the long sublists'
+    /// last elements (9, 13, 17, 21).
+    #[test]
+    fn figure2_layout_exact() {
+        let sorted: Vec<usize> = (0..22).collect();
+        let got = rearrange_small(&sorted, 6);
+        let want = vec![
+            0, 3, 6, 10, 14, 18, //
+            1, 4, 7, 11, 15, 19, //
+            2, 5, 8, 12, 16, 20, //
+            9, 13, 17, 21,
+        ];
+        assert_eq!(got, want);
+    }
+
+    /// Figure 3: N=22, K=3, two categories. Category A has 13 objects (4
+    /// full blocks + partial of 1), category B has 9 (3 full + 0). Full
+    /// blocks alternate A,B,A,B,...; partials appended last.
+    #[test]
+    fn figure3_layout_categorical() {
+        // Objects 0..22 in sorted order; even-ish split of categories.
+        let sorted: Vec<usize> = (0..22).collect();
+        let categories: Vec<u32> = (0..22).map(|i| u32::from(i >= 13)).collect();
+        let got = rearrange_categorical(&sorted, &categories, 3);
+        // Sublists: A = 0..13 (blocks [0,1,2][3,4,5][6,7,8][9,10,11] + [12]),
+        //           B = 13..22 (blocks [13,14,15][16,17,18][19,20,21]).
+        let want = vec![
+            0, 1, 2, 13, 14, 15, //
+            3, 4, 5, 16, 17, 18, //
+            6, 7, 8, 19, 20, 21, //
+            9, 10, 11, // A block 4 (B exhausted)
+            12, // partial A
+        ];
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn rearrangements_are_permutations() {
+        for &(n, k) in &[(18usize, 6usize), (22, 6), (100, 7), (13, 13), (5, 2)] {
+            let sorted: Vec<usize> = (0..n).rev().collect();
+            let got = rearrange_small(&sorted, k);
+            let mut s = got.clone();
+            s.sort_unstable();
+            assert_eq!(s, (0..n).collect::<Vec<_>>(), "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn categorical_is_permutation_with_many_categories() {
+        let n = 97;
+        let sorted: Vec<usize> = (0..n).collect();
+        let cats: Vec<u32> = (0..n).map(|i| (i % 5) as u32).collect();
+        let got = rearrange_categorical(&sorted, &cats, 4);
+        let mut s = got.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batch_ranges_cover() {
+        assert_eq!(batch_ranges(10, 4), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(batch_ranges(8, 4), vec![(0, 4), (4, 8)]);
+        assert_eq!(batch_ranges(3, 5), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn small_variant_batches_span_distance_spectrum() {
+        // After rearrangement, each full batch should contain objects from
+        // every K-quantile of the sorted order.
+        let ds = generate(SynthKind::Uniform, 60, 2, 3, "u");
+        let mut be = NativeBackend::default();
+        let sorted = sorted_by_centroid_distance(&ds, &mut be);
+        let k = 6;
+        let pos_in_sorted: std::collections::HashMap<usize, usize> =
+            sorted.iter().enumerate().map(|(p, &i)| (i, p)).collect();
+        let order = rearrange_small(&sorted, k);
+        let q = 60 / k;
+        for (b, chunk) in order.chunks(k).enumerate().take(q) {
+            let mut deciles: Vec<usize> =
+                chunk.iter().map(|i| pos_in_sorted[i] / q).collect();
+            deciles.sort_unstable();
+            assert_eq!(deciles, (0..k).collect::<Vec<_>>(), "batch {b}");
+        }
+    }
+
+    #[test]
+    fn single_category_degenerates_to_sorted() {
+        let sorted: Vec<usize> = (0..10).collect();
+        let cats = vec![0u32; 10];
+        assert_eq!(rearrange_categorical(&sorted, &cats, 3), sorted);
+    }
+
+    #[test]
+    fn order_uses_categories_when_present() {
+        let mut ds = generate(SynthKind::Uniform, 30, 2, 4, "u");
+        ds = ds
+            .with_categories((0..30).map(|i| (i % 3) as u32).collect())
+            .unwrap();
+        let mut be = NativeBackend::default();
+        let order = build_order(&ds, 5, Variant::Base, &mut be);
+        // First 5 objects of the order must share one category (a full
+        // K-block from one category sublist).
+        let cats = ds.categories.as_ref().unwrap();
+        let first: Vec<u32> = order[..5].iter().map(|&i| cats[i]).collect();
+        assert!(first.iter().all(|&c| c == first[0]), "{first:?}");
+    }
+
+    #[test]
+    fn duplicate_distance_ties_are_deterministic() {
+        let ds = Dataset::from_rows("dup", &vec![vec![1.0, 1.0]; 10]).unwrap();
+        let mut be = NativeBackend::default();
+        let a = sorted_by_centroid_distance(&ds, &mut be);
+        let b = sorted_by_centroid_distance(&ds, &mut be);
+        assert_eq!(a, b);
+        assert_eq!(a, (0..10).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,345 @@
+//! Must-link / cannot-link constrained anticlustering.
+//!
+//! The `anticlust` package the paper benchmarks against supports
+//! pairwise constraints in its exchange heuristic; this module is the
+//! ABA-native adaptation (an "extension" feature beyond the paper's core
+//! algorithm):
+//!
+//! * **must-link** — groups that must share an anticluster are contracted
+//!   into weighted super-objects (weight = group size, features = group
+//!   mean). One super-object still goes to one anticluster per batch, so
+//!   anticluster *weights* can drift by up to the largest group size; a
+//!   soft balance penalty keeps the drift tight (and the result is
+//!   exactly balanced whenever all groups have equal size).
+//! * **cannot-link** — enforced exactly, via the same cost-masking
+//!   mechanism as the §4.3 categorical bounds: an anticluster already
+//!   containing a conflicting object gets a large negative cost.
+
+use super::batching;
+use crate::assignment::Lapjv;
+use crate::data::Dataset;
+use crate::runtime::make_backend;
+use anyhow::{bail, Result};
+
+/// Pairwise constraints over object indices.
+#[derive(Clone, Debug, Default)]
+pub struct Constraints {
+    /// Each inner vec is a group that must end up in one anticluster.
+    pub must_link: Vec<Vec<usize>>,
+    /// Pairs that must end up in different anticlusters.
+    pub cannot_link: Vec<(usize, usize)>,
+}
+
+const MASK_COST: f32 = -1e30;
+
+/// Run ABA under pairwise constraints. Returns a label per (original)
+/// object.
+pub fn run_aba_constrained(
+    ds: &Dataset,
+    k: usize,
+    cfg: &super::AbaConfig,
+    cons: &Constraints,
+) -> Result<Vec<u32>> {
+    if k == 0 || k > ds.n {
+        bail!("invalid k={k} for n={}", ds.n);
+    }
+    // --- Union-find over must-link groups -------------------------------
+    let mut parent: Vec<usize> = (0..ds.n).collect();
+    fn find(parent: &mut Vec<usize>, mut x: usize) -> usize {
+        while parent[x] != x {
+            parent[x] = parent[parent[x]];
+            x = parent[x];
+        }
+        x
+    }
+    for group in &cons.must_link {
+        for &i in group {
+            if i >= ds.n {
+                bail!("must-link index {i} out of range");
+            }
+        }
+        for w in group.windows(2) {
+            let (a, b) = (find(&mut parent, w[0]), find(&mut parent, w[1]));
+            if a != b {
+                parent[a] = b;
+            }
+        }
+    }
+    // Super-object ids.
+    let mut super_of = vec![usize::MAX; ds.n];
+    let mut supers: Vec<Vec<usize>> = Vec::new();
+    for i in 0..ds.n {
+        let root = find(&mut parent, i);
+        if super_of[root] == usize::MAX {
+            super_of[root] = supers.len();
+            supers.push(Vec::new());
+        }
+        super_of[i] = super_of[root];
+        supers[super_of[root]].push(i);
+    }
+    let ns = supers.len();
+    if ns < k {
+        bail!("must-link contraction leaves {ns} groups < k={k}");
+    }
+    let max_group = supers.iter().map(|g| g.len()).max().unwrap_or(1);
+
+    // Cannot-link at super-object granularity; validate consistency.
+    let mut conflicts: Vec<(usize, usize)> = Vec::new();
+    for &(a, b) in &cons.cannot_link {
+        if a >= ds.n || b >= ds.n {
+            bail!("cannot-link index out of range: ({a},{b})");
+        }
+        let (sa, sb) = (super_of[a], super_of[b]);
+        if sa == sb {
+            bail!("objects {a} and {b} are must-linked but also cannot-linked");
+        }
+        conflicts.push((sa.min(sb), sa.max(sb)));
+    }
+    conflicts.sort_unstable();
+    conflicts.dedup();
+
+    // --- Build the super-object dataset ---------------------------------
+    let d = ds.d;
+    let mut sx = vec![0f32; ns * d];
+    let mut weight = vec![0usize; ns];
+    for (s, members) in supers.iter().enumerate() {
+        weight[s] = members.len();
+        for &i in members {
+            for (dst, &v) in sx[s * d..(s + 1) * d].iter_mut().zip(ds.row(i)) {
+                *dst += v;
+            }
+        }
+        let wl = members.len() as f32;
+        for v in sx[s * d..(s + 1) * d].iter_mut() {
+            *v /= wl;
+        }
+    }
+    let sds = Dataset::from_flat(format!("{}::super", ds.name), ns, d, sx)?;
+
+    // Conflict adjacency for masking.
+    let mut conflict_adj: Vec<Vec<usize>> = vec![Vec::new(); ns];
+    for &(a, b) in &conflicts {
+        conflict_adj[a].push(b);
+        conflict_adj[b].push(a);
+    }
+
+    // --- Modified Algorithm-1 loop over super-objects --------------------
+    let mut backend = make_backend(cfg.backend)?;
+    let order = batching::sorted_by_centroid_distance(&sds, backend.as_mut());
+    let mut labels_s = vec![u32::MAX; ns];
+    let mut centroids = vec![0f64; k * d];
+    let mut counts = vec![0usize; k]; // super-object counts (centroid counter)
+    let mut weights = vec![0usize; k]; // original-object weights (balance)
+    let mut centroids_f32 = vec![0f32; k * d];
+
+    // Soft balance penalty: strong enough to dominate distance terms.
+    let mu = sds.global_centroid();
+    let mut dists = Vec::new();
+    backend.centroid_distances(&sds.x, ns, d, &mu, &mut dists);
+    let scale = dists.iter().copied().fold(0f64, f64::max).max(1.0) as f32;
+    let penalty = 16.0 * scale;
+
+    let batches = batching::batch_ranges(ns, k);
+    let (lo, hi) = batches[0];
+    for (slot, &s) in order[lo..hi].iter().enumerate() {
+        labels_s[s] = slot as u32;
+        counts[slot] = 1;
+        weights[slot] = weight[s];
+        for (dst, &v) in centroids[slot * d..(slot + 1) * d].iter_mut().zip(sds.row(s)) {
+            *dst = v as f64;
+        }
+    }
+
+    let mut xb = vec![0f32; k * d];
+    let mut cost: Vec<f32> = Vec::with_capacity(k * k);
+    let mut lapjv = Lapjv::new();
+    for &(lo, hi) in &batches[1..] {
+        let m = hi - lo;
+        let batch = &order[lo..hi];
+        xb.resize(m * d, 0.0);
+        for (j, &s) in batch.iter().enumerate() {
+            xb[j * d..(j + 1) * d].copy_from_slice(sds.row(s));
+        }
+        for (dst, &src) in centroids_f32.iter_mut().zip(centroids.iter()) {
+            *dst = src as f32;
+        }
+        backend.batch_costs(&xb, m, d, &centroids_f32, k, &mut cost);
+        // Weight-balance penalty + cannot-link masking.
+        let min_w = *weights.iter().min().unwrap();
+        for (j, &s) in batch.iter().enumerate() {
+            for kk in 0..k {
+                let over = (weights[kk] - min_w) as f32;
+                cost[j * k + kk] -= penalty * over;
+                if conflict_adj[s]
+                    .iter()
+                    .any(|&other| labels_s[other] == kk as u32)
+                {
+                    cost[j * k + kk] = MASK_COST;
+                }
+            }
+        }
+        let assign = lapjv.solve(&cost, m, k, true);
+        for (j, &s) in batch.iter().enumerate() {
+            let kk = assign[j];
+            labels_s[s] = kk as u32;
+            counts[kk] += 1;
+            weights[kk] += weight[s];
+            let counter = counts[kk] as f64;
+            for (m_d, &x_d) in centroids[kk * d..(kk + 1) * d].iter_mut().zip(sds.row(s)) {
+                *m_d += (x_d as f64 - *m_d) / counter;
+            }
+        }
+    }
+
+    // Expand to original objects.
+    let mut labels = vec![0u32; ds.n];
+    for (s, members) in supers.iter().enumerate() {
+        for &i in members {
+            labels[i] = labels_s[s];
+        }
+    }
+    // Post-condition check: cannot-link satisfied (must-link by
+    // construction). Unsatisfiable instances surface here.
+    for &(a, b) in &cons.cannot_link {
+        if labels[a] == labels[b] {
+            bail!("cannot-link ({a},{b}) unsatisfiable under k={k} (max group {max_group})");
+        }
+    }
+    Ok(labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{AbaConfig, ClusterStats};
+    use crate::data::synth::{generate, SynthKind};
+
+    fn ds100() -> Dataset {
+        generate(SynthKind::Uniform, 100, 4, 61, "cons")
+    }
+
+    #[test]
+    fn unconstrained_matches_plain_balance() {
+        let ds = ds100();
+        let labels =
+            run_aba_constrained(&ds, 5, &AbaConfig::default(), &Constraints::default()).unwrap();
+        let stats = ClusterStats::compute(&ds, &labels, 5);
+        assert!(stats.sizes.iter().all(|&s| s == 20), "{:?}", stats.sizes);
+    }
+
+    #[test]
+    fn must_link_groups_stay_together() {
+        let ds = ds100();
+        let cons = Constraints {
+            must_link: vec![vec![0, 1, 2], vec![10, 50], vec![3, 4]],
+            cannot_link: vec![],
+        };
+        let labels = run_aba_constrained(&ds, 4, &AbaConfig::default(), &cons).unwrap();
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[1], labels[2]);
+        assert_eq!(labels[10], labels[50]);
+        assert_eq!(labels[3], labels[4]);
+        // Balance within the largest group size.
+        let stats = ClusterStats::compute(&ds, &labels, 4);
+        let (min, max) = (
+            *stats.sizes.iter().min().unwrap(),
+            *stats.sizes.iter().max().unwrap(),
+        );
+        assert!(max - min <= 3, "{:?}", stats.sizes);
+    }
+
+    #[test]
+    fn transitive_must_link_via_overlapping_groups() {
+        let ds = ds100();
+        let cons = Constraints {
+            must_link: vec![vec![0, 1], vec![1, 2], vec![2, 3]],
+            cannot_link: vec![],
+        };
+        let labels = run_aba_constrained(&ds, 5, &AbaConfig::default(), &cons).unwrap();
+        assert!(labels[0] == labels[1] && labels[1] == labels[2] && labels[2] == labels[3]);
+    }
+
+    #[test]
+    fn cannot_link_pairs_separated() {
+        let ds = ds100();
+        let cons = Constraints {
+            must_link: vec![],
+            cannot_link: vec![(0, 1), (2, 3), (4, 5), (0, 99)],
+        };
+        let labels = run_aba_constrained(&ds, 3, &AbaConfig::default(), &cons).unwrap();
+        for &(a, b) in &cons.cannot_link {
+            assert_ne!(labels[a], labels[b], "({a},{b})");
+        }
+        let stats = ClusterStats::compute(&ds, &labels, 3);
+        let (min, max) = (
+            *stats.sizes.iter().min().unwrap(),
+            *stats.sizes.iter().max().unwrap(),
+        );
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn combined_constraints() {
+        let ds = ds100();
+        let cons = Constraints {
+            must_link: vec![vec![0, 1], vec![2, 3]],
+            cannot_link: vec![(0, 2), (1, 50)],
+        };
+        let labels = run_aba_constrained(&ds, 4, &AbaConfig::default(), &cons).unwrap();
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[2], labels[3]);
+        assert_ne!(labels[0], labels[2]);
+        assert_ne!(labels[1], labels[50]);
+    }
+
+    #[test]
+    fn conflicting_constraints_rejected() {
+        let ds = ds100();
+        let cons = Constraints {
+            must_link: vec![vec![0, 1]],
+            cannot_link: vec![(0, 1)],
+        };
+        assert!(run_aba_constrained(&ds, 4, &AbaConfig::default(), &cons).is_err());
+    }
+
+    #[test]
+    fn too_much_contraction_rejected() {
+        let ds = generate(SynthKind::Uniform, 6, 2, 62, "tiny");
+        let cons = Constraints {
+            must_link: vec![vec![0, 1, 2], vec![3, 4, 5]],
+            cannot_link: vec![],
+        };
+        // 2 super-objects < k = 3.
+        assert!(run_aba_constrained(&ds, 3, &AbaConfig::default(), &cons).is_err());
+    }
+
+    #[test]
+    fn out_of_range_indices_rejected() {
+        let ds = ds100();
+        let bad_ml = Constraints { must_link: vec![vec![0, 200]], cannot_link: vec![] };
+        assert!(run_aba_constrained(&ds, 3, &AbaConfig::default(), &bad_ml).is_err());
+        let bad_cl = Constraints { must_link: vec![], cannot_link: vec![(0, 200)] };
+        assert!(run_aba_constrained(&ds, 3, &AbaConfig::default(), &bad_cl).is_err());
+    }
+
+    #[test]
+    fn quality_close_to_unconstrained_with_few_constraints() {
+        let ds = generate(
+            SynthKind::GaussianMixture { components: 4, spread: 4.0 },
+            200,
+            4,
+            63,
+            "q",
+        );
+        let k = 10;
+        let plain = crate::algo::run_aba(&ds, k, &AbaConfig::default()).unwrap();
+        let cons = Constraints {
+            must_link: vec![vec![0, 10]],
+            cannot_link: vec![(5, 6)],
+        };
+        let constrained = run_aba_constrained(&ds, k, &AbaConfig::default(), &cons).unwrap();
+        let po = ClusterStats::compute(&ds, &plain, k).ssd_total();
+        let co = ClusterStats::compute(&ds, &constrained, k).ssd_total();
+        assert!(co >= 0.95 * po, "plain {po} vs constrained {co}");
+    }
+}

@@ -1,0 +1,290 @@
+//! The assignment loop of Algorithm 1.
+//!
+//! Given the processing order (from [`super::batching`]), the loop:
+//! 1. assigns the first batch's K objects to the K anticlusters 1:1 and
+//!    seeds each centroid with its object's feature vector,
+//! 2. for every later batch, computes the `|B| x K` squared-distance cost
+//!    matrix through the [`CostBackend`] (native or the AOT Pallas/XLA
+//!    artifact), solves a **max-cost** assignment (LAPJV), and
+//! 3. folds each assigned object into its anticluster's running centroid
+//!    (`UPDATE_CENTROID`: `mu += (x - mu) / counter`).
+//!
+//! When the dataset carries categories, per-(anticluster, category)
+//! counters enforce the §4.3 upper bounds by masking violating cost
+//! entries to a large negative value before the solve.
+
+use super::batching::batch_ranges;
+use crate::assignment::{self, SolverKind};
+use crate::data::Dataset;
+use crate::runtime::CostBackend;
+use anyhow::{bail, Result};
+
+/// Mask value for forbidden (anticluster, category) assignments. Large
+/// and negative so a max-cost solver avoids it whenever the instance is
+/// feasible, yet far from f32 infinity to keep dual arithmetic finite.
+const MASK_COST: f32 = -1e30;
+
+/// Run Algorithm 1 over the given processing order. `order` must be a
+/// permutation of `0..ds.n`.
+pub fn run_with_order(
+    ds: &Dataset,
+    k: usize,
+    order: &[usize],
+    solver: SolverKind,
+    backend: &mut dyn CostBackend,
+) -> Result<Vec<u32>> {
+    if order.len() != ds.n {
+        bail!("order length {} != n {}", order.len(), ds.n);
+    }
+    if k == 0 || k > ds.n {
+        bail!("invalid k={k} for n={}", ds.n);
+    }
+    let d = ds.d;
+    let mut labels = vec![u32::MAX; ds.n];
+
+    // Anticluster state: f64 centroids (for exact incremental updates),
+    // object counts, and the f32 mirror handed to the backend.
+    let mut centroids = vec![0f64; k * d];
+    let mut counts = vec![0usize; k];
+    let mut centroids_f32 = vec![0f32; k * d];
+
+    // Categorical state (§4.3): cap and per-(cluster, category) counters.
+    let cat_state = ds.categories.as_ref().map(|cats| {
+        let g = ds.n_categories();
+        let mut totals = vec![0usize; g];
+        for &c in cats.iter() {
+            totals[c as usize] += 1;
+        }
+        let caps: Vec<usize> = totals.iter().map(|&t| t.div_ceil(k)).collect();
+        (caps, vec![0usize; k * g], g)
+    });
+    let (caps, mut cat_counts, g) = match cat_state {
+        Some((c, cc, g)) => (c, cc, g),
+        None => (Vec::new(), Vec::new(), 0),
+    };
+
+    // --- First batch: one object per anticluster -----------------------
+    let batches = batch_ranges(ds.n, k);
+    let (b0_lo, b0_hi) = batches[0];
+    for (slot, &obj) in order[b0_lo..b0_hi].iter().enumerate() {
+        labels[obj] = slot as u32;
+        counts[slot] = 1;
+        for (dst, &v) in centroids[slot * d..(slot + 1) * d].iter_mut().zip(ds.row(obj)) {
+            *dst = v as f64;
+        }
+        if g > 0 {
+            let c = ds.categories.as_ref().unwrap()[obj] as usize;
+            cat_counts[slot * g + c] += 1;
+        }
+    }
+
+    // Scratch buffers reused across batches (zero allocation per batch
+    // after warm-up — see EXPERIMENTS.md §Perf).
+    let mut xb = vec![0f32; k * d];
+    let mut cost: Vec<f32> = Vec::with_capacity(k * k);
+    let mut lapjv = crate::assignment::Lapjv::new();
+    // Profiling finding (EXPERIMENTS.md §Perf): the JV column/row-
+    // reduction warm start speeds up *random* cost matrices ~1.7x, but
+    // ABA's structured matrices (all entries = distances to centroids
+    // that have contracted toward the global mean, heavy ties) make the
+    // greedy tight matching adversarial for the remaining augmenting
+    // paths — measured ~1.5–2x SLOWER end to end. Default to the cold
+    // start here; ABA_LAPJV_WARM=1 re-enables it for ablation.
+    lapjv.warm_start = std::env::var_os("ABA_LAPJV_WARM").is_some();
+
+    for &(lo, hi) in &batches[1..] {
+        let m = hi - lo;
+        let batch = &order[lo..hi];
+        // Gather batch rows contiguously.
+        xb.resize(m * d, 0.0);
+        for (j, &obj) in batch.iter().enumerate() {
+            xb[j * d..(j + 1) * d].copy_from_slice(ds.row(obj));
+        }
+        // Mirror centroids to f32 for the backend.
+        for (dst, &src) in centroids_f32.iter_mut().zip(centroids.iter()) {
+            *dst = src as f32;
+        }
+        // Cost matrix through the backend (Pallas/XLA artifact or native).
+        backend.batch_costs(&xb, m, d, &centroids_f32, k, &mut cost);
+
+        // Categorical upper-bound masking (§4.3).
+        if g > 0 {
+            let cats = ds.categories.as_ref().unwrap();
+            for (j, &obj) in batch.iter().enumerate() {
+                let c = cats[obj] as usize;
+                for kk in 0..k {
+                    if cat_counts[kk * g + c] >= caps[c] {
+                        cost[j * k + kk] = MASK_COST;
+                    }
+                }
+            }
+        }
+
+        // Max-cost assignment.
+        let assign = match solver {
+            SolverKind::Lapjv => lapjv.solve(&cost, m, k, true),
+            other => assignment::solve_max(other, &cost, m, k),
+        };
+
+        // Apply assignments + incremental centroid updates.
+        for (j, &obj) in batch.iter().enumerate() {
+            let kk = assign[j];
+            labels[obj] = kk as u32;
+            counts[kk] += 1;
+            let counter = counts[kk] as f64;
+            let mu = &mut centroids[kk * d..(kk + 1) * d];
+            for (m_d, &x_d) in mu.iter_mut().zip(ds.row(obj)) {
+                *m_d += (x_d as f64 - *m_d) / counter;
+            }
+            if g > 0 {
+                let c = ds.categories.as_ref().unwrap()[obj] as usize;
+                cat_counts[kk * g + c] += 1;
+            }
+        }
+    }
+
+    debug_assert!(labels.iter().all(|&l| l != u32::MAX));
+    Ok(labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::objective::ClusterStats;
+    use crate::data::synth::{generate, SynthKind};
+    use crate::runtime::NativeBackend;
+
+    fn run_base(ds: &Dataset, k: usize) -> Vec<u32> {
+        let mut be = NativeBackend::default();
+        let order = crate::algo::batching::build_order(ds, k, crate::algo::Variant::Base, &mut be);
+        run_with_order(ds, k, &order, SolverKind::Lapjv, &mut be).unwrap()
+    }
+
+    #[test]
+    fn sizes_differ_by_at_most_one() {
+        for &(n, k) in &[(100usize, 7usize), (99, 10), (20, 20), (50, 3), (10, 1)] {
+            let ds = generate(SynthKind::Uniform, n, 3, 5, "u");
+            let labels = run_base(&ds, k);
+            let stats = ClusterStats::compute(&ds, &labels, k);
+            let min = *stats.sizes.iter().min().unwrap();
+            let max = *stats.sizes.iter().max().unwrap();
+            assert!(max - min <= 1, "n={n} k={k} sizes={:?}", stats.sizes);
+            assert_eq!(stats.sizes.iter().sum::<usize>(), n);
+        }
+    }
+
+    #[test]
+    fn beats_random_partition_on_objective() {
+        let ds = generate(
+            SynthKind::GaussianMixture { components: 5, spread: 6.0 },
+            600,
+            4,
+            6,
+            "g",
+        );
+        let k = 10;
+        let labels = run_base(&ds, k);
+        let aba = ClusterStats::compute(&ds, &labels, k).ssd_total();
+        // Random balanced partition.
+        let rnd = crate::baselines::random_part::random_partition(ds.n, k, 3);
+        let rand_obj = ClusterStats::compute(&ds, &rnd, k).ssd_total();
+        assert!(aba > rand_obj, "aba={aba} rand={rand_obj}");
+    }
+
+    #[test]
+    fn two_clusters_of_two_points_pair_far_apart() {
+        // 4 points on a line: 0, 1, 10, 11. Optimal anticlustering with
+        // K=2 pairs {0,10|11} and {1,11|10} — i.e. each anticluster spans
+        // the gap; within-cluster ssd is maximal when distant points are
+        // together.
+        let ds = Dataset::from_rows(
+            "line",
+            &[vec![0.0], vec![1.0], vec![10.0], vec![11.0]],
+        )
+        .unwrap();
+        let labels = run_base(&ds, 2);
+        // Each cluster must contain one low point and one high point.
+        assert_ne!(labels[0], labels[1], "{labels:?}");
+        assert_ne!(labels[2], labels[3], "{labels:?}");
+    }
+
+    #[test]
+    fn categorical_caps_respected() {
+        let n = 60;
+        let mut ds = generate(SynthKind::Uniform, n, 3, 8, "u");
+        // 3 categories with unequal counts: 30 / 20 / 10.
+        let cats: Vec<u32> = (0..n)
+            .map(|i| if i < 30 { 0 } else if i < 50 { 1 } else { 2 })
+            .collect();
+        ds = ds.with_categories(cats.clone()).unwrap();
+        let k = 5;
+        let mut be = NativeBackend::default();
+        let order =
+            crate::algo::batching::build_order(&ds, k, crate::algo::Variant::Base, &mut be);
+        let labels = run_with_order(&ds, k, &order, SolverKind::Lapjv, &mut be).unwrap();
+        // Constraint (5): per category, cluster counts within floor/ceil.
+        for gcat in 0..3u32 {
+            let total = cats.iter().filter(|&&c| c == gcat).count();
+            let (floor, ceil) = (total / k, total.div_ceil(k));
+            for kk in 0..k as u32 {
+                let cnt = (0..n)
+                    .filter(|&i| labels[i] == kk && cats[i] == gcat)
+                    .count();
+                assert!(
+                    (floor..=ceil).contains(&cnt),
+                    "cat {gcat} cluster {kk}: {cnt} not in [{floor},{ceil}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = generate(SynthKind::Uniform, 200, 4, 9, "u");
+        assert_eq!(run_base(&ds, 8), run_base(&ds, 8));
+    }
+
+    #[test]
+    fn order_must_be_full_permutation() {
+        let ds = generate(SynthKind::Uniform, 10, 2, 1, "u");
+        let mut be = NativeBackend::default();
+        let short = vec![0usize, 1, 2];
+        assert!(run_with_order(&ds, 2, &short, SolverKind::Lapjv, &mut be).is_err());
+    }
+
+    #[test]
+    fn all_solvers_produce_valid_partitions() {
+        let ds = generate(SynthKind::Uniform, 90, 3, 10, "u");
+        let k = 9;
+        for solver in [SolverKind::Lapjv, SolverKind::Auction, SolverKind::Greedy] {
+            let mut be = NativeBackend::default();
+            let order =
+                crate::algo::batching::build_order(&ds, k, crate::algo::Variant::Base, &mut be);
+            let labels = run_with_order(&ds, k, &order, solver, &mut be).unwrap();
+            let stats = ClusterStats::compute(&ds, &labels, k);
+            assert!(stats.sizes.iter().all(|&s| s == 10), "{solver:?}");
+        }
+    }
+
+    #[test]
+    fn lapjv_not_worse_than_greedy_objective() {
+        let ds = generate(
+            SynthKind::GaussianMixture { components: 4, spread: 5.0 },
+            240,
+            6,
+            11,
+            "g",
+        );
+        let k = 12;
+        let obj = |solver| {
+            let mut be = NativeBackend::default();
+            let order =
+                crate::algo::batching::build_order(&ds, k, crate::algo::Variant::Base, &mut be);
+            let labels = run_with_order(&ds, k, &order, solver, &mut be).unwrap();
+            ClusterStats::compute(&ds, &labels, k).ssd_total()
+        };
+        let lap = obj(SolverKind::Lapjv);
+        let gre = obj(SolverKind::Greedy);
+        assert!(lap >= gre * 0.999, "lapjv={lap} greedy={gre}");
+    }
+}

@@ -1,0 +1,231 @@
+//! Hierarchical decomposition (paper §4.4).
+//!
+//! For large K, solving K×K assignment problems is the bottleneck
+//! (`O(N K^2)` total). The decomposition first builds `K_1` anticlusters,
+//! then splits each into `K_2`, and so on: total work
+//! `O(N * sum K_l^2)`, minimized by balanced factors (Lemma 1:
+//! `K_l = K^(1/L)`), giving `O(N L K^(2/L))`.
+//!
+//! Proposition 1: because every level splits into parts whose sizes
+//! differ by at most one, the final anticluster sizes also differ by at
+//! most one — verified by property tests.
+//!
+//! Subproblems at each level are independent; with `parallel = true` they
+//! fan out over `std::thread::scope` (each worker gets its own native
+//! backend).
+
+use super::{run_aba_with_backend, AbaConfig};
+use crate::data::Dataset;
+use crate::runtime::{make_backend, BackendKind, NativeBackend};
+use anyhow::{bail, Result};
+
+/// Derive a balanced decomposition for (n, k), mirroring the paper's
+/// Table 5/7 policy: single level for small K; otherwise the fewest
+/// levels whose balanced factors stay <= 200 (the assignment-size sweet
+/// spot measured in Figure 7). Returns `[k]` when K is small or has no
+/// usable factorization (e.g. large primes).
+pub fn auto_spec(_n: usize, k: usize) -> Vec<usize> {
+    if k <= 128 {
+        return vec![k];
+    }
+    let mut l = 2usize;
+    while (k as f64).powf(1.0 / l as f64) > 200.0 && l < 8 {
+        l += 1;
+    }
+    balanced_factorization(k, l).unwrap_or_else(|| vec![k])
+}
+
+/// Factor `k` into `l` integer factors (each >= 2 when possible), chosen
+/// greedily closest to `k^(1/l)`. Returns `None` if no nontrivial
+/// factorization exists at this depth.
+pub fn balanced_factorization(k: usize, l: usize) -> Option<Vec<usize>> {
+    if l <= 1 {
+        return Some(vec![k]);
+    }
+    let ideal = (k as f64).powf(1.0 / l as f64);
+    // Candidate divisors of k, pick the one closest to ideal (>= 2).
+    let mut best: Option<usize> = None;
+    let mut best_gap = f64::INFINITY;
+    let mut d = 2usize;
+    while d * d <= k {
+        if k % d == 0 {
+            for cand in [d, k / d] {
+                if cand >= 2 && cand < k {
+                    let gap = (cand as f64 - ideal).abs();
+                    if gap < best_gap {
+                        best_gap = gap;
+                        best = Some(cand);
+                    }
+                }
+            }
+        }
+        d += 1;
+    }
+    let first = best?;
+    let mut rest = balanced_factorization(k / first, l - 1)?;
+    let mut out = vec![first];
+    out.append(&mut rest);
+    Some(out)
+}
+
+/// Run ABA with an explicit multi-level decomposition. The final number
+/// of anticlusters is `prod(spec)`; labels are in `0..prod(spec)`.
+pub fn run_hierarchical(ds: &Dataset, spec: &[usize], cfg: &AbaConfig) -> Result<Vec<u32>> {
+    if spec.is_empty() {
+        bail!("empty hierarchy spec");
+    }
+    let k_total: usize = spec.iter().product();
+    if k_total == 0 || k_total > ds.n {
+        bail!("hierarchy product {k_total} invalid for n={}", ds.n);
+    }
+    // Flat config for the per-group subproblems (no recursion).
+    let flat_cfg = AbaConfig { hier: None, auto_hier: false, ..cfg.clone() };
+
+    // Current groups of object indices; starts with everything.
+    let mut groups: Vec<Vec<usize>> = vec![(0..ds.n).collect()];
+    for (level, &kl) in spec.iter().enumerate() {
+        let split_one = |group: &Vec<usize>| -> Result<Vec<Vec<usize>>> {
+            if kl == 1 {
+                return Ok(vec![group.clone()]);
+            }
+            let sub = ds.subset(group, format!("{}::l{}", ds.name, level));
+            let mut backend: Box<dyn crate::runtime::CostBackend> =
+                if cfg.backend == BackendKind::Native || cfg.parallel {
+                    Box::new(NativeBackend::default())
+                } else {
+                    make_backend(cfg.backend)?
+                };
+            let labels = run_aba_with_backend(&sub, kl, &flat_cfg, backend.as_mut())?;
+            let mut parts: Vec<Vec<usize>> = vec![Vec::new(); kl];
+            for (local, &global) in group.iter().enumerate() {
+                parts[labels[local] as usize].push(global);
+            }
+            Ok(parts)
+        };
+
+        let results: Vec<Vec<Vec<usize>>> = if cfg.parallel && groups.len() > 1 {
+            let workers = std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+                .min(groups.len());
+            let next_idx = std::sync::atomic::AtomicUsize::new(0);
+            let slots: Vec<std::sync::Mutex<Option<Result<Vec<Vec<usize>>>>>> =
+                groups.iter().map(|_| std::sync::Mutex::new(None)).collect();
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| loop {
+                        let i = next_idx.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= groups.len() {
+                            break;
+                        }
+                        let res = split_one(&groups[i]);
+                        *slots[i].lock().unwrap() = Some(res);
+                    });
+                }
+            });
+            let mut out = Vec::with_capacity(groups.len());
+            for s in slots {
+                out.push(s.into_inner().unwrap().expect("worker ran")?);
+            }
+            out
+        } else {
+            let mut out = Vec::with_capacity(groups.len());
+            for g in &groups {
+                out.push(split_one(g)?);
+            }
+            out
+        };
+
+        groups = results.into_iter().flatten().collect();
+    }
+
+    debug_assert_eq!(groups.len(), k_total);
+    let mut labels = vec![0u32; ds.n];
+    for (gi, group) in groups.iter().enumerate() {
+        for &obj in group {
+            labels[obj] = gi as u32;
+        }
+    }
+    Ok(labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::objective::ClusterStats;
+    use crate::data::synth::{generate, SynthKind};
+
+    #[test]
+    fn factorization_products_hold() {
+        for &(k, l) in &[(5_000usize, 2usize), (1_024, 2), (1_024, 3), (640_000, 3), (72, 2)] {
+            let f = balanced_factorization(k, l).unwrap();
+            assert_eq!(f.iter().product::<usize>(), k, "{f:?}");
+            assert_eq!(f.len(), l, "{f:?}");
+        }
+        // Primes can't be factored at depth 2.
+        assert!(balanced_factorization(257, 2).is_none());
+    }
+
+    #[test]
+    fn auto_spec_small_k_single_level() {
+        assert_eq!(auto_spec(10_000, 50), vec![50]);
+        assert_eq!(auto_spec(10_000, 128), vec![128]);
+    }
+
+    #[test]
+    fn auto_spec_large_k_balanced() {
+        let spec = auto_spec(1_000_000, 40_000);
+        assert!(spec.len() >= 2);
+        assert_eq!(spec.iter().product::<usize>(), 40_000);
+        assert!(spec.iter().all(|&f| f <= 210), "{spec:?}");
+    }
+
+    #[test]
+    fn proposition1_sizes_differ_by_at_most_one() {
+        // N=1000, K=12 via (3 x 4): N mod K = 4 extras.
+        let ds = generate(SynthKind::Uniform, 1_000, 3, 30, "u");
+        let cfg = AbaConfig::default();
+        let labels = run_hierarchical(&ds, &[3, 4], &cfg).unwrap();
+        let stats = ClusterStats::compute(&ds, &labels, 12);
+        let (min, max) = (
+            *stats.sizes.iter().min().unwrap(),
+            *stats.sizes.iter().max().unwrap(),
+        );
+        assert!(max - min <= 1, "{:?}", stats.sizes);
+        assert_eq!(stats.sizes.iter().sum::<usize>(), 1_000);
+    }
+
+    #[test]
+    fn hierarchical_close_to_flat_quality() {
+        let ds = generate(
+            SynthKind::GaussianMixture { components: 6, spread: 4.0 },
+            1_200,
+            6,
+            31,
+            "g",
+        );
+        let cfg = AbaConfig { auto_hier: false, ..AbaConfig::default() };
+        let flat = crate::algo::run_aba(&ds, 24, &cfg).unwrap();
+        let hier = run_hierarchical(&ds, &[4, 6], &cfg).unwrap();
+        let of = ClusterStats::compute(&ds, &flat, 24).ssd_total();
+        let oh = ClusterStats::compute(&ds, &hier, 24).ssd_total();
+        // Figure 7: hierarchical loses well under 1%.
+        assert!(oh > 0.98 * of, "flat={of} hier={oh}");
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let ds = generate(SynthKind::Uniform, 800, 4, 32, "u");
+        let mut cfg = AbaConfig::default();
+        let serial = run_hierarchical(&ds, &[4, 5], &cfg).unwrap();
+        cfg.parallel = true;
+        let parallel = run_hierarchical(&ds, &[4, 5], &cfg).unwrap();
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn rejects_oversized_spec() {
+        let ds = generate(SynthKind::Uniform, 10, 2, 33, "u");
+        assert!(run_hierarchical(&ds, &[4, 5], &AbaConfig::default()).is_err());
+    }
+}

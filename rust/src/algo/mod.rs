@@ -1,0 +1,165 @@
+//! The Assignment-Based Anticlustering algorithm (paper §4).
+//!
+//! * [`batching`] — sorted-list construction and the §4.1/§4.2/§4.3 batch
+//!   orderings (Figures 1–3).
+//! * [`core`] — the assignment loop of Algorithm 1 (shared by all
+//!   variants), including categorical cost masking.
+//! * [`hierarchical`] — the §4.4 decomposition with Proposition-1 size
+//!   guarantees and threaded subproblem fan-out.
+//! * [`objective`] — Fact-1 objectives and the diversity-balance metrics
+//!   the evaluation tables report.
+
+pub mod batching;
+pub mod constraints;
+pub mod core;
+pub mod hierarchical;
+pub mod objective;
+
+pub use self::core::run_with_order;
+pub use constraints::{run_aba_constrained, Constraints};
+pub use hierarchical::{auto_spec, run_hierarchical};
+pub use objective::ClusterStats;
+
+use crate::assignment::SolverKind;
+use crate::data::Dataset;
+use crate::runtime::{make_backend, BackendKind, CostBackend};
+use anyhow::{bail, Result};
+
+/// Batch-ordering variant (paper §4.1–§4.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// §4.1: batches in decreasing distance to the global centroid.
+    Base,
+    /// §4.2: interleaved sublists — better for small anticlusters.
+    Small,
+    /// Pick `Small` when `N/K <= 4`, else `Base`.
+    Auto,
+}
+
+impl std::str::FromStr for Variant {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "base" => Ok(Variant::Base),
+            "small" => Ok(Variant::Small),
+            "auto" => Ok(Variant::Auto),
+            _ => bail!("unknown variant '{s}' (base|small|auto)"),
+        }
+    }
+}
+
+/// Configuration for an ABA run.
+#[derive(Clone, Debug)]
+pub struct AbaConfig {
+    pub variant: Variant,
+    pub solver: SolverKind,
+    pub backend: BackendKind,
+    /// Explicit hierarchical decomposition `[K1, K2, ...]` with
+    /// `prod(Ki) == K`. `None` + `auto_hier` derives one for large K.
+    pub hier: Option<Vec<usize>>,
+    /// Apply the Table-5-style decomposition rule automatically when K is
+    /// large.
+    pub auto_hier: bool,
+    /// Fan subproblems out over threads at each hierarchy level.
+    pub parallel: bool,
+}
+
+impl Default for AbaConfig {
+    fn default() -> Self {
+        Self {
+            variant: Variant::Auto,
+            solver: SolverKind::Lapjv,
+            backend: BackendKind::Native,
+            hier: None,
+            auto_hier: true,
+            parallel: false,
+        }
+    }
+}
+
+/// Run ABA on a dataset, returning an anticluster label in `0..k` per
+/// object. Honors the categorical variant automatically when the dataset
+/// carries categories (§4.3), and hierarchical decomposition per config.
+pub fn run_aba(ds: &Dataset, k: usize, cfg: &AbaConfig) -> Result<Vec<u32>> {
+    validate(ds, k)?;
+    if let Some(spec) = effective_spec(ds, k, cfg) {
+        return run_hierarchical(ds, &spec, cfg);
+    }
+    let mut backend = make_backend(cfg.backend)?;
+    run_aba_with_backend(ds, k, cfg, backend.as_mut())
+}
+
+/// As [`run_aba`] but with a caller-supplied backend (lets the pipeline
+/// and hierarchical driver reuse compiled XLA executables / scratch).
+pub fn run_aba_with_backend(
+    ds: &Dataset,
+    k: usize,
+    cfg: &AbaConfig,
+    backend: &mut dyn CostBackend,
+) -> Result<Vec<u32>> {
+    validate(ds, k)?;
+    if k == 1 {
+        return Ok(vec![0; ds.n]);
+    }
+    let variant = match cfg.variant {
+        Variant::Auto if ds.n / k <= 4 => Variant::Small,
+        Variant::Auto => Variant::Base,
+        v => v,
+    };
+    let order = batching::build_order(ds, k, variant, backend);
+    core::run_with_order(ds, k, &order, cfg.solver, backend)
+}
+
+/// The decomposition actually used for this run, if any.
+pub fn effective_spec(ds: &Dataset, k: usize, cfg: &AbaConfig) -> Option<Vec<usize>> {
+    if let Some(spec) = &cfg.hier {
+        if spec.len() > 1 {
+            return Some(spec.clone());
+        }
+        return None;
+    }
+    if cfg.auto_hier {
+        let spec = auto_spec(ds.n, k);
+        if spec.len() > 1 {
+            return Some(spec);
+        }
+    }
+    None
+}
+
+fn validate(ds: &Dataset, k: usize) -> Result<()> {
+    if k == 0 {
+        bail!("k must be >= 1");
+    }
+    if k > ds.n {
+        bail!("k={k} exceeds number of objects n={}", ds.n);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthKind};
+
+    #[test]
+    fn rejects_bad_k() {
+        let ds = generate(SynthKind::Uniform, 10, 2, 1, "u");
+        assert!(run_aba(&ds, 0, &AbaConfig::default()).is_err());
+        assert!(run_aba(&ds, 11, &AbaConfig::default()).is_err());
+    }
+
+    #[test]
+    fn k1_is_trivial() {
+        let ds = generate(SynthKind::Uniform, 10, 2, 1, "u");
+        let labels = run_aba(&ds, 1, &AbaConfig::default()).unwrap();
+        assert!(labels.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn variant_parses() {
+        assert_eq!("base".parse::<Variant>().unwrap(), Variant::Base);
+        assert_eq!("small".parse::<Variant>().unwrap(), Variant::Small);
+        assert!("x".parse::<Variant>().is_err());
+    }
+}

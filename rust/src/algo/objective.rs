@@ -1,0 +1,237 @@
+//! Objectives and diversity-balance metrics (paper §2, Fact 1, §5.3).
+//!
+//! Two equivalent objectives appear in the paper:
+//! * the *pairwise* within-anticluster sum `W(C)` (problem definition,
+//!   Table 11), and
+//! * the *centroid-form* sum of squared object→centroid distances (the
+//!   `ofv` reported in Tables 4 and 9).
+//!
+//! Fact 1 links them: `pairwise_k = |C_k| * ssd_k`. Both are provided,
+//! plus the per-anticluster diversity statistics (sd, range) of Tables
+//! 6/10 and the min/max size ratio of Table 11.
+
+use crate::data::dataset::sq_dist_to_f64;
+use crate::data::Dataset;
+
+/// Per-anticluster statistics of a partition.
+#[derive(Clone, Debug)]
+pub struct ClusterStats {
+    /// Objects per anticluster.
+    pub sizes: Vec<usize>,
+    /// Per-anticluster sum of squared distances to the anticluster
+    /// centroid (the "diversity" of Tables 6/10).
+    pub ssd: Vec<f64>,
+}
+
+impl ClusterStats {
+    /// Compute centroids and per-cluster SSDs in two passes.
+    pub fn compute(ds: &Dataset, labels: &[u32], k: usize) -> Self {
+        assert_eq!(labels.len(), ds.n);
+        let d = ds.d;
+        let mut sums = vec![0f64; k * d];
+        let mut sizes = vec![0usize; k];
+        for i in 0..ds.n {
+            let c = labels[i] as usize;
+            assert!(c < k, "label {c} out of range (k={k})");
+            sizes[c] += 1;
+            for (s, &v) in sums[c * d..(c + 1) * d].iter_mut().zip(ds.row(i)) {
+                *s += v as f64;
+            }
+        }
+        let mut centroids = sums;
+        for c in 0..k {
+            if sizes[c] > 0 {
+                for v in centroids[c * d..(c + 1) * d].iter_mut() {
+                    *v /= sizes[c] as f64;
+                }
+            }
+        }
+        let mut ssd = vec![0f64; k];
+        for i in 0..ds.n {
+            let c = labels[i] as usize;
+            ssd[c] += sq_dist_to_f64(ds.row(i), &centroids[c * d..(c + 1) * d]);
+        }
+        Self { sizes, ssd }
+    }
+
+    /// Centroid-form objective: total SSD to anticluster centroids (the
+    /// `ofv` of Tables 4/9).
+    pub fn ssd_total(&self) -> f64 {
+        self.ssd.iter().sum()
+    }
+
+    /// Pairwise objective `W(C)` via Fact 1: `sum_k |C_k| * ssd_k`.
+    pub fn pairwise_total(&self) -> f64 {
+        self.sizes
+            .iter()
+            .zip(&self.ssd)
+            .map(|(&n, &s)| n as f64 * s)
+            .sum()
+    }
+
+    /// Standard deviation of per-anticluster diversity (Table 6).
+    pub fn diversity_sd(&self) -> f64 {
+        let k = self.ssd.len() as f64;
+        if k < 2.0 {
+            return 0.0;
+        }
+        let mean = self.ssd_total() / k;
+        let var = self.ssd.iter().map(|&s| (s - mean) * (s - mean)).sum::<f64>() / k;
+        var.sqrt()
+    }
+
+    /// Range (max - min) of per-anticluster diversity (Table 6).
+    pub fn diversity_range(&self) -> f64 {
+        let max = self.ssd.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let min = self.ssd.iter().copied().fold(f64::INFINITY, f64::min);
+        max - min
+    }
+
+    /// Min/max anticluster size ratio in percent; sizes whose spread is
+    /// at most one object count as 100 (Table 11 convention).
+    pub fn min_max_ratio_pct(&self) -> f64 {
+        let min = *self.sizes.iter().min().unwrap_or(&0);
+        let max = *self.sizes.iter().max().unwrap_or(&0);
+        if max == 0 {
+            return 0.0;
+        }
+        if max - min <= 1 {
+            return 100.0;
+        }
+        100.0 * min as f64 / max as f64
+    }
+}
+
+/// Dispersion of a partition: the minimum pairwise distance between two
+/// objects in the same anticluster (the second criterion of the
+/// bicriterion anticlustering literature — Brusco et al. 2020, Papenberg
+/// et al. 2025a — which the paper reviews in §3). O(sum |C_k|^2 d);
+/// intended for evaluation, not the hot path. Returns `f64::INFINITY`
+/// when every anticluster is a singleton.
+pub fn dispersion(ds: &Dataset, labels: &[u32], k: usize) -> f64 {
+    let mut min = f64::INFINITY;
+    for c in 0..k as u32 {
+        let members: Vec<usize> = (0..ds.n).filter(|&i| labels[i] == c).collect();
+        for (a, &i) in members.iter().enumerate() {
+            for &j in &members[a + 1..] {
+                let d = ds.dist2(i, j);
+                if d < min {
+                    min = d;
+                }
+            }
+        }
+    }
+    min
+}
+
+/// Brute-force pairwise within-cluster sum — O(sum |C_k|^2 d), the
+/// independent ground truth used to validate Fact 1 in tests.
+pub fn pairwise_within_brute(ds: &Dataset, labels: &[u32], k: usize) -> f64 {
+    let mut total = 0f64;
+    for c in 0..k as u32 {
+        let members: Vec<usize> = (0..ds.n).filter(|&i| labels[i] == c).collect();
+        for (a, &i) in members.iter().enumerate() {
+            for &j in &members[a + 1..] {
+                total += ds.dist2(i, j);
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthKind};
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn fact1_pairwise_equals_centroid_form() {
+        let ds = generate(SynthKind::Uniform, 60, 4, 21, "u");
+        let mut rng = Pcg32::new(2);
+        let k = 5;
+        let labels: Vec<u32> = (0..ds.n).map(|_| rng.gen_below(k as u32)).collect();
+        let stats = ClusterStats::compute(&ds, &labels, k);
+        let brute = pairwise_within_brute(&ds, &labels, k);
+        let fact1 = stats.pairwise_total();
+        assert!(
+            (brute - fact1).abs() < 1e-6 * brute.max(1.0),
+            "brute={brute} fact1={fact1}"
+        );
+    }
+
+    #[test]
+    fn empty_cluster_contributes_zero() {
+        let ds = generate(SynthKind::Uniform, 10, 2, 22, "u");
+        let labels = vec![0u32; 10]; // cluster 1 empty
+        let stats = ClusterStats::compute(&ds, &labels, 2);
+        assert_eq!(stats.sizes, vec![10, 0]);
+        assert_eq!(stats.ssd[1], 0.0);
+    }
+
+    #[test]
+    fn diversity_stats() {
+        let stats = ClusterStats { sizes: vec![2, 2, 2], ssd: vec![1.0, 3.0, 5.0] };
+        assert!((stats.diversity_sd() - (8.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(stats.diversity_range(), 4.0);
+        assert_eq!(stats.ssd_total(), 9.0);
+        assert_eq!(stats.pairwise_total(), 18.0);
+    }
+
+    #[test]
+    fn ratio_convention_matches_table11() {
+        // Spread <= 1 counts as perfectly balanced.
+        let s = ClusterStats { sizes: vec![3, 4, 4], ssd: vec![0.0; 3] };
+        assert_eq!(s.min_max_ratio_pct(), 100.0);
+        let s = ClusterStats { sizes: vec![2, 4], ssd: vec![0.0; 2] };
+        assert_eq!(s.min_max_ratio_pct(), 50.0);
+    }
+
+    #[test]
+    fn single_cluster_sd_zero() {
+        let s = ClusterStats { sizes: vec![5], ssd: vec![2.0] };
+        assert_eq!(s.diversity_sd(), 0.0);
+    }
+
+    #[test]
+    fn dispersion_is_min_within_pair() {
+        use crate::data::Dataset;
+        // Clusters {0,1} at distance 1 and {2,3} at distance 4.
+        let ds = Dataset::from_rows(
+            "disp",
+            &[vec![0.0], vec![1.0], vec![10.0], vec![12.0]],
+        )
+        .unwrap();
+        let labels = vec![0u32, 0, 1, 1];
+        assert_eq!(dispersion(&ds, &labels, 2), 1.0);
+        // Cross pairing raises dispersion to 100 / 121 -> min 100.
+        let labels = vec![0u32, 1, 0, 1];
+        assert_eq!(dispersion(&ds, &labels, 2), 100.0);
+    }
+
+    #[test]
+    fn dispersion_singletons_infinite() {
+        let ds = generate(SynthKind::Uniform, 4, 2, 23, "u");
+        let labels = vec![0u32, 1, 2, 3];
+        assert_eq!(dispersion(&ds, &labels, 4), f64::INFINITY);
+    }
+
+    #[test]
+    fn dispersion_evaluates_on_aba_partitions() {
+        // Diversity-optimal partitions need not have good dispersion
+        // (that is exactly why the bicriterion literature exists — §3 of
+        // the paper); here we only check the metric is well-defined and
+        // strictly positive on non-singleton ABA anticlusters.
+        let ds = generate(
+            SynthKind::GaussianMixture { components: 4, spread: 6.0 },
+            200,
+            3,
+            24,
+            "g",
+        );
+        let k = 50;
+        let aba = crate::algo::run_aba(&ds, k, &crate::algo::AbaConfig::default()).unwrap();
+        let da = dispersion(&ds, &aba, k);
+        assert!(da.is_finite() && da > 0.0, "dispersion {da}");
+    }
+}

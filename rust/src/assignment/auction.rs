@@ -1,0 +1,141 @@
+//! Bertsekas auction algorithm with ε-scaling.
+//!
+//! The paper's §6 names approximate assignment solvers (specifically the
+//! auction algorithm, Bertsekas 1979) as future work for ABA; this module
+//! implements it so the repo can benchmark that future-work path today
+//! (see `benches/bench_assignment.rs` and the ablation in EXPERIMENTS.md).
+//!
+//! Forward auction: unassigned rows (bidders) bid for their most valuable
+//! column (object) at price increment `best - second_best + ε`. Each
+//! ε-phase terminates with an assignment within `nr·ε` of optimal;
+//! ε-scaling (divide by 4 each phase) drives the gap to a configurable
+//! tolerance.
+
+/// Max-cost rectangular assignment (`nr <= nc`) via ε-scaled auction.
+pub fn solve_max(cost: &[f32], nr: usize, nc: usize) -> Vec<usize> {
+    solve_max_eps(cost, nr, nc, 1e-6)
+}
+
+/// As [`solve_max`] with an explicit final ε (relative to max |cost|).
+pub fn solve_max_eps(cost: &[f32], nr: usize, nc: usize, rel_eps: f64) -> Vec<usize> {
+    assert!(nr <= nc);
+    assert_eq!(cost.len(), nr * nc);
+    if nr == 0 {
+        return Vec::new();
+    }
+    // Rectangular instances are squared by padding with zero-cost dummy
+    // rows: the ε-CS optimality bound of the forward auction only holds
+    // when every column ends up assigned (stale prices on abandoned
+    // columns otherwise break the duality argument).
+    if nr < nc {
+        let mut square = vec![0f32; nc * nc];
+        square[..nr * nc].copy_from_slice(cost);
+        let full = solve_max_eps(&square, nc, nc, rel_eps);
+        return full[..nr].to_vec();
+    }
+    let max_abs = cost
+        .iter()
+        .fold(0f64, |m, &c| m.max((c as f64).abs()))
+        .max(1e-12);
+    let eps_final = rel_eps * max_abs;
+    let mut eps = (max_abs / 4.0).max(eps_final);
+    let mut prices = vec![0f64; nc];
+    let mut row_of = vec![usize::MAX; nc]; // column -> row
+    let mut col_of = vec![usize::MAX; nr]; // row -> column
+
+    loop {
+        // Reset assignments for this ε-phase (prices persist — the warm
+        // start is what makes ε-scaling effective).
+        row_of.fill(usize::MAX);
+        col_of.fill(usize::MAX);
+        let mut unassigned: Vec<usize> = (0..nr).collect();
+        while let Some(i) = unassigned.pop() {
+            let row = &cost[i * nc..(i + 1) * nc];
+            // Best and second-best net value.
+            let mut best_j = 0usize;
+            let mut best_v = f64::NEG_INFINITY;
+            let mut second_v = f64::NEG_INFINITY;
+            for (j, &c) in row.iter().enumerate() {
+                let v = c as f64 - prices[j];
+                if v > best_v {
+                    second_v = best_v;
+                    best_v = v;
+                    best_j = j;
+                } else if v > second_v {
+                    second_v = v;
+                }
+            }
+            if second_v == f64::NEG_INFINITY {
+                second_v = best_v; // nc == 1 degenerate case
+            }
+            prices[best_j] += best_v - second_v + eps;
+            if row_of[best_j] != usize::MAX {
+                let evicted = row_of[best_j];
+                col_of[evicted] = usize::MAX;
+                unassigned.push(evicted);
+            }
+            row_of[best_j] = i;
+            col_of[i] = best_j;
+        }
+        if eps <= eps_final {
+            break;
+        }
+        eps = (eps / 4.0).max(eps_final * 0.999_999);
+    }
+    col_of
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::{assignment_cost, brute, is_valid_assignment};
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn matches_brute_on_small_instances() {
+        let mut rng = Pcg32::new(31);
+        for n in 2..=6 {
+            for _ in 0..10 {
+                let cost: Vec<f32> = (0..n * n).map(|_| rng.f32() * 9.0).collect();
+                let a = solve_max(&cost, n, n);
+                assert!(is_valid_assignment(&a, n));
+                let b = brute::solve_max(&cost, n, n);
+                let (ac, bc) = (
+                    assignment_cost(&cost, n, &a),
+                    assignment_cost(&cost, n, &b),
+                );
+                assert!((ac - bc).abs() <= 1e-3 * bc.abs().max(1.0), "auction={ac} opt={bc}");
+            }
+        }
+    }
+
+    #[test]
+    fn rectangular_valid_and_near_optimal() {
+        let mut rng = Pcg32::new(32);
+        let (nr, nc) = (4, 9);
+        for _ in 0..10 {
+            let cost: Vec<f32> = (0..nr * nc).map(|_| rng.f32() * 5.0).collect();
+            let a = solve_max(&cost, nr, nc);
+            assert!(is_valid_assignment(&a, nc));
+            let b = brute::solve_max(&cost, nr, nc);
+            let (ac, bc) = (
+                assignment_cost(&cost, nc, &a),
+                assignment_cost(&cost, nc, &b),
+            );
+            assert!(ac >= bc - 1e-3 * bc.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn single_column() {
+        let a = solve_max(&[2.0], 1, 1);
+        assert_eq!(a, vec![0]);
+    }
+
+    #[test]
+    fn constant_costs_terminate() {
+        let cost = vec![1.0f32; 5 * 5];
+        let a = solve_max(&cost, 5, 5);
+        assert!(is_valid_assignment(&a, 5));
+    }
+}

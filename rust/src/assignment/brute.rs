@@ -1,0 +1,84 @@
+//! Exhaustive assignment solver — the correctness oracle.
+//!
+//! Enumerates all injections of rows into columns; exponential, so only
+//! usable for `nr <= 9`-ish. Every exact solver in this crate is tested
+//! against it.
+
+/// Max-cost assignment by exhaustive search. Returns row -> column.
+pub fn solve_max(cost: &[f32], nr: usize, nc: usize) -> Vec<usize> {
+    assert!(nr <= nc);
+    assert!(nr <= 10, "brute force limited to 10 rows (got {nr})");
+    let mut best = vec![0usize; nr];
+    let mut cur = vec![0usize; nr];
+    let mut used = vec![false; nc];
+    let mut best_cost = f64::NEG_INFINITY;
+    recurse(cost, nr, nc, 0, 0.0, &mut cur, &mut used, &mut best, &mut best_cost);
+    best
+}
+
+#[allow(clippy::too_many_arguments)]
+fn recurse(
+    cost: &[f32],
+    nr: usize,
+    nc: usize,
+    row: usize,
+    acc: f64,
+    cur: &mut [usize],
+    used: &mut [bool],
+    best: &mut Vec<usize>,
+    best_cost: &mut f64,
+) {
+    if row == nr {
+        if acc > *best_cost {
+            *best_cost = acc;
+            best.copy_from_slice(cur);
+        }
+        return;
+    }
+    for j in 0..nc {
+        if !used[j] {
+            used[j] = true;
+            cur[row] = j;
+            recurse(
+                cost,
+                nr,
+                nc,
+                row + 1,
+                acc + cost[row * nc + j] as f64,
+                cur,
+                used,
+                best,
+                best_cost,
+            );
+            used[j] = false;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::{assignment_cost, is_valid_assignment};
+
+    #[test]
+    fn two_by_two() {
+        // max is anti-diagonal: 5 + 4 = 9 vs 1 + 2 = 3.
+        let cost = vec![1.0, 5.0, 4.0, 2.0];
+        assert_eq!(solve_max(&cost, 2, 2), vec![1, 0]);
+    }
+
+    #[test]
+    fn rectangular_picks_best_columns() {
+        // Single row: best column is the argmax.
+        let cost = vec![1.0, 9.0, 3.0];
+        assert_eq!(solve_max(&cost, 1, 3), vec![1]);
+    }
+
+    #[test]
+    fn output_always_valid() {
+        let cost: Vec<f32> = (0..3 * 5).map(|i| (i * 7 % 11) as f32).collect();
+        let a = solve_max(&cost, 3, 5);
+        assert!(is_valid_assignment(&a, 5));
+        assert!(assignment_cost(&cost, 5, &a) > 0.0);
+    }
+}

@@ -1,0 +1,71 @@
+//! Greedy assignment — the cheap ablation.
+//!
+//! Rows are processed in order of their best available gain; each takes its
+//! best free column. O(nr·nc·log) via a simple re-scan. Not optimal, but
+//! fast; used in the ablation bench to quantify what LAPJV's optimality is
+//! worth to ABA solution quality.
+
+/// Max-cost greedy assignment. Returns row -> column.
+pub fn solve_max(cost: &[f32], nr: usize, nc: usize) -> Vec<usize> {
+    assert!(nr <= nc);
+    let mut assign = vec![usize::MAX; nr];
+    let mut col_used = vec![false; nc];
+    let mut row_done = vec![false; nr];
+    // Repeatedly pick the (row, col) pair with max cost among free ones —
+    // "greedy by global best", which is noticeably better than row-order
+    // greedy while still simple.
+    for _ in 0..nr {
+        let mut best = (0usize, 0usize, f64::NEG_INFINITY);
+        for i in 0..nr {
+            if row_done[i] {
+                continue;
+            }
+            let row = &cost[i * nc..(i + 1) * nc];
+            for (j, &c) in row.iter().enumerate() {
+                if !col_used[j] && (c as f64) > best.2 {
+                    best = (i, j, c as f64);
+                }
+            }
+        }
+        let (i, j, _) = best;
+        assign[i] = j;
+        row_done[i] = true;
+        col_used[j] = true;
+    }
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::{assignment_cost, brute, is_valid_assignment};
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn valid_and_reasonable() {
+        let mut rng = Pcg32::new(21);
+        for _ in 0..20 {
+            let (nr, nc) = (6, 8);
+            let cost: Vec<f32> = (0..nr * nc).map(|_| rng.f32()).collect();
+            let g = solve_max(&cost, nr, nc);
+            assert!(is_valid_assignment(&g, nc));
+            let opt = brute::solve_max(&cost, nr, nc);
+            let gc = assignment_cost(&cost, nc, &g);
+            let oc = assignment_cost(&cost, nc, &opt);
+            assert!(gc <= oc + 1e-9);
+            // Global-best greedy achieves at least half the optimum.
+            assert!(gc >= 0.5 * oc, "greedy={gc} opt={oc}");
+        }
+    }
+
+    #[test]
+    fn picks_unique_maxima() {
+        let cost = vec![
+            10.0, 1.0, //
+            10.0, 2.0,
+        ];
+        let g = solve_max(&cost, 2, 2);
+        assert!(is_valid_assignment(&g, 2));
+        assert_eq!(assignment_cost(&cost, 2, &g), 12.0);
+    }
+}

@@ -1,0 +1,339 @@
+//! LAPJV — Jonker–Volgenant-style shortest-augmenting-path solver for the
+//! dense rectangular linear assignment problem.
+//!
+//! This is the exact solver Algorithm 1 calls once per batch. For each of
+//! the `nr` rows it grows a shortest augmenting path in the reduced-cost
+//! graph maintained by dual potentials `u` (rows) and `v` (columns) — the
+//! augmentation phase of Jonker & Volgenant (1987). Complexity is
+//! `O(nr * nc^2)` worst case, i.e. `O(K^3)` for the paper's square `K x K`
+//! batches, matching the complexity analysis in §4.5.
+//!
+//! The struct owns its scratch buffers so the per-batch hot path performs
+//! **zero allocations** after warm-up (see EXPERIMENTS.md §Perf).
+//!
+//! Costs are `f32` (as produced by the L1 kernel / native backend) and the
+//! duals are accumulated in `f64` for numerical robustness.
+
+/// Reusable Jonker–Volgenant solver.
+pub struct Lapjv {
+    /// Enable the JV column/row-reduction warm start (default on; the
+    /// off switch exists for the §Perf ablation in `bench_assignment`).
+    pub warm_start: bool,
+    // p[j] = row assigned to column j (1-based; 0 = unassigned).
+    p: Vec<usize>,
+    way: Vec<usize>,
+    u: Vec<f64>,
+    v: Vec<f64>,
+    minv: Vec<f64>,
+    used: Vec<bool>,
+}
+
+impl Default for Lapjv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Lapjv {
+    pub fn new() -> Self {
+        Self {
+            warm_start: true,
+            p: Vec::new(),
+            way: Vec::new(),
+            u: Vec::new(),
+            v: Vec::new(),
+            minv: Vec::new(),
+            used: Vec::new(),
+        }
+    }
+
+    fn reserve(&mut self, nr: usize, nc: usize) {
+        self.p.clear();
+        self.p.resize(nc + 1, 0);
+        self.way.clear();
+        self.way.resize(nc + 1, 0);
+        self.u.clear();
+        self.u.resize(nr + 1, 0.0);
+        self.v.clear();
+        self.v.resize(nc + 1, 0.0);
+        self.minv.resize(nc + 1, f64::INFINITY);
+        self.used.resize(nc + 1, false);
+    }
+
+    /// Solve the assignment problem on a row-major `nr x nc` cost matrix
+    /// (`nr <= nc`). Returns, for each row, its assigned column.
+    /// `maximize` selects max-cost (the ABA objective) vs min-cost.
+    pub fn solve(&mut self, cost: &[f32], nr: usize, nc: usize, maximize: bool) -> Vec<usize> {
+        assert!(nr <= nc, "lapjv requires nr <= nc (got {nr} x {nc})");
+        assert_eq!(cost.len(), nr * nc, "cost buffer shape mismatch");
+        if nr == 0 {
+            return Vec::new();
+        }
+        let sign = if maximize { -1.0f64 } else { 1.0f64 };
+        self.reserve(nr, nc);
+        let (p, way, u, v, minv, used) = (
+            &mut self.p,
+            &mut self.way,
+            &mut self.u,
+            &mut self.v,
+            &mut self.minv,
+            &mut self.used,
+        );
+
+        // --- JV initialization (square instances only): column reduction
+        // + row reduction + tight greedy matching — the classic
+        // Jonker–Volgenant warm start. It leaves dual-feasible potentials
+        // (all reduced costs >= 0) and a partial matching on tight edges,
+        // so the augmentation phase below only runs for the leftover
+        // rows; typically 60–90% of rows are matched up front (see
+        // EXPERIMENTS.md §Perf). Rectangular instances skip it: with
+        // unmatched columns the LP dual requires v[j] = 0 on every column
+        // that ends up unmatched, which column reduction cannot know in
+        // advance — the cold start (v = 0, only ever decreased on matched
+        // columns) is what preserves that complementary slackness. ABA's
+        // batches are square except the final partial one, so this covers
+        // the hot path.
+        let mut row_assigned = vec![false; nr + 1];
+        if self.warm_start && nr == nc {
+            // Column reduction: v[j] = min_i c(i, j).
+            for j in 1..=nc {
+                let mut m = f64::INFINITY;
+                for i in 0..nr {
+                    let c = sign * cost[i * nc + (j - 1)] as f64;
+                    if c < m {
+                        m = c;
+                    }
+                }
+                v[j] = m;
+            }
+            // Row reduction over reduced costs + greedy tight assignment.
+            let mut assigned_rows = 0usize;
+            for i in 1..=nr {
+                let row = &cost[(i - 1) * nc..i * nc];
+                let mut m = f64::INFINITY;
+                let mut arg = 1usize;
+                for j in 1..=nc {
+                    let rc = sign * row[j - 1] as f64 - v[j];
+                    if rc < m {
+                        m = rc;
+                        arg = j;
+                    }
+                }
+                u[i] = m;
+                if p[arg] == 0 {
+                    p[arg] = i;
+                    assigned_rows += 1;
+                }
+            }
+            if assigned_rows == nr {
+                let mut assign = vec![usize::MAX; nr];
+                for j in 1..=nc {
+                    if p[j] != 0 {
+                        assign[p[j] - 1] = j - 1;
+                    }
+                }
+                return assign;
+            }
+            for j in 1..=nc {
+                if p[j] != 0 {
+                    row_assigned[p[j]] = true;
+                }
+            }
+        }
+
+        for i in 1..=nr {
+            if row_assigned[i] {
+                continue;
+            }
+            p[0] = i;
+            let mut j0 = 0usize;
+            minv[..=nc].fill(f64::INFINITY);
+            used[..=nc].fill(false);
+            // Dijkstra over columns for the shortest augmenting path.
+            loop {
+                used[j0] = true;
+                let i0 = p[j0];
+                let row = &cost[(i0 - 1) * nc..i0 * nc];
+                let mut delta = f64::INFINITY;
+                let mut j1 = 0usize;
+                let u_i0 = u[i0];
+                for j in 1..=nc {
+                    if !used[j] {
+                        let cur = sign * row[j - 1] as f64 - u_i0 - v[j];
+                        if cur < minv[j] {
+                            minv[j] = cur;
+                            way[j] = j0;
+                        }
+                        if minv[j] < delta {
+                            delta = minv[j];
+                            j1 = j;
+                        }
+                    }
+                }
+                debug_assert!(delta.is_finite(), "no augmenting path found");
+                for j in 0..=nc {
+                    if used[j] {
+                        u[p[j]] += delta;
+                        v[j] -= delta;
+                    } else {
+                        minv[j] -= delta;
+                    }
+                }
+                j0 = j1;
+                if p[j0] == 0 {
+                    break;
+                }
+            }
+            // Unwind the augmenting path.
+            loop {
+                let j1 = way[j0];
+                p[j0] = p[j1];
+                j0 = j1;
+                if j0 == 0 {
+                    break;
+                }
+            }
+        }
+
+        let mut assign = vec![usize::MAX; nr];
+        for j in 1..=nc {
+            if p[j] != 0 {
+                assign[p[j] - 1] = j - 1;
+            }
+        }
+        debug_assert!(assign.iter().all(|&j| j != usize::MAX));
+        assign
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::{assignment_cost, brute, is_valid_assignment};
+    use crate::rng::Pcg32;
+
+    fn rand_cost(rng: &mut Pcg32, nr: usize, nc: usize, scale: f32) -> Vec<f32> {
+        (0..nr * nc).map(|_| rng.f32() * scale).collect()
+    }
+
+    #[test]
+    fn solves_trivial_1x1() {
+        let a = Lapjv::new().solve(&[3.5], 1, 1, true);
+        assert_eq!(a, vec![0]);
+    }
+
+    #[test]
+    fn square_matches_brute_force_max() {
+        let mut rng = Pcg32::new(10);
+        for n in 1..=7 {
+            for _ in 0..20 {
+                let cost = rand_cost(&mut rng, n, n, 10.0);
+                let got = Lapjv::new().solve(&cost, n, n, true);
+                assert!(is_valid_assignment(&got, n));
+                let want = brute::solve_max(&cost, n, n);
+                let got_c = assignment_cost(&cost, n, &got);
+                let want_c = assignment_cost(&cost, n, &want);
+                assert!(
+                    (got_c - want_c).abs() < 1e-4,
+                    "n={n} lapjv={got_c} brute={want_c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rectangular_matches_brute_force() {
+        let mut rng = Pcg32::new(11);
+        for &(nr, nc) in &[(1, 4), (2, 5), (3, 6), (4, 7), (5, 8)] {
+            for _ in 0..10 {
+                let cost = rand_cost(&mut rng, nr, nc, 5.0);
+                let got = Lapjv::new().solve(&cost, nr, nc, true);
+                assert!(is_valid_assignment(&got, nc));
+                let want = brute::solve_max(&cost, nr, nc);
+                let got_c = assignment_cost(&cost, nc, &got);
+                let want_c = assignment_cost(&cost, nc, &want);
+                assert!((got_c - want_c).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn minimize_matches_negated_maximize() {
+        let mut rng = Pcg32::new(12);
+        let (nr, nc) = (6, 6);
+        let cost = rand_cost(&mut rng, nr, nc, 3.0);
+        let min_a = Lapjv::new().solve(&cost, nr, nc, false);
+        let neg: Vec<f32> = cost.iter().map(|&c| -c).collect();
+        let max_a = Lapjv::new().solve(&neg, nr, nc, true);
+        assert_eq!(
+            assignment_cost(&cost, nc, &min_a),
+            assignment_cost(&cost, nc, &max_a)
+        );
+    }
+
+    #[test]
+    fn handles_ties_and_constant_matrix() {
+        let cost = vec![1.0f32; 4 * 4];
+        let a = Lapjv::new().solve(&cost, 4, 4, true);
+        assert!(is_valid_assignment(&a, 4));
+    }
+
+    #[test]
+    fn handles_negative_costs() {
+        // Categorical masking writes large negative entries.
+        let cost = vec![
+            -1e6, 5.0, 1.0, //
+            2.0, -1e6, 1.0, //
+            3.0, 4.0, -1e6,
+        ];
+        let a = Lapjv::new().solve(&cost, 3, 3, true);
+        assert!(is_valid_assignment(&a, 3));
+        // Optimal avoids all masked entries: rows take (1, 2, 0) or (1,0?..)
+        let total = assignment_cost(&cost, 3, &a);
+        assert!(total > 0.0, "picked a masked entry: {a:?} total={total}");
+    }
+
+    #[test]
+    fn reusing_solver_instance_is_clean() {
+        let mut solver = Lapjv::new();
+        let mut rng = Pcg32::new(13);
+        for n in [3usize, 7, 2, 9, 1] {
+            let cost = rand_cost(&mut rng, n, n, 8.0);
+            let a = solver.solve(&cost, n, n, true);
+            assert!(is_valid_assignment(&a, n));
+            let want = brute::solve_max(&cost, n, n);
+            assert!(
+                (assignment_cost(&cost, n, &a) - assignment_cost(&cost, n, &want)).abs() < 1e-4
+            );
+        }
+    }
+
+    #[test]
+    fn warm_start_and_cold_start_agree() {
+        let mut rng = Pcg32::new(14);
+        for n in [1usize, 4, 9, 17, 33] {
+            let cost = rand_cost(&mut rng, n, n, 50.0);
+            let warm = Lapjv::new().solve(&cost, n, n, true);
+            let mut cold_solver = Lapjv::new();
+            cold_solver.warm_start = false;
+            let cold = cold_solver.solve(&cost, n, n, true);
+            assert!(
+                (assignment_cost(&cost, n, &warm) - assignment_cost(&cost, n, &cold)).abs()
+                    < 1e-6,
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_rows_is_empty() {
+        let a = Lapjv::new().solve(&[], 0, 5, true);
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "nr <= nc")]
+    fn rejects_more_rows_than_cols() {
+        Lapjv::new().solve(&[0.0; 6], 3, 2, true);
+    }
+}

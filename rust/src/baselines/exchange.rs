@@ -1,0 +1,303 @@
+//! `fast_anticlustering` — the exchange-based heuristic of Papenberg &
+//! Klau (2021), the paper's main benchmark.
+//!
+//! Faithful re-implementation of the R/C `anticlust::fast_anticlustering`
+//! behaviour:
+//! * start from a random equal-size partition (category-aware when a
+//!   categorical feature is present),
+//! * for each object in turn, evaluate swapping it with each of its
+//!   *exchange partners* (its `p` nearest neighbors — P-N5 — or `p`
+//!   random objects — P-R5/R50/R500; partners are restricted to the same
+//!   category in categorical mode),
+//! * apply the swap with the largest positive improvement of the
+//!   centroid-form objective; one full pass over all objects.
+//!
+//! The O(D) swap evaluation uses the same centroid decomposition as the
+//! paper: maintaining per-cluster feature sums `S_k` and squared-norm
+//! sums `SS_k`, the cluster SSD is `SS_k - ||S_k||^2 / m_k`, so a swap
+//! only touches two clusters.
+
+use super::random_part;
+use crate::data::Dataset;
+use crate::knn;
+use crate::rng::Pcg32;
+use std::time::Instant;
+
+/// How exchange partners are generated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partners {
+    /// `p` nearest neighbors (the paper's P-N5 with p = 5).
+    Nearest(usize),
+    /// `p` uniformly random partners (P-R5 / P-R50 / P-R500).
+    Random(usize),
+}
+
+/// Configuration for a fast_anticlustering run.
+#[derive(Clone, Debug)]
+pub struct ExchangeConfig {
+    pub partners: Partners,
+    pub seed: u64,
+    /// Abort (returning the current labels) once this much wall time has
+    /// elapsed; mirrors the paper's two-hour cap, scaled down.
+    pub time_limit: Option<std::time::Duration>,
+}
+
+impl ExchangeConfig {
+    pub fn nearest(p: usize, seed: u64) -> Self {
+        Self { partners: Partners::Nearest(p), seed, time_limit: None }
+    }
+    pub fn random(p: usize, seed: u64) -> Self {
+        Self { partners: Partners::Random(p), seed, time_limit: None }
+    }
+}
+
+/// Result of a run.
+#[derive(Clone, Debug)]
+pub struct ExchangeResult {
+    pub labels: Vec<u32>,
+    /// Swaps applied.
+    pub swaps: usize,
+    /// True if the run hit the time limit before completing its pass.
+    pub timed_out: bool,
+}
+
+/// Run the exchange heuristic.
+pub fn fast_anticlustering(ds: &Dataset, k: usize, cfg: &ExchangeConfig) -> ExchangeResult {
+    assert!(k >= 1 && k <= ds.n);
+    let start = Instant::now();
+    let n = ds.n;
+    let d = ds.d;
+    let mut rng = Pcg32::new(cfg.seed);
+
+    // Initial random partition (category-aware when present).
+    let mut labels = match &ds.categories {
+        Some(cats) => random_part::random_partition_categorical(cats, k, rng.next_u64()),
+        None => random_part::random_partition(n, k, rng.next_u64()),
+    };
+
+    // Cluster state: S_k (feature sums), SS_k (sum of ||x||^2), m_k.
+    let mut sums = vec![0f64; k * d];
+    let mut sumsq = vec![0f64; k];
+    let mut counts = vec![0usize; k];
+    // Per-object squared norms, reused in the O(D) delta evaluation.
+    let norms: Vec<f64> = (0..n)
+        .map(|i| ds.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum())
+        .collect();
+    for i in 0..n {
+        let c = labels[i] as usize;
+        counts[c] += 1;
+        sumsq[c] += norms[i];
+        for (s, &v) in sums[c * d..(c + 1) * d].iter_mut().zip(ds.row(i)) {
+            *s += v as f64;
+        }
+    }
+    // ssd_k = SS_k - ||S_k||^2 / m_k.
+    let cluster_ssd = |sums: &[f64], sumsq: &[f64], counts: &[usize], c: usize| -> f64 {
+        if counts[c] == 0 {
+            return 0.0;
+        }
+        let s2: f64 = sums[c * d..(c + 1) * d].iter().map(|&v| v * v).sum();
+        sumsq[c] - s2 / counts[c] as f64
+    };
+
+    // Exchange partner lists.
+    let partner_count = match cfg.partners {
+        Partners::Nearest(p) | Partners::Random(p) => p,
+    };
+    let partner_count = partner_count.min(n - 1);
+    let partner_table: Option<Vec<usize>> = match cfg.partners {
+        Partners::Nearest(_) => {
+            // Nearest-neighbor search; in categorical mode anticlust
+            // cannot use NN partners (the paper notes this), so callers
+            // use Random there — but be safe and fall back to same-cat NN.
+            Some(knn::knn_all(ds, partner_count))
+        }
+        Partners::Random(_) => None,
+    };
+
+    let mut swaps = 0usize;
+    let mut timed_out = false;
+    // Scratch for candidate partner list.
+    let mut candidates: Vec<usize> = Vec::with_capacity(partner_count);
+
+    'outer: for i in 0..n {
+        if let Some(limit) = cfg.time_limit {
+            if start.elapsed() >= limit {
+                timed_out = true;
+                break 'outer;
+            }
+        }
+        // Build the candidate list for object i.
+        candidates.clear();
+        match &partner_table {
+            Some(table) => {
+                candidates.extend_from_slice(&table[i * partner_count..(i + 1) * partner_count]);
+            }
+            None => {
+                for _ in 0..partner_count {
+                    let j = rng.gen_index(n);
+                    if j != i {
+                        candidates.push(j);
+                    }
+                }
+            }
+        }
+        // In categorical mode a swap must stay within the category (it
+        // would otherwise violate constraint (5)).
+        if let Some(cats) = &ds.categories {
+            let ci = cats[i];
+            candidates.retain(|&j| cats[j] == ci);
+        }
+
+        let a = labels[i] as usize;
+        let base_a = cluster_ssd(&sums, &sumsq, &counts, a);
+        let mut best: Option<(usize, f64)> = None;
+        for &j in &candidates {
+            let b = labels[j] as usize;
+            if b == a {
+                continue;
+            }
+            // Evaluate the swap i<->j in O(D): clusters a and b exchange
+            // the two objects; counts unchanged.
+            let base_b = cluster_ssd(&sums, &sumsq, &counts, b);
+            let mut sa2 = 0f64;
+            let mut sb2 = 0f64;
+            let xi = ds.row(i);
+            let xj = ds.row(j);
+            for t in 0..d {
+                let delta = (xj[t] - xi[t]) as f64;
+                let na = sums[a * d + t] + delta;
+                let nb = sums[b * d + t] - delta;
+                sa2 += na * na;
+                sb2 += nb * nb;
+            }
+            let new_a = sumsq[a] - norms[i] + norms[j] - sa2 / counts[a] as f64;
+            let new_b = sumsq[b] - norms[j] + norms[i] - sb2 / counts[b] as f64;
+            let gain = (new_a + new_b) - (base_a + base_b);
+            if gain > 1e-9 && best.map_or(true, |(_, g)| gain > g) {
+                best = Some((j, gain));
+            }
+        }
+        if let Some((j, _)) = best {
+            // Apply the swap: update sums, sumsq, labels.
+            let b = labels[j] as usize;
+            let xi = ds.row(i);
+            let xj = ds.row(j);
+            for t in 0..d {
+                let delta = (xj[t] - xi[t]) as f64;
+                sums[a * d + t] += delta;
+                sums[b * d + t] -= delta;
+            }
+            sumsq[a] += norms[j] - norms[i];
+            sumsq[b] += norms[i] - norms[j];
+            labels.swap(i, j);
+            swaps += 1;
+        }
+    }
+
+    ExchangeResult { labels, swaps, timed_out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::objective::ClusterStats;
+    use crate::data::synth::{generate, SynthKind};
+
+    #[test]
+    fn improves_over_random_start() {
+        let ds = generate(
+            SynthKind::GaussianMixture { components: 4, spread: 5.0 },
+            300,
+            4,
+            41,
+            "g",
+        );
+        let k = 6;
+        let seed = 5;
+        let init = random_part::random_partition(ds.n, k, {
+            // replicate the internal seeding path
+            let mut r = Pcg32::new(seed);
+            r.next_u64()
+        });
+        let init_obj = ClusterStats::compute(&ds, &init, k).ssd_total();
+        let res = fast_anticlustering(&ds, k, &ExchangeConfig::random(20, seed));
+        let obj = ClusterStats::compute(&ds, &res.labels, k).ssd_total();
+        assert!(obj >= init_obj, "obj={obj} init={init_obj}");
+        assert!(res.swaps > 0);
+        assert!(!res.timed_out);
+    }
+
+    #[test]
+    fn preserves_balanced_sizes() {
+        let ds = generate(SynthKind::Uniform, 101, 3, 42, "u");
+        let k = 7;
+        let res = fast_anticlustering(&ds, k, &ExchangeConfig::random(10, 1));
+        let stats = ClusterStats::compute(&ds, &res.labels, k);
+        let (min, max) = (
+            *stats.sizes.iter().min().unwrap(),
+            *stats.sizes.iter().max().unwrap(),
+        );
+        assert!(max - min <= 1, "{:?}", stats.sizes);
+    }
+
+    #[test]
+    fn nearest_variant_runs() {
+        let ds = generate(SynthKind::Uniform, 200, 3, 43, "u");
+        let res = fast_anticlustering(&ds, 5, &ExchangeConfig::nearest(5, 2));
+        assert_eq!(res.labels.len(), 200);
+    }
+
+    #[test]
+    fn categorical_swaps_stay_in_category() {
+        let n = 90;
+        let cats: Vec<u32> = (0..n).map(|i| (i % 3) as u32).collect();
+        let ds = generate(SynthKind::Uniform, n, 3, 44, "u")
+            .with_categories(cats.clone())
+            .unwrap();
+        let k = 3;
+        let res = fast_anticlustering(&ds, k, &ExchangeConfig::random(15, 3));
+        for g in 0..3u32 {
+            let total = cats.iter().filter(|&&c| c == g).count();
+            let (lo, hi) = (total / k, total.div_ceil(k));
+            for cl in 0..k as u32 {
+                let cnt = (0..n)
+                    .filter(|&i| cats[i] == g && res.labels[i] == cl)
+                    .count();
+                assert!((lo..=hi).contains(&cnt));
+            }
+        }
+    }
+
+    #[test]
+    fn time_limit_zero_aborts_immediately() {
+        let ds = generate(SynthKind::Uniform, 500, 3, 45, "u");
+        let cfg = ExchangeConfig {
+            partners: Partners::Random(50),
+            seed: 1,
+            time_limit: Some(std::time::Duration::ZERO),
+        };
+        let res = fast_anticlustering(&ds, 5, &cfg);
+        assert!(res.timed_out);
+        assert_eq!(res.labels.len(), 500);
+    }
+
+    #[test]
+    fn more_partners_no_worse_quality() {
+        let ds = generate(
+            SynthKind::GaussianMixture { components: 3, spread: 4.0 },
+            240,
+            4,
+            46,
+            "g",
+        );
+        let k = 8;
+        let few = fast_anticlustering(&ds, k, &ExchangeConfig::random(2, 7));
+        let many = fast_anticlustering(&ds, k, &ExchangeConfig::random(60, 7));
+        let of = ClusterStats::compute(&ds, &few.labels, k).ssd_total();
+        let om = ClusterStats::compute(&ds, &many.labels, k).ssd_total();
+        // Not a strict guarantee per-seed, but with 30x partners it holds
+        // comfortably on this seed; guards against sign errors in gains.
+        assert!(om >= of * 0.999, "many={om} few={of}");
+    }
+}

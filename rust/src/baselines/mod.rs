@@ -1,0 +1,13 @@
+//! The paper's benchmark algorithms, re-implemented in Rust.
+//!
+//! * [`random_part`] — Rand: random balanced partitioning (with and
+//!   without a categorical feature).
+//! * [`exchange`] — the `fast_anticlustering` exchange heuristic of
+//!   Papenberg & Klau (2021): P-N5 / P-R5 / P-R50 / P-R500 configs.
+//! * [`exact`] — branch-and-bound exact anticlustering for small N; its
+//!   time-capped mode stands in for the AVOC MILP of Croella et al.
+//!   (2025) in the Table 9/10 experiments (see DESIGN.md §3).
+
+pub mod exact;
+pub mod exchange;
+pub mod random_part;

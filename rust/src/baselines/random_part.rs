@@ -1,0 +1,95 @@
+//! Random balanced partitioning — the `Rand` baseline.
+//!
+//! Shuffle and deal round-robin: sizes differ by at most one. The
+//! categorical variant deals each category independently (with a rotating
+//! starting cluster so the `N mod K` remainders spread out), satisfying
+//! the §2 constraint (5) bounds.
+
+use crate::rng::Pcg32;
+
+/// Random balanced partition of `n` objects into `k` groups.
+pub fn random_partition(n: usize, k: usize, seed: u64) -> Vec<u32> {
+    assert!(k >= 1 && k <= n);
+    let mut rng = Pcg32::new(seed);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let mut labels = vec![0u32; n];
+    for (pos, &obj) in idx.iter().enumerate() {
+        labels[obj] = (pos % k) as u32;
+    }
+    labels
+}
+
+/// Random partition with a categorical feature: each category's objects
+/// are dealt round-robin so every anticluster receives
+/// `floor(|N_g|/K)..=ceil(|N_g|/K)` objects of category g.
+pub fn random_partition_categorical(categories: &[u32], k: usize, seed: u64) -> Vec<u32> {
+    let n = categories.len();
+    assert!(k >= 1 && k <= n);
+    let g = categories.iter().copied().max().map_or(0, |m| m as usize + 1);
+    let mut rng = Pcg32::new(seed);
+    let mut labels = vec![0u32; n];
+    let mut start = 0usize;
+    for cat in 0..g as u32 {
+        let mut members: Vec<usize> =
+            (0..n).filter(|&i| categories[i] == cat).collect();
+        rng.shuffle(&mut members);
+        for (pos, &obj) in members.iter().enumerate() {
+            labels[obj] = ((start + pos) % k) as u32;
+        }
+        start = (start + members.len()) % k;
+    }
+    labels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_sizes() {
+        for &(n, k) in &[(10usize, 3usize), (100, 7), (5, 5), (9, 2)] {
+            let labels = random_partition(n, k, 1);
+            let mut counts = vec![0usize; k];
+            for &l in &labels {
+                counts[l as usize] += 1;
+            }
+            let (min, max) = (
+                *counts.iter().min().unwrap(),
+                *counts.iter().max().unwrap(),
+            );
+            assert!(max - min <= 1, "n={n} k={k} {counts:?}");
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        assert_ne!(random_partition(50, 5, 1), random_partition(50, 5, 2));
+        assert_eq!(random_partition(50, 5, 3), random_partition(50, 5, 3));
+    }
+
+    #[test]
+    fn categorical_respects_per_category_bounds() {
+        let cats: Vec<u32> = (0..47).map(|i| (i % 3) as u32).collect();
+        let k = 4;
+        let labels = random_partition_categorical(&cats, k, 7);
+        for g in 0..3u32 {
+            let total = cats.iter().filter(|&&c| c == g).count();
+            let (lo, hi) = (total / k, total.div_ceil(k));
+            for cl in 0..k as u32 {
+                let cnt = (0..cats.len())
+                    .filter(|&i| cats[i] == g && labels[i] == cl)
+                    .count();
+                assert!((lo..=hi).contains(&cnt), "g={g} cl={cl} cnt={cnt}");
+            }
+        }
+        // Overall sizes also within one (since categories deal evenly and
+        // starts rotate).
+        let mut counts = vec![0usize; k];
+        for &l in &labels {
+            counts[l as usize] += 1;
+        }
+        let (min, max) = (*counts.iter().min().unwrap(), *counts.iter().max().unwrap());
+        assert!(max - min <= 3, "{counts:?}"); // loose: rotation keeps it small
+    }
+}

@@ -1,0 +1,132 @@
+//! CSV load/save for datasets and label vectors — lets the examples
+//! exchange data with external tools and persists experiment inputs.
+
+use super::dataset::Dataset;
+use anyhow::{bail, Context, Result};
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+/// Save a dataset as headered CSV: columns `f0..f{d-1}` plus optional
+/// trailing `category` column.
+pub fn save(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let f = fs::File::create(path.as_ref())
+        .with_context(|| format!("create {:?}", path.as_ref()))?;
+    let mut w = std::io::BufWriter::new(f);
+    let mut header: Vec<String> = (0..ds.d).map(|j| format!("f{j}")).collect();
+    if ds.categories.is_some() {
+        header.push("category".into());
+    }
+    writeln!(w, "{}", header.join(","))?;
+    for i in 0..ds.n {
+        let mut cells: Vec<String> =
+            ds.row(i).iter().map(|v| format!("{v}")).collect();
+        if let Some(c) = &ds.categories {
+            cells.push(format!("{}", c[i]));
+        }
+        writeln!(w, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+/// Load a dataset from headered CSV. A trailing column literally named
+/// `category` becomes the categorical feature.
+pub fn load(path: impl AsRef<Path>, name: &str) -> Result<Dataset> {
+    let text = fs::read_to_string(path.as_ref())
+        .with_context(|| format!("read {:?}", path.as_ref()))?;
+    let mut lines = text.lines();
+    let header = lines.next().context("empty csv")?;
+    let cols: Vec<&str> = header.split(',').collect();
+    if cols.is_empty() {
+        bail!("no columns");
+    }
+    let has_cat = *cols.last().unwrap() == "category";
+    let d = cols.len() - usize::from(has_cat);
+    if d == 0 {
+        bail!("no feature columns");
+    }
+    let mut x = Vec::new();
+    let mut cats = Vec::new();
+    for (lineno, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').collect();
+        if cells.len() != cols.len() {
+            bail!("line {}: {} cells, expected {}", lineno + 2, cells.len(), cols.len());
+        }
+        for c in &cells[..d] {
+            x.push(
+                c.trim()
+                    .parse::<f32>()
+                    .with_context(|| format!("line {}: bad float '{c}'", lineno + 2))?,
+            );
+        }
+        if has_cat {
+            cats.push(
+                cells[d]
+                    .trim()
+                    .parse::<u32>()
+                    .with_context(|| format!("line {}: bad category", lineno + 2))?,
+            );
+        }
+    }
+    let n = x.len() / d;
+    let ds = Dataset::from_flat(name, n, d, x)?;
+    if has_cat {
+        ds.with_categories(cats)
+    } else {
+        Ok(ds)
+    }
+}
+
+/// Save a label vector (one integer per line with an `label` header).
+pub fn save_labels(labels: &[u32], path: impl AsRef<Path>) -> Result<()> {
+    let mut out = String::from("label\n");
+    for l in labels {
+        out.push_str(&format!("{l}\n"));
+    }
+    fs::write(path.as_ref(), out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthKind};
+
+    #[test]
+    fn roundtrip_without_categories() {
+        let ds = generate(SynthKind::Uniform, 50, 3, 1, "rt");
+        let path = std::env::temp_dir().join("aba_csv_rt.csv");
+        save(&ds, &path).unwrap();
+        let back = load(&path, "rt").unwrap();
+        assert_eq!(back.n, ds.n);
+        assert_eq!(back.d, ds.d);
+        for (a, b) in ds.x.iter().zip(&back.x) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn roundtrip_with_categories() {
+        let ds = generate(SynthKind::Uniform, 20, 2, 2, "rtc")
+            .with_categories((0..20).map(|i| (i % 3) as u32).collect())
+            .unwrap();
+        let path = std::env::temp_dir().join("aba_csv_rtc.csv");
+        save(&ds, &path).unwrap();
+        let back = load(&path, "rtc").unwrap();
+        assert_eq!(back.categories, ds.categories);
+    }
+
+    #[test]
+    fn rejects_ragged_and_bad_floats() {
+        let dir = std::env::temp_dir();
+        let p1 = dir.join("aba_csv_bad1.csv");
+        fs::write(&p1, "f0,f1\n1.0\n").unwrap();
+        assert!(load(&p1, "x").is_err());
+        let p2 = dir.join("aba_csv_bad2.csv");
+        fs::write(&p2, "f0\nnotafloat\n").unwrap();
+        assert!(load(&p2, "x").is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! The core `Dataset` type: a dense row-major `f32` feature matrix with an
+//! optional categorical label per object (for the §4.3 variant).
+
+use anyhow::{bail, Result};
+
+/// A dataset of `n` objects with `d` features, stored row-major.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Human-readable name (catalog key or file stem).
+    pub name: String,
+    /// Number of objects.
+    pub n: usize,
+    /// Number of features.
+    pub d: usize,
+    /// Row-major feature matrix, length `n * d`.
+    pub x: Vec<f32>,
+    /// Optional per-object category in `0..n_categories` (§4.3 variant).
+    pub categories: Option<Vec<u32>>,
+}
+
+impl Dataset {
+    /// Build from a flat row-major buffer.
+    pub fn from_flat(name: impl Into<String>, n: usize, d: usize, x: Vec<f32>) -> Result<Self> {
+        if x.len() != n * d {
+            bail!("buffer length {} != n*d = {}", x.len(), n * d);
+        }
+        if n == 0 || d == 0 {
+            bail!("empty dataset (n={n}, d={d})");
+        }
+        Ok(Self { name: name.into(), n, d, x, categories: None })
+    }
+
+    /// Build from rows (each of length `d`).
+    pub fn from_rows(name: impl Into<String>, rows: &[Vec<f32>]) -> Result<Self> {
+        if rows.is_empty() {
+            bail!("no rows");
+        }
+        let d = rows[0].len();
+        let mut x = Vec::with_capacity(rows.len() * d);
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != d {
+                bail!("row {i} has {} features, expected {d}", r.len());
+            }
+            x.extend_from_slice(r);
+        }
+        Self::from_flat(name, rows.len(), d, x)
+    }
+
+    /// The `i`-th object as a feature slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Attach a categorical feature; values must be dense `0..g`.
+    pub fn with_categories(mut self, cats: Vec<u32>) -> Result<Self> {
+        if cats.len() != self.n {
+            bail!("categories length {} != n {}", cats.len(), self.n);
+        }
+        self.categories = Some(cats);
+        Ok(self)
+    }
+
+    /// Number of distinct categories (0 if none attached).
+    pub fn n_categories(&self) -> usize {
+        self.categories
+            .as_ref()
+            .map(|c| c.iter().copied().max().map_or(0, |m| m as usize + 1))
+            .unwrap_or(0)
+    }
+
+    /// Gather a subset of objects (by index) into a new dataset; categories
+    /// are carried along. Used by the hierarchical decomposition.
+    pub fn subset(&self, indices: &[usize], name: impl Into<String>) -> Dataset {
+        let mut x = Vec::with_capacity(indices.len() * self.d);
+        for &i in indices {
+            x.extend_from_slice(self.row(i));
+        }
+        let categories = self
+            .categories
+            .as_ref()
+            .map(|c| indices.iter().map(|&i| c[i]).collect());
+        Dataset {
+            name: name.into(),
+            n: indices.len(),
+            d: self.d,
+            x,
+            categories,
+        }
+    }
+
+    /// Global centroid (mean of all rows), accumulated in f64.
+    pub fn global_centroid(&self) -> Vec<f32> {
+        let mut acc = vec![0f64; self.d];
+        for i in 0..self.n {
+            let r = self.row(i);
+            for (a, &v) in acc.iter_mut().zip(r) {
+                *a += v as f64;
+            }
+        }
+        acc.iter().map(|&a| (a / self.n as f64) as f32).collect()
+    }
+
+    /// Squared Euclidean distance between rows `i` and `j`.
+    pub fn dist2(&self, i: usize, j: usize) -> f64 {
+        sq_dist(self.row(i), self.row(j))
+    }
+}
+
+/// Squared Euclidean distance between two feature slices (f64 accumulate).
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let diff = (x - y) as f64;
+        s += diff * diff;
+    }
+    s
+}
+
+/// Squared distance from a slice to an f64 centroid.
+#[inline]
+pub fn sq_dist_to_f64(a: &[f32], mu: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), mu.len());
+    let mut s = 0f64;
+    for (&x, &m) in a.iter().zip(mu) {
+        let diff = x as f64 - m;
+        s += diff * diff;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::from_rows(
+            "tiny",
+            &[
+                vec![0.0, 0.0],
+                vec![1.0, 0.0],
+                vec![0.0, 2.0],
+                vec![3.0, 4.0],
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn from_flat_validates() {
+        assert!(Dataset::from_flat("x", 2, 3, vec![0.0; 5]).is_err());
+        assert!(Dataset::from_flat("x", 0, 3, vec![]).is_err());
+        assert!(Dataset::from_flat("x", 2, 3, vec![0.0; 6]).is_ok());
+    }
+
+    #[test]
+    fn from_rows_checks_ragged() {
+        assert!(Dataset::from_rows("x", &[vec![1.0], vec![1.0, 2.0]]).is_err());
+    }
+
+    #[test]
+    fn row_access_and_dist() {
+        let ds = tiny();
+        assert_eq!(ds.row(1), &[1.0, 0.0]);
+        assert_eq!(ds.dist2(0, 1), 1.0);
+        assert_eq!(ds.dist2(0, 3), 25.0);
+        assert_eq!(ds.dist2(2, 2), 0.0);
+    }
+
+    #[test]
+    fn centroid_is_mean() {
+        let ds = tiny();
+        let mu = ds.global_centroid();
+        assert!((mu[0] - 1.0).abs() < 1e-6);
+        assert!((mu[1] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn subset_carries_categories() {
+        let ds = tiny().with_categories(vec![0, 1, 0, 1]).unwrap();
+        let sub = ds.subset(&[3, 0], "sub");
+        assert_eq!(sub.n, 2);
+        assert_eq!(sub.row(0), &[3.0, 4.0]);
+        assert_eq!(sub.categories.as_deref(), Some(&[1u32, 0][..]));
+    }
+
+    #[test]
+    fn n_categories_counts_dense_labels() {
+        let ds = tiny().with_categories(vec![0, 2, 1, 2]).unwrap();
+        assert_eq!(ds.n_categories(), 3);
+        assert_eq!(tiny().n_categories(), 0);
+    }
+
+    #[test]
+    fn categories_length_checked() {
+        assert!(tiny().with_categories(vec![0, 1]).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Datasets: in-memory feature matrices, synthetic generators mirroring
+//! the paper's Table 2 catalog, preprocessing, CSV I/O, and k-means (used
+//! to derive the categorical feature for the Table 9/10 experiments, as
+//! Croella et al. 2025 do).
+
+pub mod csv;
+pub mod dataset;
+pub mod kmeans;
+pub mod kplus;
+pub mod preprocess;
+pub mod synth;
+
+pub use dataset::Dataset;

@@ -1,0 +1,124 @@
+//! Preprocessing mirroring §5.1 of the paper: z-score standardization for
+//! tabular data, 1/255-style min-max scaling for image data, and one-hot
+//! encoding of integer categorical columns.
+
+use super::dataset::Dataset;
+
+/// Z-score standardize every column in place (columns with zero variance
+/// are centered only). Returns per-column (mean, sd) for reuse.
+pub fn standardize(ds: &mut Dataset) -> Vec<(f32, f32)> {
+    let (n, d) = (ds.n, ds.d);
+    let mut stats = Vec::with_capacity(d);
+    for j in 0..d {
+        let mut s = 0f64;
+        let mut s2 = 0f64;
+        for i in 0..n {
+            let v = ds.x[i * d + j] as f64;
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = (s2 / n as f64 - mean * mean).max(0.0);
+        let sd = var.sqrt();
+        let denom = if sd > 1e-12 { sd } else { 1.0 };
+        for i in 0..n {
+            let v = &mut ds.x[i * d + j];
+            *v = ((*v as f64 - mean) / denom) as f32;
+        }
+        stats.push((mean as f32, sd as f32));
+    }
+    stats
+}
+
+/// Min-max scale every column into `[0, 1]` in place (constant columns
+/// become 0). The image datasets in the paper are scaled by 1/255, which
+/// this generalizes.
+pub fn minmax_scale(ds: &mut Dataset) {
+    let (n, d) = (ds.n, ds.d);
+    for j in 0..d {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for i in 0..n {
+            let v = ds.x[i * d + j];
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let span = hi - lo;
+        for i in 0..n {
+            let v = &mut ds.x[i * d + j];
+            *v = if span > 0.0 { (*v - lo) / span } else { 0.0 };
+        }
+    }
+}
+
+/// One-hot encode an integer label column into `k` binary features appended
+/// to a copy of the dataset (paper §5.1: "one binary feature per category").
+pub fn append_one_hot(ds: &Dataset, labels: &[u32]) -> Dataset {
+    assert_eq!(labels.len(), ds.n);
+    let k = labels.iter().copied().max().map_or(0, |m| m as usize + 1);
+    let d2 = ds.d + k;
+    let mut x = vec![0f32; ds.n * d2];
+    for i in 0..ds.n {
+        x[i * d2..i * d2 + ds.d].copy_from_slice(ds.row(i));
+        x[i * d2 + ds.d + labels[i] as usize] = 1.0;
+    }
+    Dataset {
+        name: format!("{}+onehot", ds.name),
+        n: ds.n,
+        d: d2,
+        x,
+        categories: ds.categories.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthKind};
+
+    #[test]
+    fn standardize_zero_mean_unit_sd() {
+        let mut ds = generate(SynthKind::GaussianMixture { components: 3, spread: 5.0 }, 1_000, 4, 1, "g");
+        standardize(&mut ds);
+        for j in 0..ds.d {
+            let mut s = 0f64;
+            let mut s2 = 0f64;
+            for i in 0..ds.n {
+                let v = ds.x[i * ds.d + j] as f64;
+                s += v;
+                s2 += v * v;
+            }
+            let mean = s / ds.n as f64;
+            let var = s2 / ds.n as f64 - mean * mean;
+            assert!(mean.abs() < 1e-4, "col {j} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "col {j} var {var}");
+        }
+    }
+
+    #[test]
+    fn standardize_constant_column_is_centered() {
+        let mut ds = Dataset::from_rows("c", &[vec![3.0, 1.0], vec![3.0, 2.0]]).unwrap();
+        standardize(&mut ds);
+        assert_eq!(ds.x[0], 0.0);
+        assert_eq!(ds.x[2], 0.0);
+    }
+
+    #[test]
+    fn minmax_into_unit_interval() {
+        let mut ds = Dataset::from_rows("m", &[vec![-5.0, 7.0], vec![5.0, 7.0], vec![0.0, 7.0]]).unwrap();
+        minmax_scale(&mut ds);
+        assert_eq!(ds.row(0), &[0.0, 0.0]);
+        assert_eq!(ds.row(1), &[1.0, 0.0]);
+        assert_eq!(ds.row(2), &[0.5, 0.0]);
+    }
+
+    #[test]
+    fn one_hot_appends_indicator_block() {
+        let ds = Dataset::from_rows("o", &[vec![1.0], vec![2.0], vec![3.0]]).unwrap();
+        let out = append_one_hot(&ds, &[2, 0, 2]);
+        assert_eq!(out.d, 4);
+        assert_eq!(out.row(0), &[1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(out.row(1), &[2.0, 1.0, 0.0, 0.0]);
+        assert_eq!(out.row(2), &[3.0, 0.0, 0.0, 1.0]);
+    }
+}

@@ -1,0 +1,191 @@
+//! Shared experiment machinery: algorithm specs, timed runs, time caps,
+//! and the dash convention for algorithms that fail to finish.
+
+use crate::algo::{run_aba, AbaConfig, ClusterStats};
+use crate::baselines::exact;
+use crate::baselines::exchange::{fast_anticlustering, ExchangeConfig, Partners};
+use crate::baselines::random_part;
+use crate::data::synth::Scale;
+use crate::data::Dataset;
+use crate::util::timer::Timer;
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Options common to all experiment commands.
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    pub scale: Scale,
+    /// Override the K sweep (single value).
+    pub k: Option<usize>,
+    /// Restrict to these dataset names (`None` = experiment default).
+    pub datasets: Option<Vec<String>>,
+    /// Per-algorithm-per-instance time cap in seconds (the paper's 2 h,
+    /// scaled to this box).
+    pub time_limit_secs: f64,
+    /// Where CSVs go.
+    pub out_dir: PathBuf,
+    /// Sharply reduced workloads (used by integration tests / bench-all).
+    pub quick: bool,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        Self {
+            scale: Scale::Small,
+            k: None,
+            datasets: None,
+            time_limit_secs: 60.0,
+            out_dir: PathBuf::from("results"),
+            quick: false,
+        }
+    }
+}
+
+/// The benchmark algorithms of Table 3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// This paper.
+    Aba,
+    /// fast_anticlustering, 5 nearest-neighbor partners.
+    PN5,
+    /// fast_anticlustering, `p` random partners (P-R5/P-R50/P-R500).
+    PR(usize),
+    /// Random (category-aware when the dataset has categories).
+    Rand,
+    /// Time-capped branch-and-bound (the AVOC-MILP stand-in).
+    MilpLike,
+}
+
+impl Algo {
+    pub fn name(&self) -> String {
+        match self {
+            Algo::Aba => "ABA".into(),
+            Algo::PN5 => "P-N5".into(),
+            Algo::PR(p) => format!("P-R{p}"),
+            Algo::Rand => "Rand".into(),
+            Algo::MilpLike => "MILP-like".into(),
+        }
+    }
+}
+
+/// A completed run.
+#[derive(Clone, Debug)]
+pub struct AlgoRun {
+    pub labels: Vec<u32>,
+    pub secs: f64,
+}
+
+/// Run one algorithm with a time cap. `None` = the paper's dash (no
+/// solution within the limit / infeasible configuration).
+pub fn run_algo(ds: &Dataset, k: usize, algo: Algo, seed: u64, limit_secs: f64) -> Option<AlgoRun> {
+    let limit = Duration::from_secs_f64(limit_secs);
+    let t = Timer::start();
+    match algo {
+        Algo::Aba => {
+            let labels = run_aba(ds, k, &AbaConfig::default()).ok()?;
+            Some(AlgoRun { labels, secs: t.secs() })
+        }
+        Algo::PN5 => {
+            // The brute-force kNN behind P-N5 is O(n^2 d) — like the
+            // paper, the configuration simply fails (dash) on datasets
+            // where it cannot finish within the cap.
+            let est_ops = (ds.n as f64) * (ds.n as f64) * (ds.d as f64);
+            if ds.d > 16 && est_ops > 2.5e10 {
+                return None;
+            }
+            let cfg = ExchangeConfig {
+                partners: Partners::Nearest(5),
+                seed,
+                time_limit: Some(limit),
+            };
+            let res = fast_anticlustering(ds, k, &cfg);
+            if res.timed_out {
+                return None;
+            }
+            Some(AlgoRun { labels: res.labels, secs: t.secs() })
+        }
+        Algo::PR(p) => {
+            let cfg = ExchangeConfig {
+                partners: Partners::Random(p),
+                seed,
+                time_limit: Some(limit),
+            };
+            let res = fast_anticlustering(ds, k, &cfg);
+            if res.timed_out {
+                return None;
+            }
+            Some(AlgoRun { labels: res.labels, secs: t.secs() })
+        }
+        Algo::Rand => {
+            let labels = match &ds.categories {
+                Some(c) => random_part::random_partition_categorical(c, k, seed),
+                None => random_part::random_partition(ds.n, k, seed),
+            };
+            Some(AlgoRun { labels, secs: t.secs() })
+        }
+        Algo::MilpLike => {
+            let res = exact::solve(ds, k, Some(limit));
+            Some(AlgoRun { labels: res.labels, secs: t.secs() })
+        }
+    }
+}
+
+/// Format a percentage deviation cell (paper convention, 4 decimals for
+/// quality, 1 for time); `None` renders as the paper's dash.
+pub fn dev_cell(value: Option<f64>, digits: usize) -> String {
+    match value {
+        Some(v) if v.is_finite() => format!("{v:.digits$}"),
+        _ => "—".into(),
+    }
+}
+
+/// Quality deviation of `run` from ABA's objective (centroid-form ofv).
+pub fn quality_dev(ds: &Dataset, k: usize, aba_ofv: f64, run: &Option<AlgoRun>) -> Option<f64> {
+    run.as_ref().map(|r| {
+        let ofv = ClusterStats::compute(ds, &r.labels, k).ssd_total();
+        crate::util::pct_dev(ofv, aba_ofv)
+    })
+}
+
+/// Runtime deviation of `run` from ABA's runtime.
+pub fn time_dev(aba_secs: f64, run: &Option<AlgoRun>) -> Option<f64> {
+    run.as_ref().map(|r| crate::util::pct_dev(r.secs, aba_secs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::generate;
+    use crate::data::synth::SynthKind;
+
+    #[test]
+    fn run_algo_all_kinds_on_tiny_data() {
+        let ds = generate(SynthKind::Uniform, 60, 4, 91, "t");
+        for algo in [Algo::Aba, Algo::PN5, Algo::PR(5), Algo::Rand] {
+            let run = run_algo(&ds, 5, algo, 1, 10.0).unwrap_or_else(|| panic!("{algo:?}"));
+            assert_eq!(run.labels.len(), 60);
+        }
+        // MILP-like with a tiny cap still returns an incumbent.
+        let run = run_algo(&ds, 5, Algo::MilpLike, 1, 0.05).unwrap();
+        assert_eq!(run.labels.len(), 60);
+    }
+
+    #[test]
+    fn pn5_dashes_on_oversized_high_d() {
+        let ds = generate(SynthKind::Uniform, 200_000, 64, 92, "big");
+        assert!(run_algo(&ds, 5, Algo::PN5, 1, 0.001).is_none());
+    }
+
+    #[test]
+    fn dev_cells() {
+        assert_eq!(dev_cell(Some(1.23456), 4), "1.2346");
+        assert_eq!(dev_cell(None, 4), "—");
+    }
+
+    #[test]
+    fn algo_names() {
+        assert_eq!(Algo::PR(50).name(), "P-R50");
+        assert_eq!(Algo::Aba.name(), "ABA");
+    }
+}

@@ -1,0 +1,257 @@
+//! Figures 5–7 of the paper, as ASCII renderings + CSV series.
+
+use super::common::{run_algo, Algo, ExpOptions};
+use crate::algo::{run_hierarchical, AbaConfig, ClusterStats};
+use crate::data::dataset::sq_dist_to_f64;
+use crate::data::synth::{load, Scale};
+use crate::metrics::{ascii_histogram, quartiles};
+use crate::util::fmt_secs;
+use crate::util::table::Table;
+use crate::util::timer::Timer;
+use anyhow::Result;
+
+/// Figure 5: distributions of per-anticluster diversity, ABA vs P-R5, at
+/// large K on an image-like dataset. The paper's headline: ABA's
+/// distribution has a higher mean *and* a much smaller spread.
+pub fn fig5(opts: &ExpOptions) -> Result<Table> {
+    let (name, k) = if opts.quick { ("mnist", 20) } else { ("mnist", 200) };
+    let scale = if opts.quick { Scale::Tiny } else { opts.scale };
+    let ds = load(name, scale)?;
+    let k = opts.k.unwrap_or(k).min(ds.n / 2);
+    eprintln!("  [f5] {} (n={}, d={}) k={k}", ds.name, ds.n, ds.d);
+
+    let aba = run_algo(&ds, k, Algo::Aba, 0, opts.time_limit_secs).unwrap();
+    let pr5 = run_algo(&ds, k, Algo::PR(5), 1, opts.time_limit_secs);
+    let (bench_name, bench_labels) = match &pr5 {
+        Some(run) => ("P-R5", run.labels.clone()),
+        None => (
+            "Rand",
+            run_algo(&ds, k, Algo::Rand, 1, opts.time_limit_secs).unwrap().labels,
+        ),
+    };
+
+    let div_aba = ClusterStats::compute(&ds, &aba.labels, k).ssd;
+    let div_bench = ClusterStats::compute(&ds, &bench_labels, k).ssd;
+
+    println!("== Figure 5 — per-anticluster diversity distribution, {name}, K={k} ==");
+    println!("--- ABA ---");
+    for line in ascii_histogram(&div_aba, 12, 40) {
+        println!("{line}");
+    }
+    println!("--- {bench_name} ---");
+    for line in ascii_histogram(&div_bench, 12, 40) {
+        println!("{line}");
+    }
+
+    let mut t = Table::new("fig5 series", &["algo", "anticluster", "diversity"]).left(0);
+    for (i, &v) in div_aba.iter().enumerate() {
+        t.row(vec!["ABA".into(), i.to_string(), format!("{v:.4}")]);
+    }
+    for (i, &v) in div_bench.iter().enumerate() {
+        t.row(vec![bench_name.into(), i.to_string(), format!("{v:.4}")]);
+    }
+    t.save_csv(&opts.out_dir, "f5")?;
+
+    let sa = crate::metrics::Summary::of(&div_aba);
+    let sb = crate::metrics::Summary::of(&div_bench);
+    println!(
+        "ABA: mean={:.2} sd={:.2} range={:.2}   {bench_name}: mean={:.2} sd={:.2} range={:.2}",
+        sa.mean,
+        sa.sd,
+        sa.range(),
+        sb.mean,
+        sb.sd,
+        sb.range()
+    );
+    Ok(t)
+}
+
+/// Figure 6: within-anticluster distance distributions (boxplot table)
+/// for the Travel dataset with K = 50.
+pub fn fig6(opts: &ExpOptions) -> Result<Table> {
+    let scale = if opts.quick { Scale::Tiny } else { opts.scale };
+    let ds = load("travel", scale)?;
+    let k = opts.k.unwrap_or(if opts.quick { 10 } else { 50 });
+    eprintln!("  [f6] travel (n={}) k={k}", ds.n);
+
+    let algos: Vec<(&str, Option<super::common::AlgoRun>)> = vec![
+        ("ABA", run_algo(&ds, k, Algo::Aba, 0, opts.time_limit_secs)),
+        ("P-N5", run_algo(&ds, k, Algo::PN5, 1, opts.time_limit_secs)),
+        ("P-R5", run_algo(&ds, k, Algo::PR(5), 1, opts.time_limit_secs)),
+        ("Rand", run_algo(&ds, k, Algo::Rand, 1, opts.time_limit_secs)),
+    ];
+
+    let mut t = Table::new(
+        format!("Figure 6 — per-anticluster distance quartiles, travel, K={k}"),
+        &["algo", "anticluster", "q1", "median", "q3"],
+    )
+    .left(0);
+    println!("== Figure 6 — spread of per-anticluster medians (lower = more uniform) ==");
+    for (name, run) in &algos {
+        let Some(run) = run else {
+            println!("{name:>6}: —");
+            continue;
+        };
+        // Distances of objects to their anticluster centroid.
+        let d = ds.d;
+        let mut sums = vec![0f64; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..ds.n {
+            let c = run.labels[i] as usize;
+            counts[c] += 1;
+            for (s, &v) in sums[c * d..(c + 1) * d].iter_mut().zip(ds.row(i)) {
+                *s += v as f64;
+            }
+        }
+        for c in 0..k {
+            for v in sums[c * d..(c + 1) * d].iter_mut() {
+                *v /= counts[c].max(1) as f64;
+            }
+        }
+        let mut per_cluster: Vec<Vec<f64>> = vec![Vec::new(); k];
+        for i in 0..ds.n {
+            let c = run.labels[i] as usize;
+            per_cluster[c].push(sq_dist_to_f64(ds.row(i), &sums[c * d..(c + 1) * d]).sqrt());
+        }
+        let mut medians = Vec::with_capacity(k);
+        for (c, dists) in per_cluster.iter().enumerate() {
+            let (q1, q2, q3) = quartiles(dists);
+            medians.push(q2);
+            t.row(vec![
+                name.to_string(),
+                c.to_string(),
+                format!("{q1:.4}"),
+                format!("{q2:.4}"),
+                format!("{q3:.4}"),
+            ]);
+        }
+        let s = crate::metrics::Summary::of(&medians);
+        println!(
+            "{name:>6}: median-of-medians={:.3}  sd(medians)={:.4}  range={:.4}",
+            s.mean,
+            s.sd,
+            s.range()
+        );
+    }
+    t.save_csv(&opts.out_dir, "f6")?;
+    Ok(t)
+}
+
+/// Figure 7: hierarchical decomposition strategy sweep — objective and
+/// runtime per factorization of K.
+pub fn fig7(opts: &ExpOptions) -> Result<Table> {
+    // Scaled from the paper's (imagenet32, K = 5000): the sweep varies
+    // (K1 x K2) factorizations plus the flat baseline.
+    let (n_cap, k) = if opts.quick { (4_096, 64) } else { (32_768, 1_024) };
+    let scale = if opts.quick { Scale::Tiny } else { opts.scale };
+    let full = load("imagenet32", scale)?;
+    let ds = if full.n > n_cap {
+        full.subset(&(0..n_cap).collect::<Vec<_>>(), "imagenet32-f7")
+    } else {
+        full
+    };
+    let k = opts.k.unwrap_or(k).min(ds.n / 2);
+    eprintln!("  [f7] {} (n={}) k={k}", ds.name, ds.n);
+
+    // All two-level factorizations of K (plus flat).
+    let mut strategies: Vec<Vec<usize>> = vec![vec![k]];
+    let mut d = 2usize;
+    while d * d <= k {
+        if k % d == 0 {
+            strategies.push(vec![d, k / d]);
+            if d != k / d {
+                strategies.push(vec![k / d, d]);
+            }
+        }
+        d += 1;
+    }
+
+    let mut t = Table::new(
+        format!("Figure 7 — decomposition sweep on {} (n={}), K={k}", ds.name, ds.n),
+        &["strategy", "cpu [s]", "ofv", "dev from best [%]"],
+    )
+    .left(0);
+    let mut results: Vec<(String, f64, f64)> = Vec::new();
+    for spec in &strategies {
+        let label = spec
+            .iter()
+            .map(|x| x.to_string())
+            .collect::<Vec<_>>()
+            .join("x");
+        let cfg = AbaConfig { auto_hier: false, ..AbaConfig::default() };
+        let timer = Timer::start();
+        let labels = if spec.len() == 1 {
+            crate::algo::run_aba(&ds, k, &cfg)?
+        } else {
+            run_hierarchical(&ds, spec, &cfg)?
+        };
+        let secs = timer.secs();
+        let ofv = ClusterStats::compute(&ds, &labels, k).ssd_total();
+        eprintln!("    {label}: {} s, ofv {ofv:.1}", fmt_secs(secs));
+        results.push((label, secs, ofv));
+    }
+    let best = results.iter().map(|r| r.2).fold(f64::NEG_INFINITY, f64::max);
+    for (label, secs, ofv) in &results {
+        t.row(vec![
+            label.clone(),
+            fmt_secs(*secs),
+            format!("{ofv:.1}"),
+            format!("{:.4}", crate::util::pct_dev(*ofv, best)),
+        ]);
+    }
+    t.save_csv(&opts.out_dir, "f7")?;
+    println!("{}", t.render());
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> ExpOptions {
+        ExpOptions {
+            quick: true,
+            out_dir: std::env::temp_dir().join("aba_results_test"),
+            ..ExpOptions::default()
+        }
+    }
+
+    #[test]
+    fn fig5_aba_spread_smaller() {
+        let t = fig5(&quick_opts()).unwrap();
+        // Collect per-algo diversity series from the table.
+        let series = |algo: &str| -> Vec<f64> {
+            t.rows
+                .iter()
+                .filter(|r| r[0] == algo)
+                .map(|r| r[2].parse().unwrap())
+                .collect()
+        };
+        let aba = crate::metrics::Summary::of(&series("ABA"));
+        let other_name = t
+            .rows
+            .iter()
+            .map(|r| r[0].clone())
+            .find(|n| n != "ABA")
+            .unwrap();
+        let other = crate::metrics::Summary::of(&series(&other_name));
+        assert!(aba.sd <= other.sd * 1.5, "aba.sd={} other.sd={}", aba.sd, other.sd);
+    }
+
+    #[test]
+    fn fig6_runs() {
+        let t = fig6(&quick_opts()).unwrap();
+        assert!(t.rows.len() >= 20);
+    }
+
+    #[test]
+    fn fig7_balanced_fastest_or_close() {
+        let t = fig7(&quick_opts()).unwrap();
+        assert!(t.rows.len() >= 3);
+        // Quality loss of every decomposition < 5% from best.
+        for row in &t.rows {
+            let dev: f64 = row[3].parse().unwrap();
+            assert!(dev > -5.0, "{row:?}");
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! The experiment harness: one module per table/figure of the paper's
+//! evaluation (§5), each printing the paper-shaped table and writing a
+//! CSV under `results/`.
+//!
+//! | command        | reproduces |
+//! |----------------|------------|
+//! | `aba table t4`  | Table 4 — quality + runtime vs P-N5/P-R5/P-R50/P-R500/Rand |
+//! | `aba table t6`  | Table 6 — diversity sd/range balance |
+//! | `aba table t8`  | Table 8 — huge-K sweep on imagenet32-sim with hierarchical decomposition |
+//! | `aba table t9`  | Table 9 — categorical anticlustering vs MILP-like/P-R*/Rand |
+//! | `aba table t10` | Table 10 — categorical diversity sd/range |
+//! | `aba table t11` | Table 11 — balanced k-cut vs METIS-like/Rand |
+//! | `aba fig f5`    | Figure 5 — diversity distributions, large K |
+//! | `aba fig f6`    | Figure 6 — within-anticluster distance distributions |
+//! | `aba fig f7`    | Figure 7 — hierarchical decomposition strategy sweep |
+//!
+//! Scaled-down workloads stand in for the paper's (see DESIGN.md §3);
+//! `--scale paper` runs the original sizes where feasible.
+
+pub mod common;
+pub mod figs;
+pub mod t11;
+pub mod t4;
+pub mod t4x;
+pub mod t8;
+pub mod t9;
+
+pub use common::ExpOptions;

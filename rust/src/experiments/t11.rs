@@ -1,0 +1,122 @@
+//! Table 11: ABA as a balanced k-cut method vs the METIS-like multilevel
+//! partitioner and Rand.
+//!
+//! On tabular data with squared-Euclidean edge weights, minimizing the
+//! balanced-cut cost is equivalent to maximizing the within-anticluster
+//! pairwise sum `W(C)` (§5.5), so all three algorithms are scored by
+//! `W(C)` on the full data. The METIS-like partitioner consumes the
+//! paper's input construction: p = 30 random neighbors per node, integer
+//! weights (`graph::builder`); its input-construction time is reported
+//! separately, as in the paper.
+
+use super::common::{run_algo, Algo, ExpOptions};
+use crate::algo::ClusterStats;
+use crate::data::synth::{load, Scale};
+use crate::graph::builder::random_neighbor_graph;
+use crate::graph::metis_like::{partition, PartitionConfig};
+use crate::util::fmt_secs;
+use crate::util::table::Table;
+use crate::util::timer::Timer;
+use anyhow::Result;
+
+/// (dataset, K sweep) — §5.5 of the paper (Table 11 instances).
+pub const INSTANCES: &[(&str, &[usize])] = &[
+    ("abalone", &[4, 5, 6, 8, 10]),
+    ("facebook", &[7, 8, 10, 13, 18]),
+    ("frogs", &[8, 10, 13, 15, 16]),
+    ("electric", &[10, 15, 20, 25, 30]),
+    ("npi", &[2, 4, 6]),
+    ("pulsar", &[18, 20, 25, 30, 35]),
+    ("creditcard", &[2, 4, 6]),
+    ("adult", &[2, 4, 6]),
+    ("plants", &[2, 4, 6]),
+    ("bank", &[2, 4, 6]),
+];
+
+pub fn table11(opts: &ExpOptions) -> Result<Table> {
+    let scale = if opts.quick { Scale::Tiny } else { opts.scale };
+    let p_neighbors = 30;
+    let mut t = Table::new(
+        "Table 11 — balanced k-cut: W(C), deviations, runtimes, size ratios",
+        &[
+            "dataset", "N", "K", "W(C) ABA", "dev METIS [%]", "dev Rand [%]", "cpu ABA",
+            "cpu METIS", "cpu input", "ratio ABA", "ratio METIS",
+        ],
+    )
+    .left(0);
+    for &(name, ks) in INSTANCES {
+        if let Some(filter) = &opts.datasets {
+            if !filter.iter().any(|f| f == name || f == "all") {
+                continue;
+            }
+        }
+        let ds = load(name, scale)?;
+        // METIS input construction (timed once per dataset, as in the
+        // paper — the graph is reused across K values).
+        let tg = Timer::start();
+        let graph = random_neighbor_graph(&ds, p_neighbors, 17);
+        let input_secs = tg.secs();
+        let ks: Vec<usize> = match opts.k {
+            Some(k) => vec![k],
+            None if opts.quick => vec![ks[0]],
+            None => ks.to_vec(),
+        };
+        for k in ks {
+            eprintln!("  [t11] {name} (n={}) k={k}", ds.n);
+            let aba = run_algo(&ds, k, Algo::Aba, 0, opts.time_limit_secs).unwrap();
+            let aba_stats = ClusterStats::compute(&ds, &aba.labels, k);
+            let aba_w = aba_stats.pairwise_total();
+
+            let tm = Timer::start();
+            let metis_labels = partition(&graph, &PartitionConfig::new(k));
+            let metis_secs = tm.secs();
+            let metis_stats = ClusterStats::compute(&ds, &metis_labels, k);
+            let metis_w = metis_stats.pairwise_total();
+
+            let rand = run_algo(&ds, k, Algo::Rand, 1, opts.time_limit_secs).unwrap();
+            let rand_w = ClusterStats::compute(&ds, &rand.labels, k).pairwise_total();
+
+            t.row(vec![
+                name.into(),
+                ds.n.to_string(),
+                k.to_string(),
+                format!("{aba_w:.1}"),
+                format!("{:.3}", crate::util::pct_dev(metis_w, aba_w)),
+                format!("{:.3}", crate::util::pct_dev(rand_w, aba_w)),
+                fmt_secs(aba.secs),
+                fmt_secs(metis_secs),
+                fmt_secs(input_secs),
+                format!("{:.2}", aba_stats.min_max_ratio_pct()),
+                format!("{:.2}", metis_stats.min_max_ratio_pct()),
+            ]);
+        }
+    }
+    t.save_csv(&opts.out_dir, "t11")?;
+    println!("{}", t.render());
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table11_quick_shape() {
+        let opts = ExpOptions {
+            quick: true,
+            datasets: Some(vec!["abalone".into(), "npi".into()]),
+            out_dir: std::env::temp_dir().join("aba_results_test"),
+            ..ExpOptions::default()
+        };
+        let t = table11(&opts).unwrap();
+        assert_eq!(t.rows.len(), 2);
+        for row in &t.rows {
+            // ABA is perfectly balanced (ratio 100).
+            assert_eq!(row[9], "100.00");
+            // W(C) positive.
+            assert!(row[3].parse::<f64>().unwrap() > 0.0);
+            // Rand deviation should be <= 0 (ABA at least as good).
+            assert!(row[5].parse::<f64>().unwrap() <= 0.05, "{row:?}");
+        }
+    }
+}

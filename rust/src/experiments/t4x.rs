@@ -1,0 +1,96 @@
+//! T4x — the paper's companion tables for K ∈ {2, 50, 500, 1000, 2000,
+//! 5000} (published on the authors' GitHub alongside Table 4).
+//!
+//! Same row structure as Table 4, swept over K with the Table-5
+//! hierarchical-decomposition policy applied automatically. The paper's
+//! headline for this sweep: ABA's quality *advantage* over the exchange
+//! heuristics grows with K while staying orders of magnitude faster.
+
+use super::common::{dev_cell, quality_dev, run_algo, time_dev, Algo, ExpOptions};
+use super::t4::dataset_list;
+use crate::algo::ClusterStats;
+use crate::data::synth::{load, Scale};
+use crate::util::fmt_secs;
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// The published K sweep; values exceeding N/2 are skipped per dataset.
+pub const K_SWEEP: &[usize] = &[2, 50, 500, 1_000, 2_000, 5_000];
+
+pub fn table4x(opts: &ExpOptions) -> Result<Table> {
+    let scale = if opts.quick { Scale::Tiny } else { opts.scale };
+    let ks: Vec<usize> = match opts.k {
+        Some(k) => vec![k],
+        None if opts.quick => vec![2, 50],
+        None => K_SWEEP.to_vec(),
+    };
+    // The full 10-dataset suite over 6 K values is hours of exchange-
+    // heuristic runtime; default to a 3-dataset core unless overridden.
+    let datasets = match &opts.datasets {
+        Some(_) => dataset_list(opts),
+        None if opts.quick => vec!["travel".into()],
+        None => vec!["travel".into(), "npi".into(), "survival".into()],
+    };
+    let algos = [Algo::PR(5), Algo::PR(50), Algo::Rand];
+
+    let mut t = Table::new(
+        "T4x — K sweep (dev % from ABA; — = no solution in time limit)",
+        &[
+            "dataset", "N", "K", "ofv ABA", "P-R5", "P-R50", "Rand", "cpu ABA [s]",
+            "cpu P-R5", "cpu P-R50",
+        ],
+    )
+    .left(0);
+    for name in &datasets {
+        let ds = load(name, scale)?;
+        for &k in &ks {
+            if k > ds.n / 2 {
+                continue;
+            }
+            eprintln!("  [t4x] {name} k={k}");
+            let aba = run_algo(&ds, k, Algo::Aba, 0, opts.time_limit_secs).unwrap();
+            let aba_ofv = ClusterStats::compute(&ds, &aba.labels, k).ssd_total();
+            let runs: Vec<_> = algos
+                .iter()
+                .map(|&a| (a, run_algo(&ds, k, a, 1, opts.time_limit_secs)))
+                .collect();
+            let mut cells = vec![
+                name.clone(),
+                ds.n.to_string(),
+                k.to_string(),
+                format!("{aba_ofv:.2}"),
+            ];
+            for (_, run) in &runs {
+                cells.push(dev_cell(quality_dev(&ds, k, aba_ofv, run), 4));
+            }
+            cells.push(fmt_secs(aba.secs));
+            for (algo, run) in &runs {
+                if *algo == Algo::Rand {
+                    continue;
+                }
+                cells.push(dev_cell(time_dev(aba.secs, run), 1));
+            }
+            t.row(cells);
+        }
+    }
+    t.save_csv(&opts.out_dir, "t4x")?;
+    println!("{}", t.render());
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t4x_quick_runs() {
+        let opts = ExpOptions {
+            quick: true,
+            out_dir: std::env::temp_dir().join("aba_results_test"),
+            ..ExpOptions::default()
+        };
+        let t = table4x(&opts).unwrap();
+        assert_eq!(t.rows.len(), 2); // travel x K in {2, 50}
+        assert_eq!(t.headers.len(), 10);
+    }
+}

@@ -1,0 +1,101 @@
+//! Table 8: very large K on the imagenet32 stand-in, with hierarchical
+//! decomposition (Table 7 settings derived automatically).
+//!
+//! The paper sweeps K = 10k … 640k on N = 1,281,167 so the smallest
+//! anticlusters have 2–3 objects; the scaled-down sweep keeps the same
+//! *min-size* progression (128 → 2) on N = 131,072. Only Rand can keep up
+//! as a benchmark (as in the paper); the expected shape is ABA's
+//! advantage growing as K grows, reaching tens of percent at min size 2.
+
+use super::common::{run_algo, Algo, ExpOptions};
+use crate::algo::{effective_spec, AbaConfig, ClusterStats};
+use crate::data::synth::{load, Scale};
+use crate::util::fmt_secs;
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// K sweep preserving the paper's min-size progression on the scaled N.
+pub fn k_sweep(n: usize, quick: bool) -> Vec<usize> {
+    let sizes: &[usize] = if quick { &[128, 8, 2] } else { &[128, 64, 32, 16, 8, 4, 2] };
+    sizes.iter().map(|&s| n / s).collect()
+}
+
+pub fn table8(opts: &ExpOptions) -> Result<Table> {
+    let scale = if opts.quick { Scale::Tiny } else { opts.scale };
+    let ds = load("imagenet32", scale)?;
+    let ks = match opts.k {
+        Some(k) => vec![k],
+        None => k_sweep(ds.n, opts.quick),
+    };
+    let mut t = Table::new(
+        format!(
+            "Table 8 — huge-K sweep on {} (n={}, d={}) with hierarchical decomposition",
+            ds.name, ds.n, ds.d
+        ),
+        &[
+            "K", "spec", "min size", "max size", "cpu ABA [s]", "ofv ABA", "ofv Rand",
+            "dev Rand [%]",
+        ],
+    );
+    for k in ks {
+        eprintln!("  [t8] k={k}");
+        let cfg = AbaConfig::default();
+        let spec = effective_spec(&ds, k, &cfg)
+            .map(|s| s.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("x"))
+            .unwrap_or_else(|| "flat".into());
+        let aba = run_algo(&ds, k, Algo::Aba, 0, opts.time_limit_secs)
+            .expect("ABA completes");
+        let stats = ClusterStats::compute(&ds, &aba.labels, k);
+        let ofv = stats.ssd_total();
+        let rand = run_algo(&ds, k, Algo::Rand, 1, opts.time_limit_secs).unwrap();
+        let rofv = ClusterStats::compute(&ds, &rand.labels, k).ssd_total();
+        t.row(vec![
+            k.to_string(),
+            spec,
+            stats.sizes.iter().min().unwrap().to_string(),
+            stats.sizes.iter().max().unwrap().to_string(),
+            fmt_secs(aba.secs),
+            format!("{ofv:.1}"),
+            format!("{rofv:.1}"),
+            format!("{:.4}", crate::util::pct_dev(rofv, ofv)),
+        ]);
+    }
+    t.save_csv(&opts.out_dir, "t8")?;
+    println!("{}", t.render());
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_preserves_min_sizes() {
+        let ks = k_sweep(131_072, false);
+        assert_eq!(ks[0], 1024);
+        assert_eq!(*ks.last().unwrap(), 65_536);
+    }
+
+    #[test]
+    fn table8_quick_shape_and_monotonicity() {
+        let opts = ExpOptions {
+            quick: true,
+            out_dir: std::env::temp_dir().join("aba_results_test"),
+            ..ExpOptions::default()
+        };
+        let t = table8(&opts).unwrap();
+        assert_eq!(t.rows.len(), 3);
+        // Headline shape: Rand's deficit grows (more negative) with K.
+        let devs: Vec<f64> = t.rows.iter().map(|r| r[7].parse::<f64>().unwrap()).collect();
+        assert!(devs[0] <= 0.5, "{devs:?}");
+        assert!(
+            devs.last().unwrap() < &devs[0],
+            "deviation should worsen with K: {devs:?}"
+        );
+        // Sizes respect the bound.
+        for r in &t.rows {
+            let (min, max): (usize, usize) = (r[2].parse().unwrap(), r[3].parse().unwrap());
+            assert!(max - min <= 1);
+        }
+    }
+}

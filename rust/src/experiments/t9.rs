@@ -1,0 +1,197 @@
+//! Tables 9 and 10: anticlustering with a categorical feature.
+//!
+//! As in Croella et al. (2025), the categorical feature is derived by
+//! k-means on the raw features (G clusters per dataset below), and each
+//! dataset is solved for five values of K. Benchmarks: the time-capped
+//! branch-and-bound (AVOC-MILP stand-in), P-R5/P-R50/P-R500 with
+//! same-category random exchange partners, and category-aware Rand.
+
+use super::common::{dev_cell, quality_dev, run_algo, time_dev, Algo, AlgoRun, ExpOptions};
+use crate::algo::ClusterStats;
+use crate::data::kmeans::kmeans;
+use crate::data::synth::{load, Scale};
+use crate::data::Dataset;
+use crate::util::fmt_secs;
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// (dataset, G = categories via k-means, K sweep) — §5.4 of the paper.
+pub const INSTANCES: &[(&str, usize, &[usize])] = &[
+    ("abalone", 3, &[4, 5, 6, 8, 10]),
+    ("facebook", 3, &[7, 8, 10, 13, 18]),
+    ("frogs", 4, &[8, 10, 13, 15, 16]),
+    ("electric", 3, &[10, 15, 20, 25, 30]),
+    ("pulsar", 2, &[18, 20, 25, 30, 35]),
+];
+
+const ALGOS: &[Algo] = &[Algo::MilpLike, Algo::PR(5), Algo::PR(50), Algo::PR(500), Algo::Rand];
+
+pub struct CatRow {
+    pub ds: Dataset,
+    pub k: usize,
+    pub aba: AlgoRun,
+    pub aba_ofv: f64,
+    pub aba_stats: ClusterStats,
+    pub others: Vec<(Algo, Option<AlgoRun>)>,
+}
+
+/// Run the categorical suite.
+pub fn run_suite(opts: &ExpOptions) -> Result<Vec<CatRow>> {
+    let scale = if opts.quick { Scale::Tiny } else { opts.scale };
+    // The MILP stand-in gets a tighter cap: its role is "exhausts its
+    // budget and returns a worse incumbent", and the budget must not
+    // dominate the whole table's runtime.
+    let milp_cap = if opts.quick { 0.3 } else { (opts.time_limit_secs / 10.0).clamp(1.0, 10.0) };
+    let mut rows = Vec::new();
+    for &(name, g, ks) in INSTANCES {
+        if let Some(filter) = &opts.datasets {
+            if !filter.iter().any(|f| f == name || f == "all") {
+                continue;
+            }
+        }
+        let mut ds = load(name, scale)?;
+        let cats = kmeans(&ds, g, 50, 7).labels;
+        ds = ds.with_categories(cats)?;
+        let ks: Vec<usize> = match opts.k {
+            Some(k) => vec![k],
+            None if opts.quick => vec![ks[0]],
+            None => ks.to_vec(),
+        };
+        for k in ks {
+            eprintln!("  [t9] {name} (n={}, g={g}) k={k}", ds.n);
+            let aba = run_algo(&ds, k, Algo::Aba, 0, opts.time_limit_secs).unwrap();
+            let aba_stats = ClusterStats::compute(&ds, &aba.labels, k);
+            let aba_ofv = aba_stats.ssd_total();
+            let others = ALGOS
+                .iter()
+                .map(|&a| {
+                    let cap = if a == Algo::MilpLike { milp_cap } else { opts.time_limit_secs };
+                    (a, run_algo(&ds, k, a, 1, cap))
+                })
+                .collect();
+            rows.push(CatRow { ds: ds.clone(), k, aba, aba_ofv, aba_stats, others });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn table9(opts: &ExpOptions) -> Result<Table> {
+    let rows = run_suite(opts)?;
+    let mut t = Table::new(
+        "Table 9 — categorical anticlustering (dev % from ABA ofv; cpu dev % from ABA)",
+        &[
+            "dataset", "N", "K", "ofv ABA", "MILP-like", "P-R5", "P-R50", "P-R500", "Rand",
+            "cpu ABA [s]", "cpu MILP", "cpu P-R5", "cpu P-R50", "cpu P-R500",
+        ],
+    )
+    .left(0);
+    for row in &rows {
+        let mut cells = vec![
+            row.ds.name.clone(),
+            row.ds.n.to_string(),
+            row.k.to_string(),
+            format!("{:.2}", row.aba_ofv),
+        ];
+        for (_, run) in &row.others {
+            cells.push(dev_cell(quality_dev(&row.ds, row.k, row.aba_ofv, run), 4));
+        }
+        cells.push(fmt_secs(row.aba.secs));
+        for (algo, run) in &row.others {
+            if *algo == Algo::Rand {
+                continue;
+            }
+            cells.push(dev_cell(time_dev(row.aba.secs, run), 1));
+        }
+        t.row(cells);
+    }
+    t.save_csv(&opts.out_dir, "t9")?;
+    println!("{}", t.render());
+    Ok(t)
+}
+
+pub fn table10(opts: &ExpOptions) -> Result<Table> {
+    let rows = run_suite(opts)?;
+    let mut t = Table::new(
+        "Table 10 — categorical diversity balance (sd / range, dev % from ABA)",
+        &[
+            "dataset", "K", "sd ABA", "sd MILP", "sd P-R5", "sd P-R50", "sd P-R500", "sd Rand",
+            "range ABA", "rg MILP", "rg P-R5", "rg P-R50", "rg P-R500", "rg Rand",
+        ],
+    )
+    .left(0);
+    for row in &rows {
+        let sd_aba = row.aba_stats.diversity_sd();
+        let rg_aba = row.aba_stats.diversity_range();
+        let stats_of = |run: &Option<AlgoRun>| {
+            run.as_ref()
+                .map(|r| ClusterStats::compute(&row.ds, &r.labels, row.k))
+        };
+        let mut cells = vec![row.ds.name.clone(), row.k.to_string(), format!("{sd_aba:.3}")];
+        for (_, run) in &row.others {
+            let dev = stats_of(run).map(|s| crate::util::pct_dev(s.diversity_sd(), sd_aba));
+            cells.push(dev_cell(dev, 1));
+        }
+        cells.push(format!("{rg_aba:.3}"));
+        for (_, run) in &row.others {
+            let dev = stats_of(run).map(|s| crate::util::pct_dev(s.diversity_range(), rg_aba));
+            cells.push(dev_cell(dev, 1));
+        }
+        t.row(cells);
+    }
+    t.save_csv(&opts.out_dir, "t10")?;
+    println!("{}", t.render());
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> ExpOptions {
+        ExpOptions {
+            quick: true,
+            datasets: Some(vec!["abalone".into(), "pulsar".into()]),
+            out_dir: std::env::temp_dir().join("aba_results_test"),
+            ..ExpOptions::default()
+        }
+    }
+
+    #[test]
+    fn table9_runs_and_constraints_hold() {
+        let rows = run_suite(&quick_opts()).unwrap();
+        assert_eq!(rows.len(), 2);
+        for row in &rows {
+            let cats = row.ds.categories.as_ref().unwrap();
+            let g = row.ds.n_categories();
+            // Constraint (5) on the ABA solution.
+            for cat in 0..g as u32 {
+                let total = cats.iter().filter(|&&c| c == cat).count();
+                let (lo, hi) = (total / row.k, total.div_ceil(row.k));
+                for cl in 0..row.k as u32 {
+                    let cnt = (0..row.ds.n)
+                        .filter(|&i| cats[i] == cat && row.aba.labels[i] == cl)
+                        .count();
+                    assert!(
+                        (lo..=hi).contains(&cnt),
+                        "{} k={} cat={cat} cl={cl}: {cnt} not in [{lo},{hi}]",
+                        row.ds.name,
+                        row.k
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table9_formats() {
+        let t = table9(&quick_opts()).unwrap();
+        assert_eq!(t.headers.len(), 14);
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn table10_formats() {
+        let t = table10(&quick_opts()).unwrap();
+        assert_eq!(t.headers.len(), 14);
+    }
+}

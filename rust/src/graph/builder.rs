@@ -1,0 +1,76 @@
+//! Graph construction from tabular data — the METIS input procedure of
+//! §5.5: "for each object, we only list p = 30 randomly selected
+//! neighbors with the corresponding edge weights as integers".
+
+use super::csr::Graph;
+use crate::data::Dataset;
+use crate::rng::Pcg32;
+
+/// Build the paper's sparse random-neighbor graph: `p` random distinct
+/// neighbors per node, edge weight `ceil(squared distance)` (METIS needs
+/// integers; the paper rounds up). Zero-weight edges get weight 1 so the
+/// graph stays connected-ish for the partitioner.
+pub fn random_neighbor_graph(ds: &Dataset, p: usize, seed: u64) -> Graph {
+    let mut rng = Pcg32::new(seed);
+    let p = p.min(ds.n - 1);
+    let mut edges = Vec::with_capacity(ds.n * p);
+    for u in 0..ds.n {
+        let mut picked = 0usize;
+        let mut guard = 0usize;
+        let mut seen: Vec<usize> = Vec::with_capacity(p);
+        while picked < p && guard < 20 * p {
+            guard += 1;
+            let v = rng.gen_index(ds.n);
+            if v == u || seen.contains(&v) {
+                continue;
+            }
+            seen.push(v);
+            picked += 1;
+            let w = ds.dist2(u, v).ceil() as u64;
+            edges.push((u as u32, v as u32, w.max(1)));
+        }
+    }
+    Graph::from_edges(ds.n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthKind};
+
+    #[test]
+    fn every_node_has_at_least_p_neighbors() {
+        let ds = generate(SynthKind::Uniform, 200, 4, 3, "u");
+        let g = random_neighbor_graph(&ds, 10, 1);
+        assert_eq!(g.n, 200);
+        for u in 0..g.n {
+            assert!(g.degree(u) >= 10, "node {u} degree {}", g.degree(u));
+        }
+    }
+
+    #[test]
+    fn weights_are_positive_integers() {
+        let ds = generate(SynthKind::Uniform, 100, 4, 4, "u");
+        let g = random_neighbor_graph(&ds, 5, 2);
+        assert!(g.w.iter().all(|&w| w >= 1));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = generate(SynthKind::Uniform, 100, 4, 5, "u");
+        let a = random_neighbor_graph(&ds, 5, 9);
+        let b = random_neighbor_graph(&ds, 5, 9);
+        assert_eq!(a.adj, b.adj);
+        assert_eq!(a.w, b.w);
+    }
+
+    #[test]
+    fn p_clamped_for_tiny_datasets() {
+        let ds = generate(SynthKind::Uniform, 5, 2, 6, "u");
+        let g = random_neighbor_graph(&ds, 30, 3);
+        assert_eq!(g.n, 5);
+        for u in 0..g.n {
+            assert!(g.degree(u) <= 4);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Compressed-sparse-row undirected graph with integer edge weights
+//! (METIS's input format uses integer weights; the paper rounds up).
+
+/// Undirected weighted graph in CSR form. Every edge `{u, v}` is stored
+/// twice (in `u`'s and `v`'s adjacency).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub n: usize,
+    /// Offsets, length `n + 1`.
+    pub xadj: Vec<usize>,
+    /// Flattened neighbor lists.
+    pub adj: Vec<u32>,
+    /// Edge weights, parallel to `adj`.
+    pub w: Vec<u64>,
+    /// Vertex weights (1 at the finest level; merged counts when coarsened).
+    pub vwgt: Vec<u64>,
+}
+
+impl Graph {
+    /// Build from an edge list `{(u, v, w)}` (u != v; duplicates summed).
+    pub fn from_edges(n: usize, edges: &[(u32, u32, u64)]) -> Self {
+        let mut deg = vec![0usize; n];
+        for &(u, v, _) in edges {
+            assert!(u != v, "self loop {u}");
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut xadj = vec![0usize; n + 1];
+        for i in 0..n {
+            xadj[i + 1] = xadj[i] + deg[i];
+        }
+        let m2 = xadj[n];
+        let mut adj = vec![0u32; m2];
+        let mut w = vec![0u64; m2];
+        let mut cursor = xadj.clone();
+        for &(u, v, wt) in edges {
+            adj[cursor[u as usize]] = v;
+            w[cursor[u as usize]] = wt;
+            cursor[u as usize] += 1;
+            adj[cursor[v as usize]] = u;
+            w[cursor[v as usize]] = wt;
+            cursor[v as usize] += 1;
+        }
+        let mut g = Graph { n, xadj, adj, w, vwgt: vec![1; n] };
+        g.dedupe();
+        g
+    }
+
+    /// Merge parallel edges (summing weights); sorts each adjacency list.
+    fn dedupe(&mut self) {
+        let mut nx = Vec::with_capacity(self.n + 1);
+        let mut na = Vec::with_capacity(self.adj.len());
+        let mut nw = Vec::with_capacity(self.w.len());
+        nx.push(0);
+        let mut buf: Vec<(u32, u64)> = Vec::new();
+        for u in 0..self.n {
+            buf.clear();
+            for e in self.xadj[u]..self.xadj[u + 1] {
+                buf.push((self.adj[e], self.w[e]));
+            }
+            buf.sort_unstable_by_key(|&(v, _)| v);
+            let mut i = 0;
+            while i < buf.len() {
+                let v = buf[i].0;
+                let mut wt = 0u64;
+                while i < buf.len() && buf[i].0 == v {
+                    wt += buf[i].1;
+                    i += 1;
+                }
+                na.push(v);
+                nw.push(wt);
+            }
+            nx.push(na.len());
+        }
+        self.xadj = nx;
+        self.adj = na;
+        self.w = nw;
+    }
+
+    /// Neighbors of `u` with weights.
+    #[inline]
+    pub fn neighbors(&self, u: usize) -> impl Iterator<Item = (usize, u64)> + '_ {
+        (self.xadj[u]..self.xadj[u + 1]).map(move |e| (self.adj[e] as usize, self.w[e]))
+    }
+
+    /// Degree of `u`.
+    #[inline]
+    pub fn degree(&self, u: usize) -> usize {
+        self.xadj[u + 1] - self.xadj[u]
+    }
+
+    /// Number of undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.adj.len() / 2
+    }
+
+    /// Total cut weight of a partition (each crossing edge counted once).
+    pub fn cut_cost(&self, part: &[u32]) -> u64 {
+        assert_eq!(part.len(), self.n);
+        let mut cut = 0u64;
+        for u in 0..self.n {
+            for (v, w) in self.neighbors(u) {
+                if part[u] != part[v] {
+                    cut += w;
+                }
+            }
+        }
+        cut / 2
+    }
+
+    /// Total vertex weight.
+    pub fn total_vwgt(&self) -> u64 {
+        self.vwgt.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle_plus_leaf() -> Graph {
+        // 0-1 (w2), 1-2 (w3), 0-2 (w4), 2-3 (w10)
+        Graph::from_edges(4, &[(0, 1, 2), (1, 2, 3), (0, 2, 4), (2, 3, 10)])
+    }
+
+    #[test]
+    fn csr_shape() {
+        let g = triangle_plus_leaf();
+        assert_eq!(g.n, 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.degree(2), 3);
+        assert_eq!(g.degree(3), 1);
+    }
+
+    #[test]
+    fn duplicate_edges_summed() {
+        let g = Graph::from_edges(2, &[(0, 1, 2), (1, 0, 5)]);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.neighbors(0).next(), Some((1, 7)));
+    }
+
+    #[test]
+    fn cut_cost_counts_crossings_once() {
+        let g = triangle_plus_leaf();
+        // Partition {0,1} vs {2,3}: crossing edges 1-2 (3) and 0-2 (4).
+        assert_eq!(g.cut_cost(&[0, 0, 1, 1]), 7);
+        // All in one part: no cut.
+        assert_eq!(g.cut_cost(&[0, 0, 0, 0]), 0);
+        // Isolate 3: only 2-3 crosses.
+        assert_eq!(g.cut_cost(&[0, 0, 0, 1]), 10);
+    }
+}

@@ -1,0 +1,408 @@
+//! Multilevel balanced k-way partitioner — the METIS stand-in.
+//!
+//! Same algorithm family as Karypis & Kumar (1998): (1) coarsen by
+//! heavy-edge matching until the graph is small, (2) greedy graph-growing
+//! initial partition on the coarsest graph, (3) uncoarsen with FM-style
+//! greedy boundary refinement under a vertex-weight balance constraint.
+//! Minimizes total cut weight. Like METIS, balance is approximate (the
+//! default 3% imbalance tolerance), which is exactly the behaviour Table
+//! 11 of the paper contrasts with ABA's perfect balance.
+
+use super::csr::Graph;
+use crate::rng::Pcg32;
+
+/// Partitioner configuration.
+#[derive(Clone, Debug)]
+pub struct PartitionConfig {
+    /// Number of parts.
+    pub k: usize,
+    /// Allowed relative imbalance (METIS default ufactor=30 → 3%).
+    pub imbalance: f64,
+    /// RNG seed (matching order, refinement order).
+    pub seed: u64,
+    /// Stop coarsening when the graph has at most `max(coarse_factor * k,
+    /// 100)` vertices.
+    pub coarse_factor: usize,
+    /// Refinement passes per level.
+    pub refine_passes: usize,
+}
+
+impl PartitionConfig {
+    pub fn new(k: usize) -> Self {
+        // METIS's ufactor default allows 3% imbalance, but on the paper's
+        // instances it *delivered* near-perfect balance (Table 11 ratios
+        // 99.4–100%). We pin the tolerance to that observed behaviour so
+        // the k-cut comparison is apples-to-apples.
+        Self { k, imbalance: 0.005, seed: 1, coarse_factor: 30, refine_passes: 4 }
+    }
+}
+
+/// Partition the graph into `k` parts minimizing cut weight; returns a
+/// part label per vertex.
+pub fn partition(g: &Graph, cfg: &PartitionConfig) -> Vec<u32> {
+    assert!(cfg.k >= 1);
+    if cfg.k == 1 {
+        return vec![0; g.n];
+    }
+    let mut rng = Pcg32::new(cfg.seed);
+    // --- Phase 1: coarsen ---------------------------------------------
+    let mut levels: Vec<(Graph, Vec<usize>)> = Vec::new(); // (fine graph, fine->coarse map)
+    let mut cur = g.clone();
+    let stop_at = (cfg.coarse_factor * cfg.k).max(100);
+    while cur.n > stop_at {
+        let (coarse, map) = coarsen_once(&cur, &mut rng);
+        // Diminishing returns: stop if we shrank < 5%.
+        if coarse.n as f64 > 0.95 * cur.n as f64 {
+            levels.push((cur, map));
+            cur = coarse;
+            break;
+        }
+        levels.push((cur, map));
+        cur = coarse;
+    }
+    // --- Phase 2: initial partition on the coarsest graph ---------------
+    let mut part = initial_partition(&cur, cfg, &mut rng);
+    refine(&cur, &mut part, cfg, &mut rng);
+    // --- Phase 3: uncoarsen + refine ------------------------------------
+    let mut finest = cur;
+    while let Some((fine, map)) = levels.pop() {
+        let mut fine_part = vec![0u32; fine.n];
+        for v in 0..fine.n {
+            fine_part[v] = part[map[v]];
+        }
+        part = fine_part;
+        refine(&fine, &mut part, cfg, &mut rng);
+        finest = fine;
+    }
+    // METIS enforces its balance tolerance explicitly; do the same so the
+    // final min/max ratio lands near (1 - imbalance), not wherever greedy
+    // growing left it.
+    force_balance(&finest, &mut part, cfg);
+    refine(&finest, &mut part, cfg, &mut rng);
+    part
+}
+
+/// Move least-connected vertices out of overweight parts into the
+/// lightest parts until every part is within the balance tolerance.
+fn force_balance(g: &Graph, part: &mut [u32], cfg: &PartitionConfig) {
+    let k = cfg.k;
+    let total = g.total_vwgt();
+    let avg = total as f64 / k as f64;
+    let max_w = ((1.0 + cfg.imbalance) * avg).ceil() as u64;
+    let min_w = ((1.0 - cfg.imbalance) * avg).floor() as u64;
+    let mut weights = vec![0u64; k];
+    for v in 0..g.n {
+        weights[part[v] as usize] += g.vwgt[v];
+    }
+    let mut moves = 0usize;
+    loop {
+        let heavy = (0..k).max_by_key(|&p| weights[p]).unwrap();
+        let light = (0..k).min_by_key(|&p| weights[p]).unwrap();
+        // Done once both tolerance bounds hold (or nothing left to move).
+        if (weights[heavy] <= max_w && weights[light] >= min_w) || heavy == light {
+            break;
+        }
+        moves += 1;
+        if moves > 4 * g.n {
+            break; // safety against pathological vertex weights
+        }
+        // Pick the member of `heavy` with the smallest internal minus
+        // external(light) connectivity — cheapest to move.
+        let mut best: Option<(i64, usize)> = None;
+        for v in 0..g.n {
+            if part[v] as usize != heavy {
+                continue;
+            }
+            let mut internal = 0i64;
+            let mut to_light = 0i64;
+            for (nb, w) in g.neighbors(v) {
+                if part[nb] as usize == heavy {
+                    internal += w as i64;
+                } else if part[nb] as usize == light {
+                    to_light += w as i64;
+                }
+            }
+            let score = internal - to_light;
+            if best.map_or(true, |(s, _)| score < s) {
+                best = Some((score, v));
+            }
+        }
+        let Some((_, v)) = best else { break };
+        part[v] = light as u32;
+        weights[heavy] -= g.vwgt[v];
+        weights[light] += g.vwgt[v];
+    }
+}
+
+/// One round of heavy-edge matching; returns the coarse graph and the
+/// fine-to-coarse vertex map.
+fn coarsen_once(g: &Graph, rng: &mut Pcg32) -> (Graph, Vec<usize>) {
+    let mut order: Vec<usize> = (0..g.n).collect();
+    rng.shuffle(&mut order);
+    let mut mate = vec![usize::MAX; g.n];
+    for &u in &order {
+        if mate[u] != usize::MAX {
+            continue;
+        }
+        // Heaviest unmatched neighbor.
+        let mut best = usize::MAX;
+        let mut best_w = 0u64;
+        for (v, w) in g.neighbors(u) {
+            if mate[v] == usize::MAX && v != u && w >= best_w {
+                best = v;
+                best_w = w;
+            }
+        }
+        if best != usize::MAX {
+            mate[u] = best;
+            mate[best] = u;
+        } else {
+            mate[u] = u; // singleton
+        }
+    }
+    // Assign coarse ids.
+    let mut map = vec![usize::MAX; g.n];
+    let mut next = 0usize;
+    for u in 0..g.n {
+        if map[u] != usize::MAX {
+            continue;
+        }
+        map[u] = next;
+        let m = mate[u];
+        if m != u {
+            map[m] = next;
+        }
+        next += 1;
+    }
+    // Build coarse edges + vertex weights.
+    let mut edges = Vec::new();
+    let mut vwgt = vec![0u64; next];
+    for u in 0..g.n {
+        vwgt[map[u]] += g.vwgt[u];
+        for (v, w) in g.neighbors(u) {
+            let (cu, cv) = (map[u], map[v]);
+            if cu < cv {
+                edges.push((cu as u32, cv as u32, w));
+            }
+        }
+    }
+    let mut coarse = Graph::from_edges(next, &edges);
+    coarse.vwgt = vwgt;
+    (coarse, map)
+}
+
+/// Greedy graph growing: grow each part from a seed, preferring vertices
+/// strongly connected to the growing region, until it reaches the target
+/// weight.
+fn initial_partition(g: &Graph, cfg: &PartitionConfig, rng: &mut Pcg32) -> Vec<u32> {
+    let k = cfg.k;
+    let total = g.total_vwgt();
+    let target = total as f64 / k as f64;
+    let mut part = vec![u32::MAX; g.n];
+    let mut unassigned = g.n;
+    for p in 0..k as u32 {
+        if unassigned == 0 {
+            break;
+        }
+        let budget = if p as usize == k - 1 { u64::MAX } else { target.round() as u64 };
+        // Seed: random unassigned vertex.
+        let mut seed = rng.gen_index(g.n);
+        while part[seed] != u32::MAX {
+            seed = (seed + 1) % g.n;
+        }
+        let mut weight = 0u64;
+        // Gain map: connection weight into the region.
+        let mut gain = vec![0i64; g.n];
+        let mut frontier: Vec<usize> = vec![seed];
+        while weight < budget && unassigned > 0 {
+            // Pick the frontier vertex with max gain (fall back to any
+            // unassigned vertex if the frontier is exhausted).
+            frontier.retain(|&v| part[v] == u32::MAX);
+            let pick = if let Some(&v) = frontier.iter().max_by_key(|&&v| gain[v]) {
+                v
+            } else {
+                let mut v = rng.gen_index(g.n);
+                while part[v] != u32::MAX {
+                    v = (v + 1) % g.n;
+                }
+                v
+            };
+            part[pick] = p;
+            weight += g.vwgt[pick];
+            unassigned -= 1;
+            for (nb, w) in g.neighbors(pick) {
+                if part[nb] == u32::MAX {
+                    if gain[nb] == 0 {
+                        frontier.push(nb);
+                    }
+                    gain[nb] += w as i64;
+                }
+            }
+        }
+    }
+    // Safety: anything left joins the lightest part.
+    if unassigned > 0 {
+        let mut weights = vec![0u64; k];
+        for v in 0..g.n {
+            if part[v] != u32::MAX {
+                weights[part[v] as usize] += g.vwgt[v];
+            }
+        }
+        for v in 0..g.n {
+            if part[v] == u32::MAX {
+                let lightest = (0..k).min_by_key(|&p| weights[p]).unwrap();
+                part[v] = lightest as u32;
+                weights[lightest] += g.vwgt[v];
+            }
+        }
+    }
+    part
+}
+
+/// FM-style greedy boundary refinement: move boundary vertices to the
+/// neighboring part with max positive gain, subject to the balance
+/// constraint.
+fn refine(g: &Graph, part: &mut [u32], cfg: &PartitionConfig, rng: &mut Pcg32) {
+    let k = cfg.k;
+    let total = g.total_vwgt();
+    let avg = total as f64 / k as f64;
+    let max_w = ((1.0 + cfg.imbalance) * avg).ceil() as u64;
+    let min_w = ((1.0 - cfg.imbalance) * avg).floor() as u64;
+    let mut weights = vec![0u64; k];
+    for v in 0..g.n {
+        weights[part[v] as usize] += g.vwgt[v];
+    }
+    let mut order: Vec<usize> = (0..g.n).collect();
+    let mut conn = vec![0i64; k]; // scratch: connection weight to each part
+    for _ in 0..cfg.refine_passes {
+        rng.shuffle(&mut order);
+        let mut moved = 0usize;
+        for &v in &order {
+            let own = part[v] as usize;
+            // Compute connection weights to adjacent parts.
+            let mut touched: Vec<usize> = Vec::with_capacity(8);
+            for (nb, w) in g.neighbors(v) {
+                let p = part[nb] as usize;
+                if conn[p] == 0 {
+                    touched.push(p);
+                }
+                conn[p] += w as i64;
+            }
+            let internal = conn[own];
+            let mut best_p = own;
+            let mut best_gain = 0i64;
+            for &p in &touched {
+                if p == own {
+                    continue;
+                }
+                let gain = conn[p] - internal;
+                if gain > best_gain
+                    && weights[p] + g.vwgt[v] <= max_w
+                    && weights[own] >= min_w + g.vwgt[v]
+                {
+                    best_gain = gain;
+                    best_p = p;
+                }
+            }
+            for &p in &touched {
+                conn[p] = 0;
+            }
+            if best_p != own {
+                part[v] = best_p as u32;
+                weights[own] -= g.vwgt[v];
+                weights[best_p] += g.vwgt[v];
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+/// Min/max part-size ratio in percent (Table 11 columns 10–11); sizes in
+/// vertex counts.
+pub fn min_max_ratio(part: &[u32], k: usize) -> f64 {
+    let mut counts = vec![0usize; k];
+    for &p in part {
+        counts[p as usize] += 1;
+    }
+    let min = *counts.iter().min().unwrap() as f64;
+    let max = *counts.iter().max().unwrap() as f64;
+    if max == 0.0 {
+        0.0
+    } else {
+        100.0 * min / max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthKind};
+    use crate::graph::builder::random_neighbor_graph;
+
+    fn ring(n: usize) -> Graph {
+        let edges: Vec<(u32, u32, u64)> = (0..n)
+            .map(|i| (i as u32, ((i + 1) % n) as u32, 1))
+            .collect();
+        Graph::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn bisects_a_ring_with_cut_2ish() {
+        let g = ring(64);
+        let cfg = PartitionConfig::new(2);
+        let part = partition(&g, &cfg);
+        let cut = g.cut_cost(&part);
+        // Optimal ring bisection cuts exactly 2 edges; accept small slack.
+        assert!(cut <= 6, "cut={cut}");
+        assert!(min_max_ratio(&part, 2) >= 80.0);
+    }
+
+    #[test]
+    fn respects_k_parts_nonempty() {
+        let ds = generate(SynthKind::GaussianMixture { components: 4, spread: 8.0 }, 500, 4, 9, "g");
+        let g = random_neighbor_graph(&ds, 10, 1);
+        let cfg = PartitionConfig::new(4);
+        let part = partition(&g, &cfg);
+        let mut counts = [0usize; 4];
+        for &p in &part {
+            counts[p as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        assert!(min_max_ratio(&part, 4) > 70.0, "{counts:?}");
+    }
+
+    #[test]
+    fn k_equals_one_trivial() {
+        let g = ring(10);
+        let part = partition(&g, &PartitionConfig::new(1));
+        assert!(part.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn cut_beats_random_partition() {
+        let ds = generate(SynthKind::GaussianMixture { components: 8, spread: 6.0 }, 800, 6, 10, "g");
+        let g = random_neighbor_graph(&ds, 12, 2);
+        let cfg = PartitionConfig::new(8);
+        let part = partition(&g, &cfg);
+        // Random balanced partition for comparison.
+        let mut rng = crate::rng::Pcg32::new(3);
+        let mut idx: Vec<usize> = (0..g.n).collect();
+        rng.shuffle(&mut idx);
+        let mut rand_part = vec![0u32; g.n];
+        for (pos, &v) in idx.iter().enumerate() {
+            rand_part[v] = (pos % 8) as u32;
+        }
+        let (c1, c2) = (g.cut_cost(&part), g.cut_cost(&rand_part));
+        assert!(c1 < c2, "metis-like {c1} vs random {c2}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let g = ring(128);
+        let cfg = PartitionConfig::new(4);
+        assert_eq!(partition(&g, &cfg), partition(&g, &cfg));
+    }
+}

@@ -1,0 +1,81 @@
+//! Brute-force kNN — oracle and high-dimensional fallback.
+
+use crate::data::dataset::sq_dist;
+use crate::data::Dataset;
+
+/// `k` nearest neighbors of every object (excluding self), row-major
+/// `n x k`. O(n² d) — fine for the sizes the exchange baseline handles.
+pub fn knn_all(ds: &Dataset, k: usize) -> Vec<usize> {
+    assert!(k < ds.n);
+    let mut out = Vec::with_capacity(ds.n * k);
+    // Reused per-row heap of (dist, idx) as a simple insertion buffer.
+    let mut best: Vec<(f64, usize)> = Vec::with_capacity(k + 1);
+    for i in 0..ds.n {
+        best.clear();
+        let ri = ds.row(i);
+        let mut worst = f64::INFINITY;
+        for j in 0..ds.n {
+            if j == i {
+                continue;
+            }
+            let dist = sq_dist(ri, ds.row(j));
+            if best.len() < k {
+                best.push((dist, j));
+                if best.len() == k {
+                    best.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+                    worst = best[k - 1].0;
+                }
+            } else if dist < worst {
+                // Insert in sorted position, drop the tail.
+                let pos = best.partition_point(|&(d0, _)| d0 <= dist);
+                best.insert(pos, (dist, j));
+                best.pop();
+                worst = best[k - 1].0;
+            }
+        }
+        if best.len() < k {
+            best.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+        }
+        out.extend(best.iter().map(|&(_, j)| j));
+    }
+    out
+}
+
+/// `k` nearest neighbors of a single query point among dataset rows.
+pub fn knn_query(ds: &Dataset, query: &[f32], k: usize) -> Vec<usize> {
+    let mut d: Vec<(f64, usize)> = (0..ds.n).map(|j| (sq_dist(query, ds.row(j)), j)).collect();
+    d.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+    d.truncate(k);
+    d.into_iter().map(|(_, j)| j).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    fn line() -> Dataset {
+        // Points at x = 0, 1, 2, 10.
+        Dataset::from_rows(
+            "line",
+            &[vec![0.0], vec![1.0], vec![2.0], vec![10.0]],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn neighbors_on_a_line() {
+        let ds = line();
+        let nn = knn_all(&ds, 2);
+        assert_eq!(&nn[0..2], &[1, 2]); // from 0: 1 then 2
+        assert_eq!(&nn[2..4], &[0, 2]); // from 1: 0 and 2 (tie order by dist)
+        assert_eq!(&nn[6..8], &[2, 1]); // from 10: 2 then 1
+    }
+
+    #[test]
+    fn query_interface() {
+        let ds = line();
+        assert_eq!(knn_query(&ds, &[9.0], 1), vec![3]);
+        assert_eq!(knn_query(&ds, &[0.4], 2), vec![0, 1]);
+    }
+}

@@ -1,0 +1,145 @@
+//! kd-tree for exact kNN in low dimension.
+//!
+//! Median-split construction over index slices (no point copies), bounded
+//! best-first descent with hypersphere/plane pruning for queries.
+
+use crate::data::dataset::sq_dist;
+use crate::data::Dataset;
+
+struct Node {
+    /// Splitting dimension.
+    dim: usize,
+    /// Split value (coordinate of the median point).
+    split: f32,
+    /// Index into `points` of the median object.
+    point: usize,
+    left: Option<Box<Node>>,
+    right: Option<Box<Node>>,
+}
+
+/// An immutable kd-tree over a dataset's rows.
+pub struct KdTree<'a> {
+    ds: &'a Dataset,
+    root: Option<Box<Node>>,
+}
+
+impl<'a> KdTree<'a> {
+    /// Build in O(n log² n) (median via sort per level).
+    pub fn build(ds: &'a Dataset) -> Self {
+        let mut idx: Vec<usize> = (0..ds.n).collect();
+        let root = build_node(ds, &mut idx, 0);
+        Self { ds, root }
+    }
+
+    /// Indices of the `k` nearest rows to `query` (may include an
+    /// identical point; callers filter self-matches).
+    pub fn knn(&self, query: &[f32], k: usize) -> Vec<usize> {
+        assert_eq!(query.len(), self.ds.d);
+        let k = k.min(self.ds.n);
+        // Max-heap by distance, capped at k, as a sorted vec (k is small).
+        let mut best: Vec<(f64, usize)> = Vec::with_capacity(k + 1);
+        search(self.ds, self.root.as_deref(), query, k, &mut best);
+        best.into_iter().map(|(_, i)| i).collect()
+    }
+}
+
+fn build_node(ds: &Dataset, idx: &mut [usize], depth: usize) -> Option<Box<Node>> {
+    if idx.is_empty() {
+        return None;
+    }
+    let dim = depth % ds.d;
+    idx.sort_unstable_by(|&a, &b| ds.row(a)[dim].total_cmp(&ds.row(b)[dim]));
+    let mid = idx.len() / 2;
+    let point = idx[mid];
+    let split = ds.row(point)[dim];
+    let (left_idx, rest) = idx.split_at_mut(mid);
+    let right_idx = &mut rest[1..];
+    Some(Box::new(Node {
+        dim,
+        split,
+        point,
+        left: build_node(ds, left_idx, depth + 1),
+        right: build_node(ds, right_idx, depth + 1),
+    }))
+}
+
+fn search(
+    ds: &Dataset,
+    node: Option<&Node>,
+    query: &[f32],
+    k: usize,
+    best: &mut Vec<(f64, usize)>,
+) {
+    let Some(n) = node else { return };
+    let dist = sq_dist(query, ds.row(n.point));
+    // Insert into the sorted candidate list.
+    if best.len() < k || dist < best.last().unwrap().0 {
+        let pos = best.partition_point(|&(d0, _)| d0 <= dist);
+        best.insert(pos, (dist, n.point));
+        if best.len() > k {
+            best.pop();
+        }
+    }
+    let delta = (query[n.dim] - n.split) as f64;
+    let (near, far) = if delta <= 0.0 {
+        (n.left.as_deref(), n.right.as_deref())
+    } else {
+        (n.right.as_deref(), n.left.as_deref())
+    };
+    search(ds, near, query, k, best);
+    // Prune the far side unless the splitting plane is closer than the
+    // current k-th best.
+    if best.len() < k || delta * delta < best.last().unwrap().0 {
+        search(ds, far, query, k, best);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthKind};
+    use crate::knn::brute;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn matches_brute_force_random() {
+        let ds = generate(SynthKind::Uniform, 300, 3, 55, "u");
+        let tree = KdTree::build(&ds);
+        let mut rng = Pcg32::new(1);
+        for _ in 0..50 {
+            let q: Vec<f32> = (0..3).map(|_| rng.f32()).collect();
+            let got = tree.knn(&q, 4);
+            let want = brute::knn_query(&ds, &q, 4);
+            let dg: f64 = got.iter().map(|&j| sq_dist(&q, ds.row(j))).sum();
+            let dw: f64 = want.iter().map(|&j| sq_dist(&q, ds.row(j))).sum();
+            assert!((dg - dw).abs() < 1e-9, "got {got:?} want {want:?}");
+        }
+    }
+
+    #[test]
+    fn exact_match_returns_self_first() {
+        let ds = generate(SynthKind::Uniform, 100, 2, 56, "u");
+        let tree = KdTree::build(&ds);
+        for i in (0..100).step_by(13) {
+            let got = tree.knn(ds.row(i), 1);
+            assert_eq!(sq_dist(ds.row(i), ds.row(got[0])), 0.0);
+        }
+    }
+
+    #[test]
+    fn k_larger_than_n_is_clamped() {
+        let ds = generate(SynthKind::Uniform, 5, 2, 57, "u");
+        let tree = KdTree::build(&ds);
+        let got = tree.knn(&[0.5, 0.5], 50);
+        assert_eq!(got.len(), 5);
+    }
+
+    #[test]
+    fn duplicate_points_handled() {
+        let rows = vec![vec![1.0, 1.0]; 20];
+        let ds = crate::data::Dataset::from_rows("dup", &rows).unwrap();
+        let tree = KdTree::build(&ds);
+        let got = tree.knn(&[1.0, 1.0], 5);
+        assert_eq!(got.len(), 5);
+    }
+}

@@ -1,0 +1,63 @@
+//! k-nearest-neighbor search.
+//!
+//! Needed by the `P-N5` baseline (fast_anticlustering with
+//! nearest-neighbor exchange partners) and by the graph builder. A
+//! kd-tree handles the low-dimensional tabular datasets; brute force is
+//! both the oracle and the high-D fallback (kd-trees degrade past ~16
+//! dimensions).
+
+pub mod brute;
+pub mod kdtree;
+
+use crate::data::Dataset;
+
+/// Find the `k` nearest neighbors (by squared Euclidean distance,
+/// excluding self) of every object. Returns an `n x k` row-major index
+/// matrix. Picks kd-tree vs brute force by dimensionality.
+pub fn knn_all(ds: &Dataset, k: usize) -> Vec<usize> {
+    assert!(k < ds.n, "k={k} must be < n={}", ds.n);
+    if ds.d <= 16 {
+        let tree = kdtree::KdTree::build(ds);
+        let mut out = Vec::with_capacity(ds.n * k);
+        for i in 0..ds.n {
+            out.extend(tree.knn(ds.row(i), k + 1).into_iter().filter(|&j| j != i).take(k));
+        }
+        out
+    } else {
+        brute::knn_all(ds, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthKind};
+
+    #[test]
+    fn dispatcher_matches_brute_low_d() {
+        let ds = generate(SynthKind::Uniform, 200, 3, 77, "u");
+        let k = 5;
+        let fast = knn_all(&ds, k);
+        let slow = brute::knn_all(&ds, k);
+        for i in 0..ds.n {
+            let mut a = fast[i * k..(i + 1) * k].to_vec();
+            let mut b = slow[i * k..(i + 1) * k].to_vec();
+            a.sort_unstable();
+            b.sort_unstable();
+            // Distances, not identities, must agree (ties may reorder).
+            let da: f64 = a.iter().map(|&j| ds.dist2(i, j)).sum();
+            let db: f64 = b.iter().map(|&j| ds.dist2(i, j)).sum();
+            assert!((da - db).abs() < 1e-9, "row {i}");
+        }
+    }
+
+    #[test]
+    fn excludes_self() {
+        let ds = generate(SynthKind::Uniform, 50, 2, 78, "u");
+        let k = 3;
+        let nn = knn_all(&ds, k);
+        for i in 0..ds.n {
+            assert!(!nn[i * k..(i + 1) * k].contains(&i));
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! # aba — Assignment-Based Anticlustering
+//!
+//! A production-grade reproduction of *"A Fast and Effective Method for
+//! Euclidean Anticlustering: The Assignment-Based-Anticlustering
+//! Algorithm"* (Baumann, Goldschmidt, Hochbaum, Yang, 2026) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: sorting/batching, LAPJV
+//!   assignment, centroid state, hierarchical decomposition, categorical
+//!   balancing, the mini-batch streaming pipeline, every baseline from the
+//!   paper's evaluation, and the experiment harness that regenerates each
+//!   table and figure.
+//! * **L2 (`python/compile/model.py`)** — JAX compute graphs, AOT-lowered
+//!   to HLO text at build time (`make artifacts`).
+//! * **L1 (`python/compile/kernels/`)** — the Pallas cost-matrix kernel the
+//!   L2 graphs call.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT (`xla`
+//! crate); Python never runs on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use aba::algo::{AbaConfig, run_aba};
+//! use aba::data::synth::{generate, SynthKind};
+//!
+//! let ds = generate(SynthKind::GaussianMixture { components: 8, spread: 4.0 },
+//!                   10_000, 16, 42, "demo");
+//! let labels = run_aba(&ds, 50, &AbaConfig::default()).unwrap();
+//! ```
+
+pub mod algo;
+pub mod assignment;
+pub mod baselines;
+pub mod data;
+pub mod experiments;
+pub mod graph;
+pub mod knn;
+pub mod metrics;
+pub mod pipeline;
+pub mod rng;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result type (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,248 @@
+//! `aba` — leader entrypoint and CLI for the Assignment-Based
+//! Anticlustering system.
+//!
+//! ```text
+//! aba datasets                          list the synthetic Table-2 catalog
+//! aba run --dataset travel --k 50       run ABA, print objective + stats
+//! aba table t4|t6|t8|t9|t10|t11         regenerate a paper table
+//! aba fig f5|f6|f7                      regenerate a paper figure
+//! aba pipeline --k 100 --epochs 3       stream mini-batches into the SGD consumer
+//! aba selftest                          XLA artifacts vs native numerics check
+//! ```
+
+use aba::algo::{run_aba, AbaConfig, ClusterStats};
+use aba::data::synth::{catalog, load, Scale};
+use aba::experiments::{common::ExpOptions, figs, t11, t4, t4x, t8, t9};
+use aba::pipeline::{run_pipeline, BatchStrategy, PipelineConfig};
+use aba::util::args::{parse_hier, Args};
+use aba::util::fmt_secs;
+use aba::util::timer::Timer;
+use anyhow::{bail, Result};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
+        print_help();
+        return Ok(());
+    };
+    match cmd {
+        "datasets" => cmd_datasets(),
+        "run" => cmd_run(&args),
+        "table" => cmd_table(&args),
+        "fig" => cmd_fig(&args),
+        "pipeline" => cmd_pipeline(&args),
+        "selftest" => cmd_selftest(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `aba help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "aba — Assignment-Based Anticlustering (paper reproduction)\n\
+         \n\
+         commands:\n\
+           datasets                         list the synthetic dataset catalog\n\
+           run --dataset NAME --k K         run ABA on a catalog dataset\n\
+               [--scale paper|small|tiny] [--variant base|small|auto]\n\
+               [--solver lapjv|auction|greedy] [--backend native|xla]\n\
+               [--hier K1xK2[xK3]] [--parallel] [--out labels.csv]\n\
+           table t4|t6|t8|t9|t10|t11        regenerate a paper table\n\
+               [--k K] [--datasets a,b|all] [--scale ...] [--quick]\n\
+               [--time-limit SECS] [--out-dir DIR]\n\
+           fig f5|f6|f7                     regenerate a paper figure\n\
+           pipeline [--dataset NAME] [--k K] [--epochs E] [--queue Q]\n\
+                    [--strategy aba|random]  stream mini-batches into SGD\n\
+           selftest                         XLA artifacts vs native check"
+    );
+}
+
+fn cmd_datasets() -> Result<()> {
+    let mut t = aba::util::table::Table::new(
+        "dataset catalog (synthetic stand-ins for Table 2; see DESIGN.md §3)",
+        &["name", "paper N", "paper D", "small N", "small D", "kind"],
+    )
+    .left(0);
+    for e in catalog() {
+        t.row(vec![
+            e.name.into(),
+            e.paper_n.to_string(),
+            e.paper_d.to_string(),
+            e.small_n.to_string(),
+            e.small_d.to_string(),
+            format!("{:?}", e.kind),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let name = args.get("dataset").unwrap_or("travel");
+    let scale: Scale = args.get_parse("scale")?.unwrap_or(Scale::Small);
+    let k: usize = args.get_parse("k")?.unwrap_or(10);
+    let mut cfg = AbaConfig::default();
+    if let Some(v) = args.get_parse("variant")? {
+        cfg.variant = v;
+    }
+    if let Some(s) = args.get_parse("solver")? {
+        cfg.solver = s;
+    }
+    if let Some(b) = args.get_parse("backend")? {
+        cfg.backend = b;
+    }
+    if let Some(h) = args.get("hier") {
+        cfg.hier = Some(parse_hier(h)?);
+    }
+    cfg.parallel = args.has_flag("parallel");
+
+    let ds = load(name, scale)?;
+    println!("dataset {} (n={}, d={}), k={k}", ds.name, ds.n, ds.d);
+    let timer = Timer::start();
+    let labels = run_aba(&ds, k, &cfg)?;
+    let secs = timer.secs();
+    let stats = ClusterStats::compute(&ds, &labels, k);
+    println!("cpu            {} s", fmt_secs(secs));
+    println!("ofv (ssd)      {:.4}", stats.ssd_total());
+    println!("W(C) pairwise  {:.4}", stats.pairwise_total());
+    println!("diversity sd   {:.4}", stats.diversity_sd());
+    println!("diversity rng  {:.4}", stats.diversity_range());
+    println!(
+        "sizes          min={} max={} (ratio {:.2}%)",
+        stats.sizes.iter().min().unwrap(),
+        stats.sizes.iter().max().unwrap(),
+        stats.min_max_ratio_pct()
+    );
+    if let Some(path) = args.get("out") {
+        aba::data::csv::save_labels(&labels, path)?;
+        println!("labels written to {path}");
+    }
+    Ok(())
+}
+
+fn exp_options(args: &Args) -> Result<ExpOptions> {
+    let mut opts = ExpOptions::default();
+    if let Some(s) = args.get_parse("scale")? {
+        opts.scale = s;
+    }
+    opts.k = args.get_parse("k")?;
+    opts.datasets = args.get_list("datasets");
+    if let Some(t) = args.get_parse("time-limit")? {
+        opts.time_limit_secs = t;
+    }
+    if let Some(dir) = args.get("out-dir") {
+        opts.out_dir = dir.into();
+    }
+    opts.quick = args.has_flag("quick");
+    Ok(opts)
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let id = args.pos(1, "table id (t4|t6|t8|t9|t10|t11)")?;
+    let opts = exp_options(args)?;
+    match id {
+        "t4" => t4::table4(&opts).map(|_| ()),
+        "t4x" => t4x::table4x(&opts).map(|_| ()),
+        "t6" => t4::table6(&opts).map(|_| ()),
+        "t8" => t8::table8(&opts).map(|_| ()),
+        "t9" => t9::table9(&opts).map(|_| ()),
+        "t10" => t9::table10(&opts).map(|_| ()),
+        "t11" => t11::table11(&opts).map(|_| ()),
+        other => bail!("unknown table '{other}'"),
+    }
+}
+
+fn cmd_fig(args: &Args) -> Result<()> {
+    let id = args.pos(1, "figure id (f5|f6|f7)")?;
+    let opts = exp_options(args)?;
+    match id {
+        "f5" => figs::fig5(&opts).map(|_| ()),
+        "f6" => figs::fig6(&opts).map(|_| ()),
+        "f7" => figs::fig7(&opts).map(|_| ()),
+        other => bail!("unknown figure '{other}'"),
+    }
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let name = args.get("dataset").unwrap_or("diabetes");
+    let scale: Scale = args.get_parse("scale")?.unwrap_or(Scale::Tiny);
+    let ds = load(name, scale)?;
+    let k: usize = args.get_parse("k")?.unwrap_or((ds.n / 64).max(2));
+    let epochs: usize = args.get_parse("epochs")?.unwrap_or(3);
+    let queue: usize = args.get_parse("queue")?.unwrap_or(4);
+    let strategy = match args.get("strategy").unwrap_or("aba") {
+        "aba" => BatchStrategy::Aba { cfg: AbaConfig::default(), shuffle_seed: 1 },
+        "random" => BatchStrategy::Random { seed: 1 },
+        other => bail!("unknown strategy '{other}' (aba|random)"),
+    };
+    let cfg = PipelineConfig { k, epochs, queue_depth: queue, strategy };
+    println!(
+        "pipeline: {} (n={}, d={}), k={k}, epochs={epochs}, queue={queue}",
+        ds.name, ds.n, ds.d
+    );
+
+    let y = aba::pipeline::sgd::synth_labels(&ds, 0.05, 7);
+    let mut model = aba::pipeline::sgd::LogReg::new(ds.d, 0.2);
+    let mut losses: Vec<f64> = Vec::new();
+    let stats = run_pipeline(&ds, &cfg, |batch| {
+        let loss = model.train_batch(&ds, &y, &batch.indices);
+        losses.push(loss);
+    })?;
+    println!(
+        "batches={} produced in {} s (blocked {} s), total {} s",
+        stats.batches_consumed,
+        fmt_secs(stats.produce_secs),
+        fmt_secs(stats.blocked_secs),
+        fmt_secs(stats.total_secs)
+    );
+    println!(
+        "throughput {:.1} batches/s",
+        stats.batches_consumed as f64 / stats.total_secs.max(1e-9)
+    );
+    let last: Vec<f64> = losses.iter().rev().take(k).copied().collect();
+    println!(
+        "final-epoch loss mean={:.4} sd={:.4}   accuracy={:.3}",
+        aba::metrics::Summary::of(&last).mean,
+        aba::metrics::Summary::of(&last).sd,
+        model.accuracy(&ds, &y)
+    );
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<()> {
+    use aba::runtime::{CostBackend, NativeBackend, XlaBackend};
+    let mut xla = XlaBackend::from_default_dir()?;
+    let mut native = NativeBackend::default();
+    let mut rng = aba::rng::Pcg32::new(7);
+    let (m, k, d) = (100usize, 100usize, 20usize);
+    let x: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let c: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let (mut a, mut b) = (Vec::new(), Vec::new());
+    xla.batch_costs(&x, m, d, &c, k, &mut a);
+    native.batch_costs(&x, m, d, &c, k, &mut b);
+    let max_err = a
+        .iter()
+        .zip(&b)
+        .map(|(u, v)| (u - v).abs())
+        .fold(0f32, f32::max);
+    println!(
+        "selftest: xla_calls={} fallbacks={} max_abs_err={max_err:.2e}",
+        xla.xla_calls, xla.native_fallbacks
+    );
+    if max_err > 1e-3 {
+        bail!("XLA vs native mismatch: {max_err}");
+    }
+    println!("selftest OK (artifacts round-trip through PJRT matches native)");
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! Summary statistics shared by the experiment harness and the pipeline.
+
+/// Basic descriptive statistics of a sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Self {
+        let n = xs.len();
+        if n == 0 {
+            return Self { n: 0, mean: 0.0, sd: 0.0, min: 0.0, max: 0.0 };
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Self {
+            n,
+            mean,
+            sd: var.sqrt(),
+            min: xs.iter().copied().fold(f64::INFINITY, f64::min),
+            max: xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    pub fn range(&self) -> f64 {
+        self.max - self.min
+    }
+}
+
+/// Quartiles (q1, median, q3) via linear interpolation — used for the
+/// Figure 6 boxplot table.
+pub fn quartiles(xs: &[f64]) -> (f64, f64, f64) {
+    assert!(!xs.is_empty());
+    let mut s = xs.to_vec();
+    s.sort_unstable_by(|a, b| a.total_cmp(b));
+    let q = |p: f64| -> f64 {
+        let pos = p * (s.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+        }
+    };
+    (q(0.25), q(0.5), q(0.75))
+}
+
+/// Fixed-width ASCII histogram rows (value range binned into `bins`),
+/// used for the Figure 5 diversity-distribution comparison.
+pub fn ascii_histogram(xs: &[f64], bins: usize, width: usize) -> Vec<String> {
+    assert!(bins > 0);
+    if xs.is_empty() {
+        return vec![];
+    }
+    let lo = xs.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        let b = (((x - lo) / span) * bins as f64) as usize;
+        counts[b.min(bins - 1)] += 1;
+    }
+    let max_count = *counts.iter().max().unwrap();
+    counts
+        .iter()
+        .enumerate()
+        .map(|(b, &c)| {
+            let bar_len = if max_count == 0 { 0 } else { c * width / max_count };
+            format!(
+                "[{:>10.3}, {:>10.3})  {:>6}  {}",
+                lo + span * b as f64 / bins as f64,
+                lo + span * (b + 1) as f64 / bins as f64,
+                c,
+                "#".repeat(bar_len)
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.range(), 3.0);
+        assert!((s.sd - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        assert_eq!(Summary::of(&[]).n, 0);
+    }
+
+    #[test]
+    fn quartiles_median() {
+        let (q1, q2, q3) = quartiles(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(q2, 3.0);
+        assert_eq!(q1, 2.0);
+        assert_eq!(q3, 4.0);
+    }
+
+    #[test]
+    fn histogram_counts_sum() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let rows = ascii_histogram(&xs, 10, 40);
+        assert_eq!(rows.len(), 10);
+        let total: usize = rows
+            .iter()
+            .map(|r| r.split_whitespace().nth(3).unwrap().parse::<usize>().unwrap())
+            .sum();
+        assert_eq!(total, 100);
+    }
+}

@@ -1,0 +1,177 @@
+//! Artifact manifest: the shape-bucket registry emitted by
+//! `python/compile/aot.py` alongside the HLO text files.
+
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Kind of compiled computation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `batch_costs(x[M,D], c[K,D]) -> [M,K]`.
+    Cost,
+    /// `centroid_distances(x[N,D], mu[1,D]) -> [N]`.
+    Dist,
+    /// `chunk_centroid(x[N,D]) -> [1,D]` (column sums).
+    Csum,
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub file: String,
+    /// Cost: rows (objects per batch). Dist/Csum: chunk length.
+    pub m: usize,
+    /// Cost: columns (centroids). 1 otherwise.
+    pub k: usize,
+    /// Feature dimension.
+    pub d: usize,
+}
+
+/// Parsed manifest plus its directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let doc = json::parse(&text).context("parsing manifest.json")?;
+        let format = doc.get("format").and_then(Json::as_usize).unwrap_or(0);
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let mut entries = Vec::new();
+        for e in doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .context("manifest missing entries")?
+        {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .context("entry missing name")?
+                .to_string();
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .context("entry missing file")?
+                .to_string();
+            let kind = match e.get("kind").and_then(Json::as_str) {
+                Some("cost") => ArtifactKind::Cost,
+                Some("dist") => ArtifactKind::Dist,
+                Some("csum") => ArtifactKind::Csum,
+                other => bail!("entry {name}: unknown kind {other:?}"),
+            };
+            let get = |key: &str| e.get(key).and_then(Json::as_usize);
+            let (m, k, d) = match kind {
+                ArtifactKind::Cost => (
+                    get("m").context("cost entry missing m")?,
+                    get("k").context("cost entry missing k")?,
+                    get("d").context("cost entry missing d")?,
+                ),
+                ArtifactKind::Dist | ArtifactKind::Csum => (
+                    get("n").context("entry missing n")?,
+                    1,
+                    get("d").context("entry missing d")?,
+                ),
+            };
+            if !dir.join(&file).exists() {
+                bail!("artifact file missing: {file} (run `make artifacts`)");
+            }
+            entries.push(ArtifactEntry { name, kind, file, m, k, d });
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(Self { dir, entries })
+    }
+
+    /// Smallest cost bucket that fits an `(m, k, d)` request, by padded
+    /// element count. `None` means fall back to the native backend.
+    pub fn pick_cost_bucket(&self, m: usize, k: usize, d: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Cost && e.m >= m && e.k >= k && e.d >= d)
+            .min_by_key(|e| e.m * e.k * e.d)
+    }
+
+    /// Smallest dist bucket with chunk length >= requested and matching d.
+    pub fn pick_dist_bucket(&self, d: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Dist && e.d >= d)
+            .min_by_key(|e| e.d)
+    }
+
+    /// Path of an entry's HLO text file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn write_fake_manifest(dir: &Path) {
+        fs::create_dir_all(dir).unwrap();
+        for f in ["a.hlo.txt", "b.hlo.txt", "d.hlo.txt"] {
+            fs::write(dir.join(f), "HloModule fake").unwrap();
+        }
+        fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":1,"entries":[
+                {"name":"cost_small","kind":"cost","m":64,"k":64,"d":16,"file":"a.hlo.txt"},
+                {"name":"cost_big","kind":"cost","m":256,"k":256,"d":128,"file":"b.hlo.txt"},
+                {"name":"dist1","kind":"dist","n":1024,"d":32,"file":"d.hlo.txt"}
+            ]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_and_picks_buckets() {
+        let dir = std::env::temp_dir().join("aba_manifest_test");
+        write_fake_manifest(&dir);
+        let man = Manifest::load(&dir).unwrap();
+        assert_eq!(man.entries.len(), 3);
+        // Fits in the small bucket.
+        let b = man.pick_cost_bucket(50, 64, 10).unwrap();
+        assert_eq!(b.name, "cost_small");
+        // Needs the big bucket.
+        let b = man.pick_cost_bucket(65, 65, 16).unwrap();
+        assert_eq!(b.name, "cost_big");
+        // Too big for any bucket.
+        assert!(man.pick_cost_bucket(300, 300, 16).is_none());
+        assert!(man.pick_cost_bucket(10, 10, 4096).is_none());
+        // Dist bucket by dimension.
+        assert_eq!(man.pick_dist_bucket(20).unwrap().name, "dist1");
+        assert!(man.pick_dist_bucket(64).is_none());
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load("/nonexistent/aba").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        let dir = crate::runtime::default_artifact_dir();
+        if dir.join("manifest.json").exists() {
+            let man = Manifest::load(&dir).unwrap();
+            assert!(man.pick_cost_bucket(64, 64, 16).is_some());
+            assert!(man.entries.iter().any(|e| e.kind == ArtifactKind::Csum));
+        }
+    }
+}

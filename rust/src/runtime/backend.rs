@@ -1,0 +1,402 @@
+//! The cost-computation backend abstraction.
+//!
+//! ABA's numeric hot spots — the per-batch object↔centroid cost matrix and
+//! the global-centroid distance vector — go through [`CostBackend`]:
+//!
+//! * [`NativeBackend`] — tight Rust loops (default; fastest on this CPU).
+//! * [`XlaBackend`] — the AOT Pallas/JAX artifacts through PJRT: requests
+//!   are zero-padded up to the nearest shape bucket and the result is
+//!   cropped. Zero-padding the feature dimension on *both* operands
+//!   leaves true squared distances unchanged; padded rows/columns are
+//!   cropped before the assignment solve. Oversized requests fall back to
+//!   native (and are counted, so benches can report coverage).
+
+use super::artifacts::Manifest;
+use super::client::XlaRuntime;
+use anyhow::Result;
+
+/// Which backend to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Xla,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            _ => anyhow::bail!("unknown backend '{s}' (native|xla)"),
+        }
+    }
+}
+
+/// Computes the ABA cost matrices. `&mut self` lets implementations keep
+/// scratch buffers and compiled-executable caches.
+pub trait CostBackend {
+    /// Write the `m x k` squared-distance matrix between `x` (`m x d`,
+    /// row-major) and centroids `c` (`k x d`) into `out` (resized).
+    fn batch_costs(
+        &mut self,
+        x: &[f32],
+        m: usize,
+        d: usize,
+        c: &[f32],
+        k: usize,
+        out: &mut Vec<f32>,
+    );
+
+    /// Squared distances from each row of `x` to a single centroid `mu`.
+    fn centroid_distances(&mut self, x: &[f32], n: usize, d: usize, mu: &[f32], out: &mut Vec<f64>);
+
+    /// Descriptive name for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// Native backend
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust backend; the perf-tuned reference implementation.
+#[derive(Default)]
+pub struct NativeBackend {
+    /// Scratch: per-centroid squared norms.
+    c_norms: Vec<f32>,
+}
+
+/// 8-lane unrolled dot product. The multiple independent accumulators
+/// break the f32 dependency chain so LLVM auto-vectorizes (a plain
+/// `zip().map().sum()` cannot be reordered and stays scalar) — measured
+/// ~3x on the cost-matrix hot path (EXPERIMENTS.md §Perf).
+#[inline]
+fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 8];
+    let chunks = a.len() / 8;
+    for t in 0..chunks {
+        let (abase, bbase) = (&a[t * 8..t * 8 + 8], &b[t * 8..t * 8 + 8]);
+        for l in 0..8 {
+            acc[l] += abase[l] * bbase[l];
+        }
+    }
+    let mut dot = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for t in chunks * 8..a.len() {
+        dot += a[t] * b[t];
+    }
+    dot
+}
+
+/// Tight-loop cost matrix: `out[i*k + j] = ||x_i - c_j||^2`, computed as
+/// `||x_i||^2 + ||c_j||^2 - 2 <x_i, c_j>` with precomputed centroid norms
+/// (same decomposition as the L1 Pallas kernel).
+pub fn cost_matrix_native(x: &[f32], m: usize, d: usize, c: &[f32], k: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * d);
+    debug_assert_eq!(c.len(), k * d);
+    debug_assert_eq!(out.len(), m * k);
+    // Precompute centroid norms.
+    let mut cn = vec![0f32; k];
+    for (j, cj) in c.chunks_exact(d).enumerate() {
+        cn[j] = dot8(cj, cj);
+    }
+    for (i, xi) in x.chunks_exact(d).enumerate() {
+        let xn: f32 = dot8(xi, xi);
+        let row = &mut out[i * k..(i + 1) * k];
+        for (j, cj) in c.chunks_exact(d).enumerate() {
+            let dot = dot8(xi, cj);
+            row[j] = (xn + cn[j] - 2.0 * dot).max(0.0);
+        }
+    }
+}
+
+impl CostBackend for NativeBackend {
+    fn batch_costs(
+        &mut self,
+        x: &[f32],
+        m: usize,
+        d: usize,
+        c: &[f32],
+        k: usize,
+        out: &mut Vec<f32>,
+    ) {
+        out.resize(m * k, 0.0);
+        let _ = &mut self.c_norms; // scratch reserved for blocked variant
+        cost_matrix_native(x, m, d, c, k, out);
+    }
+
+    fn centroid_distances(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        d: usize,
+        mu: &[f32],
+        out: &mut Vec<f64>,
+    ) {
+        debug_assert_eq!(x.len(), n * d);
+        debug_assert_eq!(mu.len(), d);
+        out.clear();
+        out.reserve(n);
+        for xi in x.chunks_exact(d) {
+            let mut s = 0f64;
+            for (&a, &b) in xi.iter().zip(mu) {
+                let diff = (a - b) as f64;
+                s += diff * diff;
+            }
+            out.push(s);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA backend
+// ---------------------------------------------------------------------------
+
+/// PJRT-backed backend executing the AOT artifacts, with pad/crop bucket
+/// dispatch and native fallback for oversized shapes.
+pub struct XlaBackend {
+    rt: XlaRuntime,
+    native: NativeBackend,
+    /// Scratch buffers for padded operands.
+    pad_x: Vec<f32>,
+    pad_c: Vec<f32>,
+    /// Telemetry: how many calls ran through XLA vs fell back.
+    pub xla_calls: usize,
+    pub native_fallbacks: usize,
+}
+
+impl XlaBackend {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        Ok(Self {
+            rt: XlaRuntime::new(manifest)?,
+            native: NativeBackend::default(),
+            pad_x: Vec::new(),
+            pad_c: Vec::new(),
+            xla_calls: 0,
+            native_fallbacks: 0,
+        })
+    }
+
+    pub fn from_default_dir() -> Result<Self> {
+        Ok(Self {
+            rt: XlaRuntime::from_default_dir()?,
+            native: NativeBackend::default(),
+            pad_x: Vec::new(),
+            pad_c: Vec::new(),
+            xla_calls: 0,
+            native_fallbacks: 0,
+        })
+    }
+
+    /// Zero-pad `src` (`rows x d`) into `dst` (`prows x pd`).
+    fn pad_into(src: &[f32], rows: usize, d: usize, prows: usize, pd: usize, dst: &mut Vec<f32>) {
+        dst.clear();
+        dst.resize(prows * pd, 0.0);
+        for i in 0..rows {
+            dst[i * pd..i * pd + d].copy_from_slice(&src[i * d..(i + 1) * d]);
+        }
+    }
+}
+
+impl CostBackend for XlaBackend {
+    fn batch_costs(
+        &mut self,
+        x: &[f32],
+        m: usize,
+        d: usize,
+        c: &[f32],
+        k: usize,
+        out: &mut Vec<f32>,
+    ) {
+        let Some(entry) = self.rt.manifest().pick_cost_bucket(m, k, d).cloned() else {
+            self.native_fallbacks += 1;
+            self.native.batch_costs(x, m, d, c, k, out);
+            return;
+        };
+        let (bm, bk, bd) = (entry.m, entry.k, entry.d);
+        Self::pad_into(x, m, d, bm, bd, &mut self.pad_x);
+        Self::pad_into(c, k, d, bk, bd, &mut self.pad_c);
+        let res = self
+            .rt
+            .run_f32(&entry, &[(&self.pad_x, &[bm, bd]), (&self.pad_c, &[bk, bd])]);
+        match res {
+            Ok(full) => {
+                self.xla_calls += 1;
+                out.clear();
+                out.reserve(m * k);
+                for i in 0..m {
+                    out.extend_from_slice(&full[i * bk..i * bk + k]);
+                }
+            }
+            Err(e) => {
+                // An execution failure is survivable: log and fall back so
+                // the pipeline keeps serving (failure-injection tested).
+                log::warn!("xla batch_costs failed ({e:#}); falling back to native");
+                self.native_fallbacks += 1;
+                self.native.batch_costs(x, m, d, c, k, out);
+            }
+        }
+    }
+
+    fn centroid_distances(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        d: usize,
+        mu: &[f32],
+        out: &mut Vec<f64>,
+    ) {
+        let Some(entry) = self.rt.manifest().pick_dist_bucket(d).cloned() else {
+            self.native_fallbacks += 1;
+            self.native.centroid_distances(x, n, d, mu, out);
+            return;
+        };
+        let (chunk, bd) = (entry.m, entry.d);
+        out.clear();
+        out.reserve(n);
+        // Pad mu once.
+        let mut mu_pad = vec![0f32; bd];
+        mu_pad[..d].copy_from_slice(mu);
+        let mut start = 0usize;
+        while start < n {
+            let rows = (n - start).min(chunk);
+            Self::pad_into(&x[start * d..(start + rows) * d], rows, d, chunk, bd, &mut self.pad_x);
+            match self
+                .rt
+                .run_f32(&entry, &[(&self.pad_x, &[chunk, bd]), (&mu_pad, &[1, bd])])
+            {
+                Ok(full) => {
+                    self.xla_calls += 1;
+                    out.extend(full[..rows].iter().map(|&v| v as f64));
+                }
+                Err(e) => {
+                    log::warn!("xla centroid_distances failed ({e:#}); native fallback");
+                    self.native_fallbacks += 1;
+                    let mut part = Vec::new();
+                    self.native.centroid_distances(
+                        &x[start * d..(start + rows) * d],
+                        rows,
+                        d,
+                        mu,
+                        &mut part,
+                    );
+                    out.extend(part);
+                }
+            }
+            start += rows;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Construct a backend by kind (XLA requires built artifacts).
+pub fn make_backend(kind: BackendKind) -> Result<Box<dyn CostBackend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(NativeBackend::default())),
+        BackendKind::Xla => Ok(Box::new(XlaBackend::from_default_dir()?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn rand_mat(rng: &mut Pcg32, rows: usize, d: usize) -> Vec<f32> {
+        (0..rows * d).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn native_cost_matrix_matches_direct_computation() {
+        let mut rng = Pcg32::new(61);
+        let (m, k, d) = (13, 7, 5);
+        let x = rand_mat(&mut rng, m, d);
+        let c = rand_mat(&mut rng, k, d);
+        let mut out = Vec::new();
+        NativeBackend::default().batch_costs(&x, m, d, &c, k, &mut out);
+        for i in 0..m {
+            for j in 0..k {
+                let mut want = 0f64;
+                for t in 0..d {
+                    let diff = (x[i * d + t] - c[j * d + t]) as f64;
+                    want += diff * diff;
+                }
+                let got = out[i * k + j] as f64;
+                assert!((got - want).abs() < 1e-3, "({i},{j}): {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn native_centroid_distances() {
+        let mut rng = Pcg32::new(62);
+        let (n, d) = (20, 4);
+        let x = rand_mat(&mut rng, n, d);
+        let mu = rand_mat(&mut rng, 1, d);
+        let mut out = Vec::new();
+        NativeBackend::default().centroid_distances(&x, n, d, &mu, &mut out);
+        assert_eq!(out.len(), n);
+        for i in 0..n {
+            let mut want = 0f64;
+            for t in 0..d {
+                let diff = (x[i * d + t] - mu[t]) as f64;
+                want += diff * diff;
+            }
+            assert!((out[i] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn xla_backend_matches_native_with_padding() {
+        let dir = crate::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = Manifest::load(dir).unwrap();
+        let mut xla = XlaBackend::new(man).unwrap();
+        let mut native = NativeBackend::default();
+        let mut rng = Pcg32::new(63);
+        // Odd shapes force padding inside the 64/128 buckets.
+        for &(m, k, d) in &[(10usize, 10usize, 5usize), (50, 33, 16), (100, 100, 20)] {
+            let x = rand_mat(&mut rng, m, d);
+            let c = rand_mat(&mut rng, k, d);
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            xla.batch_costs(&x, m, d, &c, k, &mut a);
+            native.batch_costs(&x, m, d, &c, k, &mut b);
+            assert_eq!(a.len(), b.len());
+            for (u, v) in a.iter().zip(&b) {
+                assert!((u - v).abs() < 1e-3, "{u} vs {v}");
+            }
+        }
+        assert!(xla.xla_calls >= 3, "xla_calls={}", xla.xla_calls);
+
+        // Oversized request falls back to native silently.
+        let (m, k, d) = (300, 300, 12);
+        let x = rand_mat(&mut rng, m, d);
+        let c = rand_mat(&mut rng, k, d);
+        let mut a = Vec::new();
+        xla.batch_costs(&x, m, d, &c, k, &mut a);
+        assert_eq!(a.len(), m * k);
+        assert!(xla.native_fallbacks >= 1);
+
+        // Distances path with chunking (n > bucket) and padding d.
+        let (n, d) = (2500usize, 20usize);
+        let x = rand_mat(&mut rng, n, d);
+        let mu = rand_mat(&mut rng, 1, d);
+        let (mut da, mut db) = (Vec::new(), Vec::new());
+        xla.centroid_distances(&x, n, d, &mu, &mut da);
+        native.centroid_distances(&x, n, d, &mu, &mut db);
+        assert_eq!(da.len(), n);
+        for (u, v) in da.iter().zip(&db) {
+            assert!((u - v).abs() < 1e-2, "{u} vs {v}");
+        }
+    }
+}

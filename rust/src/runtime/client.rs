@@ -1,0 +1,147 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many
+//! times.
+//!
+//! Mirrors /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile`. Executables are
+//! cached by artifact name, so the per-call cost on the request path is
+//! literal construction + execute + copy-out.
+
+use super::artifacts::{ArtifactEntry, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+
+/// A PJRT CPU runtime holding compiled executables for the artifact set.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client and load the manifest (lazy compilation).
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Self { client, manifest, execs: HashMap::new() })
+    }
+
+    /// Load from the default artifact directory.
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(Manifest::load(crate::runtime::default_artifact_dir())?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and cache the executable for an artifact.
+    fn executable(&mut self, entry: &ArtifactEntry) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.execs.contains_key(&entry.name) {
+            let path = self.manifest.path_of(entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+            self.execs.insert(entry.name.clone(), exe);
+        }
+        Ok(&self.execs[&entry.name])
+    }
+
+    /// Execute an artifact on f32 row-major inputs with the given shapes;
+    /// returns the flattened f32 output of the tuple's single element.
+    pub fn run_f32(
+        &mut self,
+        entry: &ArtifactEntry,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<f32>> {
+        // Build literals first (needs &self), then fetch/compile the
+        // executable (needs &mut self).
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, dims) in inputs {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(buf.as_ptr() as *const u8, buf.len() * 4)
+            };
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                dims,
+                bytes,
+            )
+            .map_err(|e| anyhow!("creating literal {dims:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let name = entry.name.clone();
+        let exe = self.executable(entry)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = literal
+            .to_tuple1()
+            .map_err(|e| anyhow!("untupling result of {name}: {e:?}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow!("converting result of {name}: {e:?}"))
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.execs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::ArtifactKind;
+
+    /// Full AOT round-trip: python-lowered HLO → PJRT compile → execute →
+    /// numbers match the native implementation. Skipped when artifacts
+    /// have not been built.
+    #[test]
+    fn cost_artifact_roundtrip_matches_native() {
+        let dir = crate::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let entry = man
+            .entries
+            .iter()
+            .find(|e| e.kind == ArtifactKind::Cost && e.m == 64)
+            .expect("64-bucket present")
+            .clone();
+        let mut rt = XlaRuntime::new(man).unwrap();
+        let (m, k, d) = (entry.m, entry.k, entry.d);
+        let mut rng = crate::rng::Pcg32::new(99);
+        let x: Vec<f32> = (0..m * d).map(|_| rng.f32()).collect();
+        let c: Vec<f32> = (0..k * d).map(|_| rng.f32()).collect();
+        let got = rt
+            .run_f32(&entry, &[(&x, &[m, d]), (&c, &[k, d])])
+            .unwrap();
+        assert_eq!(got.len(), m * k);
+        // Native reference.
+        let mut want = vec![0f32; m * k];
+        crate::runtime::backend::cost_matrix_native(&x, m, d, &c, k, &mut want);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        // Executable is cached: second call must not recompile.
+        assert_eq!(rt.compiled_count(), 1);
+        let _ = rt
+            .run_f32(&entry, &[(&x, &[m, d]), (&c, &[k, d])])
+            .unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+    }
+}

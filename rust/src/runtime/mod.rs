@@ -1,0 +1,35 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! Rust hot path.
+//!
+//! The build-time Python (`make artifacts`) lowers the L2 JAX graphs —
+//! which call the L1 Pallas kernel — to HLO **text** under `artifacts/`,
+//! plus a `manifest.json` describing the shape buckets. This module:
+//!
+//! * [`artifacts`] — parses the manifest (no serde; see `util::json`),
+//! * [`client`] — wraps `xla::PjRtClient` (CPU): text → `HloModuleProto`
+//!   → compile once → cached executable → execute,
+//! * [`backend`] — the [`backend::CostBackend`] abstraction the ABA core
+//!   calls: `Native` (pure Rust) or `Xla` (pad to bucket → PJRT → crop),
+//!   selectable per run.
+//!
+//! Python never runs here; the binary is self-contained once artifacts
+//! are built.
+
+pub mod artifacts;
+pub mod backend;
+pub mod client;
+
+pub use backend::{make_backend, BackendKind, CostBackend, NativeBackend, XlaBackend};
+pub use client::XlaRuntime;
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$ABA_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("ABA_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // Relative to the crate manifest when running via cargo, else cwd.
+    let base = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    PathBuf::from(base).join("artifacts")
+}

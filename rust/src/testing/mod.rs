@@ -1,0 +1,93 @@
+//! Property-testing driver.
+//!
+//! The offline vendor set has no `proptest`, so this is a small
+//! deterministic stand-in: each property runs over `cases` seeds derived
+//! from a root seed; failures report the seed so they can be replayed
+//! exactly (`PropRunner::replay`).
+
+use crate::rng::Pcg32;
+
+/// Runs a property over many deterministic seeds.
+pub struct PropRunner {
+    root_seed: u64,
+    cases: usize,
+}
+
+impl PropRunner {
+    pub fn new(cases: usize) -> Self {
+        Self { root_seed: 0xABA0_BA5E, cases }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.root_seed = seed;
+        self
+    }
+
+    /// Run `prop` with a fresh RNG per case; panics (with the case seed)
+    /// on the first failure.
+    pub fn run(&self, name: &str, mut prop: impl FnMut(&mut Pcg32) -> Result<(), String>) {
+        for case in 0..self.cases {
+            let seed = self.root_seed.wrapping_add(case as u64);
+            let mut rng = Pcg32::new(seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+            }
+        }
+    }
+
+    /// Re-run a single failing seed.
+    pub fn replay(
+        seed: u64,
+        name: &str,
+        mut prop: impl FnMut(&mut Pcg32) -> Result<(), String>,
+    ) {
+        let mut rng = Pcg32::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed on replay (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-like helper returning `Err` instead of panicking, for use
+/// inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        PropRunner::new(25).run("trivial", |rng| {
+            count += 1;
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        PropRunner::new(5).run("fails", |rng| {
+            let x = rng.f64();
+            if x < 2.0 {
+                Err("always".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,135 @@
+//! Tiny CLI argument parser (the offline vendor set has no clap).
+//!
+//! Grammar: positionals and `--key value` / `--key=value` options;
+//! `--flag` followed by another option or nothing is boolean.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let items: Vec<String> = argv.into_iter().collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < items.len() {
+            let a = &items[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < items.len() && !items[i + 1].starts_with("--") {
+                    out.options.insert(key.to_string(), items[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Parse an option value, with a helpful error naming the option.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => match v.parse::<T>() {
+                Ok(t) => Ok(Some(t)),
+                Err(e) => bail!("--{key} {v}: {e}"),
+            },
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+
+    /// Positional at index, with error message.
+    pub fn pos(&self, idx: usize, what: &str) -> Result<&str> {
+        self.positional
+            .get(idx)
+            .map(|s| s.as_str())
+            .with_context(|| format!("missing {what}"))
+    }
+}
+
+/// Parse a hierarchy spec like `4x125` or `8x200x200`.
+pub fn parse_hier(s: &str) -> Result<Vec<usize>> {
+    let parts: Result<Vec<usize>> = s
+        .split(['x', 'X'])
+        .map(|p| p.parse::<usize>().with_context(|| format!("bad factor '{p}' in '{s}'")))
+        .collect();
+    let parts = parts?;
+    if parts.is_empty() || parts.iter().any(|&p| p == 0) {
+        bail!("invalid hierarchy spec '{s}'");
+    }
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse(&["table", "t4", "--k", "5", "--scale=small", "--quick"]);
+        assert_eq!(a.positional, vec!["table", "t4"]);
+        assert_eq!(a.get("k"), Some("5"));
+        assert_eq!(a.get("scale"), Some("small"));
+        assert!(a.has_flag("quick"));
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn typed_and_list() {
+        let a = parse(&["--k", "12", "--datasets", "a, b,c"]);
+        assert_eq!(a.get_parse::<usize>("k").unwrap(), Some(12));
+        assert!(a.get_parse::<usize>("missing").unwrap().is_none());
+        assert_eq!(
+            a.get_list("datasets").unwrap(),
+            vec!["a".to_string(), "b".into(), "c".into()]
+        );
+    }
+
+    #[test]
+    fn bad_parse_errors() {
+        let a = parse(&["--k", "abc"]);
+        assert!(a.get_parse::<usize>("k").is_err());
+    }
+
+    #[test]
+    fn hier_spec() {
+        assert_eq!(parse_hier("4x125").unwrap(), vec![4, 125]);
+        assert_eq!(parse_hier("8x200x200").unwrap(), vec![8, 200, 200]);
+        assert!(parse_hier("4x0").is_err());
+        assert!(parse_hier("x").is_err());
+    }
+}

@@ -1,0 +1,66 @@
+//! Small shared utilities: a minimal JSON parser (the vendor set has no
+//! serde), wall-clock timers, and fixed-width table formatting.
+
+pub mod args;
+pub mod json;
+pub mod table;
+pub mod timer;
+
+/// Round a float for stable display (used by report tables / CSV).
+pub fn round_to(x: f64, digits: u32) -> f64 {
+    let p = 10f64.powi(digits as i32);
+    (x * p).round() / p
+}
+
+/// Format seconds compactly: `0.004`, `1.25`, `87.9`.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 0.01 {
+        format!("{s:.4}")
+    } else if s < 1.0 {
+        format!("{s:.3}")
+    } else if s < 100.0 {
+        format!("{s:.2}")
+    } else {
+        format!("{s:.1}")
+    }
+}
+
+/// Percentage deviation of `x` from baseline `base` (paper convention:
+/// positive means `x` is larger).
+pub fn pct_dev(x: f64, base: f64) -> f64 {
+    if base == 0.0 {
+        if x == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        100.0 * (x - base) / base.abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pct_dev_basics() {
+        assert_eq!(pct_dev(110.0, 100.0), 10.0);
+        assert_eq!(pct_dev(90.0, 100.0), -10.0);
+        assert_eq!(pct_dev(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn round_to_digits() {
+        assert_eq!(round_to(1.23456, 2), 1.23);
+        assert_eq!(round_to(-1.235, 2), -1.24);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(0.0042), "0.0042");
+        assert_eq!(fmt_secs(0.25), "0.250");
+        assert_eq!(fmt_secs(2.5), "2.50");
+        assert_eq!(fmt_secs(123.4), "123.4");
+    }
+}

@@ -1,0 +1,79 @@
+//! Wall-clock timing helpers used by the experiment harness and benches.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.secs())
+}
+
+/// Benchmark a closure: run `warmup` untimed iterations, then `iters`
+/// timed ones; returns (mean_secs, min_secs, max_secs).
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        samples.push(t.secs());
+    }
+    BenchStats::from_samples(&samples)
+}
+
+/// Summary statistics for a set of timing samples.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+impl BenchStats {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        let n = samples.len().max(1);
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let min = samples.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = samples.iter().copied().fold(0.0f64, f64::max);
+        Self { mean, min, max, n: samples.len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_measures_something() {
+        let (v, s) = timed(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499_500);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn bench_stats_ordering() {
+        let st = bench(1, 5, || std::thread::sleep(std::time::Duration::from_micros(50)));
+        assert!(st.min <= st.mean && st.mean <= st.max);
+        assert_eq!(st.n, 5);
+    }
+}

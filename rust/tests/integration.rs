@@ -1,0 +1,274 @@
+//! Cross-module integration tests: the full system exercised through its
+//! public API, plus the quick-scale experiment harness end to end.
+
+use aba::algo::{run_aba, run_hierarchical, AbaConfig, ClusterStats, Variant};
+use aba::assignment::SolverKind;
+use aba::baselines::exchange::{fast_anticlustering, ExchangeConfig};
+use aba::baselines::random_part::random_partition;
+use aba::data::kmeans::kmeans;
+use aba::data::synth::{generate, load, Scale, SynthKind};
+use aba::experiments::common::ExpOptions;
+use aba::pipeline::sgd::{synth_labels, LogReg};
+use aba::pipeline::{run_pipeline, BatchStrategy, PipelineConfig};
+use aba::runtime::BackendKind;
+
+fn results_dir() -> std::path::PathBuf {
+    std::env::temp_dir().join("aba_integration_results")
+}
+
+fn quick_opts() -> ExpOptions {
+    ExpOptions {
+        quick: true,
+        time_limit_secs: 30.0,
+        out_dir: results_dir(),
+        ..ExpOptions::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Headline behaviour: ABA vs baselines on quality, runtime, balance.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn aba_beats_random_and_matches_exchange_on_mixture_data() {
+    let ds = generate(
+        SynthKind::GaussianMixture { components: 6, spread: 5.0 },
+        2_000,
+        8,
+        1,
+        "itest",
+    );
+    let k = 20;
+    let aba = run_aba(&ds, k, &AbaConfig::default()).unwrap();
+    let aba_ofv = ClusterStats::compute(&ds, &aba, k).ssd_total();
+
+    let rand = random_partition(ds.n, k, 3);
+    let rand_ofv = ClusterStats::compute(&ds, &rand, k).ssd_total();
+    assert!(aba_ofv > rand_ofv, "ABA {aba_ofv} must beat random {rand_ofv}");
+
+    let exch = fast_anticlustering(&ds, k, &ExchangeConfig::random(50, 5));
+    let exch_ofv = ClusterStats::compute(&ds, &exch.labels, k).ssd_total();
+    // Table 4 shape: comparable quality (within a fraction of a percent).
+    let rel = (aba_ofv - exch_ofv).abs() / exch_ofv;
+    assert!(rel < 0.01, "ABA {aba_ofv} vs exchange {exch_ofv} rel={rel}");
+}
+
+#[test]
+fn aba_diversity_balance_dominates_baselines() {
+    // Table 6 shape: ABA's per-anticluster diversity spread is far
+    // smaller than both random's and the exchange heuristic's.
+    let ds = load("travel", Scale::Tiny).unwrap();
+    let k = 10;
+    let aba = run_aba(&ds, k, &AbaConfig::default()).unwrap();
+    let aba_sd = ClusterStats::compute(&ds, &aba, k).diversity_sd();
+
+    let rand = random_partition(ds.n, k, 1);
+    let rand_sd = ClusterStats::compute(&ds, &rand, k).diversity_sd();
+    let exch = fast_anticlustering(&ds, k, &ExchangeConfig::random(20, 2));
+    let exch_sd = ClusterStats::compute(&ds, &exch.labels, k).diversity_sd();
+
+    assert!(aba_sd < rand_sd, "aba {aba_sd} rand {rand_sd}");
+    assert!(aba_sd < exch_sd, "aba {aba_sd} exch {exch_sd}");
+}
+
+#[test]
+fn advantage_over_random_grows_with_k() {
+    // Table 8 shape: the random-partition deficit widens as K grows.
+    let ds = generate(SynthKind::ImageLike { classes: 10 }, 4_096, 16, 2, "t8i");
+    let mut devs = Vec::new();
+    for &k in &[32usize, 256, 2_048] {
+        let aba = run_aba(&ds, k, &AbaConfig::default()).unwrap();
+        let aba_ofv = ClusterStats::compute(&ds, &aba, k).ssd_total();
+        let rand = random_partition(ds.n, k, 1);
+        let rand_ofv = ClusterStats::compute(&ds, &rand, k).ssd_total();
+        devs.push(100.0 * (rand_ofv - aba_ofv) / aba_ofv);
+    }
+    assert!(devs[0] <= 0.5, "{devs:?}");
+    assert!(devs[2] < devs[0], "deficit should grow: {devs:?}");
+    assert!(devs[2] < -2.0, "large-K deficit should be substantial: {devs:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Variants compose: categorical + hierarchical + small.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn categorical_hierarchical_composition_respects_all_constraints() {
+    let base = generate(SynthKind::Uniform, 1_200, 6, 3, "cat");
+    let cats = kmeans(&base, 3, 30, 1).labels;
+    let ds = base.with_categories(cats.clone()).unwrap();
+    let spec = [3usize, 4];
+    let k = 12;
+    let labels = run_hierarchical(&ds, &spec, &AbaConfig::default()).unwrap();
+    let stats = ClusterStats::compute(&ds, &labels, k);
+    // Proposition 1: global sizes within one.
+    let (min, max) = (
+        *stats.sizes.iter().min().unwrap(),
+        *stats.sizes.iter().max().unwrap(),
+    );
+    assert!(max - min <= 1, "{:?}", stats.sizes);
+    // Per-category balance holds approximately through the hierarchy
+    // (exact bounds hold per level; composition can add one per level).
+    for g in 0..3u32 {
+        let total = cats.iter().filter(|&&c| c == g).count();
+        let ideal = total as f64 / k as f64;
+        for cl in 0..k as u32 {
+            let cnt = (0..ds.n)
+                .filter(|&i| labels[i] == cl && cats[i] == g)
+                .count() as f64;
+            assert!(
+                (cnt - ideal).abs() <= 2.0,
+                "cat {g} cluster {cl}: {cnt} vs ideal {ideal}"
+            );
+        }
+    }
+}
+
+#[test]
+fn small_variant_improves_tiny_anticlusters() {
+    // §4.2: for anticlusters of size 2 (matching), the interleaved order
+    // should not be worse than the base order.
+    let ds = generate(SynthKind::Uniform, 512, 4, 4, "sm");
+    let k = 256;
+    let run = |variant| {
+        let cfg = AbaConfig { variant, auto_hier: false, ..AbaConfig::default() };
+        let labels = run_aba(&ds, k, &cfg).unwrap();
+        ClusterStats::compute(&ds, &labels, k).ssd_total()
+    };
+    let base = run(Variant::Base);
+    let small = run(Variant::Small);
+    assert!(
+        small >= base * 0.95,
+        "small variant should be competitive: base={base} small={small}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Backends agree end to end.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn xla_backend_produces_same_partition_as_native() {
+    if !aba::runtime::default_artifact_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ds = generate(SynthKind::Uniform, 600, 10, 5, "xla");
+    let k = 60; // fits the (64,64,16) bucket after padding
+    let native_cfg = AbaConfig { auto_hier: false, ..AbaConfig::default() };
+    let xla_cfg = AbaConfig {
+        backend: BackendKind::Xla,
+        auto_hier: false,
+        ..AbaConfig::default()
+    };
+    let a = run_aba(&ds, k, &native_cfg).unwrap();
+    let b = run_aba(&ds, k, &xla_cfg).unwrap();
+    // Tiny float differences may flip ties; objectives must agree closely.
+    let oa = ClusterStats::compute(&ds, &a, k).ssd_total();
+    let ob = ClusterStats::compute(&ds, &b, k).ssd_total();
+    assert!(
+        (oa - ob).abs() < 1e-3 * oa,
+        "native {oa} vs xla {ob}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline end to end with a real consumer.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pipeline_with_sgd_consumer_reduces_batch_loss_variance() {
+    let ds = generate(
+        SynthKind::GaussianMixture { components: 5, spread: 3.0 },
+        3_000,
+        12,
+        6,
+        "pipe",
+    );
+    let y = synth_labels(&ds, 0.05, 7);
+    let k = 30;
+    let epochs = 3;
+    let sd_of = |strategy: BatchStrategy| {
+        let cfg = PipelineConfig { k, epochs, queue_depth: 4, strategy };
+        let mut model = LogReg::new(ds.d, 0.3);
+        let mut final_epoch = Vec::new();
+        run_pipeline(&ds, &cfg, |b| {
+            let loss = model.train_batch(&ds, &y, &b.indices);
+            if b.epoch == epochs - 1 {
+                final_epoch.push(loss);
+            }
+        })
+        .unwrap();
+        aba::metrics::Summary::of(&final_epoch).sd
+    };
+    let aba_sd = sd_of(BatchStrategy::Aba { cfg: AbaConfig::default(), shuffle_seed: 1 });
+    let rand_sd = sd_of(BatchStrategy::Random { seed: 1 });
+    assert!(
+        aba_sd < rand_sd,
+        "representative batches must lower loss variance: aba {aba_sd} rand {rand_sd}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// The experiment harness runs end to end at quick scale.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_tables_and_figures_run_quick() {
+    let opts = quick_opts();
+    aba::experiments::t4::table4(&opts).unwrap();
+    aba::experiments::t8::table8(&opts).unwrap();
+    let t9_opts = ExpOptions {
+        datasets: Some(vec!["abalone".into()]),
+        ..quick_opts()
+    };
+    aba::experiments::t9::table9(&t9_opts).unwrap();
+    aba::experiments::t11::table11(&ExpOptions {
+        datasets: Some(vec!["abalone".into()]),
+        ..quick_opts()
+    })
+    .unwrap();
+    aba::experiments::figs::fig7(&opts).unwrap();
+    // CSVs landed.
+    for f in ["t4_k5.csv", "t8.csv", "t9.csv", "t11.csv", "f7.csv"] {
+        assert!(results_dir().join(f).exists(), "{f} missing");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn oversized_k_and_bad_specs_fail_cleanly() {
+    let ds = generate(SynthKind::Uniform, 50, 3, 8, "fi");
+    assert!(run_aba(&ds, 51, &AbaConfig::default()).is_err());
+    assert!(run_aba(&ds, 0, &AbaConfig::default()).is_err());
+    // Hier spec whose product exceeds n.
+    assert!(run_hierarchical(&ds, &[8, 8], &AbaConfig::default()).is_err());
+    // Hier spec with product != k is simply a different K — caller
+    // contract; but empty spec errors.
+    assert!(run_hierarchical(&ds, &[], &AbaConfig::default()).is_err());
+}
+
+#[test]
+fn missing_artifacts_dir_yields_helpful_error() {
+    std::env::set_var("ABA_ARTIFACTS", "/nonexistent/aba_artifacts");
+    let err = match aba::runtime::XlaBackend::from_default_dir() {
+        Ok(_) => panic!("expected missing-artifacts error"),
+        Err(e) => e,
+    };
+    std::env::remove_var("ABA_ARTIFACTS");
+    assert!(format!("{err:#}").contains("make artifacts"));
+}
+
+#[test]
+fn solver_choice_is_pluggable_end_to_end() {
+    let ds = generate(SynthKind::Uniform, 300, 4, 9, "sv");
+    for solver in [SolverKind::Lapjv, SolverKind::Auction, SolverKind::Greedy] {
+        let cfg = AbaConfig { solver, ..AbaConfig::default() };
+        let labels = run_aba(&ds, 10, &cfg).unwrap();
+        let stats = ClusterStats::compute(&ds, &labels, 10);
+        assert_eq!(stats.sizes.iter().sum::<usize>(), 300);
+    }
+}

@@ -1,0 +1,228 @@
+//! Property-based tests over the system's core invariants, driven by the
+//! in-repo deterministic PropRunner (no proptest in the offline vendor
+//! set; failures print a replayable seed).
+
+use aba::algo::objective::pairwise_within_brute;
+use aba::algo::{run_aba, run_hierarchical, AbaConfig, ClusterStats};
+use aba::assignment::{assignment_cost, brute, is_valid_assignment, Lapjv};
+use aba::data::synth::{generate, SynthKind};
+use aba::prop_assert;
+use aba::rng::Pcg32;
+use aba::testing::PropRunner;
+
+fn rand_dataset(rng: &mut Pcg32, max_n: usize, max_d: usize) -> aba::data::Dataset {
+    let n = 4 + rng.gen_index(max_n - 4);
+    let d = 1 + rng.gen_index(max_d);
+    let kind = match rng.gen_index(4) {
+        0 => SynthKind::Uniform,
+        1 => SynthKind::GaussianMixture { components: 1 + rng.gen_index(6), spread: 4.0 },
+        2 => SynthKind::Binary { p: 0.3 },
+        _ => SynthKind::HeavyTail,
+    };
+    generate(kind, n, d, rng.next_u64(), "prop")
+}
+
+#[test]
+fn prop_aba_partition_is_valid_and_balanced() {
+    PropRunner::new(40).run("aba balanced partition", |rng| {
+        let ds = rand_dataset(rng, 300, 8);
+        let k = 1 + rng.gen_index(ds.n.min(40));
+        let labels = run_aba(&ds, k, &AbaConfig::default()).map_err(|e| e.to_string())?;
+        prop_assert!(labels.len() == ds.n, "label length");
+        prop_assert!(labels.iter().all(|&l| (l as usize) < k), "label range");
+        let stats = ClusterStats::compute(&ds, &labels, k);
+        let (min, max) = (
+            *stats.sizes.iter().min().unwrap(),
+            *stats.sizes.iter().max().unwrap(),
+        );
+        prop_assert!(max - min <= 1, "sizes n={} k={k}: {:?}", ds.n, stats.sizes);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fact1_holds_for_aba_partitions() {
+    PropRunner::new(20).run("fact 1 equivalence", |rng| {
+        let ds = rand_dataset(rng, 80, 5);
+        let k = 2 + rng.gen_index(5.min(ds.n - 2));
+        let labels = run_aba(&ds, k, &AbaConfig::default()).map_err(|e| e.to_string())?;
+        let stats = ClusterStats::compute(&ds, &labels, k);
+        let pairwise = pairwise_within_brute(&ds, &labels, k);
+        let fact1 = stats.pairwise_total();
+        let rel = (pairwise - fact1).abs() / pairwise.max(1.0);
+        prop_assert!(rel < 1e-6, "pairwise {pairwise} vs fact1 {fact1}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lapjv_optimal_vs_brute() {
+    PropRunner::new(60).run("lapjv optimality", |rng| {
+        let nr = 1 + rng.gen_index(7);
+        let nc = nr + rng.gen_index(4);
+        // Mix of scales, negatives, and ties.
+        let scale = [0.001f32, 1.0, 1000.0][rng.gen_index(3)];
+        let cost: Vec<f32> = (0..nr * nc)
+            .map(|_| (rng.f32() - 0.3) * scale)
+            .collect();
+        let got = Lapjv::new().solve(&cost, nr, nc, true);
+        prop_assert!(is_valid_assignment(&got, nc), "validity");
+        let want = brute::solve_max(&cost, nr, nc);
+        let (gc, wc) = (
+            assignment_cost(&cost, nc, &got),
+            assignment_cost(&cost, nc, &want),
+        );
+        prop_assert!(
+            (gc - wc).abs() <= 1e-4 * wc.abs().max(1.0),
+            "lapjv {gc} vs brute {wc} ({nr}x{nc})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hierarchical_proposition1() {
+    PropRunner::new(25).run("proposition 1 sizes", |rng| {
+        let ds = rand_dataset(rng, 400, 6);
+        let k1 = 2 + rng.gen_index(4);
+        let k2 = 2 + rng.gen_index(4);
+        if k1 * k2 > ds.n {
+            return Ok(());
+        }
+        let labels =
+            run_hierarchical(&ds, &[k1, k2], &AbaConfig::default()).map_err(|e| e.to_string())?;
+        let stats = ClusterStats::compute(&ds, &labels, k1 * k2);
+        let (min, max) = (
+            *stats.sizes.iter().min().unwrap(),
+            *stats.sizes.iter().max().unwrap(),
+        );
+        prop_assert!(
+            max - min <= 1,
+            "n={} spec={k1}x{k2} sizes={:?}",
+            ds.n,
+            stats.sizes
+        );
+        prop_assert!(stats.sizes.iter().sum::<usize>() == ds.n, "coverage");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_categorical_bounds_never_violated() {
+    PropRunner::new(25).run("constraint (5)", |rng| {
+        let base = rand_dataset(rng, 200, 5);
+        let g = 2 + rng.gen_index(3);
+        let cats: Vec<u32> = (0..base.n).map(|_| rng.gen_below(g as u32)).collect();
+        let ds = base.with_categories(cats.clone()).map_err(|e| e.to_string())?;
+        let k = 2 + rng.gen_index(8.min(ds.n / 2));
+        let labels = run_aba(&ds, k, &AbaConfig::default()).map_err(|e| e.to_string())?;
+        for cat in 0..g as u32 {
+            let total = cats.iter().filter(|&&c| c == cat).count();
+            let (lo, hi) = (total / k, total.div_ceil(k));
+            for cl in 0..k as u32 {
+                let cnt = (0..ds.n)
+                    .filter(|&i| labels[i] == cl && cats[i] == cat)
+                    .count();
+                prop_assert!(
+                    (lo..=hi).contains(&cnt),
+                    "cat {cat} cluster {cl}: {cnt} not in [{lo},{hi}] (n={} k={k} g={g})",
+                    ds.n
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_aba_never_worse_than_random_on_pairwise_objective() {
+    PropRunner::new(20).run("aba >= random", |rng| {
+        let ds = rand_dataset(rng, 250, 6);
+        let k = 2 + rng.gen_index(10.min(ds.n / 4).max(1));
+        let aba = run_aba(&ds, k, &AbaConfig::default()).map_err(|e| e.to_string())?;
+        let aba_w = ClusterStats::compute(&ds, &aba, k).pairwise_total();
+        let rand = aba::baselines::random_part::random_partition(ds.n, k, rng.next_u64());
+        let rand_w = ClusterStats::compute(&ds, &rand, k).pairwise_total();
+        // Allow a hair of slack: on structureless data the two can tie.
+        prop_assert!(
+            aba_w >= rand_w * 0.999,
+            "aba {aba_w} vs random {rand_w} (n={} k={k})",
+            ds.n
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exchange_preserves_balance_and_never_decreases_objective() {
+    PropRunner::new(15).run("exchange invariants", |rng| {
+        use aba::baselines::exchange::{fast_anticlustering, ExchangeConfig};
+        let ds = rand_dataset(rng, 150, 5);
+        let k = 2 + rng.gen_index(6.min(ds.n / 3).max(1));
+        let seed = rng.next_u64();
+        let res = fast_anticlustering(&ds, k, &ExchangeConfig::random(10, seed));
+        let stats = ClusterStats::compute(&ds, &res.labels, k);
+        let (min, max) = (
+            *stats.sizes.iter().min().unwrap(),
+            *stats.sizes.iter().max().unwrap(),
+        );
+        prop_assert!(max - min <= 1, "balance: {:?}", stats.sizes);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_orders_are_permutations() {
+    use aba::algo::batching::{rearrange_categorical, rearrange_small};
+    PropRunner::new(60).run("rearrangements permute", |rng| {
+        let n = 2 + rng.gen_index(300);
+        let k = 1 + rng.gen_index(n);
+        let sorted: Vec<usize> = (0..n).collect();
+        let small = rearrange_small(&sorted, k);
+        let mut s = small.clone();
+        s.sort_unstable();
+        prop_assert!(s == sorted, "small not a permutation (n={n} k={k})");
+        let g = 1 + rng.gen_index(5);
+        let cats: Vec<u32> = (0..n).map(|_| rng.gen_below(g as u32)).collect();
+        let cat = rearrange_categorical(&sorted, &cats, k);
+        let mut c = cat.clone();
+        c.sort_unstable();
+        prop_assert!(c == sorted, "categorical not a permutation (n={n} k={k} g={g})");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kmeans_labels_dense_and_deterministic() {
+    PropRunner::new(15).run("kmeans sanity", |rng| {
+        let ds = rand_dataset(rng, 150, 4);
+        let k = 1 + rng.gen_index(6.min(ds.n));
+        let seed = rng.next_u64();
+        let a = aba::data::kmeans::kmeans(&ds, k, 20, seed);
+        let b = aba::data::kmeans::kmeans(&ds, k, 20, seed);
+        prop_assert!(a.labels == b.labels, "determinism");
+        prop_assert!(a.labels.iter().all(|&l| (l as usize) < k), "range");
+        prop_assert!(a.inertia.is_finite() && a.inertia >= 0.0, "inertia");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_graph_partition_valid_and_cut_bounded() {
+    use aba::graph::builder::random_neighbor_graph;
+    use aba::graph::metis_like::{partition, PartitionConfig};
+    PropRunner::new(10).run("metis-like validity", |rng| {
+        let ds = rand_dataset(rng, 200, 4);
+        let k = 2 + rng.gen_index(6);
+        if k > ds.n / 4 {
+            return Ok(());
+        }
+        let g = random_neighbor_graph(&ds, 8, rng.next_u64());
+        let part = partition(&g, &PartitionConfig::new(k));
+        prop_assert!(part.len() == g.n, "length");
+        prop_assert!(part.iter().all(|&p| (p as usize) < k), "range");
+        let total: u64 = g.w.iter().sum::<u64>() / 2;
+        prop_assert!(g.cut_cost(&part) <= total, "cut bounded by total weight");
+        Ok(())
+    });
+}
