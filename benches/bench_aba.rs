@@ -1,40 +1,52 @@
 //! End-to-end ABA benchmarks: runtime scaling in N, K, D; variant and
-//! hierarchical-decomposition ablations; solver ablation.
+//! hierarchical-decomposition ablations; solver ablation; and the
+//! session-reuse amortization of the `Anticlusterer` API.
 //!
 //! Regenerates the *performance* claims of the paper at reduced scale:
 //! ABA is O(N(D + log N + K^2)) flat and O(N L K^(2/L)) decomposed
 //! (§4.5); decomposition buys ~2 orders of magnitude at large K for
-//! <0.1% objective loss (Figure 7's message).
+//! <0.1% objective loss (Figure 7's message). The session-reuse section
+//! quantifies what a reused `Aba` session saves over cold per-call
+//! construction (scratch/backend reuse — the serving / pipeline /
+//! repeated-partitioning hot path).
 
-use aba::algo::{run_aba, run_hierarchical, AbaConfig, ClusterStats, Variant};
+use aba::algo::{AbaConfig, Variant};
 use aba::assignment::SolverKind;
 use aba::data::synth::{generate, SynthKind};
 use aba::util::timer::timed;
+use aba::{Aba, Anticlusterer};
 
 fn mk(n: usize, d: usize, seed: u64) -> aba::data::Dataset {
     generate(SynthKind::GaussianMixture { components: 8, spread: 3.0 }, n, d, seed, "bench")
 }
 
+/// One cold call: build a fresh session (as `run_aba` used to on every
+/// invocation), partition once, drop it.
+fn cold_partition(ds: &aba::data::Dataset, k: usize, cfg: &AbaConfig) -> (f64, f64) {
+    let (part, secs) = timed(|| {
+        Aba::from_config(cfg.clone())
+            .unwrap()
+            .partition(ds, k)
+            .unwrap()
+    });
+    (part.objective, secs)
+}
+
 fn main() {
     println!("# bench_aba — end-to-end runtime scaling");
     println!("\n## N scaling (D=16, K=50, flat)");
+    let flat = AbaConfig { auto_hier: false, ..AbaConfig::default() };
     for &n in &[10_000usize, 20_000, 40_000, 80_000] {
         let ds = mk(n, 16, 1);
-        let cfg = AbaConfig { auto_hier: false, ..AbaConfig::default() };
-        let (labels, secs) = timed(|| run_aba(&ds, 50, &cfg).unwrap());
-        let ofv = ClusterStats::compute(&ds, &labels, 50).ssd_total();
+        let (ofv, secs) = cold_partition(&ds, 50, &flat);
         println!("  n={n:>7}: {secs:>7.3}s  ofv={ofv:.1}");
     }
 
     println!("\n## K scaling (N=20000, D=16): flat vs auto-hierarchical");
     for &k in &[50usize, 100, 200, 400, 800] {
         let ds = mk(20_000, 16, 2);
-        let flat_cfg = AbaConfig { auto_hier: false, ..AbaConfig::default() };
-        let (flat_labels, flat_secs) = timed(|| run_aba(&ds, k, &flat_cfg).unwrap());
-        let auto_cfg = AbaConfig::default();
-        let (auto_labels, auto_secs) = timed(|| run_aba(&ds, k, &auto_cfg).unwrap());
-        let fo = ClusterStats::compute(&ds, &flat_labels, k).ssd_total();
-        let ao = ClusterStats::compute(&ds, &auto_labels, k).ssd_total();
+        let (fo, flat_secs) = cold_partition(&ds, k, &flat);
+        let (ao, auto_secs) = cold_partition(&ds, k, &AbaConfig::default());
         println!(
             "  k={k:>4}: flat {flat_secs:>7.3}s | auto {auto_secs:>7.3}s ({:>5.1}x) | ofv loss {:>7.4}%",
             flat_secs / auto_secs.max(1e-9),
@@ -42,13 +54,37 @@ fn main() {
         );
     }
 
+    println!("\n## session reuse (N=40000, D=16, K=50): cold per-call vs one warm session");
+    {
+        let ds = mk(40_000, 16, 6);
+        // Two cold calls, each paying session construction + scratch
+        // warm-up (the old `run_aba` free-function behaviour).
+        let (_, cold1) = cold_partition(&ds, 50, &flat);
+        let (_, cold2) = cold_partition(&ds, 50, &flat);
+        // One session, two calls: the second reuses the backend and the
+        // assignment loop's scratch buffers.
+        let mut session = Aba::from_config(flat.clone()).unwrap();
+        let (_, warm1) = timed(|| session.partition(&ds, 50).unwrap());
+        let (_, warm2) = timed(|| session.partition(&ds, 50).unwrap());
+        let cold_mean = 0.5 * (cold1 + cold2);
+        println!("  cold calls:   {cold1:>7.3}s, {cold2:>7.3}s (mean {cold_mean:.3}s)");
+        println!(
+            "  warm session: {warm1:>7.3}s, {warm2:>7.3}s (2nd call {:+.1}% vs cold mean)",
+            100.0 * (warm2 - cold_mean) / cold_mean
+        );
+        if warm2 > cold_mean {
+            // Scratch/backend reuse should never lose; flag it but keep
+            // reporting (wall-clock noise on a loaded box is possible).
+            println!("  WARN: warm call slower than cold mean — rerun on an idle machine");
+        }
+    }
+
     println!("\n## variant ablation (small anticlusters, N=8192, K=2048, i.e. size 4)");
     {
         let ds = mk(8_192, 16, 3);
         for (name, variant) in [("base", Variant::Base), ("small", Variant::Small)] {
             let cfg = AbaConfig { variant, hier: Some(vec![32, 64]), ..AbaConfig::default() };
-            let (labels, secs) = timed(|| run_aba(&ds, 2_048, &cfg).unwrap());
-            let ofv = ClusterStats::compute(&ds, &labels, 2_048).ssd_total();
+            let (ofv, secs) = cold_partition(&ds, 2_048, &cfg);
             println!("  {name:>6}: {secs:>7.3}s  ofv={ofv:.1}");
         }
     }
@@ -62,8 +98,7 @@ fn main() {
             ("greedy", SolverKind::Greedy),
         ] {
             let cfg = AbaConfig { solver, auto_hier: false, ..AbaConfig::default() };
-            let (labels, secs) = timed(|| run_aba(&ds, 100, &cfg).unwrap());
-            let ofv = ClusterStats::compute(&ds, &labels, 100).ssd_total();
+            let (ofv, secs) = cold_partition(&ds, 100, &cfg);
             println!("  {name:>8}: {secs:>7.3}s  ofv={ofv:.1}");
         }
     }
@@ -71,11 +106,10 @@ fn main() {
     println!("\n## 3-level decomposition (N=65536, D=32, K=4096, size 16)");
     {
         let ds = mk(65_536, 32, 5);
-        let cfg = AbaConfig { auto_hier: false, ..AbaConfig::default() };
         for spec in [vec![64, 64], vec![16, 16, 16], vec![4, 32, 32]] {
             let label = spec.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("x");
-            let (labels, secs) = timed(|| run_hierarchical(&ds, &spec, &cfg).unwrap());
-            let ofv = ClusterStats::compute(&ds, &labels, 4_096).ssd_total();
+            let cfg = AbaConfig { auto_hier: false, hier: Some(spec), ..AbaConfig::default() };
+            let (ofv, secs) = cold_partition(&ds, 4_096, &cfg);
             println!("  {label:>10}: {secs:>7.3}s  ofv={ofv:.1}");
         }
     }

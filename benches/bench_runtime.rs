@@ -4,23 +4,70 @@
 //! This quantifies the three-layer integration overhead on CPU (literal
 //! construction + PJRT dispatch + copy-out vs a plain loop). On a real
 //! TPU the same artifact dispatch amortizes onto the MXU; see
-//! EXPERIMENTS.md §Perf for the footprint estimates.
+//! EXPERIMENTS.md §Perf for the footprint estimates. The XLA columns
+//! need both the `xla` feature and built artifacts (`make artifacts`);
+//! otherwise the bench prints the native side only.
 
-use aba::runtime::{CostBackend, NativeBackend, XlaBackend};
 use aba::rng::Pcg32;
+#[cfg(feature = "xla")]
+use aba::runtime::XlaBackend;
+use aba::runtime::{CostBackend, NativeBackend};
 use aba::util::timer::bench;
 
-fn main() {
-    println!("# bench_runtime — cost-matrix backends");
-    let mut native = NativeBackend::default();
-    let xla = XlaBackend::from_default_dir();
-    let mut xla = match xla {
+#[cfg(feature = "xla")]
+type XlaState = Option<XlaBackend>;
+#[cfg(not(feature = "xla"))]
+type XlaState = ();
+
+#[cfg(feature = "xla")]
+fn init_xla() -> XlaState {
+    match XlaBackend::from_default_dir() {
         Ok(b) => Some(b),
         Err(e) => {
             println!("(xla backend unavailable: {e:#}; run `make artifacts`)");
             None
         }
-    };
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn init_xla() -> XlaState {
+    println!("(built without the `xla` feature; native only — rerun with --features xla)");
+}
+
+#[cfg(feature = "xla")]
+fn xla_cost_mean(xla: &mut XlaState, x: &[f32], m: usize, d: usize, c: &[f32], k: usize) -> Option<f64> {
+    xla.as_mut().map(|b| {
+        let mut out = Vec::new();
+        bench(2, 20, || b.batch_costs(x, m, d, c, k, &mut out)).mean
+    })
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_cost_mean(_: &mut XlaState, _: &[f32], _: usize, _: usize, _: &[f32], _: usize) -> Option<f64> {
+    None
+}
+
+#[cfg(feature = "xla")]
+fn xla_centroid_report(xla: &mut XlaState, x: &[f32], n: usize, d: usize, mu: &[f32], nat_mean: f64) {
+    if let Some(b) = xla.as_mut() {
+        let mut out = Vec::new();
+        let xs = bench(2, 20, || b.centroid_distances(x, n, d, mu, &mut out));
+        println!("  xla:    {:.1} µs ({:.2}x native)", xs.mean * 1e6, xs.mean / nat_mean);
+        println!(
+            "  xla telemetry: {} artifact calls, {} native fallbacks",
+            b.xla_calls, b.native_fallbacks
+        );
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_centroid_report(_: &mut XlaState, _: &[f32], _: usize, _: usize, _: &[f32], _: f64) {}
+
+fn main() {
+    println!("# bench_runtime — cost-matrix backends");
+    let mut native = NativeBackend::default();
+    let mut xla = init_xla();
 
     println!(
         "{:>16} {:>14} {:>14} {:>10}",
@@ -39,11 +86,7 @@ fn main() {
         let c: Vec<f32> = (0..k * d).map(|_| rng.f32()).collect();
         let mut out = Vec::new();
         let nat = bench(2, 20, || native.batch_costs(&x, m, d, &c, k, &mut out));
-        let xla_mean = xla.as_mut().map(|b| {
-            let mut out = Vec::new();
-            bench(2, 20, || b.batch_costs(&x, m, d, &c, k, &mut out)).mean
-        });
-        match xla_mean {
+        match xla_cost_mean(&mut xla, &x, m, d, &c, k) {
             Some(xm) => println!(
                 "{:>16} {:>14.1} {:>14.1} {:>10.2}",
                 format!("({m},{k},{d})"),
@@ -69,13 +112,5 @@ fn main() {
     let mut out = Vec::new();
     let nat = bench(2, 20, || native.centroid_distances(&x, n, d, &mu, &mut out));
     println!("  native: {:.1} µs", nat.mean * 1e6);
-    if let Some(b) = xla.as_mut() {
-        let mut out = Vec::new();
-        let xs = bench(2, 20, || b.centroid_distances(&x, n, d, &mu, &mut out));
-        println!("  xla:    {:.1} µs ({:.2}x native)", xs.mean * 1e6, xs.mean / nat.mean);
-        println!(
-            "  xla telemetry: {} artifact calls, {} native fallbacks",
-            b.xla_calls, b.native_fallbacks
-        );
-    }
+    xla_centroid_report(&mut xla, &x, n, d, &mu, nat.mean);
 }

@@ -10,10 +10,11 @@
 //! feature distribution as the full dataset. ABA with categories gives
 //! both; plain stratified random folds only give (a).
 
-use aba::algo::{run_aba, AbaConfig, ClusterStats};
+use aba::algo::ClusterStats;
 use aba::baselines::random_part::random_partition_categorical;
 use aba::data::kmeans::kmeans;
 use aba::data::synth::{generate, SynthKind};
+use aba::{Aba, Anticlusterer};
 
 fn main() -> anyhow::Result<()> {
     // A classification-like dataset: 12,000 points, 12 features, with a
@@ -31,8 +32,9 @@ fn main() -> anyhow::Result<()> {
 
     println!("stratified {folds}-fold construction on n={}, 5 classes\n", ds.n);
 
+    let aba_folds = Aba::builder().build()?.partition(&ds, folds)?.labels;
     for (name, labels) in [
-        ("ABA folds ", run_aba(&ds, folds, &AbaConfig::default())?),
+        ("ABA folds ", aba_folds),
         ("Rand folds", random_partition_categorical(&classes, folds, 9)),
     ] {
         let stats = ClusterStats::compute(&ds, &labels, folds);

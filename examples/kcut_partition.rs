@@ -10,11 +10,12 @@
 //! so ABA — which never materializes the graph — competes directly with
 //! a graph partitioner that needs an explicit sparse adjacency input.
 
-use aba::algo::{run_aba, AbaConfig, ClusterStats};
+use aba::algo::ClusterStats;
 use aba::data::synth::{load, Scale};
 use aba::graph::builder::random_neighbor_graph;
 use aba::graph::metis_like::{min_max_ratio, partition, PartitionConfig};
 use aba::util::timer::Timer;
+use aba::{Aba, Anticlusterer};
 
 fn main() -> anyhow::Result<()> {
     let ds = load("electric", Scale::Small)?;
@@ -22,10 +23,12 @@ fn main() -> anyhow::Result<()> {
     println!("balanced {k}-cut on {} (n={}, d={})\n", ds.name, ds.n, ds.d);
 
     // --- ABA: straight from the feature matrix -------------------------
-    let t = Timer::start();
-    let aba_labels = run_aba(&ds, k, &AbaConfig::default())?;
-    let aba_secs = t.secs();
-    let aba_stats = ClusterStats::compute(&ds, &aba_labels, k);
+    let aba_part = Aba::builder().build()?.partition(&ds, k)?;
+    // Algorithm-only time, so the comparison with the METIS timer below
+    // (which also excludes stats computation) is apples to apples.
+    let aba_secs = aba_part.timings.algo_secs();
+    let aba_labels = &aba_part.labels;
+    let aba_stats = &aba_part.stats;
 
     // --- METIS-like: needs the sparse graph input first ----------------
     let t = Timer::start();

@@ -4,15 +4,14 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Generates a tabular dataset, runs ABA with default settings (LAPJV
-//! solver, native cost backend, automatic hierarchical decomposition),
-//! and compares the result against random partitioning on the objective
-//! and diversity-balance metrics the paper reports.
+//! Generates a tabular dataset, builds a reusable `Aba` session with the
+//! builder API (LAPJV solver, native cost backend, automatic hierarchical
+//! decomposition), and compares the rich `Partition` result against the
+//! `RandomPartition` baseline through the same `Anticlusterer` trait.
 
-use aba::algo::{run_aba, AbaConfig, ClusterStats};
-use aba::baselines::random_part::random_partition;
+use aba::baselines::RandomPartition;
 use aba::data::synth::{generate, SynthKind};
-use aba::util::timer::timed;
+use aba::{Aba, Anticlusterer};
 
 fn main() -> anyhow::Result<()> {
     // 20,000 objects with latent cluster structure, 16 features.
@@ -26,28 +25,43 @@ fn main() -> anyhow::Result<()> {
     let k = 50;
     println!("dataset: n={}, d={}, k={k}", ds.n, ds.d);
 
-    // --- ABA -----------------------------------------------------------
-    let (labels, secs) = timed(|| run_aba(&ds, k, &AbaConfig::default()));
-    let labels = labels?;
-    let stats = ClusterStats::compute(&ds, &labels, k);
-    println!("\nABA                ({secs:.3} s)");
-    println!("  objective (ssd to centroids): {:.2}", stats.ssd_total());
-    println!("  diversity sd / range:         {:.4} / {:.4}", stats.diversity_sd(), stats.diversity_range());
-    println!(
-        "  anticluster sizes:            {}..{}",
-        stats.sizes.iter().min().unwrap(),
-        stats.sizes.iter().max().unwrap()
-    );
+    // Both algorithms behind one trait: swap freely.
+    let mut solvers: Vec<Box<dyn Anticlusterer>> = vec![
+        Box::new(Aba::builder().build()?),
+        Box::new(RandomPartition::new(1)),
+    ];
+    let mut objectives = Vec::new();
+    let mut sds = Vec::new();
+    for solver in solvers.iter_mut() {
+        let part = solver.partition(&ds, k)?;
+        println!("\n{:<18} ({:.3} s)", solver.name(), part.timings.total_secs);
+        println!("  objective (ssd to centroids): {:.2}", part.objective);
+        println!(
+            "  diversity sd / range:         {:.4} / {:.4}",
+            part.stats.diversity_sd(),
+            part.stats.diversity_range()
+        );
+        println!(
+            "  anticluster sizes:            {}..{}",
+            part.sizes().iter().min().unwrap(),
+            part.sizes().iter().max().unwrap()
+        );
+        objectives.push(part.objective);
+        sds.push(part.stats.diversity_sd());
+    }
 
-    // --- Random baseline -------------------------------------------------
-    let (rand_labels, rsecs) = timed(|| random_partition(ds.n, k, 1));
-    let rstats = ClusterStats::compute(&ds, &rand_labels, k);
-    println!("\nRandom             ({rsecs:.3} s)");
-    println!("  objective (ssd to centroids): {:.2}", rstats.ssd_total());
-    println!("  diversity sd / range:         {:.4} / {:.4}", rstats.diversity_sd(), rstats.diversity_range());
-
-    let gain = 100.0 * (stats.ssd_total() - rstats.ssd_total()) / rstats.ssd_total();
-    let balance = rstats.diversity_sd() / stats.diversity_sd().max(1e-12);
+    let gain = 100.0 * (objectives[0] - objectives[1]) / objectives[1];
+    let balance = sds[1] / sds[0].max(1e-12);
     println!("\nABA vs random: objective +{gain:.3}%, diversity balance {balance:.0}x tighter");
+
+    // Sessions amortize: reuse the same ABA session for repeated calls
+    // (K-fold CV sweeps, per-epoch batching, serving).
+    let mut session = Aba::builder().build()?;
+    print!("\nreused session across K sweeps:");
+    for k in [10, 25, 50, 100] {
+        let part = session.partition(&ds, k)?;
+        print!("  K={k}: {:.3}s", part.timings.total_secs);
+    }
+    println!();
     Ok(())
 }

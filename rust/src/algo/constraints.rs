@@ -16,10 +16,10 @@
 //!   containing a conflicting object gets a large negative cost.
 
 use super::batching;
-use crate::assignment::Lapjv;
+use crate::assignment::{self, Lapjv, SolverKind};
 use crate::data::Dataset;
-use crate::runtime::make_backend;
-use anyhow::{bail, Result};
+use crate::error::{AbaError, AbaResult};
+use crate::runtime::{make_backend, CostBackend};
 
 /// Pairwise constraints over object indices.
 #[derive(Clone, Debug, Default)]
@@ -34,15 +34,34 @@ const MASK_COST: f32 = -1e30;
 
 /// Run ABA under pairwise constraints. Returns a label per (original)
 /// object.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a session instead: `Aba::builder().constraints(cons).build()?.partition(ds, k)`"
+)]
 pub fn run_aba_constrained(
     ds: &Dataset,
     k: usize,
     cfg: &super::AbaConfig,
     cons: &Constraints,
-) -> Result<Vec<u32>> {
-    if k == 0 || k > ds.n {
-        bail!("invalid k={k} for n={}", ds.n);
-    }
+) -> AbaResult<Vec<u32>> {
+    let mut backend = make_backend(cfg.backend)?;
+    constrained_with_backend(ds, k, cfg, cons, backend.as_mut())
+}
+
+/// The constrained Algorithm-1 loop against a caller-supplied backend
+/// (the [`crate::solver::Aba`] session path). Honors `cfg.solver`,
+/// `cfg.backend` (via the supplied backend), and
+/// `cfg.strict_divisibility`; the variant / hierarchy settings do not
+/// apply to the constrained loop, which has its own super-object
+/// ordering. Validates exactly once (callers do not pre-validate).
+pub fn constrained_with_backend(
+    ds: &Dataset,
+    k: usize,
+    cfg: &super::AbaConfig,
+    cons: &Constraints,
+    backend: &mut dyn CostBackend,
+) -> AbaResult<Vec<u32>> {
+    super::validate(ds, k, cfg.strict_divisibility)?;
     // --- Union-find over must-link groups -------------------------------
     let mut parent: Vec<usize> = (0..ds.n).collect();
     fn find(parent: &mut Vec<usize>, mut x: usize) -> usize {
@@ -55,7 +74,10 @@ pub fn run_aba_constrained(
     for group in &cons.must_link {
         for &i in group {
             if i >= ds.n {
-                bail!("must-link index {i} out of range");
+                return Err(AbaError::InvalidInput(format!(
+                    "must-link index {i} out of range (n={})",
+                    ds.n
+                )));
             }
         }
         for w in group.windows(2) {
@@ -79,7 +101,9 @@ pub fn run_aba_constrained(
     }
     let ns = supers.len();
     if ns < k {
-        bail!("must-link contraction leaves {ns} groups < k={k}");
+        return Err(AbaError::ConstraintInfeasible(format!(
+            "must-link contraction leaves {ns} groups < k={k}"
+        )));
     }
     let max_group = supers.iter().map(|g| g.len()).max().unwrap_or(1);
 
@@ -87,11 +111,16 @@ pub fn run_aba_constrained(
     let mut conflicts: Vec<(usize, usize)> = Vec::new();
     for &(a, b) in &cons.cannot_link {
         if a >= ds.n || b >= ds.n {
-            bail!("cannot-link index out of range: ({a},{b})");
+            return Err(AbaError::InvalidInput(format!(
+                "cannot-link index out of range: ({a},{b}) for n={}",
+                ds.n
+            )));
         }
         let (sa, sb) = (super_of[a], super_of[b]);
         if sa == sb {
-            bail!("objects {a} and {b} are must-linked but also cannot-linked");
+            return Err(AbaError::ConstraintInfeasible(format!(
+                "objects {a} and {b} are must-linked but also cannot-linked"
+            )));
         }
         conflicts.push((sa.min(sb), sa.max(sb)));
     }
@@ -114,7 +143,8 @@ pub fn run_aba_constrained(
             *v /= wl;
         }
     }
-    let sds = Dataset::from_flat(format!("{}::super", ds.name), ns, d, sx)?;
+    let sds = Dataset::from_flat(format!("{}::super", ds.name), ns, d, sx)
+        .map_err(|e| AbaError::InvalidInput(format!("building super-object dataset: {e}")))?;
 
     // Conflict adjacency for masking.
     let mut conflict_adj: Vec<Vec<usize>> = vec![Vec::new(); ns];
@@ -124,8 +154,7 @@ pub fn run_aba_constrained(
     }
 
     // --- Modified Algorithm-1 loop over super-objects --------------------
-    let mut backend = make_backend(cfg.backend)?;
-    let order = batching::sorted_by_centroid_distance(&sds, backend.as_mut());
+    let order = batching::sorted_by_centroid_distance(&sds, backend);
     let mut labels_s = vec![u32::MAX; ns];
     let mut centroids = vec![0f64; k * d];
     let mut counts = vec![0usize; k]; // super-object counts (centroid counter)
@@ -178,7 +207,10 @@ pub fn run_aba_constrained(
                 }
             }
         }
-        let assign = lapjv.solve(&cost, m, k, true);
+        let assign = match cfg.solver {
+            SolverKind::Lapjv => lapjv.solve(&cost, m, k, true),
+            other => assignment::solve_max(other, &cost, m, k),
+        };
         for (j, &s) in batch.iter().enumerate() {
             let kk = assign[j];
             labels_s[s] = kk as u32;
@@ -202,7 +234,9 @@ pub fn run_aba_constrained(
     // construction). Unsatisfiable instances surface here.
     for &(a, b) in &cons.cannot_link {
         if labels[a] == labels[b] {
-            bail!("cannot-link ({a},{b}) unsatisfiable under k={k} (max group {max_group})");
+            return Err(AbaError::ConstraintInfeasible(format!(
+                "cannot-link ({a},{b}) unsatisfiable under k={k} (max group {max_group})"
+            )));
         }
     }
     Ok(labels)
@@ -211,20 +245,40 @@ pub fn run_aba_constrained(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algo::{AbaConfig, ClusterStats};
+    use crate::algo::ClusterStats;
     use crate::data::synth::{generate, SynthKind};
+    use crate::solver::{Aba, Anticlusterer};
 
     fn ds100() -> Dataset {
         generate(SynthKind::Uniform, 100, 4, 61, "cons")
     }
 
+    /// Session-API entry used by all constraint tests.
+    fn constrained(ds: &Dataset, k: usize, cons: &Constraints) -> AbaResult<Vec<u32>> {
+        let mut session = Aba::builder().constraints(cons.clone()).build()?;
+        Ok(session.partition(ds, k)?.labels)
+    }
+
     #[test]
     fn unconstrained_matches_plain_balance() {
         let ds = ds100();
-        let labels =
-            run_aba_constrained(&ds, 5, &AbaConfig::default(), &Constraints::default()).unwrap();
+        let labels = constrained(&ds, 5, &Constraints::default()).unwrap();
         let stats = ClusterStats::compute(&ds, &labels, 5);
         assert!(stats.sizes.iter().all(|&s| s == 20), "{:?}", stats.sizes);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shim_matches_session_path() {
+        let ds = ds100();
+        let cons = Constraints {
+            must_link: vec![vec![1, 2]],
+            cannot_link: vec![(3, 4)],
+        };
+        let shim =
+            run_aba_constrained(&ds, 4, &crate::algo::AbaConfig::default(), &cons).unwrap();
+        let session = constrained(&ds, 4, &cons).unwrap();
+        assert_eq!(shim, session);
     }
 
     #[test]
@@ -234,7 +288,7 @@ mod tests {
             must_link: vec![vec![0, 1, 2], vec![10, 50], vec![3, 4]],
             cannot_link: vec![],
         };
-        let labels = run_aba_constrained(&ds, 4, &AbaConfig::default(), &cons).unwrap();
+        let labels = constrained(&ds, 4, &cons).unwrap();
         assert_eq!(labels[0], labels[1]);
         assert_eq!(labels[1], labels[2]);
         assert_eq!(labels[10], labels[50]);
@@ -255,7 +309,7 @@ mod tests {
             must_link: vec![vec![0, 1], vec![1, 2], vec![2, 3]],
             cannot_link: vec![],
         };
-        let labels = run_aba_constrained(&ds, 5, &AbaConfig::default(), &cons).unwrap();
+        let labels = constrained(&ds, 5, &cons).unwrap();
         assert!(labels[0] == labels[1] && labels[1] == labels[2] && labels[2] == labels[3]);
     }
 
@@ -266,7 +320,7 @@ mod tests {
             must_link: vec![],
             cannot_link: vec![(0, 1), (2, 3), (4, 5), (0, 99)],
         };
-        let labels = run_aba_constrained(&ds, 3, &AbaConfig::default(), &cons).unwrap();
+        let labels = constrained(&ds, 3, &cons).unwrap();
         for &(a, b) in &cons.cannot_link {
             assert_ne!(labels[a], labels[b], "({a},{b})");
         }
@@ -285,7 +339,7 @@ mod tests {
             must_link: vec![vec![0, 1], vec![2, 3]],
             cannot_link: vec![(0, 2), (1, 50)],
         };
-        let labels = run_aba_constrained(&ds, 4, &AbaConfig::default(), &cons).unwrap();
+        let labels = constrained(&ds, 4, &cons).unwrap();
         assert_eq!(labels[0], labels[1]);
         assert_eq!(labels[2], labels[3]);
         assert_ne!(labels[0], labels[2]);
@@ -299,7 +353,8 @@ mod tests {
             must_link: vec![vec![0, 1]],
             cannot_link: vec![(0, 1)],
         };
-        assert!(run_aba_constrained(&ds, 4, &AbaConfig::default(), &cons).is_err());
+        let err = constrained(&ds, 4, &cons).unwrap_err();
+        assert!(matches!(err, AbaError::ConstraintInfeasible(_)), "{err}");
     }
 
     #[test]
@@ -310,16 +365,17 @@ mod tests {
             cannot_link: vec![],
         };
         // 2 super-objects < k = 3.
-        assert!(run_aba_constrained(&ds, 3, &AbaConfig::default(), &cons).is_err());
+        let err = constrained(&ds, 3, &cons).unwrap_err();
+        assert!(matches!(err, AbaError::ConstraintInfeasible(_)), "{err}");
     }
 
     #[test]
     fn out_of_range_indices_rejected() {
         let ds = ds100();
         let bad_ml = Constraints { must_link: vec![vec![0, 200]], cannot_link: vec![] };
-        assert!(run_aba_constrained(&ds, 3, &AbaConfig::default(), &bad_ml).is_err());
+        assert!(constrained(&ds, 3, &bad_ml).is_err());
         let bad_cl = Constraints { must_link: vec![], cannot_link: vec![(0, 200)] };
-        assert!(run_aba_constrained(&ds, 3, &AbaConfig::default(), &bad_cl).is_err());
+        assert!(constrained(&ds, 3, &bad_cl).is_err());
     }
 
     #[test]
@@ -332,12 +388,12 @@ mod tests {
             "q",
         );
         let k = 10;
-        let plain = crate::algo::run_aba(&ds, k, &AbaConfig::default()).unwrap();
+        let plain = Aba::new().unwrap().partition(&ds, k).unwrap().labels;
         let cons = Constraints {
             must_link: vec![vec![0, 10]],
             cannot_link: vec![(5, 6)],
         };
-        let constrained = run_aba_constrained(&ds, k, &AbaConfig::default(), &cons).unwrap();
+        let constrained = constrained(&ds, k, &cons).unwrap();
         let po = ClusterStats::compute(&ds, &plain, k).ssd_total();
         let co = ClusterStats::compute(&ds, &constrained, k).ssd_total();
         assert!(co >= 0.95 * po, "plain {po} vs constrained {co}");

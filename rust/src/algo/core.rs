@@ -14,54 +14,103 @@
 //! entries to a large negative value before the solve.
 
 use super::batching::batch_ranges;
-use crate::assignment::{self, SolverKind};
+use crate::assignment::{self, Lapjv, SolverKind};
 use crate::data::Dataset;
+use crate::error::{AbaError, AbaResult};
 use crate::runtime::CostBackend;
-use anyhow::{bail, Result};
 
 /// Mask value for forbidden (anticluster, category) assignments. Large
 /// and negative so a max-cost solver avoids it whenever the instance is
 /// feasible, yet far from f32 infinity to keep dual arithmetic finite.
 const MASK_COST: f32 = -1e30;
 
-/// Run Algorithm 1 over the given processing order. `order` must be a
-/// permutation of `0..ds.n`.
+/// Reusable buffers for the assignment loop. An [`crate::solver::Aba`]
+/// session owns one of these so repeated `partition` calls perform no
+/// large allocations after the first call; `run_with_order` creates a
+/// throwaway one for one-shot use.
+#[derive(Default)]
+pub struct Scratch {
+    /// f64 anticluster centroids (`k * d`).
+    centroids: Vec<f64>,
+    /// Objects per anticluster.
+    counts: Vec<usize>,
+    /// f32 mirror of `centroids` handed to the backend.
+    centroids_f32: Vec<f32>,
+    /// Gathered batch rows (`m * d`).
+    xb: Vec<f32>,
+    /// Per-batch cost matrix.
+    cost: Vec<f32>,
+    /// Per-(anticluster, category) counters for the §4.3 variant.
+    cat_counts: Vec<usize>,
+    /// The LAP solver (owns its own scratch).
+    lapjv: Lapjv,
+}
+
+/// Run Algorithm 1 over the given processing order with throwaway
+/// scratch. `order` must be a permutation of `0..ds.n`.
 pub fn run_with_order(
     ds: &Dataset,
     k: usize,
     order: &[usize],
     solver: SolverKind,
     backend: &mut dyn CostBackend,
-) -> Result<Vec<u32>> {
+) -> AbaResult<Vec<u32>> {
+    run_with_order_scratch(ds, k, order, solver, backend, &mut Scratch::default())
+}
+
+/// Run Algorithm 1 over the given processing order, reusing the caller's
+/// [`Scratch`] across calls (the session hot path).
+pub fn run_with_order_scratch(
+    ds: &Dataset,
+    k: usize,
+    order: &[usize],
+    solver: SolverKind,
+    backend: &mut dyn CostBackend,
+    scratch: &mut Scratch,
+) -> AbaResult<Vec<u32>> {
     if order.len() != ds.n {
-        bail!("order length {} != n {}", order.len(), ds.n);
+        return Err(AbaError::InvalidOrder { expected: ds.n, got: order.len() });
     }
     if k == 0 || k > ds.n {
-        bail!("invalid k={k} for n={}", ds.n);
+        return Err(AbaError::InvalidK {
+            k,
+            n: ds.n,
+            reason: "k must be in 1..=n".into(),
+        });
     }
     let d = ds.d;
     let mut labels = vec![u32::MAX; ds.n];
 
     // Anticluster state: f64 centroids (for exact incremental updates),
-    // object counts, and the f32 mirror handed to the backend.
-    let mut centroids = vec![0f64; k * d];
-    let mut counts = vec![0usize; k];
-    let mut centroids_f32 = vec![0f32; k * d];
+    // object counts, and the f32 mirror handed to the backend. All live
+    // in the scratch; clear+resize zeroes them without reallocating once
+    // capacity exists.
+    scratch.centroids.clear();
+    scratch.centroids.resize(k * d, 0.0);
+    scratch.counts.clear();
+    scratch.counts.resize(k, 0);
+    scratch.centroids_f32.clear();
+    scratch.centroids_f32.resize(k * d, 0.0);
+    let centroids = &mut scratch.centroids;
+    let counts = &mut scratch.counts;
+    let centroids_f32 = &mut scratch.centroids_f32;
 
     // Categorical state (§4.3): cap and per-(cluster, category) counters.
-    let cat_state = ds.categories.as_ref().map(|cats| {
-        let g = ds.n_categories();
-        let mut totals = vec![0usize; g];
-        for &c in cats.iter() {
-            totals[c as usize] += 1;
+    let (caps, g) = match ds.categories.as_ref() {
+        Some(cats) => {
+            let g = ds.n_categories();
+            let mut totals = vec![0usize; g];
+            for &c in cats.iter() {
+                totals[c as usize] += 1;
+            }
+            let caps: Vec<usize> = totals.iter().map(|&t| t.div_ceil(k)).collect();
+            (caps, g)
         }
-        let caps: Vec<usize> = totals.iter().map(|&t| t.div_ceil(k)).collect();
-        (caps, vec![0usize; k * g], g)
-    });
-    let (caps, mut cat_counts, g) = match cat_state {
-        Some((c, cc, g)) => (c, cc, g),
-        None => (Vec::new(), Vec::new(), 0),
+        None => (Vec::new(), 0),
     };
+    scratch.cat_counts.clear();
+    scratch.cat_counts.resize(k * g, 0);
+    let cat_counts = &mut scratch.cat_counts;
 
     // --- First batch: one object per anticluster -----------------------
     let batches = batch_ranges(ds.n, k);
@@ -78,11 +127,14 @@ pub fn run_with_order(
         }
     }
 
-    // Scratch buffers reused across batches (zero allocation per batch
-    // after warm-up — see EXPERIMENTS.md §Perf).
-    let mut xb = vec![0f32; k * d];
-    let mut cost: Vec<f32> = Vec::with_capacity(k * k);
-    let mut lapjv = crate::assignment::Lapjv::new();
+    // Per-batch buffers reused across batches and, via `scratch`, across
+    // whole runs (zero allocation per batch after warm-up — see
+    // EXPERIMENTS.md §Perf).
+    let xb = &mut scratch.xb;
+    xb.clear();
+    xb.resize(k * d, 0.0);
+    let cost = &mut scratch.cost;
+    let lapjv = &mut scratch.lapjv;
     // Profiling finding (EXPERIMENTS.md §Perf): the JV column/row-
     // reduction warm start speeds up *random* cost matrices ~1.7x, but
     // ABA's structured matrices (all entries = distances to centroids
@@ -105,7 +157,7 @@ pub fn run_with_order(
             *dst = src as f32;
         }
         // Cost matrix through the backend (Pallas/XLA artifact or native).
-        backend.batch_costs(&xb, m, d, &centroids_f32, k, &mut cost);
+        backend.batch_costs(&xb[..], m, d, &centroids_f32[..], k, cost);
 
         // Categorical upper-bound masking (§4.3).
         if g > 0 {
@@ -122,8 +174,8 @@ pub fn run_with_order(
 
         // Max-cost assignment.
         let assign = match solver {
-            SolverKind::Lapjv => lapjv.solve(&cost, m, k, true),
-            other => assignment::solve_max(other, &cost, m, k),
+            SolverKind::Lapjv => lapjv.solve(&cost[..], m, k, true),
+            other => assignment::solve_max(other, &cost[..], m, k),
         };
 
         // Apply assignments + incremental centroid updates.
@@ -249,7 +301,26 @@ mod tests {
         let ds = generate(SynthKind::Uniform, 10, 2, 1, "u");
         let mut be = NativeBackend::default();
         let short = vec![0usize, 1, 2];
-        assert!(run_with_order(&ds, 2, &short, SolverKind::Lapjv, &mut be).is_err());
+        let err = run_with_order(&ds, 2, &short, SolverKind::Lapjv, &mut be).unwrap_err();
+        assert_eq!(err, crate::error::AbaError::InvalidOrder { expected: 10, got: 3 });
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_scratch_across_shapes() {
+        // Reusing one Scratch across different (n, k, categorical) runs
+        // must be invisible in the results — buffers are fully re-zeroed.
+        let mut be = NativeBackend::default();
+        let mut scratch = Scratch::default();
+        for &(n, k, seed) in &[(100usize, 7usize, 5u64), (60, 10, 6), (100, 7, 5)] {
+            let ds = generate(SynthKind::Uniform, n, 3, seed, "u");
+            let order =
+                crate::algo::batching::build_order(&ds, k, crate::algo::Variant::Base, &mut be);
+            let reused =
+                run_with_order_scratch(&ds, k, &order, SolverKind::Lapjv, &mut be, &mut scratch)
+                    .unwrap();
+            let fresh = run_with_order(&ds, k, &order, SolverKind::Lapjv, &mut be).unwrap();
+            assert_eq!(reused, fresh, "n={n} k={k}");
+        }
     }
 
     #[test]

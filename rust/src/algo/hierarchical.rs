@@ -14,10 +14,10 @@
 //! fan out over `std::thread::scope` (each worker gets its own native
 //! backend).
 
-use super::{run_aba_with_backend, AbaConfig};
+use super::{core, AbaConfig};
 use crate::data::Dataset;
-use crate::runtime::{make_backend, BackendKind, NativeBackend};
-use anyhow::{bail, Result};
+use crate::error::{AbaError, AbaResult};
+use crate::runtime::{make_backend, CostBackend, NativeBackend};
 
 /// Derive a balanced decomposition for (n, k), mirroring the paper's
 /// Table 5/7 policy: single level for small K; otherwise the fewest
@@ -70,32 +70,51 @@ pub fn balanced_factorization(k: usize, l: usize) -> Option<Vec<usize>> {
 
 /// Run ABA with an explicit multi-level decomposition. The final number
 /// of anticlusters is `prod(spec)`; labels are in `0..prod(spec)`.
-pub fn run_hierarchical(ds: &Dataset, spec: &[usize], cfg: &AbaConfig) -> Result<Vec<u32>> {
+/// Builds one backend for the whole run; sessions that already own a
+/// backend use [`run_hierarchical_with_backend`] instead.
+pub fn run_hierarchical(ds: &Dataset, spec: &[usize], cfg: &AbaConfig) -> AbaResult<Vec<u32>> {
+    let mut backend = make_backend(cfg.backend)?;
+    run_hierarchical_with_backend(ds, spec, cfg, backend.as_mut())
+}
+
+/// As [`run_hierarchical`] against a caller-supplied backend. All
+/// *serial* subproblems share `backend` (and one scratch), so an XLA
+/// backend compiles its executables once for the whole decomposition.
+/// With `cfg.parallel`, workers use their own native backends as
+/// before (PJRT clients are not shared across threads).
+pub fn run_hierarchical_with_backend(
+    ds: &Dataset,
+    spec: &[usize],
+    cfg: &AbaConfig,
+    backend: &mut dyn CostBackend,
+) -> AbaResult<Vec<u32>> {
     if spec.is_empty() {
-        bail!("empty hierarchy spec");
+        return Err(AbaError::BadHierSpec("empty hierarchy spec".into()));
     }
     let k_total: usize = spec.iter().product();
     if k_total == 0 || k_total > ds.n {
-        bail!("hierarchy product {k_total} invalid for n={}", ds.n);
+        return Err(AbaError::BadHierSpec(format!(
+            "product {k_total} of {spec:?} is invalid for n={}",
+            ds.n
+        )));
     }
     // Flat config for the per-group subproblems (no recursion).
     let flat_cfg = AbaConfig { hier: None, auto_hier: false, ..cfg.clone() };
+    // Scratch shared by all serial subproblems.
+    let mut scratch = core::Scratch::default();
 
     // Current groups of object indices; starts with everything.
     let mut groups: Vec<Vec<usize>> = vec![(0..ds.n).collect()];
     for (level, &kl) in spec.iter().enumerate() {
-        let split_one = |group: &Vec<usize>| -> Result<Vec<Vec<usize>>> {
+        let split_one = |group: &Vec<usize>,
+                         be: &mut dyn CostBackend,
+                         sc: &mut core::Scratch|
+         -> AbaResult<Vec<Vec<usize>>> {
             if kl == 1 {
                 return Ok(vec![group.clone()]);
             }
             let sub = ds.subset(group, format!("{}::l{}", ds.name, level));
-            let mut backend: Box<dyn crate::runtime::CostBackend> =
-                if cfg.backend == BackendKind::Native || cfg.parallel {
-                    Box::new(NativeBackend::default())
-                } else {
-                    make_backend(cfg.backend)?
-                };
-            let labels = run_aba_with_backend(&sub, kl, &flat_cfg, backend.as_mut())?;
+            let (labels, _, _) = super::flat_with_scratch(&sub, kl, &flat_cfg, be, sc)?;
             let mut parts: Vec<Vec<usize>> = vec![Vec::new(); kl];
             for (local, &global) in group.iter().enumerate() {
                 parts[labels[local] as usize].push(global);
@@ -109,17 +128,21 @@ pub fn run_hierarchical(ds: &Dataset, spec: &[usize], cfg: &AbaConfig) -> Result
                 .unwrap_or(1)
                 .min(groups.len());
             let next_idx = std::sync::atomic::AtomicUsize::new(0);
-            let slots: Vec<std::sync::Mutex<Option<Result<Vec<Vec<usize>>>>>> =
+            let slots: Vec<std::sync::Mutex<Option<AbaResult<Vec<Vec<usize>>>>>> =
                 groups.iter().map(|_| std::sync::Mutex::new(None)).collect();
             std::thread::scope(|scope| {
                 for _ in 0..workers {
-                    scope.spawn(|| loop {
-                        let i = next_idx.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        if i >= groups.len() {
-                            break;
+                    scope.spawn(|| {
+                        let mut be = NativeBackend::default();
+                        let mut sc = core::Scratch::default();
+                        loop {
+                            let i = next_idx.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            if i >= groups.len() {
+                                break;
+                            }
+                            let res = split_one(&groups[i], &mut be, &mut sc);
+                            *slots[i].lock().unwrap() = Some(res);
                         }
-                        let res = split_one(&groups[i]);
-                        *slots[i].lock().unwrap() = Some(res);
                     });
                 }
             });
@@ -131,7 +154,7 @@ pub fn run_hierarchical(ds: &Dataset, spec: &[usize], cfg: &AbaConfig) -> Result
         } else {
             let mut out = Vec::with_capacity(groups.len());
             for g in &groups {
-                out.push(split_one(g)?);
+                out.push(split_one(g, backend, &mut scratch)?);
             }
             out
         };
@@ -204,8 +227,9 @@ mod tests {
             31,
             "g",
         );
+        use crate::solver::{Aba, Anticlusterer};
         let cfg = AbaConfig { auto_hier: false, ..AbaConfig::default() };
-        let flat = crate::algo::run_aba(&ds, 24, &cfg).unwrap();
+        let flat = Aba::from_config(cfg.clone()).unwrap().partition(&ds, 24).unwrap().labels;
         let hier = run_hierarchical(&ds, &[4, 6], &cfg).unwrap();
         let of = ClusterStats::compute(&ds, &flat, 24).ssd_total();
         let oh = ClusterStats::compute(&ds, &hier, 24).ssd_total();

@@ -3,11 +3,16 @@
 //! * [`batching`] — sorted-list construction and the §4.1/§4.2/§4.3 batch
 //!   orderings (Figures 1–3).
 //! * [`core`] — the assignment loop of Algorithm 1 (shared by all
-//!   variants), including categorical cost masking.
+//!   variants), including categorical cost masking and the reusable
+//!   [`core::Scratch`] owned by [`crate::solver::Aba`] sessions.
 //! * [`hierarchical`] — the §4.4 decomposition with Proposition-1 size
 //!   guarantees and threaded subproblem fan-out.
 //! * [`objective`] — Fact-1 objectives and the diversity-balance metrics
 //!   the evaluation tables report.
+//!
+//! The preferred entry point is a [`crate::solver::Aba`] session built
+//! with `Aba::builder()`; the free functions [`run_aba`] and
+//! [`run_aba_constrained`] remain as deprecated shims for one release.
 
 pub mod batching;
 pub mod constraints;
@@ -16,14 +21,16 @@ pub mod hierarchical;
 pub mod objective;
 
 pub use self::core::run_with_order;
-pub use constraints::{run_aba_constrained, Constraints};
+pub use constraints::Constraints;
+#[allow(deprecated)]
+pub use constraints::run_aba_constrained;
 pub use hierarchical::{auto_spec, run_hierarchical};
 pub use objective::ClusterStats;
 
 use crate::assignment::SolverKind;
 use crate::data::Dataset;
-use crate::runtime::{make_backend, BackendKind, CostBackend};
-use anyhow::{bail, Result};
+use crate::error::{AbaError, AbaResult};
+use crate::runtime::{BackendKind, CostBackend};
 
 /// Batch-ordering variant (paper §4.1–§4.3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -36,19 +43,56 @@ pub enum Variant {
     Auto,
 }
 
-impl std::str::FromStr for Variant {
-    type Err = anyhow::Error;
-    fn from_str(s: &str) -> Result<Self> {
-        match s {
-            "base" => Ok(Variant::Base),
-            "small" => Ok(Variant::Small),
-            "auto" => Ok(Variant::Auto),
-            _ => bail!("unknown variant '{s}' (base|small|auto)"),
+impl Variant {
+    /// Every variant, in display order. The single source of truth for
+    /// accepted CLI values: `Display`, `FromStr`, and help text all
+    /// derive from this list.
+    pub const ALL: [Variant; 3] = [Variant::Base, Variant::Small, Variant::Auto];
+
+    /// The canonical (CLI) spelling.
+    pub const fn as_str(self) -> &'static str {
+        match self {
+            Variant::Base => "base",
+            Variant::Small => "small",
+            Variant::Auto => "auto",
         }
+    }
+
+    /// Accepted spellings joined with `|`, for help and error messages.
+    pub fn accepted() -> String {
+        Self::ALL
+            .iter()
+            .map(|v| v.as_str())
+            .collect::<Vec<_>>()
+            .join("|")
     }
 }
 
-/// Configuration for an ABA run.
+impl std::fmt::Display for Variant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Variant {
+    type Err = AbaError;
+    fn from_str(s: &str) -> AbaResult<Self> {
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|v| v.as_str() == s)
+            .ok_or_else(|| {
+                AbaError::InvalidInput(format!(
+                    "unknown variant '{s}' (accepted: {})",
+                    Variant::accepted()
+                ))
+            })
+    }
+}
+
+/// Configuration for an ABA run. Prefer building a
+/// [`crate::solver::Aba`] session via `Aba::builder()`, which owns this
+/// plus a backend and scratch.
 #[derive(Clone, Debug)]
 pub struct AbaConfig {
     pub variant: Variant,
@@ -62,6 +106,9 @@ pub struct AbaConfig {
     pub auto_hier: bool,
     /// Fan subproblems out over threads at each hierarchy level.
     pub parallel: bool,
+    /// Reject (instead of warn about) `n % k != 0`, where anticluster
+    /// sizes must differ by one.
+    pub strict_divisibility: bool,
 }
 
 impl Default for AbaConfig {
@@ -73,41 +120,112 @@ impl Default for AbaConfig {
             hier: None,
             auto_hier: true,
             parallel: false,
+            strict_divisibility: false,
         }
     }
+}
+
+/// Resolve `Auto` to a concrete variant for this instance.
+pub fn resolve_variant(variant: Variant, n: usize, k: usize) -> Variant {
+    match variant {
+        Variant::Auto if n / k <= 4 => Variant::Small,
+        Variant::Auto => Variant::Base,
+        v => v,
+    }
+}
+
+/// Validate `(ds, k)` once, up front. `strict` additionally rejects
+/// `n % k != 0`; otherwise the ragged case is only logged, since ABA
+/// still guarantees sizes within one of each other.
+pub fn validate(ds: &Dataset, k: usize, strict: bool) -> AbaResult<()> {
+    if ds.n == 0 {
+        return Err(AbaError::EmptyDataset);
+    }
+    if k == 0 {
+        return Err(AbaError::InvalidK { k, n: ds.n, reason: "k must be >= 1".into() });
+    }
+    if k > ds.n {
+        return Err(AbaError::InvalidK {
+            k,
+            n: ds.n,
+            reason: "k exceeds the number of objects".into(),
+        });
+    }
+    if ds.n % k != 0 {
+        if strict {
+            return Err(AbaError::InvalidK {
+                k,
+                n: ds.n,
+                reason: format!(
+                    "n % k = {} != 0 and strict divisibility was requested",
+                    ds.n % k
+                ),
+            });
+        }
+        // eprintln rather than log::warn!: no logger is initialized in
+        // the CLI, and this message must actually reach users.
+        eprintln!(
+            "warning: n={} is not divisible by k={k}; anticluster sizes will differ by one",
+            ds.n
+        );
+    }
+    Ok(())
 }
 
 /// Run ABA on a dataset, returning an anticluster label in `0..k` per
 /// object. Honors the categorical variant automatically when the dataset
 /// carries categories (§4.3), and hierarchical decomposition per config.
-pub fn run_aba(ds: &Dataset, k: usize, cfg: &AbaConfig) -> Result<Vec<u32>> {
-    validate(ds, k)?;
+#[deprecated(
+    since = "0.2.0",
+    note = "build a reusable session instead: `Aba::builder().build()?.partition(ds, k)`"
+)]
+pub fn run_aba(ds: &Dataset, k: usize, cfg: &AbaConfig) -> AbaResult<Vec<u32>> {
+    // Labels-only path: legacy callers don't pay the Partition stats
+    // pass the session API computes.
+    validate(ds, k, cfg.strict_divisibility)?;
     if let Some(spec) = effective_spec(ds, k, cfg) {
         return run_hierarchical(ds, &spec, cfg);
     }
-    let mut backend = make_backend(cfg.backend)?;
-    run_aba_with_backend(ds, k, cfg, backend.as_mut())
+    let mut backend = crate::runtime::make_backend(cfg.backend)?;
+    Ok(flat_with_scratch(ds, k, cfg, backend.as_mut(), &mut core::Scratch::default())?.0)
 }
 
-/// As [`run_aba`] but with a caller-supplied backend (lets the pipeline
-/// and hierarchical driver reuse compiled XLA executables / scratch).
+/// As the `Aba` session but with a caller-supplied backend (lets the
+/// hierarchical driver and tests reuse compiled XLA executables /
+/// scratch). Validates exactly once.
 pub fn run_aba_with_backend(
     ds: &Dataset,
     k: usize,
     cfg: &AbaConfig,
     backend: &mut dyn CostBackend,
-) -> Result<Vec<u32>> {
-    validate(ds, k)?;
+) -> AbaResult<Vec<u32>> {
+    validate(ds, k, cfg.strict_divisibility)?;
+    Ok(flat_with_scratch(ds, k, cfg, backend, &mut core::Scratch::default())?.0)
+}
+
+/// The single flat-run implementation shared by [`run_aba_with_backend`],
+/// the hierarchical driver, and [`crate::solver::Aba`] sessions: build
+/// the order, run the assignment loop. Does **not** validate — callers
+/// validate exactly once at their entry point (k bounds are still
+/// enforced by the core loop). Returns `(labels, order_secs,
+/// assign_secs)` so sessions can report phase timings.
+pub(crate) fn flat_with_scratch(
+    ds: &Dataset,
+    k: usize,
+    cfg: &AbaConfig,
+    backend: &mut dyn CostBackend,
+    scratch: &mut core::Scratch,
+) -> AbaResult<(Vec<u32>, f64, f64)> {
     if k == 1 {
-        return Ok(vec![0; ds.n]);
+        return Ok((vec![0; ds.n], 0.0, 0.0));
     }
-    let variant = match cfg.variant {
-        Variant::Auto if ds.n / k <= 4 => Variant::Small,
-        Variant::Auto => Variant::Base,
-        v => v,
-    };
+    let variant = resolve_variant(cfg.variant, ds.n, k);
+    let t = std::time::Instant::now();
     let order = batching::build_order(ds, k, variant, backend);
-    core::run_with_order(ds, k, &order, cfg.solver, backend)
+    let order_secs = t.elapsed().as_secs_f64();
+    let t = std::time::Instant::now();
+    let labels = core::run_with_order_scratch(ds, k, &order, cfg.solver, backend, scratch)?;
+    Ok((labels, order_secs, t.elapsed().as_secs_f64()))
 }
 
 /// The decomposition actually used for this run, if any.
@@ -127,39 +245,73 @@ pub fn effective_spec(ds: &Dataset, k: usize, cfg: &AbaConfig) -> Option<Vec<usi
     None
 }
 
-fn validate(ds: &Dataset, k: usize) -> Result<()> {
-    if k == 0 {
-        bail!("k must be >= 1");
-    }
-    if k > ds.n {
-        bail!("k={k} exceeds number of objects n={}", ds.n);
-    }
-    Ok(())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synth::{generate, SynthKind};
+    use crate::solver::{Aba, Anticlusterer};
 
     #[test]
     fn rejects_bad_k() {
         let ds = generate(SynthKind::Uniform, 10, 2, 1, "u");
-        assert!(run_aba(&ds, 0, &AbaConfig::default()).is_err());
-        assert!(run_aba(&ds, 11, &AbaConfig::default()).is_err());
+        let mut s = Aba::new().unwrap();
+        assert!(s.partition(&ds, 0).is_err());
+        assert!(s.partition(&ds, 11).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_empty_dataset() {
+        let empty = Dataset { name: "empty".into(), n: 0, d: 2, x: Vec::new(), categories: None };
+        assert_eq!(validate(&empty, 1, false), Err(AbaError::EmptyDataset));
+    }
+
+    #[test]
+    fn validate_rejects_k_zero_and_k_beyond_n() {
+        let ds = generate(SynthKind::Uniform, 10, 2, 2, "u");
+        assert!(matches!(
+            validate(&ds, 0, false),
+            Err(AbaError::InvalidK { k: 0, n: 10, .. })
+        ));
+        assert!(matches!(
+            validate(&ds, 11, false),
+            Err(AbaError::InvalidK { k: 11, n: 10, .. })
+        ));
+    }
+
+    #[test]
+    fn validate_divisibility_strict_vs_lax() {
+        let ds = generate(SynthKind::Uniform, 10, 2, 3, "u");
+        assert!(validate(&ds, 3, false).is_ok());
+        assert!(matches!(
+            validate(&ds, 3, true),
+            Err(AbaError::InvalidK { k: 3, n: 10, .. })
+        ));
+        assert!(validate(&ds, 5, true).is_ok());
     }
 
     #[test]
     fn k1_is_trivial() {
         let ds = generate(SynthKind::Uniform, 10, 2, 1, "u");
-        let labels = run_aba(&ds, 1, &AbaConfig::default()).unwrap();
+        let labels = Aba::new().unwrap().partition(&ds, 1).unwrap().labels;
         assert!(labels.iter().all(|&l| l == 0));
     }
 
     #[test]
-    fn variant_parses() {
-        assert_eq!("base".parse::<Variant>().unwrap(), Variant::Base);
-        assert_eq!("small".parse::<Variant>().unwrap(), Variant::Small);
-        assert!("x".parse::<Variant>().is_err());
+    fn variant_display_round_trips_with_fromstr() {
+        for v in Variant::ALL {
+            assert_eq!(v.to_string().parse::<Variant>().unwrap(), v);
+        }
+        assert_eq!(Variant::accepted(), "base|small|auto");
+        let err = "x".parse::<Variant>().unwrap_err();
+        assert!(err.to_string().contains("base|small|auto"), "{err}");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shim_still_works() {
+        let ds = generate(SynthKind::Uniform, 60, 3, 4, "u");
+        let shim = run_aba(&ds, 6, &AbaConfig::default()).unwrap();
+        let session = Aba::new().unwrap().partition(&ds, 6).unwrap().labels;
+        assert_eq!(shim, session);
     }
 }

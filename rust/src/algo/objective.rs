@@ -230,7 +230,8 @@ mod tests {
             "g",
         );
         let k = 50;
-        let aba = crate::algo::run_aba(&ds, k, &crate::algo::AbaConfig::default()).unwrap();
+        use crate::solver::{Aba, Anticlusterer};
+        let aba = Aba::new().unwrap().partition(&ds, k).unwrap().labels;
         let da = dispersion(&ds, &aba, k);
         assert!(da.is_finite() && da > 0.0, "dispersion {da}");
     }

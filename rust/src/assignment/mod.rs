@@ -31,15 +31,50 @@ pub enum SolverKind {
     Greedy,
 }
 
-impl std::str::FromStr for SolverKind {
-    type Err = anyhow::Error;
-    fn from_str(s: &str) -> anyhow::Result<Self> {
-        match s {
-            "lapjv" => Ok(SolverKind::Lapjv),
-            "auction" => Ok(SolverKind::Auction),
-            "greedy" => Ok(SolverKind::Greedy),
-            _ => anyhow::bail!("unknown solver '{s}' (lapjv|auction|greedy)"),
+impl SolverKind {
+    /// Every solver, in display order — the single source of the
+    /// accepted CLI values (`Display`, `FromStr`, and help text all
+    /// derive from it).
+    pub const ALL: [SolverKind; 3] = [SolverKind::Lapjv, SolverKind::Auction, SolverKind::Greedy];
+
+    /// The canonical (CLI) spelling.
+    pub const fn as_str(self) -> &'static str {
+        match self {
+            SolverKind::Lapjv => "lapjv",
+            SolverKind::Auction => "auction",
+            SolverKind::Greedy => "greedy",
         }
+    }
+
+    /// Accepted spellings joined with `|`, for help and error messages.
+    pub fn accepted() -> String {
+        Self::ALL
+            .iter()
+            .map(|s| s.as_str())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+}
+
+impl std::fmt::Display for SolverKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for SolverKind {
+    type Err = crate::error::AbaError;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|v| v.as_str() == s)
+            .ok_or_else(|| {
+                crate::error::AbaError::InvalidInput(format!(
+                    "unknown solver '{s}' (accepted: {})",
+                    SolverKind::accepted()
+                ))
+            })
     }
 }
 
@@ -83,6 +118,16 @@ mod tests {
         assert_eq!("lapjv".parse::<SolverKind>().unwrap(), SolverKind::Lapjv);
         assert_eq!("auction".parse::<SolverKind>().unwrap(), SolverKind::Auction);
         assert!("nope".parse::<SolverKind>().is_err());
+    }
+
+    #[test]
+    fn solver_kind_display_round_trips() {
+        for s in SolverKind::ALL {
+            assert_eq!(s.to_string().parse::<SolverKind>().unwrap(), s);
+        }
+        assert_eq!(SolverKind::accepted(), "lapjv|auction|greedy");
+        let err = "nope".parse::<SolverKind>().unwrap_err();
+        assert!(err.to_string().contains("lapjv|auction|greedy"), "{err}");
     }
 
     #[test]

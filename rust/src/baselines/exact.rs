@@ -21,6 +21,8 @@
 
 use crate::data::dataset::sq_dist_to_f64;
 use crate::data::Dataset;
+use crate::error::AbaResult;
+use crate::solver::{Anticlusterer, Partition, PhaseTimings};
 use std::time::{Duration, Instant};
 
 /// Result of an exact run.
@@ -33,6 +35,41 @@ pub struct ExactResult {
     pub optimal: bool,
     /// Search nodes explored.
     pub nodes: u64,
+}
+
+/// Branch-and-bound as a reusable [`Anticlusterer`] session. With a
+/// `deadline` it plays the paper's time-capped AVOC-MILP role: it always
+/// returns its incumbent (recorded as non-optimal), never a dash.
+pub struct ExactSolver {
+    pub deadline: Option<Duration>,
+    /// Whether the last `partition` call proved optimality.
+    pub last_optimal: bool,
+}
+
+impl ExactSolver {
+    pub fn new(deadline: Option<Duration>) -> Self {
+        Self { deadline, last_optimal: false }
+    }
+}
+
+impl Anticlusterer for ExactSolver {
+    fn partition(&mut self, ds: &Dataset, k: usize) -> AbaResult<Partition> {
+        crate::algo::validate(ds, k, false)?;
+        let mut timings = PhaseTimings::default();
+        let t = Instant::now();
+        let res = solve(ds, k, self.deadline);
+        timings.assign_secs = t.elapsed().as_secs_f64();
+        self.last_optimal = res.optimal;
+        Ok(Partition::from_labels(ds, res.labels, k, timings))
+    }
+
+    fn name(&self) -> String {
+        if self.deadline.is_some() {
+            "MILP-like".into()
+        } else {
+            "exact".into()
+        }
+    }
 }
 
 /// Exact (or time-capped) max-diversity anticlustering.
@@ -251,7 +288,7 @@ mod tests {
         let ds = generate(SynthKind::Uniform, 12, 3, 53, "u");
         let k = 3;
         let res = solve(&ds, k, None);
-        let aba = crate::algo::run_aba(&ds, k, &crate::algo::AbaConfig::default()).unwrap();
+        let aba = crate::solver::Aba::new().unwrap().partition(&ds, k).unwrap().labels;
         let aba_obj = pairwise_within_brute(&ds, &aba, k);
         assert!(
             res.objective >= aba_obj - 1e-9,
@@ -272,6 +309,26 @@ mod tests {
         let stats = ClusterStats::compute(&ds, &res.labels, 5);
         assert_eq!(stats.sizes.iter().sum::<usize>(), 500);
         assert!(res.objective > 0.0);
+    }
+
+    #[test]
+    fn adapter_reports_optimality_and_consistent_objective() {
+        let ds = generate(SynthKind::Uniform, 9, 2, 56, "u");
+        let mut solver = ExactSolver::new(None);
+        let part = solver.partition(&ds, 3).unwrap();
+        assert!(solver.last_optimal);
+        assert_eq!(solver.name(), "exact");
+        // Partition.pairwise (Fact 1) must agree with the search's own
+        // pairwise objective.
+        let res = solve(&ds, 3, None);
+        assert!((part.pairwise - res.objective).abs() < 1e-6 * res.objective.max(1.0));
+
+        let mut capped = ExactSolver::new(Some(Duration::from_millis(5)));
+        assert_eq!(capped.name(), "MILP-like");
+        let big = generate(SynthKind::Uniform, 200, 3, 57, "u");
+        let part = capped.partition(&big, 5).unwrap();
+        assert_eq!(part.labels.len(), 200);
+        assert!(!capped.last_optimal);
     }
 
     #[test]

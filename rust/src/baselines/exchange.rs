@@ -19,8 +19,10 @@
 
 use super::random_part;
 use crate::data::Dataset;
+use crate::error::{AbaError, AbaResult};
 use crate::knn;
 use crate::rng::Pcg32;
+use crate::solver::{Anticlusterer, Partition, PhaseTimings};
 use std::time::Instant;
 
 /// How exchange partners are generated.
@@ -59,6 +61,58 @@ pub struct ExchangeResult {
     pub swaps: usize,
     /// True if the run hit the time limit before completing its pass.
     pub timed_out: bool,
+}
+
+/// `fast_anticlustering` as a reusable [`Anticlusterer`] session.
+///
+/// A run that hits its configured `time_limit` before completing the
+/// exchange pass fails with [`AbaError::TimeLimit`] — the paper's "—"
+/// (no solution within the cap) convention, which the experiment harness
+/// relies on.
+pub struct FastAnticlustering {
+    cfg: ExchangeConfig,
+}
+
+impl FastAnticlustering {
+    pub fn new(cfg: ExchangeConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// P-N`p`: `p` nearest-neighbor exchange partners.
+    pub fn nearest(p: usize, seed: u64) -> Self {
+        Self::new(ExchangeConfig::nearest(p, seed))
+    }
+
+    /// P-R`p`: `p` random exchange partners.
+    pub fn random(p: usize, seed: u64) -> Self {
+        Self::new(ExchangeConfig::random(p, seed))
+    }
+
+    pub fn config(&self) -> &ExchangeConfig {
+        &self.cfg
+    }
+}
+
+impl Anticlusterer for FastAnticlustering {
+    fn partition(&mut self, ds: &Dataset, k: usize) -> AbaResult<Partition> {
+        crate::algo::validate(ds, k, false)?;
+        let mut timings = PhaseTimings::default();
+        let t = Instant::now();
+        let res = fast_anticlustering(ds, k, &self.cfg);
+        timings.assign_secs = t.elapsed().as_secs_f64();
+        if res.timed_out {
+            let limit_secs = self.cfg.time_limit.map(|d| d.as_secs_f64()).unwrap_or(0.0);
+            return Err(AbaError::TimeLimit { limit_secs });
+        }
+        Ok(Partition::from_labels(ds, res.labels, k, timings))
+    }
+
+    fn name(&self) -> String {
+        match self.cfg.partners {
+            Partners::Nearest(p) => format!("P-N{p}"),
+            Partners::Random(p) => format!("P-R{p}"),
+        }
+    }
 }
 
 /// Run the exchange heuristic.
@@ -267,6 +321,27 @@ mod tests {
                 assert!((lo..=hi).contains(&cnt));
             }
         }
+    }
+
+    #[test]
+    fn adapter_maps_timeout_to_typed_error_and_reports_partner_names() {
+        use crate::error::AbaError;
+        let ds = generate(SynthKind::Uniform, 300, 3, 47, "u");
+        let mut ok = FastAnticlustering::random(10, 1);
+        let part = ok.partition(&ds, 5).unwrap();
+        assert_eq!(part.labels.len(), 300);
+        assert_eq!(ok.name(), "P-R10");
+        assert_eq!(FastAnticlustering::nearest(5, 1).name(), "P-N5");
+
+        let mut capped = FastAnticlustering::new(ExchangeConfig {
+            partners: Partners::Random(50),
+            seed: 1,
+            time_limit: Some(std::time::Duration::ZERO),
+        });
+        assert!(matches!(
+            capped.partition(&ds, 5),
+            Err(AbaError::TimeLimit { .. })
+        ));
     }
 
     #[test]

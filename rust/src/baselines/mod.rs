@@ -7,7 +7,17 @@
 //! * [`exact`] — branch-and-bound exact anticlustering for small N; its
 //!   time-capped mode stands in for the AVOC MILP of Croella et al.
 //!   (2025) in the Table 9/10 experiments (see DESIGN.md §3).
+//!
+//! Each baseline also ships a session adapter implementing
+//! [`crate::solver::Anticlusterer`] — [`RandomPartition`],
+//! [`FastAnticlustering`], and [`ExactSolver`] — so any of them can be
+//! swapped for ABA behind `Box<dyn Anticlusterer>` in the pipeline, the
+//! CLI, and the experiment harness.
 
 pub mod exact;
 pub mod exchange;
 pub mod random_part;
+
+pub use exact::ExactSolver;
+pub use exchange::FastAnticlustering;
+pub use random_part::RandomPartition;

@@ -5,7 +5,42 @@
 //! starting cluster so the `N mod K` remainders spread out), satisfying
 //! the §2 constraint (5) bounds.
 
+use crate::data::Dataset;
+use crate::error::AbaResult;
 use crate::rng::Pcg32;
+use crate::solver::{Anticlusterer, Partition, PhaseTimings};
+use std::time::Instant;
+
+/// The `Rand` baseline as a reusable [`Anticlusterer`] session.
+/// Category-aware: when the dataset carries a categorical feature, each
+/// category is dealt independently (constraint (5)).
+pub struct RandomPartition {
+    pub seed: u64,
+}
+
+impl RandomPartition {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+}
+
+impl Anticlusterer for RandomPartition {
+    fn partition(&mut self, ds: &Dataset, k: usize) -> AbaResult<Partition> {
+        crate::algo::validate(ds, k, false)?;
+        let mut timings = PhaseTimings::default();
+        let t = Instant::now();
+        let labels = match &ds.categories {
+            Some(cats) => random_partition_categorical(cats, k, self.seed),
+            None => random_partition(ds.n, k, self.seed),
+        };
+        timings.assign_secs = t.elapsed().as_secs_f64();
+        Ok(Partition::from_labels(ds, labels, k, timings))
+    }
+
+    fn name(&self) -> String {
+        "Rand".into()
+    }
+}
 
 /// Random balanced partition of `n` objects into `k` groups.
 pub fn random_partition(n: usize, k: usize, seed: u64) -> Vec<u32> {
@@ -66,6 +101,20 @@ mod tests {
     fn seeds_differ() {
         assert_ne!(random_partition(50, 5, 1), random_partition(50, 5, 2));
         assert_eq!(random_partition(50, 5, 3), random_partition(50, 5, 3));
+    }
+
+    #[test]
+    fn adapter_matches_free_function_and_respects_categories() {
+        use crate::data::synth::{generate, SynthKind};
+        let ds = generate(SynthKind::Uniform, 40, 2, 7, "r");
+        let part = RandomPartition::new(9).partition(&ds, 4).unwrap();
+        assert_eq!(part.labels, random_partition(40, 4, 9));
+        assert_eq!(part.sizes().iter().sum::<usize>(), 40);
+
+        let cats: Vec<u32> = (0..40).map(|i| (i % 2) as u32).collect();
+        let cds = ds.with_categories(cats.clone()).unwrap();
+        let part = RandomPartition::new(9).partition(&cds, 4).unwrap();
+        assert_eq!(part.labels, random_partition_categorical(&cats, 4, 9));
     }
 
     #[test]

@@ -57,8 +57,8 @@ pub fn kplus_augment(ds: &Dataset, moments: usize) -> Dataset {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algo::{run_aba, AbaConfig};
     use crate::data::synth::{generate, SynthKind};
+    use crate::solver::{Aba, Anticlusterer};
 
     #[test]
     fn moments_one_is_identity_shape() {
@@ -113,9 +113,10 @@ mod tests {
             max - min
         };
 
-        let plain = run_aba(&ds, k, &AbaConfig::default()).unwrap();
+        let mut session = Aba::new().unwrap();
+        let plain = session.partition(&ds, k).unwrap().labels;
         let aug = kplus_augment(&ds, 2);
-        let kplus = run_aba(&aug, k, &AbaConfig::default()).unwrap();
+        let kplus = session.partition(&aug, k).unwrap().labels;
         // k-plus must not be (much) worse at balancing variance; on this
         // construction it is typically strictly better.
         let (ps, ks) = (var_spread(&plain), var_spread(&kplus));

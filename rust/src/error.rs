@@ -1,0 +1,93 @@
+//! Typed errors for the library core.
+//!
+//! Every fallible public function in `algo/`, `baselines/`, `solver`, and
+//! `pipeline/` returns [`AbaError`]; `anyhow` survives only at the CLI /
+//! experiment-harness boundary (where `AbaError` converts automatically
+//! via `std::error::Error`). Matching on a variant is part of the public
+//! contract — e.g. the experiment harness maps [`AbaError::TimeLimit`] to
+//! the paper's "—" (no solution within the cap) cell.
+
+use std::fmt;
+
+/// Crate-wide result alias for the typed error.
+pub type AbaResult<T> = Result<T, AbaError>;
+
+/// Everything that can go wrong inside the anticlustering core.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AbaError {
+    /// The dataset has no objects.
+    EmptyDataset,
+    /// `k` is out of range for the dataset (or violates strict
+    /// divisibility when requested).
+    InvalidK { k: usize, n: usize, reason: String },
+    /// A processing order was not a permutation of `0..n`.
+    InvalidOrder { expected: usize, got: usize },
+    /// A hierarchical decomposition spec is unusable for this instance.
+    BadHierSpec(String),
+    /// The requested cost backend could not be constructed (e.g. XLA
+    /// artifacts missing, or the crate was built without the `xla`
+    /// feature).
+    BackendUnavailable(String),
+    /// Pairwise constraints are inconsistent or unsatisfiable under `k`.
+    ConstraintInfeasible(String),
+    /// A solver gave up after exhausting its wall-clock budget.
+    TimeLimit { limit_secs: f64 },
+    /// Malformed input that fits no more specific variant.
+    InvalidInput(String),
+}
+
+impl fmt::Display for AbaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AbaError::EmptyDataset => write!(f, "dataset has no objects"),
+            AbaError::InvalidK { k, n, reason } => {
+                write!(f, "invalid k={k} for n={n}: {reason}")
+            }
+            AbaError::InvalidOrder { expected, got } => {
+                write!(f, "processing order has length {got}, expected a permutation of 0..{expected}")
+            }
+            AbaError::BadHierSpec(msg) => write!(f, "bad hierarchy spec: {msg}"),
+            AbaError::BackendUnavailable(msg) => write!(f, "cost backend unavailable: {msg}"),
+            AbaError::ConstraintInfeasible(msg) => write!(f, "infeasible constraints: {msg}"),
+            AbaError::TimeLimit { limit_secs } => {
+                write!(f, "no solution within the {limit_secs}s time limit")
+            }
+            AbaError::InvalidInput(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for AbaError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = AbaError::InvalidK { k: 7, n: 3, reason: "k exceeds n".into() };
+        let msg = e.to_string();
+        assert!(msg.contains("k=7") && msg.contains("n=3"), "{msg}");
+        assert!(AbaError::EmptyDataset.to_string().contains("no objects"));
+        assert!(AbaError::TimeLimit { limit_secs: 2.0 }.to_string().contains("2s"));
+    }
+
+    #[test]
+    fn converts_into_anyhow_at_the_cli_boundary() {
+        fn cli() -> anyhow::Result<()> {
+            Err(AbaError::BadHierSpec("empty".into()))?;
+            Ok(())
+        }
+        let err = cli().unwrap_err();
+        assert!(format!("{err:#}").contains("bad hierarchy spec"));
+    }
+
+    #[test]
+    fn variants_are_comparable() {
+        assert_eq!(AbaError::EmptyDataset, AbaError::EmptyDataset);
+        assert_ne!(
+            AbaError::EmptyDataset,
+            AbaError::InvalidInput("x".into())
+        );
+    }
+}

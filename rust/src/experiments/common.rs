@@ -1,13 +1,17 @@
 //! Shared experiment machinery: algorithm specs, timed runs, time caps,
 //! and the dash convention for algorithms that fail to finish.
+//!
+//! Every benchmark algorithm is driven through the
+//! [`crate::solver::Anticlusterer`] trait, so the harness holds one code
+//! path for all of them and reads objectives/stats straight off the
+//! returned [`Partition`] instead of recomputing them per table.
 
-use crate::algo::{run_aba, AbaConfig, ClusterStats};
-use crate::baselines::exact;
-use crate::baselines::exchange::{fast_anticlustering, ExchangeConfig, Partners};
-use crate::baselines::random_part;
+use crate::baselines::exchange::{ExchangeConfig, Partners};
+use crate::baselines::{ExactSolver, FastAnticlustering, RandomPartition};
 use crate::data::synth::Scale;
 use crate::data::Dataset;
-use crate::util::timer::Timer;
+use crate::error::AbaError;
+use crate::solver::{Aba, Anticlusterer, Partition};
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -69,64 +73,64 @@ impl Algo {
     }
 }
 
-/// A completed run.
+/// Build the [`Anticlusterer`] session for a benchmark algorithm.
+pub fn solver_for(algo: Algo, seed: u64, limit_secs: f64) -> Box<dyn Anticlusterer> {
+    let limit = Duration::from_secs_f64(limit_secs);
+    match algo {
+        Algo::Aba => Box::new(Aba::new().expect("native ABA session always builds")),
+        Algo::PN5 => Box::new(FastAnticlustering::new(ExchangeConfig {
+            partners: Partners::Nearest(5),
+            seed,
+            time_limit: Some(limit),
+        })),
+        Algo::PR(p) => Box::new(FastAnticlustering::new(ExchangeConfig {
+            partners: Partners::Random(p),
+            seed,
+            time_limit: Some(limit),
+        })),
+        Algo::Rand => Box::new(RandomPartition::new(seed)),
+        Algo::MilpLike => Box::new(ExactSolver::new(Some(limit))),
+    }
+}
+
+/// A completed run: the rich partition plus algorithm-only seconds
+/// (ordering + assignment; the stats pass is excluded, matching the
+/// paper's runtime convention).
 #[derive(Clone, Debug)]
 pub struct AlgoRun {
-    pub labels: Vec<u32>,
+    pub partition: Partition,
     pub secs: f64,
+}
+
+impl AlgoRun {
+    /// Anticluster label per object (convenience accessor).
+    pub fn labels(&self) -> &[u32] {
+        &self.partition.labels
+    }
 }
 
 /// Run one algorithm with a time cap. `None` = the paper's dash (no
 /// solution within the limit / infeasible configuration).
 pub fn run_algo(ds: &Dataset, k: usize, algo: Algo, seed: u64, limit_secs: f64) -> Option<AlgoRun> {
-    let limit = Duration::from_secs_f64(limit_secs);
-    let t = Timer::start();
-    match algo {
-        Algo::Aba => {
-            let labels = run_aba(ds, k, &AbaConfig::default()).ok()?;
-            Some(AlgoRun { labels, secs: t.secs() })
+    if algo == Algo::PN5 {
+        // The brute-force kNN behind P-N5 is O(n^2 d) — like the paper,
+        // the configuration simply fails (dash) on datasets where it
+        // cannot finish within the cap.
+        let est_ops = (ds.n as f64) * (ds.n as f64) * (ds.d as f64);
+        if ds.d > 16 && est_ops > 2.5e10 {
+            return None;
         }
-        Algo::PN5 => {
-            // The brute-force kNN behind P-N5 is O(n^2 d) — like the
-            // paper, the configuration simply fails (dash) on datasets
-            // where it cannot finish within the cap.
-            let est_ops = (ds.n as f64) * (ds.n as f64) * (ds.d as f64);
-            if ds.d > 16 && est_ops > 2.5e10 {
-                return None;
-            }
-            let cfg = ExchangeConfig {
-                partners: Partners::Nearest(5),
-                seed,
-                time_limit: Some(limit),
-            };
-            let res = fast_anticlustering(ds, k, &cfg);
-            if res.timed_out {
-                return None;
-            }
-            Some(AlgoRun { labels: res.labels, secs: t.secs() })
+    }
+    let mut solver = solver_for(algo, seed, limit_secs);
+    match solver.partition(ds, k) {
+        Ok(partition) => {
+            let secs = partition.timings.algo_secs();
+            Some(AlgoRun { secs, partition })
         }
-        Algo::PR(p) => {
-            let cfg = ExchangeConfig {
-                partners: Partners::Random(p),
-                seed,
-                time_limit: Some(limit),
-            };
-            let res = fast_anticlustering(ds, k, &cfg);
-            if res.timed_out {
-                return None;
-            }
-            Some(AlgoRun { labels: res.labels, secs: t.secs() })
-        }
-        Algo::Rand => {
-            let labels = match &ds.categories {
-                Some(c) => random_part::random_partition_categorical(c, k, seed),
-                None => random_part::random_partition(ds.n, k, seed),
-            };
-            Some(AlgoRun { labels, secs: t.secs() })
-        }
-        Algo::MilpLike => {
-            let res = exact::solve(ds, k, Some(limit));
-            Some(AlgoRun { labels: res.labels, secs: t.secs() })
+        Err(AbaError::TimeLimit { .. }) => None,
+        Err(e) => {
+            eprintln!("  [warn] {} failed on {} (k={k}): {e}", solver.name(), ds.name);
+            None
         }
     }
 }
@@ -140,12 +144,11 @@ pub fn dev_cell(value: Option<f64>, digits: usize) -> String {
     }
 }
 
-/// Quality deviation of `run` from ABA's objective (centroid-form ofv).
-pub fn quality_dev(ds: &Dataset, k: usize, aba_ofv: f64, run: &Option<AlgoRun>) -> Option<f64> {
-    run.as_ref().map(|r| {
-        let ofv = ClusterStats::compute(ds, &r.labels, k).ssd_total();
-        crate::util::pct_dev(ofv, aba_ofv)
-    })
+/// Quality deviation of `run`'s objective from ABA's objective
+/// (centroid-form ofv, read off the partitions — no recomputation).
+pub fn quality_dev(aba_ofv: f64, run: &Option<AlgoRun>) -> Option<f64> {
+    run.as_ref()
+        .map(|r| crate::util::pct_dev(r.partition.objective, aba_ofv))
 }
 
 /// Runtime deviation of `run` from ABA's runtime.
@@ -164,11 +167,13 @@ mod tests {
         let ds = generate(SynthKind::Uniform, 60, 4, 91, "t");
         for algo in [Algo::Aba, Algo::PN5, Algo::PR(5), Algo::Rand] {
             let run = run_algo(&ds, 5, algo, 1, 10.0).unwrap_or_else(|| panic!("{algo:?}"));
-            assert_eq!(run.labels.len(), 60);
+            assert_eq!(run.labels().len(), 60);
+            assert_eq!(run.partition.sizes().iter().sum::<usize>(), 60);
+            assert!(run.partition.objective > 0.0);
         }
         // MILP-like with a tiny cap still returns an incumbent.
         let run = run_algo(&ds, 5, Algo::MilpLike, 1, 0.05).unwrap();
-        assert_eq!(run.labels.len(), 60);
+        assert_eq!(run.labels().len(), 60);
     }
 
     #[test]
@@ -178,14 +183,21 @@ mod tests {
     }
 
     #[test]
+    fn exchange_timeout_becomes_dash() {
+        let ds = generate(SynthKind::Uniform, 400, 4, 93, "t");
+        assert!(run_algo(&ds, 5, Algo::PR(50), 1, 0.0).is_none());
+    }
+
+    #[test]
     fn dev_cells() {
         assert_eq!(dev_cell(Some(1.23456), 4), "1.2346");
         assert_eq!(dev_cell(None, 4), "—");
     }
 
     #[test]
-    fn algo_names() {
-        assert_eq!(Algo::PR(50).name(), "P-R50");
-        assert_eq!(Algo::Aba.name(), "ABA");
+    fn algo_names_match_solver_names() {
+        for algo in [Algo::Aba, Algo::PN5, Algo::PR(50), Algo::Rand, Algo::MilpLike] {
+            assert_eq!(solver_for(algo, 1, 1.0).name(), algo.name());
+        }
     }
 }

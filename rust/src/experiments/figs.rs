@@ -1,8 +1,9 @@
 //! Figures 5–7 of the paper, as ASCII renderings + CSV series.
 
 use super::common::{run_algo, Algo, ExpOptions};
-use crate::algo::{run_hierarchical, AbaConfig, ClusterStats};
+use crate::algo::AbaConfig;
 use crate::data::dataset::sq_dist_to_f64;
+use crate::solver::{Aba, Anticlusterer};
 use crate::data::synth::{load, Scale};
 use crate::metrics::{ascii_histogram, quartiles};
 use crate::util::fmt_secs;
@@ -22,16 +23,16 @@ pub fn fig5(opts: &ExpOptions) -> Result<Table> {
 
     let aba = run_algo(&ds, k, Algo::Aba, 0, opts.time_limit_secs).unwrap();
     let pr5 = run_algo(&ds, k, Algo::PR(5), 1, opts.time_limit_secs);
-    let (bench_name, bench_labels) = match &pr5 {
-        Some(run) => ("P-R5", run.labels.clone()),
+    let (bench_name, bench) = match pr5 {
+        Some(run) => ("P-R5", run),
         None => (
             "Rand",
-            run_algo(&ds, k, Algo::Rand, 1, opts.time_limit_secs).unwrap().labels,
+            run_algo(&ds, k, Algo::Rand, 1, opts.time_limit_secs).unwrap(),
         ),
     };
 
-    let div_aba = ClusterStats::compute(&ds, &aba.labels, k).ssd;
-    let div_bench = ClusterStats::compute(&ds, &bench_labels, k).ssd;
+    let div_aba = aba.partition.stats.ssd;
+    let div_bench = bench.partition.stats.ssd;
 
     println!("== Figure 5 — per-anticluster diversity distribution, {name}, K={k} ==");
     println!("--- ABA ---");
@@ -92,12 +93,13 @@ pub fn fig6(opts: &ExpOptions) -> Result<Table> {
             println!("{name:>6}: —");
             continue;
         };
+        let labels = run.labels();
         // Distances of objects to their anticluster centroid.
         let d = ds.d;
         let mut sums = vec![0f64; k * d];
         let mut counts = vec![0usize; k];
         for i in 0..ds.n {
-            let c = run.labels[i] as usize;
+            let c = labels[i] as usize;
             counts[c] += 1;
             for (s, &v) in sums[c * d..(c + 1) * d].iter_mut().zip(ds.row(i)) {
                 *s += v as f64;
@@ -110,7 +112,7 @@ pub fn fig6(opts: &ExpOptions) -> Result<Table> {
         }
         let mut per_cluster: Vec<Vec<f64>> = vec![Vec::new(); k];
         for i in 0..ds.n {
-            let c = run.labels[i] as usize;
+            let c = labels[i] as usize;
             per_cluster[c].push(sq_dist_to_f64(ds.row(i), &sums[c * d..(c + 1) * d]).sqrt());
         }
         let mut medians = Vec::with_capacity(k);
@@ -178,15 +180,16 @@ pub fn fig7(opts: &ExpOptions) -> Result<Table> {
             .map(|x| x.to_string())
             .collect::<Vec<_>>()
             .join("x");
-        let cfg = AbaConfig { auto_hier: false, ..AbaConfig::default() };
-        let timer = Timer::start();
-        let labels = if spec.len() == 1 {
-            crate::algo::run_aba(&ds, k, &cfg)?
-        } else {
-            run_hierarchical(&ds, spec, &cfg)?
+        let cfg = AbaConfig {
+            auto_hier: false,
+            hier: if spec.len() > 1 { Some(spec.clone()) } else { None },
+            ..AbaConfig::default()
         };
+        let mut session = Aba::from_config(cfg)?;
+        let timer = Timer::start();
+        let part = session.partition(&ds, k)?;
         let secs = timer.secs();
-        let ofv = ClusterStats::compute(&ds, &labels, k).ssd_total();
+        let ofv = part.objective;
         eprintln!("    {label}: {} s, ofv {ofv:.1}", fmt_secs(secs));
         results.push((label, secs, ofv));
     }

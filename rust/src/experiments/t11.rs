@@ -64,8 +64,7 @@ pub fn table11(opts: &ExpOptions) -> Result<Table> {
         for k in ks {
             eprintln!("  [t11] {name} (n={}) k={k}", ds.n);
             let aba = run_algo(&ds, k, Algo::Aba, 0, opts.time_limit_secs).unwrap();
-            let aba_stats = ClusterStats::compute(&ds, &aba.labels, k);
-            let aba_w = aba_stats.pairwise_total();
+            let aba_w = aba.partition.pairwise;
 
             let tm = Timer::start();
             let metis_labels = partition(&graph, &PartitionConfig::new(k));
@@ -74,7 +73,7 @@ pub fn table11(opts: &ExpOptions) -> Result<Table> {
             let metis_w = metis_stats.pairwise_total();
 
             let rand = run_algo(&ds, k, Algo::Rand, 1, opts.time_limit_secs).unwrap();
-            let rand_w = ClusterStats::compute(&ds, &rand.labels, k).pairwise_total();
+            let rand_w = rand.partition.pairwise;
 
             t.row(vec![
                 name.into(),
@@ -86,7 +85,7 @@ pub fn table11(opts: &ExpOptions) -> Result<Table> {
                 fmt_secs(aba.secs),
                 fmt_secs(metis_secs),
                 fmt_secs(input_secs),
-                format!("{:.2}", aba_stats.min_max_ratio_pct()),
+                format!("{:.2}", aba.partition.stats.min_max_ratio_pct()),
                 format!("{:.2}", metis_stats.min_max_ratio_pct()),
             ]);
         }

@@ -7,7 +7,6 @@
 //! per-anticluster diversity. Both come from a single suite run here.
 
 use super::common::{dev_cell, quality_dev, run_algo, time_dev, Algo, AlgoRun, ExpOptions};
-use crate::algo::ClusterStats;
 use crate::data::synth::{load, Scale};
 use crate::data::Dataset;
 use crate::util::fmt_secs;
@@ -28,12 +27,11 @@ pub const TABLE4_ALL: &[&str] = &[
 
 const ALGOS: &[Algo] = &[Algo::PN5, Algo::PR(5), Algo::PR(50), Algo::PR(500), Algo::Rand];
 
-/// One dataset's complete suite run.
+/// One dataset's complete suite run. ABA's objective and stats are read
+/// off `aba.partition` — no recomputation.
 pub struct SuiteRow {
     pub ds: Dataset,
     pub aba: AlgoRun,
-    pub aba_ofv: f64,
-    pub aba_stats: ClusterStats,
     pub others: Vec<(Algo, Option<AlgoRun>)>,
 }
 
@@ -58,13 +56,11 @@ pub fn run_suite(opts: &ExpOptions, k: usize) -> Result<Vec<SuiteRow>> {
         eprintln!("  [t4] {} (n={}, d={}) k={k}", ds.name, ds.n, ds.d);
         let aba = run_algo(&ds, k, Algo::Aba, 0, opts.time_limit_secs)
             .expect("ABA always completes");
-        let aba_stats = ClusterStats::compute(&ds, &aba.labels, k);
-        let aba_ofv = aba_stats.ssd_total();
         let others: Vec<(Algo, Option<AlgoRun>)> = ALGOS
             .iter()
             .map(|&a| (a, run_algo(&ds, k, a, 1, opts.time_limit_secs)))
             .collect();
-        rows.push(SuiteRow { ds, aba, aba_ofv, aba_stats, others });
+        rows.push(SuiteRow { ds, aba, others });
     }
     Ok(rows)
 }
@@ -86,10 +82,10 @@ pub fn table4(opts: &ExpOptions) -> Result<Table> {
             row.ds.name.clone(),
             row.ds.n.to_string(),
             row.ds.d.to_string(),
-            format!("{:.2}", row.aba_ofv),
+            format!("{:.2}", row.aba.partition.objective),
         ];
         for (_, run) in &row.others {
-            cells.push(dev_cell(quality_dev(&row.ds, k, row.aba_ofv, run), 4));
+            cells.push(dev_cell(quality_dev(row.aba.partition.objective, run), 4));
         }
         cells.push(fmt_secs(row.aba.secs));
         for (algo, run) in &row.others {
@@ -118,13 +114,11 @@ pub fn table6(opts: &ExpOptions) -> Result<Table> {
     )
     .left(0);
     for row in &rows {
-        let sd_aba = row.aba_stats.diversity_sd();
-        let rg_aba = row.aba_stats.diversity_range();
+        let sd_aba = row.aba.partition.stats.diversity_sd();
+        let rg_aba = row.aba.partition.stats.diversity_range();
         let mut cells = vec![row.ds.name.clone(), format!("{sd_aba:.3}")];
-        let stats_of = |run: &Option<AlgoRun>| {
-            run.as_ref()
-                .map(|r| ClusterStats::compute(&row.ds, &r.labels, k))
-        };
+        let stats_of =
+            |run: &Option<AlgoRun>| run.as_ref().map(|r| &r.partition.stats);
         for (_, run) in &row.others {
             let dev = stats_of(run).map(|s| crate::util::pct_dev(s.diversity_sd(), sd_aba));
             cells.push(dev_cell(dev, 1));

@@ -8,7 +8,6 @@
 
 use super::common::{dev_cell, quality_dev, run_algo, time_dev, Algo, ExpOptions};
 use super::t4::dataset_list;
-use crate::algo::ClusterStats;
 use crate::data::synth::{load, Scale};
 use crate::util::fmt_secs;
 use crate::util::table::Table;
@@ -49,7 +48,7 @@ pub fn table4x(opts: &ExpOptions) -> Result<Table> {
             }
             eprintln!("  [t4x] {name} k={k}");
             let aba = run_algo(&ds, k, Algo::Aba, 0, opts.time_limit_secs).unwrap();
-            let aba_ofv = ClusterStats::compute(&ds, &aba.labels, k).ssd_total();
+            let aba_ofv = aba.partition.objective;
             let runs: Vec<_> = algos
                 .iter()
                 .map(|&a| (a, run_algo(&ds, k, a, 1, opts.time_limit_secs)))
@@ -61,7 +60,7 @@ pub fn table4x(opts: &ExpOptions) -> Result<Table> {
                 format!("{aba_ofv:.2}"),
             ];
             for (_, run) in &runs {
-                cells.push(dev_cell(quality_dev(&ds, k, aba_ofv, run), 4));
+                cells.push(dev_cell(quality_dev(aba_ofv, run), 4));
             }
             cells.push(fmt_secs(aba.secs));
             for (algo, run) in &runs {

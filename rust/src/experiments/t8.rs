@@ -8,7 +8,7 @@
 //! advantage growing as K grows, reaching tens of percent at min size 2.
 
 use super::common::{run_algo, Algo, ExpOptions};
-use crate::algo::{effective_spec, AbaConfig, ClusterStats};
+use crate::algo::{effective_spec, AbaConfig};
 use crate::data::synth::{load, Scale};
 use crate::util::fmt_secs;
 use crate::util::table::Table;
@@ -45,10 +45,10 @@ pub fn table8(opts: &ExpOptions) -> Result<Table> {
             .unwrap_or_else(|| "flat".into());
         let aba = run_algo(&ds, k, Algo::Aba, 0, opts.time_limit_secs)
             .expect("ABA completes");
-        let stats = ClusterStats::compute(&ds, &aba.labels, k);
-        let ofv = stats.ssd_total();
+        let stats = &aba.partition.stats;
+        let ofv = aba.partition.objective;
         let rand = run_algo(&ds, k, Algo::Rand, 1, opts.time_limit_secs).unwrap();
-        let rofv = ClusterStats::compute(&ds, &rand.labels, k).ssd_total();
+        let rofv = rand.partition.objective;
         t.row(vec![
             k.to_string(),
             spec,

@@ -7,7 +7,6 @@
 //! same-category random exchange partners, and category-aware Rand.
 
 use super::common::{dev_cell, quality_dev, run_algo, time_dev, Algo, AlgoRun, ExpOptions};
-use crate::algo::ClusterStats;
 use crate::data::kmeans::kmeans;
 use crate::data::synth::{load, Scale};
 use crate::data::Dataset;
@@ -30,8 +29,6 @@ pub struct CatRow {
     pub ds: Dataset,
     pub k: usize,
     pub aba: AlgoRun,
-    pub aba_ofv: f64,
-    pub aba_stats: ClusterStats,
     pub others: Vec<(Algo, Option<AlgoRun>)>,
 }
 
@@ -60,8 +57,6 @@ pub fn run_suite(opts: &ExpOptions) -> Result<Vec<CatRow>> {
         for k in ks {
             eprintln!("  [t9] {name} (n={}, g={g}) k={k}", ds.n);
             let aba = run_algo(&ds, k, Algo::Aba, 0, opts.time_limit_secs).unwrap();
-            let aba_stats = ClusterStats::compute(&ds, &aba.labels, k);
-            let aba_ofv = aba_stats.ssd_total();
             let others = ALGOS
                 .iter()
                 .map(|&a| {
@@ -69,7 +64,7 @@ pub fn run_suite(opts: &ExpOptions) -> Result<Vec<CatRow>> {
                     (a, run_algo(&ds, k, a, 1, cap))
                 })
                 .collect();
-            rows.push(CatRow { ds: ds.clone(), k, aba, aba_ofv, aba_stats, others });
+            rows.push(CatRow { ds: ds.clone(), k, aba, others });
         }
     }
     Ok(rows)
@@ -90,10 +85,10 @@ pub fn table9(opts: &ExpOptions) -> Result<Table> {
             row.ds.name.clone(),
             row.ds.n.to_string(),
             row.k.to_string(),
-            format!("{:.2}", row.aba_ofv),
+            format!("{:.2}", row.aba.partition.objective),
         ];
         for (_, run) in &row.others {
-            cells.push(dev_cell(quality_dev(&row.ds, row.k, row.aba_ofv, run), 4));
+            cells.push(dev_cell(quality_dev(row.aba.partition.objective, run), 4));
         }
         cells.push(fmt_secs(row.aba.secs));
         for (algo, run) in &row.others {
@@ -120,12 +115,10 @@ pub fn table10(opts: &ExpOptions) -> Result<Table> {
     )
     .left(0);
     for row in &rows {
-        let sd_aba = row.aba_stats.diversity_sd();
-        let rg_aba = row.aba_stats.diversity_range();
-        let stats_of = |run: &Option<AlgoRun>| {
-            run.as_ref()
-                .map(|r| ClusterStats::compute(&row.ds, &r.labels, row.k))
-        };
+        let sd_aba = row.aba.partition.stats.diversity_sd();
+        let rg_aba = row.aba.partition.stats.diversity_range();
+        let stats_of =
+            |run: &Option<AlgoRun>| run.as_ref().map(|r| &r.partition.stats);
         let mut cells = vec![row.ds.name.clone(), row.k.to_string(), format!("{sd_aba:.3}")];
         for (_, run) in &row.others {
             let dev = stats_of(run).map(|s| crate::util::pct_dev(s.diversity_sd(), sd_aba));
@@ -169,7 +162,7 @@ mod tests {
                 let (lo, hi) = (total / row.k, total.div_ceil(row.k));
                 for cl in 0..row.k as u32 {
                     let cnt = (0..row.ds.n)
-                        .filter(|&i| cats[i] == cat && row.aba.labels[i] == cl)
+                        .filter(|&i| cats[i] == cat && row.aba.partition.labels[i] == cl)
                         .count();
                     assert!(
                         (lo..=hi).contains(&cnt),

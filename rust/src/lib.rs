@@ -16,23 +16,57 @@
 //!   L2 graphs call.
 //!
 //! The [`runtime`] module loads the AOT artifacts through PJRT (`xla`
-//! crate); Python never runs on the request path.
+//! crate, behind the `xla` feature); Python never runs on the request
+//! path.
 //!
 //! ## Quick start
 //!
+//! Build a reusable [`Aba`] session with the builder, then call
+//! [`Anticlusterer::partition`]; the result is a rich [`Partition`]
+//! carrying labels, sizes, both paper objectives, per-cluster diversity
+//! stats, and a phase-timing breakdown:
+//!
 //! ```no_run
-//! use aba::algo::{AbaConfig, run_aba};
+//! use aba::{Aba, Anticlusterer};
 //! use aba::data::synth::{generate, SynthKind};
 //!
 //! let ds = generate(SynthKind::GaussianMixture { components: 8, spread: 4.0 },
 //!                   10_000, 16, 42, "demo");
-//! let labels = run_aba(&ds, 50, &AbaConfig::default()).unwrap();
+//! let mut solver = Aba::builder().build()?;
+//! let part = solver.partition(&ds, 50)?;
+//! println!(
+//!     "objective {:.1}, sizes {}..{}, {:.3}s ({:.3}s ordering + {:.3}s assignment)",
+//!     part.objective,
+//!     part.sizes().iter().min().unwrap(),
+//!     part.sizes().iter().max().unwrap(),
+//!     part.timings.total_secs,
+//!     part.timings.order_secs,
+//!     part.timings.assign_secs,
+//! );
+//! // The session owns its backend and scratch — reuse it for repeated
+//! // partitioning (K-fold CV, per-epoch mini-batches, serving):
+//! for k in [10, 25, 50] {
+//!     let p = solver.partition(&ds, k)?;
+//!     println!("k={k}: {:.1}", p.objective);
+//! }
+//! # Ok::<(), aba::AbaError>(())
 //! ```
+//!
+//! Baselines implement the same [`Anticlusterer`] trait and are
+//! interchangeable behind `Box<dyn Anticlusterer>` — see
+//! [`baselines::RandomPartition`], [`baselines::FastAnticlustering`],
+//! and [`baselines::ExactSolver`].
+//!
+//! Errors are typed ([`AbaError`]) throughout the library core; `anyhow`
+//! survives only at the CLI / experiment-harness boundary. The old free
+//! functions `algo::run_aba` / `algo::run_aba_constrained` remain as
+//! deprecated shims for one release.
 
 pub mod algo;
 pub mod assignment;
 pub mod baselines;
 pub mod data;
+pub mod error;
 pub mod experiments;
 pub mod graph;
 pub mod knn;
@@ -40,8 +74,13 @@ pub mod metrics;
 pub mod pipeline;
 pub mod rng;
 pub mod runtime;
+pub mod solver;
 pub mod testing;
 pub mod util;
 
-/// Crate-wide result type (anyhow-backed).
+pub use error::{AbaError, AbaResult};
+pub use solver::{Aba, AbaBuilder, Anticlusterer, Partition, PhaseTimings};
+
+/// CLI-boundary result type (anyhow-backed). Library-core functions
+/// return [`AbaResult`] instead.
 pub type Result<T> = anyhow::Result<T>;

@@ -10,13 +10,15 @@
 //! aba selftest                          XLA artifacts vs native numerics check
 //! ```
 
-use aba::algo::{run_aba, AbaConfig, ClusterStats};
+use aba::algo::{AbaConfig, Variant};
+use aba::assignment::SolverKind;
 use aba::data::synth::{catalog, load, Scale};
 use aba::experiments::{common::ExpOptions, figs, t11, t4, t4x, t8, t9};
 use aba::pipeline::{run_pipeline, BatchStrategy, PipelineConfig};
+use aba::runtime::BackendKind;
 use aba::util::args::{parse_hier, Args};
 use aba::util::fmt_secs;
-use aba::util::timer::Timer;
+use aba::{Aba, Anticlusterer};
 use anyhow::{bail, Result};
 
 fn main() {
@@ -49,22 +51,27 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
 }
 
 fn print_help() {
+    // Accepted option values derive from the enums' own `ALL` lists, so
+    // help can never drift from what `FromStr` accepts.
     println!(
         "aba — Assignment-Based Anticlustering (paper reproduction)\n\
          \n\
          commands:\n\
            datasets                         list the synthetic dataset catalog\n\
            run --dataset NAME --k K         run ABA on a catalog dataset\n\
-               [--scale paper|small|tiny] [--variant base|small|auto]\n\
-               [--solver lapjv|auction|greedy] [--backend native|xla]\n\
-               [--hier K1xK2[xK3]] [--parallel] [--out labels.csv]\n\
+               [--scale paper|small|tiny] [--variant {variants}]\n\
+               [--solver {solvers}] [--backend {backends}]\n\
+               [--hier K1xK2[xK3]] [--parallel] [--strict] [--out labels.csv]\n\
            table t4|t6|t8|t9|t10|t11        regenerate a paper table\n\
                [--k K] [--datasets a,b|all] [--scale ...] [--quick]\n\
                [--time-limit SECS] [--out-dir DIR]\n\
            fig f5|f6|f7                     regenerate a paper figure\n\
            pipeline [--dataset NAME] [--k K] [--epochs E] [--queue Q]\n\
                     [--strategy aba|random]  stream mini-batches into SGD\n\
-           selftest                         XLA artifacts vs native check"
+           selftest                         XLA artifacts vs native check",
+        variants = Variant::accepted(),
+        solvers = SolverKind::accepted(),
+        backends = BackendKind::accepted(),
     );
 }
 
@@ -92,40 +99,47 @@ fn cmd_run(args: &Args) -> Result<()> {
     let name = args.get("dataset").unwrap_or("travel");
     let scale: Scale = args.get_parse("scale")?.unwrap_or(Scale::Small);
     let k: usize = args.get_parse("k")?.unwrap_or(10);
-    let mut cfg = AbaConfig::default();
+    let mut builder = Aba::builder();
     if let Some(v) = args.get_parse("variant")? {
-        cfg.variant = v;
+        builder = builder.variant(v);
     }
     if let Some(s) = args.get_parse("solver")? {
-        cfg.solver = s;
+        builder = builder.solver(s);
     }
     if let Some(b) = args.get_parse("backend")? {
-        cfg.backend = b;
+        builder = builder.backend(b);
     }
     if let Some(h) = args.get("hier") {
-        cfg.hier = Some(parse_hier(h)?);
+        builder = builder.hier(parse_hier(h)?);
     }
-    cfg.parallel = args.has_flag("parallel");
+    builder = builder
+        .parallel(args.has_flag("parallel"))
+        .strict_divisibility(args.has_flag("strict"));
 
     let ds = load(name, scale)?;
     println!("dataset {} (n={}, d={}), k={k}", ds.name, ds.n, ds.d);
-    let timer = Timer::start();
-    let labels = run_aba(&ds, k, &cfg)?;
-    let secs = timer.secs();
-    let stats = ClusterStats::compute(&ds, &labels, k);
-    println!("cpu            {} s", fmt_secs(secs));
-    println!("ofv (ssd)      {:.4}", stats.ssd_total());
-    println!("W(C) pairwise  {:.4}", stats.pairwise_total());
+    let mut solver = builder.build()?;
+    let part = solver.partition(&ds, k)?;
+    let stats = &part.stats;
+    println!(
+        "cpu            {} s (order {}, assign {}, stats {})",
+        fmt_secs(part.timings.total_secs),
+        fmt_secs(part.timings.order_secs),
+        fmt_secs(part.timings.assign_secs),
+        fmt_secs(part.timings.stats_secs)
+    );
+    println!("ofv (ssd)      {:.4}", part.objective);
+    println!("W(C) pairwise  {:.4}", part.pairwise);
     println!("diversity sd   {:.4}", stats.diversity_sd());
     println!("diversity rng  {:.4}", stats.diversity_range());
     println!(
         "sizes          min={} max={} (ratio {:.2}%)",
-        stats.sizes.iter().min().unwrap(),
-        stats.sizes.iter().max().unwrap(),
+        part.sizes().iter().min().unwrap(),
+        part.sizes().iter().max().unwrap(),
         stats.min_max_ratio_pct()
     );
     if let Some(path) = args.get("out") {
-        aba::data::csv::save_labels(&labels, path)?;
+        aba::data::csv::save_labels(&part.labels, path)?;
         println!("labels written to {path}");
     }
     Ok(())
@@ -220,6 +234,12 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_selftest() -> Result<()> {
+    bail!("selftest needs the XLA runtime; rebuild with `cargo run --features xla -- selftest`")
+}
+
+#[cfg(feature = "xla")]
 fn cmd_selftest() -> Result<()> {
     use aba::runtime::{CostBackend, NativeBackend, XlaBackend};
     let mut xla = XlaBackend::from_default_dir()?;

@@ -12,10 +12,11 @@
 
 pub mod sgd;
 
-use crate::algo::{run_aba, AbaConfig};
+use crate::algo::AbaConfig;
 use crate::baselines::random_part;
 use crate::data::Dataset;
-use anyhow::Result;
+use crate::error::{AbaError, AbaResult};
+use crate::solver::{Aba, Anticlusterer};
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -69,14 +70,20 @@ pub fn run_pipeline(
     ds: &Dataset,
     cfg: &PipelineConfig,
     mut consumer: impl FnMut(&MiniBatch),
-) -> Result<PipelineStats> {
-    assert!(cfg.k >= 1 && cfg.k <= ds.n);
+) -> AbaResult<PipelineStats> {
+    if cfg.k == 0 || cfg.k > ds.n {
+        return Err(AbaError::InvalidK {
+            k: cfg.k,
+            n: ds.n,
+            reason: "mini-batch count must be in 1..=n".into(),
+        });
+    }
     let t0 = Instant::now();
     let (tx, rx) = mpsc::sync_channel::<MiniBatch>(cfg.queue_depth.max(1));
     let mut stats = PipelineStats::default();
 
-    let produced = std::thread::scope(|scope| -> Result<(usize, f64, f64)> {
-        let producer = scope.spawn(move || -> Result<(usize, f64, f64)> {
+    let produced = std::thread::scope(|scope| -> AbaResult<(usize, f64, f64)> {
+        let producer = scope.spawn(move || -> AbaResult<(usize, f64, f64)> {
             let mut produced = 0usize;
             let mut produce_secs = 0f64;
             let mut blocked_secs = 0f64;
@@ -89,12 +96,11 @@ pub fn run_pipeline(
                 let batches: Vec<Vec<usize>> = match &cfg.strategy {
                     BatchStrategy::Aba { cfg: aba_cfg, shuffle_seed } => {
                         if aba_batches.is_none() {
-                            let labels = run_aba(ds, cfg.k, aba_cfg)?;
-                            let mut groups: Vec<Vec<usize>> = vec![Vec::new(); cfg.k];
-                            for (i, &l) in labels.iter().enumerate() {
-                                groups[l as usize].push(i);
-                            }
-                            aba_batches = Some(groups);
+                            // One session per pipeline; ABA partitions are
+                            // deterministic, so its Partition::groups()
+                            // are computed once and reused across epochs.
+                            let mut session = Aba::from_config(aba_cfg.clone())?;
+                            aba_batches = Some(session.partition(ds, cfg.k)?.groups());
                         }
                         let mut order: Vec<usize> = (0..cfg.k).collect();
                         let mut rng =
@@ -218,6 +224,21 @@ mod tests {
         a.sort_unstable();
         b.sort_unstable();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn invalid_k_is_a_typed_error() {
+        let ds = ds();
+        let cfg = PipelineConfig {
+            k: 0,
+            epochs: 1,
+            queue_depth: 1,
+            strategy: BatchStrategy::Random { seed: 1 },
+        };
+        assert!(matches!(
+            run_pipeline(&ds, &cfg, |_| {}),
+            Err(crate::error::AbaError::InvalidK { .. })
+        ));
     }
 
     #[test]

@@ -11,8 +11,12 @@
 //!   cropped before the assignment solve. Oversized requests fall back to
 //!   native (and are counted, so benches can report coverage).
 
+#[cfg(feature = "xla")]
 use super::artifacts::Manifest;
+#[cfg(feature = "xla")]
 use super::client::XlaRuntime;
+use crate::error::AbaError;
+#[cfg(feature = "xla")]
 use anyhow::Result;
 
 /// Which backend to use.
@@ -22,14 +26,48 @@ pub enum BackendKind {
     Xla,
 }
 
-impl std::str::FromStr for BackendKind {
-    type Err = anyhow::Error;
-    fn from_str(s: &str) -> Result<Self> {
-        match s {
-            "native" => Ok(BackendKind::Native),
-            "xla" => Ok(BackendKind::Xla),
-            _ => anyhow::bail!("unknown backend '{s}' (native|xla)"),
+impl BackendKind {
+    /// Every backend, in display order — the single source of the
+    /// accepted CLI values.
+    pub const ALL: [BackendKind; 2] = [BackendKind::Native, BackendKind::Xla];
+
+    /// The canonical (CLI) spelling.
+    pub const fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
         }
+    }
+
+    /// Accepted spellings joined with `|`, for help and error messages.
+    pub fn accepted() -> String {
+        Self::ALL
+            .iter()
+            .map(|b| b.as_str())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = AbaError;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|v| v.as_str() == s)
+            .ok_or_else(|| {
+                AbaError::InvalidInput(format!(
+                    "unknown backend '{s}' (accepted: {})",
+                    BackendKind::accepted()
+                ))
+            })
     }
 }
 
@@ -153,11 +191,12 @@ impl CostBackend for NativeBackend {
 }
 
 // ---------------------------------------------------------------------------
-// XLA backend
+// XLA backend (requires the `xla` feature and built artifacts)
 // ---------------------------------------------------------------------------
 
 /// PJRT-backed backend executing the AOT artifacts, with pad/crop bucket
 /// dispatch and native fallback for oversized shapes.
+#[cfg(feature = "xla")]
 pub struct XlaBackend {
     rt: XlaRuntime,
     native: NativeBackend,
@@ -169,6 +208,7 @@ pub struct XlaBackend {
     pub native_fallbacks: usize,
 }
 
+#[cfg(feature = "xla")]
 impl XlaBackend {
     pub fn new(manifest: Manifest) -> Result<Self> {
         Ok(Self {
@@ -202,6 +242,7 @@ impl XlaBackend {
     }
 }
 
+#[cfg(feature = "xla")]
 impl CostBackend for XlaBackend {
     fn batch_costs(
         &mut self,
@@ -296,11 +337,20 @@ impl CostBackend for XlaBackend {
     }
 }
 
-/// Construct a backend by kind (XLA requires built artifacts).
-pub fn make_backend(kind: BackendKind) -> Result<Box<dyn CostBackend>> {
+/// Construct a backend by kind. XLA requires the `xla` feature and built
+/// artifacts; failures surface as [`AbaError::BackendUnavailable`].
+pub fn make_backend(kind: BackendKind) -> Result<Box<dyn CostBackend>, AbaError> {
     match kind {
         BackendKind::Native => Ok(Box::new(NativeBackend::default())),
-        BackendKind::Xla => Ok(Box::new(XlaBackend::from_default_dir()?)),
+        #[cfg(feature = "xla")]
+        BackendKind::Xla => match XlaBackend::from_default_dir() {
+            Ok(b) => Ok(Box::new(b)),
+            Err(e) => Err(AbaError::BackendUnavailable(format!("{e:#}"))),
+        },
+        #[cfg(not(feature = "xla"))]
+        BackendKind::Xla => Err(AbaError::BackendUnavailable(
+            "this build has no XLA support (rebuild with `--features xla`)".into(),
+        )),
     }
 }
 
@@ -353,6 +403,17 @@ mod tests {
         }
     }
 
+    #[test]
+    fn backend_kind_display_round_trips() {
+        for b in BackendKind::ALL {
+            assert_eq!(b.to_string().parse::<BackendKind>().unwrap(), b);
+        }
+        assert_eq!(BackendKind::accepted(), "native|xla");
+        let err = "gpu".parse::<BackendKind>().unwrap_err();
+        assert!(err.to_string().contains("native|xla"), "{err}");
+    }
+
+    #[cfg(feature = "xla")]
     #[test]
     fn xla_backend_matches_native_with_padding() {
         let dir = crate::runtime::default_artifact_dir();

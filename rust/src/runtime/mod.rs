@@ -17,9 +17,13 @@
 
 pub mod artifacts;
 pub mod backend;
+#[cfg(feature = "xla")]
 pub mod client;
 
-pub use backend::{make_backend, BackendKind, CostBackend, NativeBackend, XlaBackend};
+pub use backend::{make_backend, BackendKind, CostBackend, NativeBackend};
+#[cfg(feature = "xla")]
+pub use backend::XlaBackend;
+#[cfg(feature = "xla")]
 pub use client::XlaRuntime;
 
 use std::path::PathBuf;

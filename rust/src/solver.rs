@@ -1,0 +1,413 @@
+//! The unified solver API: [`Anticlusterer`] sessions and rich
+//! [`Partition`] results.
+//!
+//! Every partitioning algorithm in the crate — ABA itself and the
+//! baselines (`Rand`, `fast_anticlustering`, branch-and-bound) — sits
+//! behind one trait, so callers (the CLI, the mini-batch pipeline, the
+//! experiment harness) can swap algorithms without changing shape:
+//!
+//! ```no_run
+//! use aba::{Aba, Anticlusterer};
+//! use aba::baselines::RandomPartition;
+//! use aba::data::synth::{generate, SynthKind};
+//!
+//! let ds = generate(SynthKind::Uniform, 1_000, 8, 1, "demo");
+//! let mut solvers: Vec<Box<dyn Anticlusterer>> = vec![
+//!     Box::new(Aba::builder().build()?),
+//!     Box::new(RandomPartition::new(7)),
+//! ];
+//! for s in solvers.iter_mut() {
+//!     let part = s.partition(&ds, 10)?;
+//!     println!("{:>12}: objective {:.1}", s.name(), part.objective);
+//! }
+//! # Ok::<(), aba::AbaError>(())
+//! ```
+//!
+//! An [`Aba`] value is a *session*: it owns its cost backend (including
+//! any compiled XLA executables), its constraint set, and the assignment
+//! loop's scratch buffers, all of which are reused across `partition`
+//! calls. Repeated partitioning — K-fold CV, per-epoch mini-batch
+//! construction, serving — should build one session and keep calling it
+//! rather than paying construction and warm-up on every call (see
+//! `benches/bench_aba.rs` for the measured difference).
+
+use crate::algo::{self, AbaConfig, ClusterStats, Constraints, Variant};
+use crate::assignment::SolverKind;
+use crate::data::Dataset;
+use crate::error::{AbaError, AbaResult};
+use crate::runtime::{make_backend, BackendKind, CostBackend};
+use std::time::Instant;
+
+/// A configured, reusable anticlustering algorithm.
+///
+/// `&mut self` lets implementations keep state across calls: scratch
+/// buffers, compiled executables, RNG state.
+pub trait Anticlusterer {
+    /// Partition `ds` into `k` anticlusters.
+    fn partition(&mut self, ds: &Dataset, k: usize) -> AbaResult<Partition>;
+
+    /// Short human-readable algorithm name (used in tables and logs).
+    fn name(&self) -> String;
+}
+
+/// Wall-clock breakdown of one `partition` call, in seconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimings {
+    /// Building the processing order (centroid distances + sort).
+    pub order_secs: f64,
+    /// The assignment loop (cost matrices + LAP solves), or the whole
+    /// solve for algorithms without a separate ordering phase.
+    pub assign_secs: f64,
+    /// Computing the result's `ClusterStats`.
+    pub stats_secs: f64,
+    /// Sum of the phases.
+    pub total_secs: f64,
+}
+
+impl PhaseTimings {
+    /// Algorithm-only seconds (ordering + assignment), excluding the
+    /// stats pass — what runtime tables should report, matching the
+    /// paper's convention.
+    pub fn algo_secs(&self) -> f64 {
+        self.order_secs + self.assign_secs
+    }
+}
+
+/// A partition plus everything callers previously recomputed by hand:
+/// cluster sizes, both paper objectives, per-cluster diversity stats, and
+/// a phase-timing breakdown.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// Anticluster label in `0..k` per object.
+    pub labels: Vec<u32>,
+    /// Number of anticlusters.
+    pub k: usize,
+    /// Centroid-form objective: total SSD to anticluster centroids (the
+    /// `ofv` of the paper's Tables 4/9).
+    pub objective: f64,
+    /// Pairwise objective `W(C)` via Fact 1.
+    pub pairwise: f64,
+    /// Per-anticluster sizes and diversities.
+    pub stats: ClusterStats,
+    /// Where the time went.
+    pub timings: PhaseTimings,
+}
+
+impl Partition {
+    /// Assemble a `Partition` from raw labels, computing the stats and
+    /// stamping the stats phase into `timings`.
+    pub fn from_labels(
+        ds: &Dataset,
+        labels: Vec<u32>,
+        k: usize,
+        mut timings: PhaseTimings,
+    ) -> Self {
+        let t = Instant::now();
+        let stats = ClusterStats::compute(ds, &labels, k);
+        timings.stats_secs = t.elapsed().as_secs_f64();
+        timings.total_secs = timings.order_secs + timings.assign_secs + timings.stats_secs;
+        let objective = stats.ssd_total();
+        let pairwise = stats.pairwise_total();
+        Self { labels, k, objective, pairwise, stats, timings }
+    }
+
+    /// Objects per anticluster.
+    pub fn sizes(&self) -> &[usize] {
+        &self.stats.sizes
+    }
+
+    /// Object indices grouped by anticluster (e.g. one group = one
+    /// mini-batch in the SGD pipeline).
+    pub fn groups(&self) -> Vec<Vec<usize>> {
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.k];
+        for (i, &l) in self.labels.iter().enumerate() {
+            groups[l as usize].push(i);
+        }
+        groups
+    }
+}
+
+/// Builder for an [`Aba`] session. All knobs default to the paper's
+/// production configuration (LAPJV, native backend, automatic variant and
+/// hierarchical decomposition).
+#[derive(Clone, Debug, Default)]
+pub struct AbaBuilder {
+    cfg: AbaConfig,
+    constraints: Option<Constraints>,
+}
+
+impl AbaBuilder {
+    /// Batch-ordering variant (§4.1/§4.2).
+    pub fn variant(mut self, v: Variant) -> Self {
+        self.cfg.variant = v;
+        self
+    }
+
+    /// Per-batch assignment solver.
+    pub fn solver(mut self, s: SolverKind) -> Self {
+        self.cfg.solver = s;
+        self
+    }
+
+    /// Cost-matrix backend (native loops or the AOT Pallas/XLA artifact).
+    pub fn backend(mut self, b: BackendKind) -> Self {
+        self.cfg.backend = b;
+        self
+    }
+
+    /// Explicit hierarchical decomposition `[K1, K2, ...]`; the product
+    /// must equal the `k` later passed to `partition`.
+    pub fn hier(mut self, spec: Vec<usize>) -> Self {
+        self.cfg.hier = Some(spec);
+        self
+    }
+
+    /// Apply the Table-5 decomposition policy automatically for large K.
+    pub fn auto_hier(mut self, on: bool) -> Self {
+        self.cfg.auto_hier = on;
+        self
+    }
+
+    /// Fan hierarchical subproblems out over threads.
+    pub fn parallel(mut self, on: bool) -> Self {
+        self.cfg.parallel = on;
+        self
+    }
+
+    /// Error (instead of warn) when `n % k != 0`, i.e. when anticlusters
+    /// cannot all have exactly equal size.
+    pub fn strict_divisibility(mut self, on: bool) -> Self {
+        self.cfg.strict_divisibility = on;
+        self
+    }
+
+    /// Must-link / cannot-link constraints enforced on every partition.
+    /// The constrained loop uses its own super-object ordering, so
+    /// `variant`, `hier`, and `auto_hier` do not apply when constraints
+    /// are set; `solver` and `backend` do.
+    pub fn constraints(mut self, cons: Constraints) -> Self {
+        self.constraints = Some(cons);
+        self
+    }
+
+    /// Construct the session. Fails with
+    /// [`AbaError::BackendUnavailable`] when the requested backend cannot
+    /// be built (e.g. XLA artifacts missing) and with
+    /// [`AbaError::BadHierSpec`] for a degenerate explicit spec.
+    pub fn build(self) -> AbaResult<Aba> {
+        if let Some(spec) = &self.cfg.hier {
+            if spec.is_empty() || spec.iter().any(|&f| f == 0) {
+                return Err(AbaError::BadHierSpec(format!(
+                    "factors must be >= 1, got {spec:?}"
+                )));
+            }
+        }
+        let backend = make_backend(self.cfg.backend)?;
+        Ok(Aba {
+            cfg: self.cfg,
+            constraints: self.constraints,
+            backend,
+            scratch: algo::core::Scratch::default(),
+        })
+    }
+}
+
+/// A reusable ABA session: configuration + owned backend + scratch.
+///
+/// Build with [`Aba::builder`] (or [`Aba::new`] / [`Aba::from_config`]),
+/// then call [`Anticlusterer::partition`] as many times as needed; the
+/// cost backend (and, for `--backend xla`, its compiled PJRT
+/// executables) and the assignment loop's scratch buffers persist across
+/// calls.
+pub struct Aba {
+    cfg: AbaConfig,
+    constraints: Option<Constraints>,
+    backend: Box<dyn CostBackend>,
+    scratch: algo::core::Scratch,
+}
+
+impl Aba {
+    /// Start building a session.
+    pub fn builder() -> AbaBuilder {
+        AbaBuilder::default()
+    }
+
+    /// A session with the default configuration.
+    pub fn new() -> AbaResult<Self> {
+        Self::builder().build()
+    }
+
+    /// A session from an existing [`AbaConfig`].
+    pub fn from_config(cfg: AbaConfig) -> AbaResult<Self> {
+        AbaBuilder { cfg, constraints: None }.build()
+    }
+
+    /// The session's configuration.
+    pub fn config(&self) -> &AbaConfig {
+        &self.cfg
+    }
+
+    fn partition_flat(&mut self, ds: &Dataset, k: usize) -> AbaResult<Partition> {
+        // One shared flat implementation with run_aba_with_backend; the
+        // session threads its own backend and scratch through it.
+        let (labels, order_secs, assign_secs) = algo::flat_with_scratch(
+            ds,
+            k,
+            &self.cfg,
+            self.backend.as_mut(),
+            &mut self.scratch,
+        )?;
+        let timings = PhaseTimings { order_secs, assign_secs, ..PhaseTimings::default() };
+        Ok(Partition::from_labels(ds, labels, k, timings))
+    }
+}
+
+impl Anticlusterer for Aba {
+    fn partition(&mut self, ds: &Dataset, k: usize) -> AbaResult<Partition> {
+        // Each branch validates exactly once: the constrained loop
+        // validates internally; the other paths validate here.
+        if let Some(cons) = &self.constraints {
+            let mut timings = PhaseTimings::default();
+            let t = Instant::now();
+            let labels = algo::constraints::constrained_with_backend(
+                ds,
+                k,
+                &self.cfg,
+                cons,
+                self.backend.as_mut(),
+            )?;
+            timings.assign_secs = t.elapsed().as_secs_f64();
+            return Ok(Partition::from_labels(ds, labels, k, timings));
+        }
+        algo::validate(ds, k, self.cfg.strict_divisibility)?;
+        if let Some(spec) = algo::effective_spec(ds, k, &self.cfg) {
+            let prod: usize = spec.iter().product();
+            if prod != k {
+                return Err(AbaError::BadHierSpec(format!(
+                    "product of {spec:?} is {prod}, but k={k} was requested"
+                )));
+            }
+            let mut timings = PhaseTimings::default();
+            let t = Instant::now();
+            // Serial subproblems reuse the session's backend (one XLA
+            // compilation for the whole decomposition); parallel workers
+            // use their own native backends.
+            let labels = algo::hierarchical::run_hierarchical_with_backend(
+                ds,
+                &spec,
+                &self.cfg,
+                self.backend.as_mut(),
+            )?;
+            timings.assign_secs = t.elapsed().as_secs_f64();
+            return Ok(Partition::from_labels(ds, labels, k, timings));
+        }
+        self.partition_flat(ds, k)
+    }
+
+    fn name(&self) -> String {
+        "ABA".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthKind};
+
+    #[test]
+    fn session_reuse_is_deterministic() {
+        let ds = generate(SynthKind::Uniform, 200, 4, 9, "s");
+        let mut session = Aba::new().unwrap();
+        let a = session.partition(&ds, 8).unwrap();
+        let b = session.partition(&ds, 8).unwrap();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.objective, b.objective);
+    }
+
+    #[test]
+    fn partition_carries_consistent_stats() {
+        let ds = generate(SynthKind::Uniform, 120, 3, 10, "s");
+        let part = Aba::new().unwrap().partition(&ds, 6).unwrap();
+        assert_eq!(part.k, 6);
+        assert_eq!(part.labels.len(), 120);
+        assert_eq!(part.sizes().iter().sum::<usize>(), 120);
+        let recomputed = ClusterStats::compute(&ds, &part.labels, 6);
+        assert_eq!(part.sizes(), &recomputed.sizes[..]);
+        assert!((part.objective - recomputed.ssd_total()).abs() < 1e-9);
+        assert!((part.pairwise - recomputed.pairwise_total()).abs() < 1e-9);
+        assert!(part.timings.total_secs >= part.timings.stats_secs);
+    }
+
+    #[test]
+    fn groups_partition_all_objects() {
+        let ds = generate(SynthKind::Uniform, 60, 2, 11, "s");
+        let part = Aba::new().unwrap().partition(&ds, 5).unwrap();
+        let groups = part.groups();
+        assert_eq!(groups.len(), 5);
+        let mut seen: Vec<usize> = groups.into_iter().flatten().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..60).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn builder_rejects_zero_factor_spec() {
+        let err = Aba::builder().hier(vec![4, 0]).build().unwrap_err();
+        assert!(matches!(err, AbaError::BadHierSpec(_)), "{err}");
+    }
+
+    #[test]
+    fn hier_product_must_match_k() {
+        let ds = generate(SynthKind::Uniform, 100, 3, 12, "s");
+        let mut session = Aba::builder().hier(vec![2, 3]).build().unwrap();
+        let err = session.partition(&ds, 5).unwrap_err();
+        assert!(matches!(err, AbaError::BadHierSpec(_)), "{err}");
+        assert!(session.partition(&ds, 6).is_ok());
+    }
+
+    #[test]
+    fn k1_is_trivial_through_the_session() {
+        let ds = generate(SynthKind::Uniform, 10, 2, 13, "s");
+        let part = Aba::new().unwrap().partition(&ds, 1).unwrap();
+        assert!(part.labels.iter().all(|&l| l == 0));
+        assert_eq!(part.sizes(), &[10]);
+    }
+
+    #[test]
+    fn invalid_k_is_typed() {
+        let ds = generate(SynthKind::Uniform, 10, 2, 14, "s");
+        let mut session = Aba::new().unwrap();
+        assert!(matches!(
+            session.partition(&ds, 0),
+            Err(AbaError::InvalidK { .. })
+        ));
+        assert!(matches!(
+            session.partition(&ds, 11),
+            Err(AbaError::InvalidK { .. })
+        ));
+    }
+
+    #[test]
+    fn strict_divisibility_rejects_ragged_sizes() {
+        let ds = generate(SynthKind::Uniform, 10, 2, 15, "s");
+        let mut strict = Aba::builder().strict_divisibility(true).build().unwrap();
+        assert!(matches!(
+            strict.partition(&ds, 3),
+            Err(AbaError::InvalidK { .. })
+        ));
+        assert!(strict.partition(&ds, 5).is_ok());
+        // Non-strict only warns.
+        let mut lax = Aba::new().unwrap();
+        assert!(lax.partition(&ds, 3).is_ok());
+    }
+
+    #[test]
+    fn matches_config_equivalent_free_function_path() {
+        let ds = generate(SynthKind::Uniform, 300, 5, 16, "s");
+        let cfg = AbaConfig::default();
+        let mut session = Aba::from_config(cfg.clone()).unwrap();
+        let part = session.partition(&ds, 10).unwrap();
+        let mut backend = make_backend(cfg.backend).unwrap();
+        let labels = algo::run_aba_with_backend(&ds, 10, &cfg, backend.as_mut()).unwrap();
+        assert_eq!(part.labels, labels);
+    }
+}

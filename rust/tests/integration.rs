@@ -1,16 +1,27 @@
 //! Cross-module integration tests: the full system exercised through its
 //! public API, plus the quick-scale experiment harness end to end.
 
-use aba::algo::{run_aba, run_hierarchical, AbaConfig, ClusterStats, Variant};
+use aba::algo::{run_hierarchical, AbaConfig, ClusterStats, Variant};
 use aba::assignment::SolverKind;
 use aba::baselines::exchange::{fast_anticlustering, ExchangeConfig};
 use aba::baselines::random_part::random_partition;
 use aba::data::kmeans::kmeans;
 use aba::data::synth::{generate, load, Scale, SynthKind};
+use aba::data::Dataset;
 use aba::experiments::common::ExpOptions;
 use aba::pipeline::sgd::{synth_labels, LogReg};
 use aba::pipeline::{run_pipeline, BatchStrategy, PipelineConfig};
 use aba::runtime::BackendKind;
+use aba::{Aba, AbaError, Anticlusterer};
+
+/// One-shot session helper used where a test only needs labels.
+fn aba_labels(ds: &Dataset, k: usize, cfg: &AbaConfig) -> Vec<u32> {
+    Aba::from_config(cfg.clone())
+        .unwrap()
+        .partition(ds, k)
+        .unwrap()
+        .labels
+}
 
 fn results_dir() -> std::path::PathBuf {
     std::env::temp_dir().join("aba_integration_results")
@@ -39,7 +50,7 @@ fn aba_beats_random_and_matches_exchange_on_mixture_data() {
         "itest",
     );
     let k = 20;
-    let aba = run_aba(&ds, k, &AbaConfig::default()).unwrap();
+    let aba = aba_labels(&ds, k, &AbaConfig::default());
     let aba_ofv = ClusterStats::compute(&ds, &aba, k).ssd_total();
 
     let rand = random_partition(ds.n, k, 3);
@@ -59,7 +70,7 @@ fn aba_diversity_balance_dominates_baselines() {
     // smaller than both random's and the exchange heuristic's.
     let ds = load("travel", Scale::Tiny).unwrap();
     let k = 10;
-    let aba = run_aba(&ds, k, &AbaConfig::default()).unwrap();
+    let aba = aba_labels(&ds, k, &AbaConfig::default());
     let aba_sd = ClusterStats::compute(&ds, &aba, k).diversity_sd();
 
     let rand = random_partition(ds.n, k, 1);
@@ -75,10 +86,12 @@ fn aba_diversity_balance_dominates_baselines() {
 fn advantage_over_random_grows_with_k() {
     // Table 8 shape: the random-partition deficit widens as K grows.
     let ds = generate(SynthKind::ImageLike { classes: 10 }, 4_096, 16, 2, "t8i");
+    // One reused session across the whole sweep — the serving pattern.
+    let mut session = Aba::new().unwrap();
     let mut devs = Vec::new();
     for &k in &[32usize, 256, 2_048] {
-        let aba = run_aba(&ds, k, &AbaConfig::default()).unwrap();
-        let aba_ofv = ClusterStats::compute(&ds, &aba, k).ssd_total();
+        let part = session.partition(&ds, k).unwrap();
+        let aba_ofv = part.objective;
         let rand = random_partition(ds.n, k, 1);
         let rand_ofv = ClusterStats::compute(&ds, &rand, k).ssd_total();
         devs.push(100.0 * (rand_ofv - aba_ofv) / aba_ofv);
@@ -132,8 +145,7 @@ fn small_variant_improves_tiny_anticlusters() {
     let k = 256;
     let run = |variant| {
         let cfg = AbaConfig { variant, auto_hier: false, ..AbaConfig::default() };
-        let labels = run_aba(&ds, k, &cfg).unwrap();
-        ClusterStats::compute(&ds, &labels, k).ssd_total()
+        Aba::from_config(cfg).unwrap().partition(&ds, k).unwrap().objective
     };
     let base = run(Variant::Base);
     let small = run(Variant::Small);
@@ -147,6 +159,7 @@ fn small_variant_improves_tiny_anticlusters() {
 // Backends agree end to end.
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "xla")]
 #[test]
 fn xla_backend_produces_same_partition_as_native() {
     if !aba::runtime::default_artifact_dir().join("manifest.json").exists() {
@@ -161,8 +174,8 @@ fn xla_backend_produces_same_partition_as_native() {
         auto_hier: false,
         ..AbaConfig::default()
     };
-    let a = run_aba(&ds, k, &native_cfg).unwrap();
-    let b = run_aba(&ds, k, &xla_cfg).unwrap();
+    let a = aba_labels(&ds, k, &native_cfg);
+    let b = aba_labels(&ds, k, &xla_cfg);
     // Tiny float differences may flip ties; objectives must agree closely.
     let oa = ClusterStats::compute(&ds, &a, k).ssd_total();
     let ob = ClusterStats::compute(&ds, &b, k).ssd_total();
@@ -242,15 +255,34 @@ fn all_tables_and_figures_run_quick() {
 #[test]
 fn oversized_k_and_bad_specs_fail_cleanly() {
     let ds = generate(SynthKind::Uniform, 50, 3, 8, "fi");
-    assert!(run_aba(&ds, 51, &AbaConfig::default()).is_err());
-    assert!(run_aba(&ds, 0, &AbaConfig::default()).is_err());
+    let mut session = Aba::new().unwrap();
+    assert!(matches!(
+        session.partition(&ds, 51),
+        Err(AbaError::InvalidK { k: 51, n: 50, .. })
+    ));
+    assert!(matches!(
+        session.partition(&ds, 0),
+        Err(AbaError::InvalidK { k: 0, .. })
+    ));
     // Hier spec whose product exceeds n.
-    assert!(run_hierarchical(&ds, &[8, 8], &AbaConfig::default()).is_err());
-    // Hier spec with product != k is simply a different K — caller
-    // contract; but empty spec errors.
-    assert!(run_hierarchical(&ds, &[], &AbaConfig::default()).is_err());
+    assert!(matches!(
+        run_hierarchical(&ds, &[8, 8], &AbaConfig::default()),
+        Err(AbaError::BadHierSpec(_))
+    ));
+    // Empty spec errors.
+    assert!(matches!(
+        run_hierarchical(&ds, &[], &AbaConfig::default()),
+        Err(AbaError::BadHierSpec(_))
+    ));
+    // A session with an explicit spec whose product != k errors too.
+    let mut hier = Aba::builder().hier(vec![4, 5]).build().unwrap();
+    assert!(matches!(
+        hier.partition(&ds, 21),
+        Err(AbaError::BadHierSpec(_))
+    ));
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn missing_artifacts_dir_yields_helpful_error() {
     std::env::set_var("ABA_ARTIFACTS", "/nonexistent/aba_artifacts");
@@ -262,13 +294,42 @@ fn missing_artifacts_dir_yields_helpful_error() {
     assert!(format!("{err:#}").contains("make artifacts"));
 }
 
+#[cfg(not(feature = "xla"))]
+#[test]
+fn xla_backend_unavailable_without_feature_is_typed() {
+    // Requesting the XLA backend from a build without the `xla` feature
+    // must fail with the typed BackendUnavailable error at session
+    // construction, not at partition time.
+    let err = Aba::builder().backend(BackendKind::Xla).build().unwrap_err();
+    assert!(matches!(err, AbaError::BackendUnavailable(_)), "{err}");
+    assert!(err.to_string().contains("xla"), "{err}");
+}
+
 #[test]
 fn solver_choice_is_pluggable_end_to_end() {
     let ds = generate(SynthKind::Uniform, 300, 4, 9, "sv");
     for solver in [SolverKind::Lapjv, SolverKind::Auction, SolverKind::Greedy] {
-        let cfg = AbaConfig { solver, ..AbaConfig::default() };
-        let labels = run_aba(&ds, 10, &cfg).unwrap();
-        let stats = ClusterStats::compute(&ds, &labels, 10);
-        assert_eq!(stats.sizes.iter().sum::<usize>(), 300);
+        let mut session = Aba::builder().solver(solver).build().unwrap();
+        let part = session.partition(&ds, 10).unwrap();
+        assert_eq!(part.sizes().iter().sum::<usize>(), 300);
+    }
+}
+
+#[test]
+fn baselines_are_interchangeable_behind_the_trait() {
+    let ds = generate(SynthKind::Uniform, 120, 4, 10, "tr");
+    let mut solvers: Vec<Box<dyn Anticlusterer>> = vec![
+        Box::new(Aba::new().unwrap()),
+        Box::new(aba::baselines::RandomPartition::new(3)),
+        Box::new(aba::baselines::FastAnticlustering::random(10, 3)),
+        Box::new(aba::baselines::ExactSolver::new(Some(
+            std::time::Duration::from_millis(50),
+        ))),
+    ];
+    for solver in solvers.iter_mut() {
+        let part = solver.partition(&ds, 6).unwrap();
+        assert_eq!(part.labels.len(), 120, "{}", solver.name());
+        assert_eq!(part.sizes().iter().sum::<usize>(), 120, "{}", solver.name());
+        assert!(part.objective > 0.0, "{}", solver.name());
     }
 }

@@ -3,12 +3,22 @@
 //! set; failures print a replayable seed).
 
 use aba::algo::objective::pairwise_within_brute;
-use aba::algo::{run_aba, run_hierarchical, AbaConfig, ClusterStats};
-use aba::assignment::{assignment_cost, brute, is_valid_assignment, Lapjv};
+use aba::algo::{run_hierarchical, AbaConfig, ClusterStats};
+use aba::assignment::{assignment_cost, brute, is_valid_assignment, solve_max, Lapjv, SolverKind};
 use aba::data::synth::{generate, SynthKind};
 use aba::prop_assert;
 use aba::rng::Pcg32;
 use aba::testing::PropRunner;
+use aba::{Aba, Anticlusterer};
+
+/// One-shot session helper for properties that only need labels.
+fn aba_labels(ds: &aba::data::Dataset, k: usize) -> Result<Vec<u32>, String> {
+    Ok(Aba::new()
+        .map_err(|e| e.to_string())?
+        .partition(ds, k)
+        .map_err(|e| e.to_string())?
+        .labels)
+}
 
 fn rand_dataset(rng: &mut Pcg32, max_n: usize, max_d: usize) -> aba::data::Dataset {
     let n = 4 + rng.gen_index(max_n - 4);
@@ -27,7 +37,7 @@ fn prop_aba_partition_is_valid_and_balanced() {
     PropRunner::new(40).run("aba balanced partition", |rng| {
         let ds = rand_dataset(rng, 300, 8);
         let k = 1 + rng.gen_index(ds.n.min(40));
-        let labels = run_aba(&ds, k, &AbaConfig::default()).map_err(|e| e.to_string())?;
+        let labels = aba_labels(&ds, k)?;
         prop_assert!(labels.len() == ds.n, "label length");
         prop_assert!(labels.iter().all(|&l| (l as usize) < k), "label range");
         let stats = ClusterStats::compute(&ds, &labels, k);
@@ -45,7 +55,7 @@ fn prop_fact1_holds_for_aba_partitions() {
     PropRunner::new(20).run("fact 1 equivalence", |rng| {
         let ds = rand_dataset(rng, 80, 5);
         let k = 2 + rng.gen_index(5.min(ds.n - 2));
-        let labels = run_aba(&ds, k, &AbaConfig::default()).map_err(|e| e.to_string())?;
+        let labels = aba_labels(&ds, k)?;
         let stats = ClusterStats::compute(&ds, &labels, k);
         let pairwise = pairwise_within_brute(&ds, &labels, k);
         let fact1 = stats.pairwise_total();
@@ -76,6 +86,63 @@ fn prop_lapjv_optimal_vs_brute() {
             (gc - wc).abs() <= 1e-4 * wc.abs().max(1.0),
             "lapjv {gc} vs brute {wc} ({nr}x{nc})"
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lapjv_and_auction_match_brute_oracle() {
+    // Solver-parity property: on random max-cost instances up to 7x9,
+    // both exact solvers must reach the brute-force oracle's assignment
+    // cost (auction is epsilon-scaled, hence the small tolerance).
+    PropRunner::new(60).run("lapjv+auction vs brute", |rng| {
+        let nr = 1 + rng.gen_index(7); // <= 7 rows
+        let nc = nr + rng.gen_index(10 - nr); // <= 9 columns
+        let scale = [0.01f32, 1.0, 100.0][rng.gen_index(3)];
+        let cost: Vec<f32> = (0..nr * nc).map(|_| (rng.f32() - 0.4) * scale).collect();
+        let want = brute::solve_max(&cost, nr, nc);
+        let wc = assignment_cost(&cost, nc, &want);
+        for kind in [SolverKind::Lapjv, SolverKind::Auction] {
+            let got = solve_max(kind, &cost, nr, nc);
+            prop_assert!(is_valid_assignment(&got, nc), "{kind:?} validity ({nr}x{nc})");
+            let gc = assignment_cost(&cost, nc, &got);
+            prop_assert!(
+                (gc - wc).abs() <= 1e-3 * wc.abs().max(1.0),
+                "{kind:?} {gc} vs brute {wc} ({nr}x{nc})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_objective_matches_recomputed_stats() {
+    // The rich Partition must be self-consistent: objective, pairwise,
+    // and sizes all equal a fresh ClusterStats recomputation from its
+    // own labels.
+    PropRunner::new(25).run("partition objective consistency", |rng| {
+        let ds = rand_dataset(rng, 200, 6);
+        let k = 1 + rng.gen_index(12.min(ds.n));
+        let part = Aba::new()
+            .map_err(|e| e.to_string())?
+            .partition(&ds, k)
+            .map_err(|e| e.to_string())?;
+        let stats = ClusterStats::compute(&ds, &part.labels, k);
+        let tol = 1e-9 * part.objective.abs().max(1.0);
+        prop_assert!(
+            (part.objective - stats.ssd_total()).abs() <= tol,
+            "objective {} vs recomputed {}",
+            part.objective,
+            stats.ssd_total()
+        );
+        prop_assert!(
+            (part.pairwise - stats.pairwise_total()).abs()
+                <= 1e-9 * part.pairwise.abs().max(1.0),
+            "pairwise {} vs recomputed {}",
+            part.pairwise,
+            stats.pairwise_total()
+        );
+        prop_assert!(part.sizes() == &stats.sizes[..], "sizes mismatch");
         Ok(())
     });
 }
@@ -115,7 +182,7 @@ fn prop_categorical_bounds_never_violated() {
         let cats: Vec<u32> = (0..base.n).map(|_| rng.gen_below(g as u32)).collect();
         let ds = base.with_categories(cats.clone()).map_err(|e| e.to_string())?;
         let k = 2 + rng.gen_index(8.min(ds.n / 2));
-        let labels = run_aba(&ds, k, &AbaConfig::default()).map_err(|e| e.to_string())?;
+        let labels = aba_labels(&ds, k)?;
         for cat in 0..g as u32 {
             let total = cats.iter().filter(|&&c| c == cat).count();
             let (lo, hi) = (total / k, total.div_ceil(k));
@@ -139,7 +206,7 @@ fn prop_aba_never_worse_than_random_on_pairwise_objective() {
     PropRunner::new(20).run("aba >= random", |rng| {
         let ds = rand_dataset(rng, 250, 6);
         let k = 2 + rng.gen_index(10.min(ds.n / 4).max(1));
-        let aba = run_aba(&ds, k, &AbaConfig::default()).map_err(|e| e.to_string())?;
+        let aba = aba_labels(&ds, k)?;
         let aba_w = ClusterStats::compute(&ds, &aba, k).pairwise_total();
         let rand = aba::baselines::random_part::random_partition(ds.n, k, rng.next_u64());
         let rand_w = ClusterStats::compute(&ds, &rand, k).pairwise_total();

@@ -4,7 +4,10 @@
 //! proof that L1 (Pallas) → L2 (JAX) → HLO text → L3 (Rust/PJRT)
 //! composes.
 //!
-//! All tests no-op (with a notice) when `make artifacts` has not run.
+//! All tests no-op (with a notice) when `make artifacts` has not run,
+//! and the whole suite compiles only with the `xla` feature.
+
+#![cfg(feature = "xla")]
 
 use aba::runtime::artifacts::{ArtifactKind, Manifest};
 use aba::runtime::backend::cost_matrix_native;
