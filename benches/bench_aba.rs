@@ -1,71 +1,146 @@
 //! End-to-end ABA benchmarks: runtime scaling in N, K, D; variant and
-//! hierarchical-decomposition ablations; solver ablation; and the
-//! session-reuse amortization of the `Anticlusterer` API.
+//! hierarchical-decomposition ablations; solver ablation; the
+//! session-reuse amortization of the `Anticlusterer` API; and the
+//! parallel runtime (serial vs threaded, with a bit-identity check).
 //!
 //! Regenerates the *performance* claims of the paper at reduced scale:
 //! ABA is O(N(D + log N + K^2)) flat and O(N L K^(2/L)) decomposed
 //! (§4.5); decomposition buys ~2 orders of magnitude at large K for
 //! <0.1% objective loss (Figure 7's message). The session-reuse section
 //! quantifies what a reused `Aba` session saves over cold per-call
-//! construction (scratch/backend reuse — the serving / pipeline /
+//! construction (scratch/backend/pool reuse — the serving / pipeline /
 //! repeated-partitioning hot path).
+//!
+//! Besides the human-readable report, every measurement is appended to
+//! `BENCH_aba.json` (section, label, n, k, d, threads, algorithm
+//! seconds, wall seconds, objective) so the perf trajectory is tracked
+//! across PRs by machines, not eyeballs.
 
 use aba::algo::{AbaConfig, Variant};
 use aba::assignment::SolverKind;
 use aba::data::synth::{generate, SynthKind};
+use aba::runtime::Parallelism;
 use aba::util::timer::timed;
-use aba::{Aba, Anticlusterer};
+use aba::{Aba, Anticlusterer, Partition};
 
 fn mk(n: usize, d: usize, seed: u64) -> aba::data::Dataset {
     generate(SynthKind::GaussianMixture { components: 8, spread: 3.0 }, n, d, seed, "bench")
 }
 
-/// One cold call: build a fresh session (as `run_aba` used to on every
-/// invocation), partition once, drop it.
-fn cold_partition(ds: &aba::data::Dataset, k: usize, cfg: &AbaConfig) -> (f64, f64) {
-    let (part, secs) = timed(|| {
+/// One machine-readable measurement for `BENCH_aba.json`.
+struct Rec {
+    section: &'static str,
+    label: String,
+    n: usize,
+    k: usize,
+    d: usize,
+    threads: usize,
+    /// Ordering + assignment only (the paper's runtime convention).
+    algo_secs: f64,
+    /// Wall clock including session construction and the stats pass.
+    total_secs: f64,
+    objective: f64,
+}
+
+fn record(
+    recs: &mut Vec<Rec>,
+    section: &'static str,
+    label: impl Into<String>,
+    ds: &aba::data::Dataset,
+    k: usize,
+    threads: usize,
+    part: &Partition,
+    wall_secs: f64,
+) {
+    recs.push(Rec {
+        section,
+        label: label.into(),
+        n: ds.n,
+        k,
+        d: ds.d,
+        threads,
+        algo_secs: part.timings.algo_secs(),
+        total_secs: wall_secs,
+        objective: part.objective,
+    });
+}
+
+fn write_json(path: &str, recs: &[Rec]) {
+    let mut s = String::from("[\n");
+    for (i, r) in recs.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"section\": \"{}\", \"label\": \"{}\", \"n\": {}, \"k\": {}, \"d\": {}, \
+             \"threads\": {}, \"algo_secs\": {:.6}, \"total_secs\": {:.6}, \
+             \"objective\": {:.3}}}{}\n",
+            r.section,
+            r.label,
+            r.n,
+            r.k,
+            r.d,
+            r.threads,
+            r.algo_secs,
+            r.total_secs,
+            r.objective,
+            if i + 1 < recs.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    match std::fs::write(path, &s) {
+        Ok(()) => println!("\nwrote {} records to {path}", recs.len()),
+        Err(e) => eprintln!("\nWARN: could not write {path}: {e}"),
+    }
+}
+
+/// One cold call: build a fresh session (as the deprecated free
+/// functions did on every invocation), partition once, drop it. Returns
+/// the partition and the wall time including construction.
+fn cold_partition(ds: &aba::data::Dataset, k: usize, cfg: &AbaConfig) -> (Partition, f64) {
+    timed(|| {
         Aba::from_config(cfg.clone())
             .unwrap()
             .partition(ds, k)
             .unwrap()
-    });
-    (part.objective, secs)
+    })
 }
 
 fn main() {
+    let mut recs: Vec<Rec> = Vec::new();
     println!("# bench_aba — end-to-end runtime scaling");
     println!("\n## N scaling (D=16, K=50, flat)");
     let flat = AbaConfig { auto_hier: false, ..AbaConfig::default() };
     for &n in &[10_000usize, 20_000, 40_000, 80_000] {
         let ds = mk(n, 16, 1);
-        let (ofv, secs) = cold_partition(&ds, 50, &flat);
-        println!("  n={n:>7}: {secs:>7.3}s  ofv={ofv:.1}");
+        let (part, secs) = cold_partition(&ds, 50, &flat);
+        println!("  n={n:>7}: {secs:>7.3}s  ofv={:.1}", part.objective);
+        record(&mut recs, "n_scaling", format!("n{n}"), &ds, 50, 1, &part, secs);
     }
 
     println!("\n## K scaling (N=20000, D=16): flat vs auto-hierarchical");
     for &k in &[50usize, 100, 200, 400, 800] {
         let ds = mk(20_000, 16, 2);
-        let (fo, flat_secs) = cold_partition(&ds, k, &flat);
-        let (ao, auto_secs) = cold_partition(&ds, k, &AbaConfig::default());
+        let (fp, flat_secs) = cold_partition(&ds, k, &flat);
+        let (ap, auto_secs) = cold_partition(&ds, k, &AbaConfig::default());
         println!(
             "  k={k:>4}: flat {flat_secs:>7.3}s | auto {auto_secs:>7.3}s ({:>5.1}x) | ofv loss {:>7.4}%",
             flat_secs / auto_secs.max(1e-9),
-            100.0 * (ao - fo) / fo
+            100.0 * (ap.objective - fp.objective) / fp.objective
         );
+        record(&mut recs, "k_scaling_flat", format!("k{k}"), &ds, k, 1, &fp, flat_secs);
+        record(&mut recs, "k_scaling_auto", format!("k{k}"), &ds, k, 1, &ap, auto_secs);
     }
 
     println!("\n## session reuse (N=40000, D=16, K=50): cold per-call vs one warm session");
     {
         let ds = mk(40_000, 16, 6);
         // Two cold calls, each paying session construction + scratch
-        // warm-up (the old `run_aba` free-function behaviour).
-        let (_, cold1) = cold_partition(&ds, 50, &flat);
-        let (_, cold2) = cold_partition(&ds, 50, &flat);
+        // warm-up (the behaviour of the deprecated one-shot functions).
+        let (c1, cold1) = cold_partition(&ds, 50, &flat);
+        let (c2, cold2) = cold_partition(&ds, 50, &flat);
         // One session, two calls: the second reuses the backend and the
         // assignment loop's scratch buffers.
         let mut session = Aba::from_config(flat.clone()).unwrap();
-        let (_, warm1) = timed(|| session.partition(&ds, 50).unwrap());
-        let (_, warm2) = timed(|| session.partition(&ds, 50).unwrap());
+        let (w1, warm1) = timed(|| session.partition(&ds, 50).unwrap());
+        let (w2, warm2) = timed(|| session.partition(&ds, 50).unwrap());
         let cold_mean = 0.5 * (cold1 + cold2);
         println!("  cold calls:   {cold1:>7.3}s, {cold2:>7.3}s (mean {cold_mean:.3}s)");
         println!(
@@ -77,6 +152,52 @@ fn main() {
             // reporting (wall-clock noise on a loaded box is possible).
             println!("  WARN: warm call slower than cold mean — rerun on an idle machine");
         }
+        record(&mut recs, "session_reuse", "cold1", &ds, 50, 1, &c1, cold1);
+        record(&mut recs, "session_reuse", "cold2", &ds, 50, 1, &c2, cold2);
+        record(&mut recs, "session_reuse", "warm1", &ds, 50, 1, &w1, warm1);
+        record(&mut recs, "session_reuse", "warm2", &ds, 50, 1, &w2, warm2);
+    }
+
+    let auto_threads = Parallelism::Auto.effective_threads();
+    println!("\n## parallel cost path (N=20000, D=16, K=2000 flat): serial vs {auto_threads} threads");
+    {
+        let ds = mk(20_000, 16, 7);
+        let run = |par: Parallelism| {
+            let cfg = AbaConfig { auto_hier: false, parallelism: par, ..AbaConfig::default() };
+            cold_partition(&ds, 2_000, &cfg)
+        };
+        let (sp, serial_secs) = run(Parallelism::Serial);
+        let (tp, par_secs) = run(Parallelism::Threads(auto_threads));
+        assert_eq!(sp.labels, tp.labels, "parallel flat run must be bit-identical");
+        println!(
+            "  serial {serial_secs:>7.3}s | threads({auto_threads}) {par_secs:>7.3}s ({:>5.2}x) | labels bit-identical: yes",
+            serial_secs / par_secs.max(1e-9)
+        );
+        record(&mut recs, "parallel_flat", "serial", &ds, 2_000, 1, &sp, serial_secs);
+        record(&mut recs, "parallel_flat", "threads", &ds, 2_000, auto_threads, &tp, par_secs);
+    }
+
+    println!("\n## parallel fan-out (N=65536, D=16, K=4096 via 64x64): serial vs {auto_threads} threads");
+    {
+        let ds = mk(65_536, 16, 8);
+        let run = |par: Parallelism| {
+            let cfg = AbaConfig {
+                auto_hier: false,
+                hier: Some(vec![64, 64]),
+                parallelism: par,
+                ..AbaConfig::default()
+            };
+            cold_partition(&ds, 4_096, &cfg)
+        };
+        let (sp, serial_secs) = run(Parallelism::Serial);
+        let (tp, par_secs) = run(Parallelism::Threads(auto_threads));
+        assert_eq!(sp.labels, tp.labels, "parallel hierarchical run must be bit-identical");
+        println!(
+            "  serial {serial_secs:>7.3}s | threads({auto_threads}) {par_secs:>7.3}s ({:>5.2}x) | labels bit-identical: yes",
+            serial_secs / par_secs.max(1e-9)
+        );
+        record(&mut recs, "parallel_hier", "serial", &ds, 4_096, 1, &sp, serial_secs);
+        record(&mut recs, "parallel_hier", "threads", &ds, 4_096, auto_threads, &tp, par_secs);
     }
 
     println!("\n## variant ablation (small anticlusters, N=8192, K=2048, i.e. size 4)");
@@ -84,8 +205,9 @@ fn main() {
         let ds = mk(8_192, 16, 3);
         for (name, variant) in [("base", Variant::Base), ("small", Variant::Small)] {
             let cfg = AbaConfig { variant, hier: Some(vec![32, 64]), ..AbaConfig::default() };
-            let (ofv, secs) = cold_partition(&ds, 2_048, &cfg);
-            println!("  {name:>6}: {secs:>7.3}s  ofv={ofv:.1}");
+            let (part, secs) = cold_partition(&ds, 2_048, &cfg);
+            println!("  {name:>6}: {secs:>7.3}s  ofv={:.1}", part.objective);
+            record(&mut recs, "variant", name, &ds, 2_048, 1, &part, secs);
         }
     }
 
@@ -98,8 +220,9 @@ fn main() {
             ("greedy", SolverKind::Greedy),
         ] {
             let cfg = AbaConfig { solver, auto_hier: false, ..AbaConfig::default() };
-            let (ofv, secs) = cold_partition(&ds, 100, &cfg);
-            println!("  {name:>8}: {secs:>7.3}s  ofv={ofv:.1}");
+            let (part, secs) = cold_partition(&ds, 100, &cfg);
+            println!("  {name:>8}: {secs:>7.3}s  ofv={:.1}", part.objective);
+            record(&mut recs, "solver", name, &ds, 100, 1, &part, secs);
         }
     }
 
@@ -109,8 +232,11 @@ fn main() {
         for spec in [vec![64, 64], vec![16, 16, 16], vec![4, 32, 32]] {
             let label = spec.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("x");
             let cfg = AbaConfig { auto_hier: false, hier: Some(spec), ..AbaConfig::default() };
-            let (ofv, secs) = cold_partition(&ds, 4_096, &cfg);
-            println!("  {label:>10}: {secs:>7.3}s  ofv={ofv:.1}");
+            let (part, secs) = cold_partition(&ds, 4_096, &cfg);
+            println!("  {label:>10}: {secs:>7.3}s  ofv={:.1}", part.objective);
+            record(&mut recs, "decomposition", label, &ds, 4_096, 1, &part, secs);
         }
     }
+
+    write_json("BENCH_aba.json", &recs);
 }

@@ -34,9 +34,20 @@ const MASK_COST: f32 = -1e30;
 
 /// Run ABA under pairwise constraints. Returns a label per (original)
 /// object.
+///
+/// # Deprecation path
+///
+/// This shim survives exactly one release: deprecated in 0.2.0, deleted
+/// in 0.3.0. It rebuilds the backend on every call and runs serially;
+/// the session form —
+/// `Aba::builder().constraints(cons).build()?.partition(ds, k)` — keeps
+/// the backend (and any worker pool) warm across calls and honors the
+/// builder's `parallelism` setting.
 #[deprecated(
     since = "0.2.0",
-    note = "build a session instead: `Aba::builder().constraints(cons).build()?.partition(ds, k)`"
+    note = "superseded by sessions \
+            (`Aba::builder().constraints(cons).build()?.partition(ds, k)`); \
+            will be removed in 0.3.0"
 )]
 pub fn run_aba_constrained(
     ds: &Dataset,

@@ -12,12 +12,34 @@
 //! When the dataset carries categories, per-(anticluster, category)
 //! counters enforce the §4.3 upper bounds by masking violating cost
 //! entries to a large negative value before the solve.
+//!
+//! # Parallel execution
+//!
+//! With a non-serial [`Parallelism`], the loop drives two overlapping
+//! optimizations off the session's [`WorkerPool`] (owned by [`Scratch`],
+//! so the threads persist across runs):
+//!
+//! * the backend chunk-parallelizes each batch's cost matrix over rows
+//!   (installed via [`CostBackend::set_pool`]), and
+//! * batch staging is **double-buffered**: while the assignment solver
+//!   runs on batch *t* (on the calling thread), a deferred pool task
+//!   gathers batch *t+1*'s feature rows into the back buffer.
+//!
+//! The cost matrix of batch *t+1* itself cannot be overlapped with the
+//! solve of batch *t*: every full batch assigns one object to *every*
+//! anticluster, so all centroids move between consecutive batches and
+//! the next cost matrix depends on the previous solve. Only the
+//! centroid-independent staging work is hoisted. Both optimizations are
+//! bit-identical to the serial path — tasks compute the same values in
+//! the same per-entry order — which the determinism property tests
+//! assert.
 
 use super::batching::batch_ranges;
 use crate::assignment::{self, Lapjv, SolverKind};
 use crate::data::Dataset;
 use crate::error::{AbaError, AbaResult};
-use crate::runtime::CostBackend;
+use crate::runtime::{CostBackend, Parallelism, WorkerPool};
+use std::sync::{Arc, Mutex};
 
 /// Mask value for forbidden (anticluster, category) assignments. Large
 /// and negative so a max-cost solver avoids it whenever the instance is
@@ -36,18 +58,38 @@ pub struct Scratch {
     counts: Vec<usize>,
     /// f32 mirror of `centroids` handed to the backend.
     centroids_f32: Vec<f32>,
-    /// Gathered batch rows (`m * d`).
+    /// Gathered rows of the current batch (`m * d`).
     xb: Vec<f32>,
+    /// Back buffer: the next batch's rows, staged during the solve.
+    xb_next: Vec<f32>,
     /// Per-batch cost matrix.
     cost: Vec<f32>,
     /// Per-(anticluster, category) counters for the §4.3 variant.
     cat_counts: Vec<usize>,
     /// The LAP solver (owns its own scratch).
     lapjv: Lapjv,
+    /// Session worker pool, built lazily on the first parallel run and
+    /// kept across runs (thread spawning is the expensive part).
+    pool: Option<Arc<WorkerPool>>,
+}
+
+impl Scratch {
+    /// The pool for `par`, if it resolves to more than one thread.
+    /// Cached: rebuilt only when the requested thread count changes.
+    pub(crate) fn pool_for(&mut self, par: Parallelism) -> Option<Arc<WorkerPool>> {
+        let want = par.effective_threads();
+        if want <= 1 {
+            return None;
+        }
+        if self.pool.as_ref().map(|p| p.threads()) != Some(want) {
+            self.pool = Some(Arc::new(WorkerPool::new(want)));
+        }
+        self.pool.clone()
+    }
 }
 
 /// Run Algorithm 1 over the given processing order with throwaway
-/// scratch. `order` must be a permutation of `0..ds.n`.
+/// scratch, serially. `order` must be a permutation of `0..ds.n`.
 pub fn run_with_order(
     ds: &Dataset,
     k: usize,
@@ -55,11 +97,21 @@ pub fn run_with_order(
     solver: SolverKind,
     backend: &mut dyn CostBackend,
 ) -> AbaResult<Vec<u32>> {
-    run_with_order_scratch(ds, k, order, solver, backend, &mut Scratch::default())
+    run_with_order_scratch(
+        ds,
+        k,
+        order,
+        solver,
+        backend,
+        &mut Scratch::default(),
+        Parallelism::Serial,
+    )
 }
 
 /// Run Algorithm 1 over the given processing order, reusing the caller's
-/// [`Scratch`] across calls (the session hot path).
+/// [`Scratch`] across calls (the session hot path). `par` selects the
+/// execution strategy — see the module docs; any setting produces
+/// bit-identical labels.
 pub fn run_with_order_scratch(
     ds: &Dataset,
     k: usize,
@@ -67,6 +119,7 @@ pub fn run_with_order_scratch(
     solver: SolverKind,
     backend: &mut dyn CostBackend,
     scratch: &mut Scratch,
+    par: Parallelism,
 ) -> AbaResult<Vec<u32>> {
     if order.len() != ds.n {
         return Err(AbaError::InvalidOrder { expected: ds.n, got: order.len() });
@@ -78,6 +131,11 @@ pub fn run_with_order_scratch(
             reason: "k must be in 1..=n".into(),
         });
     }
+    // Resolve the worker pool once per run and hand it to the backend so
+    // large cost matrices chunk-parallelize. `None` (serial) explicitly
+    // clears any pool installed by a previous run.
+    let pool = scratch.pool_for(par);
+    backend.set_pool(pool.clone());
     let d = ds.d;
     let mut labels = vec![u32::MAX; ds.n];
 
@@ -128,11 +186,14 @@ pub fn run_with_order_scratch(
     }
 
     // Per-batch buffers reused across batches and, via `scratch`, across
-    // whole runs (zero allocation per batch after warm-up — see
-    // EXPERIMENTS.md §Perf).
+    // whole runs (on the serial path: zero allocation per batch after
+    // warm-up — see EXPERIMENTS.md §Perf; parallel runs add one small
+    // `Arc` job allocation per batch for the deferred staging, plus a
+    // task vector per pooled cost matrix). `xb` carries the current
+    // batch's rows, `xb_next` the staged next batch; they swap every
+    // iteration.
     let xb = &mut scratch.xb;
-    xb.clear();
-    xb.resize(k * d, 0.0);
+    let xb_next = &mut scratch.xb_next;
     let cost = &mut scratch.cost;
     let lapjv = &mut scratch.lapjv;
     // Profiling finding (EXPERIMENTS.md §Perf): the JV column/row-
@@ -144,14 +205,23 @@ pub fn run_with_order_scratch(
     // start here; ABA_LAPJV_WARM=1 re-enables it for ablation.
     lapjv.warm_start = std::env::var_os("ABA_LAPJV_WARM").is_some();
 
-    for &(lo, hi) in &batches[1..] {
+    // Contiguous row gather for one batch (centroid-independent, so it
+    // is safe to stage ahead of the solve).
+    let gather = |batch: &[usize], dst: &mut Vec<f32>| {
+        dst.resize(batch.len() * d, 0.0);
+        for (j, &obj) in batch.iter().enumerate() {
+            dst[j * d..(j + 1) * d].copy_from_slice(ds.row(obj));
+        }
+    };
+
+    if batches.len() > 1 {
+        let (lo, hi) = batches[1];
+        gather(&order[lo..hi], xb);
+    }
+    for (t, &(lo, hi)) in batches.iter().enumerate().skip(1) {
         let m = hi - lo;
         let batch = &order[lo..hi];
-        // Gather batch rows contiguously.
-        xb.resize(m * d, 0.0);
-        for (j, &obj) in batch.iter().enumerate() {
-            xb[j * d..(j + 1) * d].copy_from_slice(ds.row(obj));
-        }
+        debug_assert_eq!(xb.len(), m * d, "batch {t} was staged with the wrong shape");
         // Mirror centroids to f32 for the backend.
         for (dst, &src) in centroids_f32.iter_mut().zip(centroids.iter()) {
             *dst = src as f32;
@@ -172,10 +242,31 @@ pub fn run_with_order_scratch(
             }
         }
 
-        // Max-cost assignment.
-        let assign = match solver {
-            SolverKind::Lapjv => lapjv.solve(&cost[..], m, k, true),
-            other => assignment::solve_max(other, &cost[..], m, k),
+        // Max-cost assignment on the calling thread; meanwhile a
+        // deferred pool task stages batch t+1's rows into the back
+        // buffer (serial runs stage after the solve instead).
+        let next_batch = batches.get(t + 1).map(|&(nlo, nhi)| &order[nlo..nhi]);
+        let assign = {
+            let staged = Mutex::new(std::mem::take(xb_next));
+            let prefetch = |_task: usize| {
+                if let Some(nb) = next_batch {
+                    gather(nb, &mut staged.lock().unwrap());
+                }
+            };
+            let deferred = match (&pool, next_batch) {
+                (Some(p), Some(_)) => Some(p.defer(&prefetch)),
+                _ => None,
+            };
+            let assign = match solver {
+                SolverKind::Lapjv => lapjv.solve(&cost[..], m, k, true),
+                other => assignment::solve_max(other, &cost[..], m, k),
+            };
+            match deferred {
+                Some(df) => df.wait(),
+                None => prefetch(0),
+            }
+            *xb_next = staged.into_inner().unwrap();
+            assign
         };
 
         // Apply assignments + incremental centroid updates.
@@ -193,6 +284,7 @@ pub fn run_with_order_scratch(
                 cat_counts[kk * g + c] += 1;
             }
         }
+        std::mem::swap(xb, xb_next);
     }
 
     debug_assert!(labels.iter().all(|&l| l != u32::MAX));
@@ -315,11 +407,44 @@ mod tests {
             let ds = generate(SynthKind::Uniform, n, 3, seed, "u");
             let order =
                 crate::algo::batching::build_order(&ds, k, crate::algo::Variant::Base, &mut be);
-            let reused =
-                run_with_order_scratch(&ds, k, &order, SolverKind::Lapjv, &mut be, &mut scratch)
-                    .unwrap();
+            let reused = run_with_order_scratch(
+                &ds,
+                k,
+                &order,
+                SolverKind::Lapjv,
+                &mut be,
+                &mut scratch,
+                Parallelism::Serial,
+            )
+            .unwrap();
             let fresh = run_with_order(&ds, k, &order, SolverKind::Lapjv, &mut be).unwrap();
             assert_eq!(reused, fresh, "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn parallel_loop_matches_serial_bitwise() {
+        // Exercises the double-buffered staging path (the pool is present
+        // even when individual cost matrices stay below the parallel
+        // threshold) and pool reuse across shapes within one scratch.
+        let mut scratch = Scratch::default();
+        for &(n, k, seed) in &[(240usize, 8usize, 21u64), (90, 9, 22), (64, 16, 23)] {
+            let ds = generate(SynthKind::Uniform, n, 4, seed, "u");
+            let mut be = NativeBackend::default();
+            let order =
+                crate::algo::batching::build_order(&ds, k, crate::algo::Variant::Base, &mut be);
+            let serial = run_with_order(&ds, k, &order, SolverKind::Lapjv, &mut be).unwrap();
+            let parallel = run_with_order_scratch(
+                &ds,
+                k,
+                &order,
+                SolverKind::Lapjv,
+                &mut be,
+                &mut scratch,
+                Parallelism::Threads(3),
+            )
+            .unwrap();
+            assert_eq!(serial, parallel, "n={n} k={k}");
         }
     }
 

@@ -10,14 +10,27 @@
 //! differ by at most one, the final anticluster sizes also differ by at
 //! most one — verified by property tests.
 //!
-//! Subproblems at each level are independent; with `parallel = true` they
-//! fan out over `std::thread::scope` (each worker gets its own native
-//! backend).
+//! Subproblems at each level are independent. With a non-serial
+//! [`Parallelism`] they fan out as tasks on the session's worker pool
+//! (the same pool that chunk-parallelizes flat cost matrices —
+//! [`crate::runtime::pool`]); each pool thread keeps a thread-local
+//! native backend + scratch that persist across levels and calls.
+//! Fanned-out subproblems run their inner loops serially (the pool
+//! already owns every core), while levels with a single group — always
+//! including the root level — keep the caller's backend and inner
+//! parallelism. Task *i* always solves group *i*, so with the native
+//! backend serial and parallel decompositions produce bit-identical
+//! labels. With the XLA backend the fanned-out levels compute costs
+//! through the native kernels instead of PJRT (clients are not shared
+//! across threads), so parallel results there match serial ones only up
+//! to the usual XLA/native numeric tolerance.
 
 use super::{core, AbaConfig};
 use crate::data::Dataset;
 use crate::error::{AbaError, AbaResult};
-use crate::runtime::{make_backend, CostBackend, NativeBackend};
+use crate::runtime::{make_backend, CostBackend, NativeBackend, Parallelism};
+use std::cell::RefCell;
+use std::sync::Mutex;
 
 /// Derive a balanced decomposition for (n, k), mirroring the paper's
 /// Table 5/7 policy: single level for small K; otherwise the fewest
@@ -70,23 +83,56 @@ pub fn balanced_factorization(k: usize, l: usize) -> Option<Vec<usize>> {
 
 /// Run ABA with an explicit multi-level decomposition. The final number
 /// of anticlusters is `prod(spec)`; labels are in `0..prod(spec)`.
-/// Builds one backend for the whole run; sessions that already own a
-/// backend use [`run_hierarchical_with_backend`] instead.
+/// Builds one backend and throwaway scratch for the whole run; sessions
+/// that already own both use [`run_hierarchical_with_backend`] instead.
 pub fn run_hierarchical(ds: &Dataset, spec: &[usize], cfg: &AbaConfig) -> AbaResult<Vec<u32>> {
     let mut backend = make_backend(cfg.backend)?;
-    run_hierarchical_with_backend(ds, spec, cfg, backend.as_mut())
+    run_hierarchical_with_backend(ds, spec, cfg, backend.as_mut(), &mut core::Scratch::default())
 }
 
-/// As [`run_hierarchical`] against a caller-supplied backend. All
-/// *serial* subproblems share `backend` (and one scratch), so an XLA
-/// backend compiles its executables once for the whole decomposition.
-/// With `cfg.parallel`, workers use their own native backends as
-/// before (PJRT clients are not shared across threads).
+thread_local! {
+    /// Per-thread (backend, scratch) for pool fan-out tasks. Living in a
+    /// thread-local rather than per task, they persist across levels and
+    /// `partition` calls for as long as the pool threads do.
+    static WORKER_STATE: RefCell<(NativeBackend, core::Scratch)> =
+        RefCell::new(Default::default());
+}
+
+/// Split one group into `kl` balanced parts with a flat ABA run,
+/// mapping local labels back to global object indices.
+fn split_group(
+    ds: &Dataset,
+    group: &[usize],
+    kl: usize,
+    level: usize,
+    cfg: &AbaConfig,
+    backend: &mut dyn CostBackend,
+    scratch: &mut core::Scratch,
+) -> AbaResult<Vec<Vec<usize>>> {
+    if kl == 1 {
+        return Ok(vec![group.to_vec()]);
+    }
+    let sub = ds.subset(group, format!("{}::l{}", ds.name, level));
+    let (labels, _, _) = super::flat_with_scratch(&sub, kl, cfg, backend, scratch)?;
+    let mut parts: Vec<Vec<usize>> = vec![Vec::new(); kl];
+    for (local, &global) in group.iter().enumerate() {
+        parts[labels[local] as usize].push(global);
+    }
+    Ok(parts)
+}
+
+/// As [`run_hierarchical`] against a caller-supplied backend and
+/// scratch. Single-group levels (always including the root) share
+/// `backend` and `scratch`, so an XLA backend compiles its executables
+/// once for the whole decomposition and the worker pool persists across
+/// session calls; fanned-out levels run on the pool with thread-local
+/// native backends (PJRT clients are not shared across threads).
 pub fn run_hierarchical_with_backend(
     ds: &Dataset,
     spec: &[usize],
     cfg: &AbaConfig,
     backend: &mut dyn CostBackend,
+    scratch: &mut core::Scratch,
 ) -> AbaResult<Vec<u32>> {
     if spec.is_empty() {
         return Err(AbaError::BadHierSpec("empty hierarchy spec".into()));
@@ -98,65 +144,42 @@ pub fn run_hierarchical_with_backend(
             ds.n
         )));
     }
-    // Flat config for the per-group subproblems (no recursion).
+    // Flat config for the per-group subproblems (no recursion). The
+    // fanned-out variant additionally forces serial inner loops: the
+    // pool already owns every core, so nested parallel cost matrices
+    // would only contend with the fan-out itself.
     let flat_cfg = AbaConfig { hier: None, auto_hier: false, ..cfg.clone() };
-    // Scratch shared by all serial subproblems.
-    let mut scratch = core::Scratch::default();
+    let fan_cfg = AbaConfig { parallelism: Parallelism::Serial, ..flat_cfg.clone() };
+    let pool = scratch.pool_for(cfg.parallelism);
 
     // Current groups of object indices; starts with everything.
     let mut groups: Vec<Vec<usize>> = vec![(0..ds.n).collect()];
     for (level, &kl) in spec.iter().enumerate() {
-        let split_one = |group: &Vec<usize>,
-                         be: &mut dyn CostBackend,
-                         sc: &mut core::Scratch|
-         -> AbaResult<Vec<Vec<usize>>> {
-            if kl == 1 {
-                return Ok(vec![group.clone()]);
-            }
-            let sub = ds.subset(group, format!("{}::l{}", ds.name, level));
-            let (labels, _, _) = super::flat_with_scratch(&sub, kl, &flat_cfg, be, sc)?;
-            let mut parts: Vec<Vec<usize>> = vec![Vec::new(); kl];
-            for (local, &global) in group.iter().enumerate() {
-                parts[labels[local] as usize].push(global);
-            }
-            Ok(parts)
-        };
-
-        let results: Vec<Vec<Vec<usize>>> = if cfg.parallel && groups.len() > 1 {
-            let workers = std::thread::available_parallelism()
-                .map(|p| p.get())
-                .unwrap_or(1)
-                .min(groups.len());
-            let next_idx = std::sync::atomic::AtomicUsize::new(0);
-            let slots: Vec<std::sync::Mutex<Option<AbaResult<Vec<Vec<usize>>>>>> =
-                groups.iter().map(|_| std::sync::Mutex::new(None)).collect();
-            std::thread::scope(|scope| {
-                for _ in 0..workers {
-                    scope.spawn(|| {
-                        let mut be = NativeBackend::default();
-                        let mut sc = core::Scratch::default();
-                        loop {
-                            let i = next_idx.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            if i >= groups.len() {
-                                break;
-                            }
-                            let res = split_one(&groups[i], &mut be, &mut sc);
-                            *slots[i].lock().unwrap() = Some(res);
-                        }
+        let results: Vec<Vec<Vec<usize>>> = match &pool {
+            Some(pool) if groups.len() > 1 => {
+                let slots: Vec<Mutex<Option<AbaResult<Vec<Vec<usize>>>>>> =
+                    groups.iter().map(|_| Mutex::new(None)).collect();
+                pool.run(groups.len(), &|gi| {
+                    let res = WORKER_STATE.with(|state| {
+                        let mut guard = state.borrow_mut();
+                        let (be, sc) = &mut *guard;
+                        split_group(ds, &groups[gi], kl, level, &fan_cfg, be, sc)
                     });
+                    *slots[gi].lock().unwrap() = Some(res);
+                });
+                let mut out = Vec::with_capacity(groups.len());
+                for s in slots {
+                    out.push(s.into_inner().unwrap().expect("pool task ran")?);
                 }
-            });
-            let mut out = Vec::with_capacity(groups.len());
-            for s in slots {
-                out.push(s.into_inner().unwrap().expect("worker ran")?);
+                out
             }
-            out
-        } else {
-            let mut out = Vec::with_capacity(groups.len());
-            for g in &groups {
-                out.push(split_one(g, backend, &mut scratch)?);
+            _ => {
+                let mut out = Vec::with_capacity(groups.len());
+                for g in &groups {
+                    out.push(split_group(ds, g, kl, level, &flat_cfg, backend, scratch)?);
+                }
+                out
             }
-            out
         };
 
         groups = results.into_iter().flatten().collect();
@@ -242,9 +265,11 @@ mod tests {
         let ds = generate(SynthKind::Uniform, 800, 4, 32, "u");
         let mut cfg = AbaConfig::default();
         let serial = run_hierarchical(&ds, &[4, 5], &cfg).unwrap();
-        cfg.parallel = true;
-        let parallel = run_hierarchical(&ds, &[4, 5], &cfg).unwrap();
-        assert_eq!(serial, parallel);
+        for par in [Parallelism::Threads(2), Parallelism::Threads(4), Parallelism::Auto] {
+            cfg.parallelism = par;
+            let parallel = run_hierarchical(&ds, &[4, 5], &cfg).unwrap();
+            assert_eq!(serial, parallel, "{par:?}");
+        }
     }
 
     #[test]

@@ -6,13 +6,19 @@
 //!   variants), including categorical cost masking and the reusable
 //!   [`core::Scratch`] owned by [`crate::solver::Aba`] sessions.
 //! * [`hierarchical`] — the §4.4 decomposition with Proposition-1 size
-//!   guarantees and threaded subproblem fan-out.
+//!   guarantees, fanning subproblems out over the session worker pool
+//!   ([`crate::runtime::pool`]) when the config enables parallelism.
 //! * [`objective`] — Fact-1 objectives and the diversity-balance metrics
 //!   the evaluation tables report.
 //!
 //! The preferred entry point is a [`crate::solver::Aba`] session built
-//! with `Aba::builder()`; the free functions [`run_aba`] and
-//! [`run_aba_constrained`] remain as deprecated shims for one release.
+//! with `Aba::builder()`. The free functions [`run_aba`] and
+//! [`run_aba_constrained`] are deprecated shims kept for exactly one
+//! release: they were superseded by the session API in 0.2.0 and will be
+//! deleted in 0.3.0 — migrate via
+//! `Aba::builder().build()?.partition(ds, k)` (plus
+//! `.constraints(cons)` for the constrained variant), which also returns
+//! the richer [`crate::solver::Partition`] instead of bare labels.
 
 pub mod batching;
 pub mod constraints;
@@ -30,7 +36,7 @@ pub use objective::ClusterStats;
 use crate::assignment::SolverKind;
 use crate::data::Dataset;
 use crate::error::{AbaError, AbaResult};
-use crate::runtime::{BackendKind, CostBackend};
+use crate::runtime::{BackendKind, CostBackend, Parallelism};
 
 /// Batch-ordering variant (paper §4.1–§4.3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -104,8 +110,12 @@ pub struct AbaConfig {
     /// Apply the Table-5-style decomposition rule automatically when K is
     /// large.
     pub auto_hier: bool,
-    /// Fan subproblems out over threads at each hierarchy level.
-    pub parallel: bool,
+    /// How much parallelism the run may use: chunk-parallel cost
+    /// matrices on the flat path and subproblem fan-out on the
+    /// hierarchical path, all on one session-owned worker pool. With
+    /// the native backend, serial and parallel runs produce
+    /// bit-identical labels (XLA caveat: see [`hierarchical`]).
+    pub parallelism: Parallelism,
     /// Reject (instead of warn about) `n % k != 0`, where anticluster
     /// sizes must differ by one.
     pub strict_divisibility: bool,
@@ -119,7 +129,7 @@ impl Default for AbaConfig {
             backend: BackendKind::Native,
             hier: None,
             auto_hier: true,
-            parallel: false,
+            parallelism: Parallelism::Serial,
             strict_divisibility: false,
         }
     }
@@ -175,9 +185,19 @@ pub fn validate(ds: &Dataset, k: usize, strict: bool) -> AbaResult<()> {
 /// Run ABA on a dataset, returning an anticluster label in `0..k` per
 /// object. Honors the categorical variant automatically when the dataset
 /// carries categories (§4.3), and hierarchical decomposition per config.
+///
+/// # Deprecation path
+///
+/// This shim survives exactly one release: deprecated in 0.2.0, deleted
+/// in 0.3.0. It rebuilds the backend, scratch buffers, and worker pool
+/// on every call — the [`crate::solver::Aba`] session keeps all three
+/// warm. Migrate one-shot calls as
+/// `Aba::builder().build()?.partition(ds, k)?.labels` and repeated calls
+/// by holding the session.
 #[deprecated(
     since = "0.2.0",
-    note = "build a reusable session instead: `Aba::builder().build()?.partition(ds, k)`"
+    note = "superseded by sessions (`Aba::builder().build()?.partition(ds, k)`); \
+            will be removed in 0.3.0"
 )]
 pub fn run_aba(ds: &Dataset, k: usize, cfg: &AbaConfig) -> AbaResult<Vec<u32>> {
     // Labels-only path: legacy callers don't pay the Partition stats
@@ -224,7 +244,8 @@ pub(crate) fn flat_with_scratch(
     let order = batching::build_order(ds, k, variant, backend);
     let order_secs = t.elapsed().as_secs_f64();
     let t = std::time::Instant::now();
-    let labels = core::run_with_order_scratch(ds, k, &order, cfg.solver, backend, scratch)?;
+    let labels =
+        core::run_with_order_scratch(ds, k, &order, cfg.solver, backend, scratch, cfg.parallelism)?;
     Ok((labels, order_secs, t.elapsed().as_secs_f64()))
 }
 

@@ -19,6 +19,23 @@
 //! crate, behind the `xla` feature); Python never runs on the request
 //! path.
 //!
+//! ## Module map (code ↔ paper)
+//!
+//! | Module | Paper | What lives there |
+//! |---|---|---|
+//! | [`algo::batching`] | §4.1–§4.3, Figs. 1–3 | The `N↓` sorted order and the small-anticluster / categorical rearrangements that define the batches |
+//! | [`algo::core`] | §4, Algorithm 1 | The assignment loop: per-batch cost matrix → max-cost solve → incremental centroid updates, with categorical cost masking |
+//! | [`assignment`] | §4.2 | The per-batch solvers: LAPJV (default), auction, greedy, and the brute-force oracle the property tests compare against |
+//! | [`algo::constraints`] | §4.3 (extension) | Must-link / cannot-link via super-object contraction and cost masking |
+//! | [`algo::hierarchical`] | §4.4, Lemma 1, Prop. 1 | Multi-level decomposition for large K, fanned out on the worker pool |
+//! | [`algo::objective`] | §3, Fact 1 | Both paper objectives and the per-cluster diversity stats |
+//! | [`runtime`] | §5 (implementation) | Cost backends (native / Pallas-XLA via PJRT) and the [`runtime::pool`] parallel runtime |
+//! | [`baselines`] | §5 (competitors) | `Rand`, the exchange heuristic, branch-and-bound |
+//! | [`data`] | §5, Table 2 | Dataset catalog, synthetic generators, k-means/k-plus seeding |
+//! | [`experiments`] | §5, Tables 4–11, Figs. 5–7 | The harness that regenerates each table and figure |
+//! | [`pipeline`] | §6 (application) | Streaming anticlustered mini-batches into an SGD consumer |
+//! | [`graph`], [`knn`] | §6 (application) | Balanced K-cut partitioning on kNN graphs |
+//!
 //! ## Quick start
 //!
 //! Build a reusable [`Aba`] session with the builder, then call
@@ -26,29 +43,46 @@
 //! carrying labels, sizes, both paper objectives, per-cluster diversity
 //! stats, and a phase-timing breakdown:
 //!
-//! ```no_run
+//! ```
 //! use aba::{Aba, Anticlusterer};
 //! use aba::data::synth::{generate, SynthKind};
 //!
-//! let ds = generate(SynthKind::GaussianMixture { components: 8, spread: 4.0 },
-//!                   10_000, 16, 42, "demo");
+//! let ds = generate(SynthKind::GaussianMixture { components: 4, spread: 4.0 },
+//!                   120, 4, 42, "demo");
 //! let mut solver = Aba::builder().build()?;
-//! let part = solver.partition(&ds, 50)?;
-//! println!(
-//!     "objective {:.1}, sizes {}..{}, {:.3}s ({:.3}s ordering + {:.3}s assignment)",
-//!     part.objective,
-//!     part.sizes().iter().min().unwrap(),
-//!     part.sizes().iter().max().unwrap(),
-//!     part.timings.total_secs,
-//!     part.timings.order_secs,
-//!     part.timings.assign_secs,
-//! );
-//! // The session owns its backend and scratch — reuse it for repeated
-//! // partitioning (K-fold CV, per-epoch mini-batches, serving):
-//! for k in [10, 25, 50] {
+//! let part = solver.partition(&ds, 6)?;
+//! assert_eq!(part.labels.len(), 120);
+//! assert!(part.sizes().iter().all(|&s| s == 20)); // balanced anticlusters
+//! assert!(part.objective > 0.0 && part.timings.total_secs >= 0.0);
+//! // The session owns its backend, scratch, and worker pool — reuse it
+//! // for repeated partitioning (K-fold CV, per-epoch mini-batches,
+//! // serving) instead of paying construction and warm-up every call:
+//! for k in [4, 10, 12] {
 //!     let p = solver.partition(&ds, k)?;
-//!     println!("k={k}: {:.1}", p.objective);
+//!     assert_eq!(p.k, k);
 //! }
+//! # Ok::<(), aba::AbaError>(())
+//! ```
+//!
+//! ## Parallel execution
+//!
+//! Parallelism is a session knob ([`runtime::Parallelism`]): `Serial`
+//! (default), `Threads(n)`, or `Auto` (all cores). One worker pool per
+//! session chunk-parallelizes cost matrices, double-buffers batch
+//! staging, and fans hierarchical subproblems out — and with the native
+//! backend every setting produces **bit-identical labels**
+//! (property-tested), so it is purely a wall-clock knob (XLA caveat:
+//! see [`algo::hierarchical`]):
+//!
+//! ```
+//! use aba::{Aba, Anticlusterer};
+//! use aba::runtime::Parallelism;
+//! use aba::data::synth::{generate, SynthKind};
+//!
+//! let ds = generate(SynthKind::Uniform, 240, 8, 7, "par");
+//! let mut serial = Aba::builder().parallelism(Parallelism::Serial).build()?;
+//! let mut threaded = Aba::builder().parallelism(Parallelism::Threads(2)).build()?;
+//! assert_eq!(serial.partition(&ds, 8)?.labels, threaded.partition(&ds, 8)?.labels);
 //! # Ok::<(), aba::AbaError>(())
 //! ```
 //!
@@ -58,9 +92,10 @@
 //! and [`baselines::ExactSolver`].
 //!
 //! Errors are typed ([`AbaError`]) throughout the library core; `anyhow`
-//! survives only at the CLI / experiment-harness boundary. The old free
-//! functions `algo::run_aba` / `algo::run_aba_constrained` remain as
-//! deprecated shims for one release.
+//! survives only at the CLI / experiment-harness boundary. The free
+//! functions `algo::run_aba` / `algo::run_aba_constrained` are
+//! deprecated shims, deleted in 0.3.0 — see their docs for the migration
+//! path.
 
 pub mod algo;
 pub mod assignment;

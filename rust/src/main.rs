@@ -15,7 +15,7 @@ use aba::assignment::SolverKind;
 use aba::data::synth::{catalog, load, Scale};
 use aba::experiments::{common::ExpOptions, figs, t11, t4, t4x, t8, t9};
 use aba::pipeline::{run_pipeline, BatchStrategy, PipelineConfig};
-use aba::runtime::BackendKind;
+use aba::runtime::{BackendKind, Parallelism};
 use aba::util::args::{parse_hier, Args};
 use aba::util::fmt_secs;
 use aba::{Aba, Anticlusterer};
@@ -61,7 +61,8 @@ fn print_help() {
            run --dataset NAME --k K         run ABA on a catalog dataset\n\
                [--scale paper|small|tiny] [--variant {variants}]\n\
                [--solver {solvers}] [--backend {backends}]\n\
-               [--hier K1xK2[xK3]] [--parallel] [--strict] [--out labels.csv]\n\
+               [--hier K1xK2[xK3]] [--threads {threads}] [--parallel]\n\
+               [--strict] [--out labels.csv]\n\
            table t4|t6|t8|t9|t10|t11        regenerate a paper table\n\
                [--k K] [--datasets a,b|all] [--scale ...] [--quick]\n\
                [--time-limit SECS] [--out-dir DIR]\n\
@@ -72,6 +73,7 @@ fn print_help() {
         variants = Variant::accepted(),
         solvers = SolverKind::accepted(),
         backends = BackendKind::accepted(),
+        threads = Parallelism::accepted(),
     );
 }
 
@@ -112,12 +114,25 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(h) = args.get("hier") {
         builder = builder.hier(parse_hier(h)?);
     }
+    // `--threads serial|auto|<n>` is the parallelism knob; the bare
+    // `--parallel` flag is kept as an alias for `--threads auto`.
+    let par = match args.get_parse::<Parallelism>("threads")? {
+        Some(p) => p,
+        None if args.has_flag("parallel") => Parallelism::Auto,
+        None => Parallelism::Serial,
+    };
     builder = builder
-        .parallel(args.has_flag("parallel"))
+        .parallelism(par)
         .strict_divisibility(args.has_flag("strict"));
 
     let ds = load(name, scale)?;
-    println!("dataset {} (n={}, d={}), k={k}", ds.name, ds.n, ds.d);
+    println!(
+        "dataset {} (n={}, d={}), k={k}, threads={}",
+        ds.name,
+        ds.n,
+        ds.d,
+        par.effective_threads()
+    );
     let mut solver = builder.build()?;
     let part = solver.partition(&ds, k)?;
     let stats = &part.stats;

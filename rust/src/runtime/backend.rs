@@ -10,14 +10,21 @@
 //!   leaves true squared distances unchanged; padded rows/columns are
 //!   cropped before the assignment solve. Oversized requests fall back to
 //!   native (and are counted, so benches can report coverage).
+//!
+//! Both backends accept a session worker pool via
+//! [`CostBackend::set_pool`]: large batch-cost requests are then split
+//! into row chunks and computed concurrently (see [`super::pool`]),
+//! bit-identically to the serial path.
 
 #[cfg(feature = "xla")]
 use super::artifacts::Manifest;
 #[cfg(feature = "xla")]
 use super::client::XlaRuntime;
+use super::pool::WorkerPool;
 use crate::error::AbaError;
 #[cfg(feature = "xla")]
 use anyhow::Result;
+use std::sync::{Arc, Mutex};
 
 /// Which backend to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -89,6 +96,14 @@ pub trait CostBackend {
     /// Squared distances from each row of `x` to a single centroid `mu`.
     fn centroid_distances(&mut self, x: &[f32], n: usize, d: usize, mu: &[f32], out: &mut Vec<f64>);
 
+    /// Install (or clear, with `None`) the worker pool used to
+    /// chunk-parallelize cost computation. The assignment loop calls
+    /// this once per run from the session's [`Parallelism`] setting;
+    /// backends without a parallel path may ignore it.
+    ///
+    /// [`Parallelism`]: super::Parallelism
+    fn set_pool(&mut self, _pool: Option<Arc<WorkerPool>>) {}
+
     /// Descriptive name for logs/benches.
     fn name(&self) -> &'static str;
 }
@@ -97,11 +112,20 @@ pub trait CostBackend {
 // Native backend
 // ---------------------------------------------------------------------------
 
-/// Pure-Rust backend; the perf-tuned reference implementation.
+/// Pure-Rust backend; the perf-tuned reference implementation. With a
+/// pool installed (see [`CostBackend::set_pool`]) large cost matrices
+/// are chunk-parallelized over batch rows — bit-identically to the
+/// serial path, since every entry goes through the same row kernel
+/// (`cost_rows`).
 #[derive(Default)]
 pub struct NativeBackend {
     /// Scratch: per-centroid squared norms.
     c_norms: Vec<f32>,
+    /// Scratch: per-batch-row squared norms.
+    x_norms: Vec<f32>,
+    /// Worker pool for the chunk-parallel path, shared with the owning
+    /// session.
+    pool: Option<Arc<WorkerPool>>,
 }
 
 /// 8-lane unrolled dot product. The multiple independent accumulators
@@ -126,26 +150,105 @@ fn dot8(a: &[f32], b: &[f32]) -> f32 {
     dot
 }
 
-/// Tight-loop cost matrix: `out[i*k + j] = ||x_i - c_j||^2`, computed as
-/// `||x_i||^2 + ||c_j||^2 - 2 <x_i, c_j>` with precomputed centroid norms
-/// (same decomposition as the L1 Pallas kernel).
+/// Squared L2 norm of every `d`-row of `v`, via the same [`dot8`] the
+/// cost kernel uses (so precomputed and inline norms are bit-identical).
+fn row_norms(v: &[f32], rows: usize, d: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(v.len(), rows * d);
+    out.clear();
+    out.extend(v.chunks_exact(d).map(|r| dot8(r, r)));
+}
+
+/// Centroid-tile width for [`cost_rows`]: 64 centroids x 64 features x
+/// 4 bytes = 16 KiB, comfortably L1-resident alongside the x row.
+const TILE_COLS: usize = 64;
+
+/// Minimum `m * k * d` before the pooled path engages; below it, the
+/// ~10us pool dispatch costs more than the loop (one 64x64x32 matrix
+/// sits right at the threshold).
+const PAR_COST_MIN_WORK: usize = 1 << 17;
+
+/// Write rows `r0..r1` of the `m x k` cost matrix into `out`
+/// (`(r1 - r0) * k` entries): `||x_i||^2 + ||c_j||^2 - 2 <x_i, c_j>`
+/// with precomputed row norms `xn` (indexed by global row) and centroid
+/// norms `cn` — the same decomposition as the L1 Pallas kernel. Tiled
+/// over centroid blocks so the active slice of `c` stays cache-resident
+/// while `x` streams. The single kernel behind both the serial and the
+/// chunk-parallel path: each entry depends only on its own row/column,
+/// so any row split or tile shape yields bit-identical results.
+#[allow(clippy::too_many_arguments)]
+fn cost_rows(
+    x: &[f32],
+    xn: &[f32],
+    r0: usize,
+    r1: usize,
+    d: usize,
+    c: &[f32],
+    cn: &[f32],
+    k: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (r1 - r0) * k);
+    let mut jt = 0;
+    while jt < k {
+        let jhi = (jt + TILE_COLS).min(k);
+        for i in r0..r1 {
+            let xi = &x[i * d..(i + 1) * d];
+            let row = &mut out[(i - r0) * k..(i - r0) * k + k];
+            for (j, cj) in c[jt * d..jhi * d].chunks_exact(d).enumerate() {
+                let j = jt + j;
+                row[j] = (xn[i] + cn[j] - 2.0 * dot8(xi, cj)).max(0.0);
+            }
+        }
+        jt = jhi;
+    }
+}
+
+/// Tight-loop cost matrix: `out[i*k + j] = ||x_i - c_j||^2`. One-shot
+/// serial entry point over the shared `cost_rows` kernel;
+/// [`NativeBackend`] adds norm scratch reuse and optional
+/// chunk-parallelism on top.
 pub fn cost_matrix_native(x: &[f32], m: usize, d: usize, c: &[f32], k: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len(), m * d);
     debug_assert_eq!(c.len(), k * d);
     debug_assert_eq!(out.len(), m * k);
-    // Precompute centroid norms.
-    let mut cn = vec![0f32; k];
-    for (j, cj) in c.chunks_exact(d).enumerate() {
-        cn[j] = dot8(cj, cj);
-    }
-    for (i, xi) in x.chunks_exact(d).enumerate() {
-        let xn: f32 = dot8(xi, xi);
-        let row = &mut out[i * k..(i + 1) * k];
-        for (j, cj) in c.chunks_exact(d).enumerate() {
-            let dot = dot8(xi, cj);
-            row[j] = (xn + cn[j] - 2.0 * dot).max(0.0);
-        }
-    }
+    let mut cn = Vec::new();
+    row_norms(c, k, d, &mut cn);
+    let mut xn = Vec::new();
+    row_norms(x, m, d, &mut xn);
+    cost_rows(x, &xn, 0, m, d, c, &cn, k, out);
+}
+
+/// Chunk-parallel cost matrix: contiguous row chunks of `out`, one pool
+/// task per chunk, all through [`cost_rows`] — bit-identical to the
+/// serial path for any thread count.
+#[allow(clippy::too_many_arguments)]
+fn cost_matrix_pooled(
+    pool: &WorkerPool,
+    x: &[f32],
+    xn: &[f32],
+    m: usize,
+    d: usize,
+    c: &[f32],
+    cn: &[f32],
+    k: usize,
+    out: &mut [f32],
+) {
+    // ~4 chunks per thread for load balance without dispatch overhead.
+    let chunk_rows = m.div_ceil(pool.threads() * 4).max(8);
+    let tasks: Vec<Mutex<(usize, &mut [f32])>> = out
+        .chunks_mut(chunk_rows * k)
+        .enumerate()
+        .map(|(ci, chunk)| Mutex::new((ci * chunk_rows, chunk)))
+        .collect();
+    pool.run(tasks.len(), &|ti| {
+        // Each task owns exactly one disjoint chunk; the lock is
+        // uncontended and only converts the shared borrow into the
+        // mutable one the kernel needs.
+        let mut guard = tasks[ti].lock().unwrap();
+        let r0 = guard.0;
+        let rows = guard.1.len() / k;
+        cost_rows(x, xn, r0, r0 + rows, d, c, cn, k, &mut guard.1);
+    });
 }
 
 impl CostBackend for NativeBackend {
@@ -159,8 +262,15 @@ impl CostBackend for NativeBackend {
         out: &mut Vec<f32>,
     ) {
         out.resize(m * k, 0.0);
-        let _ = &mut self.c_norms; // scratch reserved for blocked variant
-        cost_matrix_native(x, m, d, c, k, out);
+        row_norms(c, k, d, &mut self.c_norms);
+        row_norms(x, m, d, &mut self.x_norms);
+        let (cn, xn) = (&self.c_norms[..], &self.x_norms[..]);
+        match self.pool.as_deref() {
+            Some(pool) if m >= 2 && m * k * d >= PAR_COST_MIN_WORK => {
+                cost_matrix_pooled(pool, x, xn, m, d, c, cn, k, out);
+            }
+            _ => cost_rows(x, xn, 0, m, d, c, cn, k, out),
+        }
     }
 
     fn centroid_distances(
@@ -183,6 +293,10 @@ impl CostBackend for NativeBackend {
             }
             out.push(s);
         }
+    }
+
+    fn set_pool(&mut self, pool: Option<Arc<WorkerPool>>) {
+        self.pool = pool;
     }
 
     fn name(&self) -> &'static str {
@@ -332,6 +446,12 @@ impl CostBackend for XlaBackend {
         }
     }
 
+    fn set_pool(&mut self, pool: Option<Arc<WorkerPool>>) {
+        // PJRT executions stay single-client; the pool accelerates the
+        // native fallback path (oversized shapes, execution failures).
+        self.native.set_pool(pool);
+    }
+
     fn name(&self) -> &'static str {
         "xla"
     }
@@ -401,6 +521,40 @@ mod tests {
             }
             assert!((out[i] - want).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn pooled_cost_matrix_is_bit_identical_to_serial() {
+        let mut rng = Pcg32::new(77);
+        // m * k * d = 96 * 64 * 32 = 196608 >= PAR_COST_MIN_WORK, so the
+        // pooled branch actually engages; +1 shapes exercise the ragged
+        // last chunk and partial tiles.
+        for &(m, k, d) in &[(96usize, 64usize, 32usize), (97, 65, 33)] {
+            let x = rand_mat(&mut rng, m, d);
+            let c = rand_mat(&mut rng, k, d);
+            let mut serial = NativeBackend::default();
+            let mut pooled = NativeBackend::default();
+            pooled.set_pool(Some(Arc::new(WorkerPool::new(3))));
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            serial.batch_costs(&x, m, d, &c, k, &mut a);
+            pooled.batch_costs(&x, m, d, &c, k, &mut b);
+            // Exact f32 equality, not tolerance: the parallel split must
+            // not change a single bit.
+            assert_eq!(a, b, "m={m} k={k} d={d}");
+        }
+    }
+
+    #[test]
+    fn one_shot_cost_matrix_matches_backend() {
+        let mut rng = Pcg32::new(78);
+        let (m, k, d) = (17, 9, 6);
+        let x = rand_mat(&mut rng, m, d);
+        let c = rand_mat(&mut rng, k, d);
+        let mut via_backend = Vec::new();
+        NativeBackend::default().batch_costs(&x, m, d, &c, k, &mut via_backend);
+        let mut one_shot = vec![0f32; m * k];
+        cost_matrix_native(&x, m, d, &c, k, &mut one_shot);
+        assert_eq!(via_backend, one_shot);
     }
 
     #[test]

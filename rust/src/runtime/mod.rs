@@ -10,7 +10,10 @@
 //!   → compile once → cached executable → execute,
 //! * [`backend`] — the [`backend::CostBackend`] abstraction the ABA core
 //!   calls: `Native` (pure Rust) or `Xla` (pad to bucket → PJRT → crop),
-//!   selectable per run.
+//!   selectable per run,
+//! * [`pool`] — the session worker pool ([`Parallelism`] /
+//!   [`WorkerPool`]) behind chunk-parallel cost matrices and the
+//!   hierarchical subproblem fan-out.
 //!
 //! Python never runs here; the binary is self-contained once artifacts
 //! are built.
@@ -19,8 +22,10 @@ pub mod artifacts;
 pub mod backend;
 #[cfg(feature = "xla")]
 pub mod client;
+pub mod pool;
 
 pub use backend::{make_backend, BackendKind, CostBackend, NativeBackend};
+pub use pool::{Parallelism, WorkerPool};
 #[cfg(feature = "xla")]
 pub use backend::XlaBackend;
 #[cfg(feature = "xla")]

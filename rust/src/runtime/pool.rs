@@ -1,0 +1,452 @@
+//! The shared worker pool behind every parallel path in the crate.
+//!
+//! One [`WorkerPool`] per `Aba` session (owned by the assignment loop's
+//! `Scratch`, so it is created once and reused across `partition` calls)
+//! serves both parallel workloads:
+//!
+//! * **chunk-parallel cost matrices** — the native backend splits batch
+//!   rows into contiguous chunks and computes them concurrently
+//!   (`runtime::backend`), and
+//! * **hierarchical fan-out** — independent subproblems of one
+//!   decomposition level run as pool tasks (`algo::hierarchical`).
+//!
+//! The pool is deliberately minimal: `threads - 1` persistent workers
+//! plus the calling thread, a FIFO of jobs, and index-claiming inside a
+//! job (a job with `tasks` units hands out indices `0..tasks` through an
+//! atomic counter, so any mix of workers — including the caller, which
+//! always participates — drains it without further coordination). The
+//! caller blocks until its job is fully drained, which is what makes the
+//! lifetime-erasure in [`WorkerPool::run`] sound and keeps results
+//! deterministic: task *i* always computes exactly unit *i*, regardless
+//! of which thread runs it or how many threads exist. Serial and
+//! parallel executions of the same job are therefore bit-identical by
+//! construction.
+//!
+//! How much parallelism a run uses is a session knob, [`Parallelism`]
+//! (`Aba::builder().parallelism(...)`, `--threads` on the CLI), rather
+//! than a per-call flag: `Serial` (the default) never builds a pool at
+//! all.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::error::AbaError;
+
+/// How much parallelism a session may use. With the native backend (the
+/// default), parallel and serial runs produce bit-identical labels
+/// (property-tested), so this is purely a wall-clock knob; the XLA
+/// backend's fanned-out hierarchical levels match serial results only
+/// within numeric tolerance (see [`crate::algo::hierarchical`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Parallelism {
+    /// Everything on the calling thread; no pool is created. The
+    /// default.
+    #[default]
+    Serial,
+    /// A pool of exactly `n` threads (the calling thread counts as one
+    /// of them). `Threads(0)` and `Threads(1)` behave like `Serial`.
+    Threads(usize),
+    /// One thread per available core
+    /// ([`std::thread::available_parallelism`]).
+    Auto,
+}
+
+impl Parallelism {
+    /// The concrete thread count this setting resolves to on this
+    /// machine (>= 1). `1` means "run serially, build no pool".
+    pub fn effective_threads(self) -> usize {
+        match self {
+            Parallelism::Serial => 1,
+            Parallelism::Threads(n) => n.max(1),
+            Parallelism::Auto => std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1),
+        }
+    }
+
+    /// Accepted CLI spellings, for help and error messages.
+    pub fn accepted() -> &'static str {
+        "serial|auto|<n>"
+    }
+}
+
+impl std::fmt::Display for Parallelism {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Parallelism::Serial => f.write_str("serial"),
+            Parallelism::Auto => f.write_str("auto"),
+            Parallelism::Threads(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+impl std::str::FromStr for Parallelism {
+    type Err = AbaError;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "serial" => Ok(Parallelism::Serial),
+            "auto" => Ok(Parallelism::Auto),
+            _ => match s.parse::<usize>() {
+                Ok(n) if n >= 1 => Ok(Parallelism::Threads(n)),
+                _ => Err(AbaError::InvalidInput(format!(
+                    "invalid thread count '{s}' (accepted: {})",
+                    Parallelism::accepted()
+                ))),
+            },
+        }
+    }
+}
+
+/// The erased task callback a job fans out over its workers. Raw pointer
+/// so the job (which is `'static` inside `Arc`) can reference a
+/// stack-borrowed closure; `run`/`defer` guarantee the pointee outlives
+/// every dereference by draining the job before the borrow ends.
+struct TaskRef(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared calls from any thread are fine)
+// and the pointer itself is only dereferenced between job creation and
+// the final `pending == 0` handshake, during which the borrow it came
+// from is provably alive (see `WorkerPool::run` / `Deferred`).
+unsafe impl Send for TaskRef {}
+unsafe impl Sync for TaskRef {}
+
+/// One unit of pool work: `total` independent tasks drained by index
+/// claiming. Also its own completion latch.
+struct Job {
+    task: TaskRef,
+    total: usize,
+    /// Next unclaimed task index (may grow past `total`).
+    next: AtomicUsize,
+    /// Tasks not yet finished; `0` means the job is complete.
+    pending: AtomicUsize,
+    /// Set when any task panicked; re-raised on the calling thread.
+    panicked: AtomicBool,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+impl Job {
+    fn new(f: &(dyn Fn(usize) + Sync), total: usize) -> Self {
+        Self {
+            task: TaskRef(f as *const (dyn Fn(usize) + Sync)),
+            total,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(total),
+            panicked: AtomicBool::new(false),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    /// Claim the next unprocessed task index, if any.
+    fn claim(&self) -> Option<usize> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        (i < self.total).then_some(i)
+    }
+
+    /// All indices handed out (some may still be executing).
+    fn drained(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.total
+    }
+
+    fn run_task(&self, i: usize) {
+        // SAFETY: `run`/`Deferred` keep the closure borrow alive until
+        // `pending` reaches 0, and tasks only execute before that.
+        let f = unsafe { &*self.task.0 };
+        if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+            self.panicked.store(true, Ordering::Relaxed);
+        }
+        if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            *self.done.lock().unwrap() = true;
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Execute any still-unclaimed tasks inline, then block until every
+    /// claimed task has finished.
+    fn help_and_wait(&self) {
+        while let Some(i) = self.claim() {
+            self.run_task(i);
+        }
+        let mut done = self.done.lock().unwrap();
+        while !*done {
+            done = self.done_cv.wait(done).unwrap();
+        }
+    }
+
+    fn check_panic(&self) {
+        if self.panicked.load(Ordering::Relaxed) {
+            panic!("a worker-pool task panicked");
+        }
+    }
+}
+
+struct PoolState {
+    queue: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    available: Condvar,
+}
+
+fn worker_loop(shared: &PoolShared) {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        // Drop fully handed-out jobs off the front.
+        while st.queue.front().is_some_and(|j| j.drained()) {
+            st.queue.pop_front();
+        }
+        if let Some(job) = st.queue.front().cloned() {
+            drop(st);
+            while let Some(i) = job.claim() {
+                job.run_task(i);
+            }
+            st = shared.state.lock().unwrap();
+        } else {
+            st = shared.available.wait(st).unwrap();
+        }
+    }
+}
+
+/// A fixed-size pool of persistent worker threads. See the module docs
+/// for the execution model; construction is the only expensive step
+/// (thread spawns), so sessions build one pool and keep it.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool with `threads` total execution slots: `threads - 1` spawned
+    /// workers plus the calling thread. `threads <= 1` spawns nothing and
+    /// every `run` executes inline.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("aba-pool-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawning worker-pool thread")
+            })
+            .collect();
+        Self { shared, workers, threads }
+    }
+
+    /// Total execution slots (spawned workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn enqueue(&self, job: Arc<Job>) {
+        let single = job.total == 1;
+        self.shared.state.lock().unwrap().queue.push_back(job);
+        // Single-task jobs (the per-batch deferred gathers on the hot
+        // loop) need exactly one worker; waking the whole pool for them
+        // is pure context-switch overhead.
+        if single {
+            self.shared.available.notify_one();
+        } else {
+            self.shared.available.notify_all();
+        }
+    }
+
+    /// Run `f(0), f(1), ..., f(tasks - 1)` across the pool and block
+    /// until all of them finished. The calling thread participates, so
+    /// this also works (serially) on a single-threaded pool. Panics if
+    /// any task panicked.
+    pub fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if tasks == 0 {
+            return;
+        }
+        if self.workers.is_empty() || tasks == 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        let job = Arc::new(Job::new(f, tasks));
+        self.enqueue(Arc::clone(&job));
+        job.help_and_wait();
+        job.check_panic();
+    }
+
+    /// Hand `f` to the pool as a single background task and return a
+    /// [`Deferred`] that must be waited on (dropping waits too). The
+    /// caller keeps its own thread free in the meantime — the overlap
+    /// primitive behind the assignment loop's double-buffered batch
+    /// staging. If no worker picks the task up, `wait` runs it inline.
+    ///
+    /// Crate-private on purpose: soundness rests on the `Deferred`
+    /// guard actually running (wait-on-drop), so the handle must not
+    /// escape to code that could `mem::forget` it while the borrow is
+    /// live.
+    pub(crate) fn defer<'a>(&self, f: &'a (dyn Fn(usize) + Sync)) -> Deferred<'a> {
+        let job = Arc::new(Job::new(f, 1));
+        if !self.workers.is_empty() {
+            self.enqueue(Arc::clone(&job));
+        }
+        Deferred { job, _borrow: PhantomData }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A pending single-task job from [`WorkerPool::defer`]. Tied to the
+/// task closure's borrow: the job is guaranteed finished by the time the
+/// borrow ends, because both [`Deferred::wait`] and the drop guard block
+/// on completion (running the task inline if nobody claimed it).
+pub(crate) struct Deferred<'a> {
+    job: Arc<Job>,
+    _borrow: PhantomData<&'a ()>,
+}
+
+impl Deferred<'_> {
+    /// Block until the task has run (panicking if it panicked).
+    pub(crate) fn wait(self) {
+        self.job.help_and_wait();
+        self.job.check_panic();
+    }
+}
+
+impl Drop for Deferred<'_> {
+    fn drop(&mut self) {
+        // Completion is a safety requirement (the task borrows caller
+        // state), so the guard waits too; unlike `wait` it must not
+        // panic, as it may already be running during an unwind.
+        self.job.help_and_wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallelism_round_trips_and_rejects_garbage() {
+        for (s, want) in [
+            ("serial", Parallelism::Serial),
+            ("auto", Parallelism::Auto),
+            ("4", Parallelism::Threads(4)),
+        ] {
+            assert_eq!(s.parse::<Parallelism>().unwrap(), want);
+            assert_eq!(want.to_string(), s);
+        }
+        for bad in ["0", "-1", "fast", ""] {
+            assert!(bad.parse::<Parallelism>().is_err(), "{bad}");
+        }
+        assert_eq!(Parallelism::Serial.effective_threads(), 1);
+        assert_eq!(Parallelism::Threads(0).effective_threads(), 1);
+        assert_eq!(Parallelism::Threads(7).effective_threads(), 7);
+        assert!(Parallelism::Auto.effective_threads() >= 1);
+    }
+
+    #[test]
+    fn run_executes_every_index_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for tasks in [1usize, 2, 7, 64, 1000] {
+            let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(tasks, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "tasks={tasks}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_threaded_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let sum = AtomicUsize::new(0);
+        pool.run(10, &|i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = WorkerPool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(16, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 800);
+    }
+
+    #[test]
+    fn nested_run_from_a_worker_does_not_deadlock() {
+        let pool = WorkerPool::new(3);
+        let inner_hits = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            pool.run(8, &|_| {
+                inner_hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(inner_hits.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn defer_overlaps_and_completes() {
+        let pool = WorkerPool::new(2);
+        let flag = AtomicBool::new(false);
+        let task = |_i: usize| flag.store(true, Ordering::Relaxed);
+        let deferred = pool.defer(&task);
+        deferred.wait();
+        assert!(flag.load(Ordering::Relaxed));
+        // Dropping without an explicit wait also completes the task.
+        let flag2 = AtomicBool::new(false);
+        let task2 = |_i: usize| flag2.store(true, Ordering::Relaxed);
+        drop(pool.defer(&task2));
+        assert!(flag2.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn defer_on_single_threaded_pool_runs_at_wait() {
+        let pool = WorkerPool::new(1);
+        let hits = AtomicUsize::new(0);
+        let task = |_i: usize| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        };
+        let deferred = pool.defer(&task);
+        deferred.wait();
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker-pool task panicked")]
+    fn task_panics_propagate_to_the_caller() {
+        let pool = WorkerPool::new(2);
+        pool.run(8, &|i| {
+            assert!(i != 3, "boom");
+        });
+    }
+}

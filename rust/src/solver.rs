@@ -35,7 +35,7 @@ use crate::algo::{self, AbaConfig, ClusterStats, Constraints, Variant};
 use crate::assignment::SolverKind;
 use crate::data::Dataset;
 use crate::error::{AbaError, AbaResult};
-use crate::runtime::{make_backend, BackendKind, CostBackend};
+use crate::runtime::{make_backend, BackendKind, CostBackend, Parallelism};
 use std::time::Instant;
 
 /// A configured, reusable anticlustering algorithm.
@@ -168,10 +168,28 @@ impl AbaBuilder {
         self
     }
 
-    /// Fan hierarchical subproblems out over threads.
-    pub fn parallel(mut self, on: bool) -> Self {
-        self.cfg.parallel = on;
+    /// How much parallelism the session may use ([`Parallelism::Serial`]
+    /// by default). A non-serial setting builds one worker pool per
+    /// session — reused across `partition` calls — that
+    /// chunk-parallelizes cost matrices, double-buffers batch staging,
+    /// and fans hierarchical subproblems out. With the native backend
+    /// (the default), parallel and serial runs produce bit-identical
+    /// labels; with the XLA backend, fanned-out hierarchical levels use
+    /// the native kernels and match serial results only within numeric
+    /// tolerance (see [`crate::algo::hierarchical`]).
+    pub fn parallelism(mut self, p: Parallelism) -> Self {
+        self.cfg.parallelism = p;
         self
+    }
+
+    /// Fan work out over all cores (`true` maps to
+    /// [`Parallelism::Auto`]).
+    #[deprecated(
+        since = "0.2.0",
+        note = "superseded by `parallelism(Parallelism::Auto)`; will be removed in 0.3.0"
+    )]
+    pub fn parallel(self, on: bool) -> Self {
+        self.parallelism(if on { Parallelism::Auto } else { Parallelism::Serial })
     }
 
     /// Error (instead of warn) when `n % k != 0`, i.e. when anticlusters
@@ -267,6 +285,10 @@ impl Anticlusterer for Aba {
         // Each branch validates exactly once: the constrained loop
         // validates internally; the other paths validate here.
         if let Some(cons) = &self.constraints {
+            // The constrained loop computes its costs directly through
+            // the backend, so parallelism rides on the backend pool.
+            self.backend
+                .set_pool(self.scratch.pool_for(self.cfg.parallelism));
             let mut timings = PhaseTimings::default();
             let t = Instant::now();
             let labels = algo::constraints::constrained_with_backend(
@@ -289,14 +311,16 @@ impl Anticlusterer for Aba {
             }
             let mut timings = PhaseTimings::default();
             let t = Instant::now();
-            // Serial subproblems reuse the session's backend (one XLA
-            // compilation for the whole decomposition); parallel workers
-            // use their own native backends.
+            // Single-group levels reuse the session's backend and
+            // scratch (one XLA compilation, one persistent worker pool
+            // for the whole decomposition); fanned-out levels run on
+            // that pool with thread-local native backends.
             let labels = algo::hierarchical::run_hierarchical_with_backend(
                 ds,
                 &spec,
                 &self.cfg,
                 self.backend.as_mut(),
+                &mut self.scratch,
             )?;
             timings.assign_secs = t.elapsed().as_secs_f64();
             return Ok(Partition::from_labels(ds, labels, k, timings));
@@ -320,6 +344,41 @@ mod tests {
         let mut session = Aba::new().unwrap();
         let a = session.partition(&ds, 8).unwrap();
         let b = session.partition(&ds, 8).unwrap();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.objective, b.objective);
+    }
+
+    #[test]
+    fn parallel_session_matches_serial_session() {
+        // Flat path: repeated calls on one parallel session (the pool is
+        // created once and must stay invisible in the labels).
+        let flat_ds = generate(SynthKind::Uniform, 300, 5, 17, "s");
+        let mut serial = Aba::new().unwrap();
+        let mut threaded = Aba::builder()
+            .parallelism(Parallelism::Threads(4))
+            .build()
+            .unwrap();
+        for k in [10usize, 6] {
+            let a = serial.partition(&flat_ds, k).unwrap();
+            let b = threaded.partition(&flat_ds, k).unwrap();
+            assert_eq!(a.labels, b.labels, "k={k}");
+            assert_eq!(a.objective, b.objective, "k={k}");
+        }
+        // Explicit hierarchical path: the fan-out runs on the pool.
+        let hier_ds = generate(SynthKind::Uniform, 600, 3, 18, "s");
+        let a = Aba::builder()
+            .hier(vec![3, 4])
+            .build()
+            .unwrap()
+            .partition(&hier_ds, 12)
+            .unwrap();
+        let b = Aba::builder()
+            .hier(vec![3, 4])
+            .parallelism(Parallelism::Threads(4))
+            .build()
+            .unwrap()
+            .partition(&hier_ds, 12)
+            .unwrap();
         assert_eq!(a.labels, b.labels);
         assert_eq!(a.objective, b.objective);
     }

@@ -148,6 +148,116 @@ fn prop_partition_objective_matches_recomputed_stats() {
 }
 
 #[test]
+fn prop_parallel_sessions_bit_identical_to_serial() {
+    // The `Parallelism` knob must be invisible in the results: labels
+    // and both objectives agree exactly between a serial session and a
+    // 4-thread session, across the flat, explicit-hierarchical, and
+    // categorical (§4.3) dispatch paths.
+    use aba::runtime::Parallelism;
+    PropRunner::new(12).run("serial == threads(4)", |rng| {
+        let mut ds = rand_dataset(rng, 260, 6);
+        let mode = rng.gen_index(3);
+        let mut hier: Option<Vec<usize>> = None;
+        match mode {
+            1 => {
+                let (k1, k2) = (2 + rng.gen_index(2), 2 + rng.gen_index(2));
+                if k1 * k2 <= ds.n {
+                    hier = Some(vec![k1, k2]);
+                }
+            }
+            2 => {
+                let g = 2 + rng.gen_index(3);
+                let cats: Vec<u32> = (0..ds.n).map(|_| rng.gen_below(g as u32)).collect();
+                ds = ds.with_categories(cats).map_err(|e| e.to_string())?;
+            }
+            _ => {}
+        }
+        let k: usize = match &hier {
+            Some(spec) => spec.iter().product(),
+            None => 1 + rng.gen_index(ds.n.min(24)),
+        };
+        let build = |par: Parallelism| -> Result<aba::Aba, String> {
+            let mut b = Aba::builder().parallelism(par);
+            if let Some(spec) = &hier {
+                b = b.hier(spec.clone());
+            }
+            b.build().map_err(|e| e.to_string())
+        };
+        let a = build(Parallelism::Serial)?
+            .partition(&ds, k)
+            .map_err(|e| e.to_string())?;
+        let b = build(Parallelism::Threads(4))?
+            .partition(&ds, k)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(
+            a.labels == b.labels,
+            "labels diverge (n={} k={k} mode={mode})",
+            ds.n
+        );
+        prop_assert!(
+            a.objective == b.objective,
+            "objective {} vs {} (n={} k={k} mode={mode})",
+            a.objective,
+            b.objective,
+            ds.n
+        );
+        prop_assert!(a.pairwise == b.pairwise, "pairwise diverges");
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_constrained_partition_matches_serial() {
+    // The must-link / cannot-link loop rides on the backend pool; it
+    // must be exactly as deterministic as the serial path.
+    use aba::algo::Constraints;
+    use aba::runtime::Parallelism;
+    let ds = generate(SynthKind::Uniform, 120, 4, 91, "cons");
+    let cons = Constraints {
+        must_link: vec![vec![0, 1, 2], vec![30, 40]],
+        cannot_link: vec![(3, 4), (5, 99)],
+    };
+    let run = |par: Parallelism| {
+        Aba::builder()
+            .constraints(cons.clone())
+            .parallelism(par)
+            .build()
+            .unwrap()
+            .partition(&ds, 6)
+            .unwrap()
+            .labels
+    };
+    assert_eq!(run(Parallelism::Serial), run(Parallelism::Threads(4)));
+}
+
+#[test]
+fn parallel_flat_large_k_matches_serial() {
+    // Large enough that per-batch cost matrices cross the pooled
+    // threshold (m * k * d = 256 * 256 * 8), so the chunk-parallel
+    // kernel itself is exercised, not just the fan-out.
+    use aba::runtime::Parallelism;
+    let ds = generate(
+        SynthKind::GaussianMixture { components: 8, spread: 3.0 },
+        2_048,
+        8,
+        92,
+        "big",
+    );
+    let run = |par: Parallelism| {
+        let mut s = Aba::builder()
+            .auto_hier(false)
+            .parallelism(par)
+            .build()
+            .unwrap();
+        s.partition(&ds, 256).unwrap()
+    };
+    let a = run(Parallelism::Serial);
+    let b = run(Parallelism::Threads(4));
+    assert_eq!(a.labels, b.labels);
+    assert_eq!(a.objective, b.objective);
+}
+
+#[test]
 fn prop_hierarchical_proposition1() {
     PropRunner::new(25).run("proposition 1 sizes", |rng| {
         let ds = rand_dataset(rng, 400, 6);
