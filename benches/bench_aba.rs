@@ -13,8 +13,11 @@
 //!
 //! Besides the human-readable report, every measurement is appended to
 //! `BENCH_aba.json` (section, label, n, k, d, threads, algorithm
-//! seconds, wall seconds, objective) so the perf trajectory is tracked
-//! across PRs by machines, not eyeballs.
+//! seconds, wall seconds, objective, gathered bytes) so the perf
+//! trajectory is tracked across PRs by machines, not eyeballs. The
+//! `deep_hier_bytes` section runs a 3-level decomposition with the
+//! zero-copy view path and records the bytes actually gathered next to
+//! what the old per-level `Dataset::subset` copy would have cost.
 
 use aba::algo::{AbaConfig, Variant};
 use aba::assignment::SolverKind;
@@ -40,6 +43,9 @@ struct Rec {
     /// Wall clock including session construction and the stats pass.
     total_secs: f64,
     objective: f64,
+    /// Feature bytes actually gathered (copied) during the run, from the
+    /// `data::view` meter. 0 where the section does not measure it.
+    gathered_bytes: u64,
 }
 
 fn record(
@@ -62,6 +68,7 @@ fn record(
         algo_secs: part.timings.algo_secs(),
         total_secs: wall_secs,
         objective: part.objective,
+        gathered_bytes: 0,
     });
 }
 
@@ -71,7 +78,7 @@ fn write_json(path: &str, recs: &[Rec]) {
         s.push_str(&format!(
             "  {{\"section\": \"{}\", \"label\": \"{}\", \"n\": {}, \"k\": {}, \"d\": {}, \
              \"threads\": {}, \"algo_secs\": {:.6}, \"total_secs\": {:.6}, \
-             \"objective\": {:.3}}}{}\n",
+             \"objective\": {:.3}, \"gathered_bytes\": {}}}{}\n",
             r.section,
             r.label,
             r.n,
@@ -81,6 +88,7 @@ fn write_json(path: &str, recs: &[Rec]) {
             r.algo_secs,
             r.total_secs,
             r.objective,
+            r.gathered_bytes,
             if i + 1 < recs.len() { "," } else { "" }
         ));
     }
@@ -236,6 +244,38 @@ fn main() {
             println!("  {label:>10}: {secs:>7.3}s  ofv={:.1}", part.objective);
             record(&mut recs, "decomposition", label, &ds, 4_096, 1, &part, secs);
         }
+    }
+
+    println!("\n## deep hierarchy, zero-copy views (N=100000, D=16, K=5000 via 25x20x10)");
+    {
+        // Levels descend as index views: the only feature copies are the
+        // bounded per-batch stagings, metered by data::view. The old
+        // per-level `Dataset::subset` path would have gathered the full
+        // n x d matrix once per level on top of that staging — reported
+        // side by side so BENCH_aba.json carries the delta.
+        let ds = mk(100_000, 16, 9);
+        let spec = vec![25usize, 20, 10];
+        let levels = spec.len() as u64;
+        let cfg = AbaConfig { auto_hier: false, hier: Some(spec), ..AbaConfig::default() };
+        aba::data::view::reset_gathered_bytes();
+        let (part, secs) = cold_partition(&ds, 5_000, &cfg);
+        let gathered = aba::data::view::gathered_bytes();
+        let per_level_copy = (ds.n * ds.d * std::mem::size_of::<f32>()) as u64 * levels;
+        let mib = |b: u64| b as f64 / (1 << 20) as f64;
+        println!(
+            "  25x20x10: {secs:>7.3}s  ofv={:.1}  staged {:.1} MiB \
+             (per-level copy path would add {:.1} MiB; delta {:.1} MiB)",
+            part.objective,
+            mib(gathered),
+            mib(per_level_copy),
+            mib(per_level_copy)
+        );
+        let mut deep = |label: &str, bytes: u64| {
+            record(&mut recs, "deep_hier_bytes", label, &ds, 5_000, 1, &part, secs);
+            recs.last_mut().unwrap().gathered_bytes = bytes;
+        };
+        deep("view_path", gathered);
+        deep("per_level_copy_equivalent", gathered + per_level_copy);
     }
 
     write_json("BENCH_aba.json", &recs);

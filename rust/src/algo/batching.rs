@@ -11,27 +11,53 @@
 //!   blocks, concatenated round-robin, partial blocks last (Figure 3).
 
 use super::Variant;
-use crate::data::Dataset;
+use crate::data::DataView;
 use crate::runtime::CostBackend;
 
 /// Indices sorted by decreasing distance to the global centroid — the
-/// paper's `N↓`. Ties broken by index for determinism. Distances come
-/// from the backend (i.e. the AOT artifact when running `--backend xla`).
-pub fn sorted_by_centroid_distance(ds: &Dataset, backend: &mut dyn CostBackend) -> Vec<usize> {
-    let mu = ds.global_centroid();
-    let mut dist = Vec::with_capacity(ds.n);
-    backend.centroid_distances(&ds.x, ds.n, ds.d, &mu, &mut dist);
-    let mut idx: Vec<usize> = (0..ds.n).collect();
+/// paper's `N↓`. Ties broken by index for determinism. Identity views
+/// hand the backend their contiguous matrix directly (i.e. the AOT
+/// artifact when running `--backend xla`); index views compute each
+/// distance straight off the view's rows with the same f64 accumulation
+/// as [`crate::runtime::NativeBackend`], so no row is ever staged and
+/// the result is bit-identical to the contiguous native path. (With
+/// `--backend xla` this means index views order through native math —
+/// the same caveat as the hierarchical fan-out, see
+/// [`crate::algo::hierarchical`].)
+pub fn sorted_by_centroid_distance(
+    view: &DataView<'_>,
+    backend: &mut dyn CostBackend,
+) -> Vec<usize> {
+    let mu = view.global_centroid();
+    let n = view.n();
+    let mut dist = Vec::with_capacity(n);
+    match view.contiguous() {
+        Some(x) => backend.centroid_distances(x, n, view.d(), &mu, &mut dist),
+        None => dist.extend((0..n).map(|i| {
+            let mut s = 0f64;
+            for (&a, &b) in view.row(i).iter().zip(&mu) {
+                let diff = (a - b) as f64;
+                s += diff * diff;
+            }
+            s
+        })),
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
     idx.sort_unstable_by(|&a, &b| dist[b].total_cmp(&dist[a]).then(a.cmp(&b)));
     idx
 }
 
 /// Build the processing order for a variant (categorical rearrangement is
-/// applied on top when the dataset has categories; see `build_order`).
-pub fn build_order(ds: &Dataset, k: usize, variant: Variant, backend: &mut dyn CostBackend) -> Vec<usize> {
-    let sorted = sorted_by_centroid_distance(ds, backend);
-    if ds.categories.is_some() {
-        return rearrange_categorical(&sorted, ds.categories.as_ref().unwrap(), k);
+/// applied on top when the view carries categories; see `build_order`).
+pub fn build_order(
+    view: &DataView<'_>,
+    k: usize,
+    variant: Variant,
+    backend: &mut dyn CostBackend,
+) -> Vec<usize> {
+    let sorted = sorted_by_centroid_distance(view, backend);
+    if let Some(cats) = view.categories() {
+        return rearrange_categorical(&sorted, &cats, k);
     }
     match variant {
         Variant::Base => sorted,
@@ -141,7 +167,7 @@ mod tests {
     fn sorted_is_descending() {
         let ds = generate(SynthKind::Uniform, 100, 3, 2, "u");
         let mut be = NativeBackend::default();
-        let order = sorted_by_centroid_distance(&ds, &mut be);
+        let order = sorted_by_centroid_distance(&ds.view(), &mut be);
         let mu = ds.global_centroid();
         let d = |i: usize| crate::data::dataset::sq_dist(ds.row(i), &mu);
         for w in order.windows(2) {
@@ -236,7 +262,7 @@ mod tests {
         // every K-quantile of the sorted order.
         let ds = generate(SynthKind::Uniform, 60, 2, 3, "u");
         let mut be = NativeBackend::default();
-        let sorted = sorted_by_centroid_distance(&ds, &mut be);
+        let sorted = sorted_by_centroid_distance(&ds.view(), &mut be);
         let k = 6;
         let pos_in_sorted: std::collections::HashMap<usize, usize> =
             sorted.iter().enumerate().map(|(p, &i)| (i, p)).collect();
@@ -264,7 +290,7 @@ mod tests {
             .with_categories((0..30).map(|i| (i % 3) as u32).collect())
             .unwrap();
         let mut be = NativeBackend::default();
-        let order = build_order(&ds, 5, Variant::Base, &mut be);
+        let order = build_order(&ds.view(), 5, Variant::Base, &mut be);
         // First 5 objects of the order must share one category (a full
         // K-block from one category sublist).
         let cats = ds.categories.as_ref().unwrap();
@@ -276,9 +302,22 @@ mod tests {
     fn duplicate_distance_ties_are_deterministic() {
         let ds = Dataset::from_rows("dup", &vec![vec![1.0, 1.0]; 10]).unwrap();
         let mut be = NativeBackend::default();
-        let a = sorted_by_centroid_distance(&ds, &mut be);
-        let b = sorted_by_centroid_distance(&ds, &mut be);
+        let a = sorted_by_centroid_distance(&ds.view(), &mut be);
+        let b = sorted_by_centroid_distance(&ds.view(), &mut be);
         assert_eq!(a, b);
         assert_eq!(a, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn index_view_order_matches_contiguous_order() {
+        // An index view over all rows takes the row-wise (zero-staging)
+        // path; the order must be bit-identical to the contiguous fast
+        // path through the backend.
+        let ds = generate(SynthKind::Uniform, 500, 3, 8, "u");
+        let mut be = NativeBackend::default();
+        let idx: Vec<usize> = (0..ds.n).collect();
+        let contiguous = sorted_by_centroid_distance(&ds.view(), &mut be);
+        let rowwise = sorted_by_centroid_distance(&ds.view().select(&idx), &mut be);
+        assert_eq!(contiguous, rowwise);
     }
 }

@@ -17,7 +17,7 @@
 
 use super::batching;
 use crate::assignment::{self, Lapjv, SolverKind};
-use crate::data::Dataset;
+use crate::data::{DataView, Dataset};
 use crate::error::{AbaError, AbaResult};
 use crate::runtime::{make_backend, CostBackend};
 
@@ -56,7 +56,7 @@ pub fn run_aba_constrained(
     cons: &Constraints,
 ) -> AbaResult<Vec<u32>> {
     let mut backend = make_backend(cfg.backend)?;
-    constrained_with_backend(ds, k, cfg, cons, backend.as_mut())
+    constrained_with_backend(&ds.view(), k, cfg, cons, backend.as_mut())
 }
 
 /// The constrained Algorithm-1 loop against a caller-supplied backend
@@ -66,15 +66,16 @@ pub fn run_aba_constrained(
 /// apply to the constrained loop, which has its own super-object
 /// ordering. Validates exactly once (callers do not pre-validate).
 pub fn constrained_with_backend(
-    ds: &Dataset,
+    ds: &DataView<'_>,
     k: usize,
     cfg: &super::AbaConfig,
     cons: &Constraints,
     backend: &mut dyn CostBackend,
 ) -> AbaResult<Vec<u32>> {
-    super::validate(ds, k, cfg.strict_divisibility)?;
+    let n = ds.n();
+    super::validate(n, k, cfg.strict_divisibility)?;
     // --- Union-find over must-link groups -------------------------------
-    let mut parent: Vec<usize> = (0..ds.n).collect();
+    let mut parent: Vec<usize> = (0..n).collect();
     fn find(parent: &mut Vec<usize>, mut x: usize) -> usize {
         while parent[x] != x {
             parent[x] = parent[parent[x]];
@@ -84,10 +85,9 @@ pub fn constrained_with_backend(
     }
     for group in &cons.must_link {
         for &i in group {
-            if i >= ds.n {
+            if i >= n {
                 return Err(AbaError::InvalidInput(format!(
-                    "must-link index {i} out of range (n={})",
-                    ds.n
+                    "must-link index {i} out of range (n={n})"
                 )));
             }
         }
@@ -99,9 +99,9 @@ pub fn constrained_with_backend(
         }
     }
     // Super-object ids.
-    let mut super_of = vec![usize::MAX; ds.n];
+    let mut super_of = vec![usize::MAX; n];
     let mut supers: Vec<Vec<usize>> = Vec::new();
-    for i in 0..ds.n {
+    for i in 0..n {
         let root = find(&mut parent, i);
         if super_of[root] == usize::MAX {
             super_of[root] = supers.len();
@@ -121,10 +121,9 @@ pub fn constrained_with_backend(
     // Cannot-link at super-object granularity; validate consistency.
     let mut conflicts: Vec<(usize, usize)> = Vec::new();
     for &(a, b) in &cons.cannot_link {
-        if a >= ds.n || b >= ds.n {
+        if a >= n || b >= n {
             return Err(AbaError::InvalidInput(format!(
-                "cannot-link index out of range: ({a},{b}) for n={}",
-                ds.n
+                "cannot-link index out of range: ({a},{b}) for n={n}"
             )));
         }
         let (sa, sb) = (super_of[a], super_of[b]);
@@ -138,8 +137,10 @@ pub fn constrained_with_backend(
     conflicts.sort_unstable();
     conflicts.dedup();
 
-    // --- Build the super-object dataset ---------------------------------
-    let d = ds.d;
+    // --- Build the super-object matrix ----------------------------------
+    // Genuinely new data (group means), so it is owned; everything
+    // downstream reads it through a borrowed view like any other input.
+    let d = ds.d();
     let mut sx = vec![0f32; ns * d];
     let mut weight = vec![0usize; ns];
     for (s, members) in supers.iter().enumerate() {
@@ -154,8 +155,7 @@ pub fn constrained_with_backend(
             *v /= wl;
         }
     }
-    let sds = Dataset::from_flat(format!("{}::super", ds.name), ns, d, sx)
-        .map_err(|e| AbaError::InvalidInput(format!("building super-object dataset: {e}")))?;
+    let sds = DataView::over("super", &sx, ns, d);
 
     // Conflict adjacency for masking.
     let mut conflict_adj: Vec<Vec<usize>> = vec![Vec::new(); ns];
@@ -175,7 +175,7 @@ pub fn constrained_with_backend(
     // Soft balance penalty: strong enough to dominate distance terms.
     let mu = sds.global_centroid();
     let mut dists = Vec::new();
-    backend.centroid_distances(&sds.x, ns, d, &mu, &mut dists);
+    backend.centroid_distances(&sx, ns, d, &mu, &mut dists);
     let scale = dists.iter().copied().fold(0f64, f64::max).max(1.0) as f32;
     let penalty = 16.0 * scale;
 
@@ -235,7 +235,7 @@ pub fn constrained_with_backend(
     }
 
     // Expand to original objects.
-    let mut labels = vec![0u32; ds.n];
+    let mut labels = vec![0u32; n];
     for (s, members) in supers.iter().enumerate() {
         for &i in members {
             labels[i] = labels_s[s];

@@ -36,7 +36,7 @@
 
 use super::batching::batch_ranges;
 use crate::assignment::{self, Lapjv, SolverKind};
-use crate::data::Dataset;
+use crate::data::DataView;
 use crate::error::{AbaError, AbaResult};
 use crate::runtime::{CostBackend, Parallelism, WorkerPool};
 use std::sync::{Arc, Mutex};
@@ -89,16 +89,17 @@ impl Scratch {
 }
 
 /// Run Algorithm 1 over the given processing order with throwaway
-/// scratch, serially. `order` must be a permutation of `0..ds.n`.
-pub fn run_with_order(
-    ds: &Dataset,
+/// scratch, serially. Accepts a `&Dataset` or a zero-copy [`DataView`];
+/// `order` must be a permutation of `0..n` (view rows).
+pub fn run_with_order<'a>(
+    data: impl Into<DataView<'a>>,
     k: usize,
     order: &[usize],
     solver: SolverKind,
     backend: &mut dyn CostBackend,
 ) -> AbaResult<Vec<u32>> {
     run_with_order_scratch(
-        ds,
+        &data.into(),
         k,
         order,
         solver,
@@ -111,9 +112,10 @@ pub fn run_with_order(
 /// Run Algorithm 1 over the given processing order, reusing the caller's
 /// [`Scratch`] across calls (the session hot path). `par` selects the
 /// execution strategy — see the module docs; any setting produces
-/// bit-identical labels.
+/// bit-identical labels. The view is read in place: the only feature
+/// copies are the per-batch stagings into `Scratch.xb`/`xb_next`.
 pub fn run_with_order_scratch(
-    ds: &Dataset,
+    ds: &DataView<'_>,
     k: usize,
     order: &[usize],
     solver: SolverKind,
@@ -121,13 +123,14 @@ pub fn run_with_order_scratch(
     scratch: &mut Scratch,
     par: Parallelism,
 ) -> AbaResult<Vec<u32>> {
-    if order.len() != ds.n {
-        return Err(AbaError::InvalidOrder { expected: ds.n, got: order.len() });
+    let n = ds.n();
+    if order.len() != n {
+        return Err(AbaError::InvalidOrder { expected: n, got: order.len() });
     }
-    if k == 0 || k > ds.n {
+    if k == 0 || k > n {
         return Err(AbaError::InvalidK {
             k,
-            n: ds.n,
+            n,
             reason: "k must be in 1..=n".into(),
         });
     }
@@ -136,8 +139,8 @@ pub fn run_with_order_scratch(
     // clears any pool installed by a previous run.
     let pool = scratch.pool_for(par);
     backend.set_pool(pool.clone());
-    let d = ds.d;
-    let mut labels = vec![u32::MAX; ds.n];
+    let d = ds.d();
+    let mut labels = vec![u32::MAX; n];
 
     // Anticluster state: f64 centroids (for exact incremental updates),
     // object counts, and the f32 mirror handed to the backend. All live
@@ -154,24 +157,24 @@ pub fn run_with_order_scratch(
     let centroids_f32 = &mut scratch.centroids_f32;
 
     // Categorical state (§4.3): cap and per-(cluster, category) counters.
-    let (caps, g) = match ds.categories.as_ref() {
-        Some(cats) => {
-            let g = ds.n_categories();
-            let mut totals = vec![0usize; g];
-            for &c in cats.iter() {
-                totals[c as usize] += 1;
-            }
-            let caps: Vec<usize> = totals.iter().map(|&t| t.div_ceil(k)).collect();
-            (caps, g)
+    // `n_categories` is cached on the view (carried through subsetting),
+    // so no rescans happen here.
+    let g = ds.n_categories();
+    let caps: Vec<usize> = if g > 0 {
+        let mut totals = vec![0usize; g];
+        for i in 0..n {
+            totals[ds.category(i) as usize] += 1;
         }
-        None => (Vec::new(), 0),
+        totals.iter().map(|&t| t.div_ceil(k)).collect()
+    } else {
+        Vec::new()
     };
     scratch.cat_counts.clear();
     scratch.cat_counts.resize(k * g, 0);
     let cat_counts = &mut scratch.cat_counts;
 
     // --- First batch: one object per anticluster -----------------------
-    let batches = batch_ranges(ds.n, k);
+    let batches = batch_ranges(n, k);
     let (b0_lo, b0_hi) = batches[0];
     for (slot, &obj) in order[b0_lo..b0_hi].iter().enumerate() {
         labels[obj] = slot as u32;
@@ -180,8 +183,7 @@ pub fn run_with_order_scratch(
             *dst = v as f64;
         }
         if g > 0 {
-            let c = ds.categories.as_ref().unwrap()[obj] as usize;
-            cat_counts[slot * g + c] += 1;
+            cat_counts[slot * g + ds.category(obj) as usize] += 1;
         }
     }
 
@@ -206,13 +208,10 @@ pub fn run_with_order_scratch(
     lapjv.warm_start = std::env::var_os("ABA_LAPJV_WARM").is_some();
 
     // Contiguous row gather for one batch (centroid-independent, so it
-    // is safe to stage ahead of the solve).
-    let gather = |batch: &[usize], dst: &mut Vec<f32>| {
-        dst.resize(batch.len() * d, 0.0);
-        for (j, &obj) in batch.iter().enumerate() {
-            dst[j * d..(j + 1) * d].copy_from_slice(ds.row(obj));
-        }
-    };
+    // is safe to stage ahead of the solve). This bounded staging is the
+    // only feature-row copy on the whole path — metered by
+    // `data::view::gathered_bytes`.
+    let gather = |batch: &[usize], dst: &mut Vec<f32>| ds.gather_rows(batch, dst);
 
     if batches.len() > 1 {
         let (lo, hi) = batches[1];
@@ -231,9 +230,8 @@ pub fn run_with_order_scratch(
 
         // Categorical upper-bound masking (§4.3).
         if g > 0 {
-            let cats = ds.categories.as_ref().unwrap();
             for (j, &obj) in batch.iter().enumerate() {
-                let c = cats[obj] as usize;
+                let c = ds.category(obj) as usize;
                 for kk in 0..k {
                     if cat_counts[kk * g + c] >= caps[c] {
                         cost[j * k + kk] = MASK_COST;
@@ -280,8 +278,7 @@ pub fn run_with_order_scratch(
                 *m_d += (x_d as f64 - *m_d) / counter;
             }
             if g > 0 {
-                let c = ds.categories.as_ref().unwrap()[obj] as usize;
-                cat_counts[kk * g + c] += 1;
+                cat_counts[kk * g + ds.category(obj) as usize] += 1;
             }
         }
         std::mem::swap(xb, xb_next);
@@ -296,11 +293,13 @@ mod tests {
     use super::*;
     use crate::algo::objective::ClusterStats;
     use crate::data::synth::{generate, SynthKind};
+    use crate::data::Dataset;
     use crate::runtime::NativeBackend;
 
     fn run_base(ds: &Dataset, k: usize) -> Vec<u32> {
         let mut be = NativeBackend::default();
-        let order = crate::algo::batching::build_order(ds, k, crate::algo::Variant::Base, &mut be);
+        let order =
+            crate::algo::batching::build_order(&ds.view(), k, crate::algo::Variant::Base, &mut be);
         run_with_order(ds, k, &order, SolverKind::Lapjv, &mut be).unwrap()
     }
 
@@ -364,7 +363,7 @@ mod tests {
         let k = 5;
         let mut be = NativeBackend::default();
         let order =
-            crate::algo::batching::build_order(&ds, k, crate::algo::Variant::Base, &mut be);
+            crate::algo::batching::build_order(&ds.view(), k, crate::algo::Variant::Base, &mut be);
         let labels = run_with_order(&ds, k, &order, SolverKind::Lapjv, &mut be).unwrap();
         // Constraint (5): per category, cluster counts within floor/ceil.
         for gcat in 0..3u32 {
@@ -405,10 +404,14 @@ mod tests {
         let mut scratch = Scratch::default();
         for &(n, k, seed) in &[(100usize, 7usize, 5u64), (60, 10, 6), (100, 7, 5)] {
             let ds = generate(SynthKind::Uniform, n, 3, seed, "u");
-            let order =
-                crate::algo::batching::build_order(&ds, k, crate::algo::Variant::Base, &mut be);
+            let order = crate::algo::batching::build_order(
+                &ds.view(),
+                k,
+                crate::algo::Variant::Base,
+                &mut be,
+            );
             let reused = run_with_order_scratch(
-                &ds,
+                &ds.view(),
                 k,
                 &order,
                 SolverKind::Lapjv,
@@ -431,11 +434,15 @@ mod tests {
         for &(n, k, seed) in &[(240usize, 8usize, 21u64), (90, 9, 22), (64, 16, 23)] {
             let ds = generate(SynthKind::Uniform, n, 4, seed, "u");
             let mut be = NativeBackend::default();
-            let order =
-                crate::algo::batching::build_order(&ds, k, crate::algo::Variant::Base, &mut be);
+            let order = crate::algo::batching::build_order(
+                &ds.view(),
+                k,
+                crate::algo::Variant::Base,
+                &mut be,
+            );
             let serial = run_with_order(&ds, k, &order, SolverKind::Lapjv, &mut be).unwrap();
             let parallel = run_with_order_scratch(
-                &ds,
+                &ds.view(),
                 k,
                 &order,
                 SolverKind::Lapjv,
@@ -454,8 +461,12 @@ mod tests {
         let k = 9;
         for solver in [SolverKind::Lapjv, SolverKind::Auction, SolverKind::Greedy] {
             let mut be = NativeBackend::default();
-            let order =
-                crate::algo::batching::build_order(&ds, k, crate::algo::Variant::Base, &mut be);
+            let order = crate::algo::batching::build_order(
+                &ds.view(),
+                k,
+                crate::algo::Variant::Base,
+                &mut be,
+            );
             let labels = run_with_order(&ds, k, &order, solver, &mut be).unwrap();
             let stats = ClusterStats::compute(&ds, &labels, k);
             assert!(stats.sizes.iter().all(|&s| s == 10), "{solver:?}");
@@ -474,8 +485,12 @@ mod tests {
         let k = 12;
         let obj = |solver| {
             let mut be = NativeBackend::default();
-            let order =
-                crate::algo::batching::build_order(&ds, k, crate::algo::Variant::Base, &mut be);
+            let order = crate::algo::batching::build_order(
+                &ds.view(),
+                k,
+                crate::algo::Variant::Base,
+                &mut be,
+            );
             let labels = run_with_order(&ds, k, &order, solver, &mut be).unwrap();
             ClusterStats::compute(&ds, &labels, k).ssd_total()
         };

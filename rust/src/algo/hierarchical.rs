@@ -10,11 +10,19 @@
 //! differ by at most one, the final anticluster sizes also differ by at
 //! most one — verified by property tests.
 //!
+//! Groups are passed down the levels as zero-copy index views
+//! ([`DataView::select`]): no feature row is ever gathered per level —
+//! the old `Dataset::subset` copy (one full `n x d` matrix per level)
+//! is gone, and the only staging left is the assignment loop's bounded
+//! per-batch `Scratch.xb` gather. That is what makes deep specs (e.g.
+//! `--hier 50x40x25`) on very large datasets memory-feasible.
+//!
 //! Subproblems at each level are independent. With a non-serial
 //! [`Parallelism`] they fan out as tasks on the session's worker pool
 //! (the same pool that chunk-parallelizes flat cost matrices —
 //! [`crate::runtime::pool`]); each pool thread keeps a thread-local
-//! native backend + scratch that persist across levels and calls.
+//! native backend + scratch that persist across levels and calls, and
+//! the index views mean worker tasks allocate no per-group sub-dataset.
 //! Fanned-out subproblems run their inner loops serially (the pool
 //! already owns every core), while levels with a single group — always
 //! including the root level — keep the caller's backend and inner
@@ -26,7 +34,7 @@
 //! to the usual XLA/native numeric tolerance.
 
 use super::{core, AbaConfig};
-use crate::data::Dataset;
+use crate::data::DataView;
 use crate::error::{AbaError, AbaResult};
 use crate::runtime::{make_backend, CostBackend, NativeBackend, Parallelism};
 use std::cell::RefCell;
@@ -83,11 +91,22 @@ pub fn balanced_factorization(k: usize, l: usize) -> Option<Vec<usize>> {
 
 /// Run ABA with an explicit multi-level decomposition. The final number
 /// of anticlusters is `prod(spec)`; labels are in `0..prod(spec)`.
-/// Builds one backend and throwaway scratch for the whole run; sessions
-/// that already own both use [`run_hierarchical_with_backend`] instead.
-pub fn run_hierarchical(ds: &Dataset, spec: &[usize], cfg: &AbaConfig) -> AbaResult<Vec<u32>> {
+/// Accepts a `&Dataset` or a zero-copy [`DataView`]. Builds one backend
+/// and throwaway scratch for the whole run; sessions that already own
+/// both use [`run_hierarchical_with_backend`] instead.
+pub fn run_hierarchical<'a>(
+    data: impl Into<DataView<'a>>,
+    spec: &[usize],
+    cfg: &AbaConfig,
+) -> AbaResult<Vec<u32>> {
     let mut backend = make_backend(cfg.backend)?;
-    run_hierarchical_with_backend(ds, spec, cfg, backend.as_mut(), &mut core::Scratch::default())
+    run_hierarchical_with_backend(
+        &data.into(),
+        spec,
+        cfg,
+        backend.as_mut(),
+        &mut core::Scratch::default(),
+    )
 }
 
 thread_local! {
@@ -98,13 +117,13 @@ thread_local! {
         RefCell::new(Default::default());
 }
 
-/// Split one group into `kl` balanced parts with a flat ABA run,
-/// mapping local labels back to global object indices.
+/// Split one group into `kl` balanced parts with a flat ABA run over a
+/// zero-copy index view of the group (no feature-row gather), mapping
+/// local labels back to global object indices.
 fn split_group(
-    ds: &Dataset,
+    view: &DataView<'_>,
     group: &[usize],
     kl: usize,
-    level: usize,
     cfg: &AbaConfig,
     backend: &mut dyn CostBackend,
     scratch: &mut core::Scratch,
@@ -112,7 +131,7 @@ fn split_group(
     if kl == 1 {
         return Ok(vec![group.to_vec()]);
     }
-    let sub = ds.subset(group, format!("{}::l{}", ds.name, level));
+    let sub = view.select(group);
     let (labels, _, _) = super::flat_with_scratch(&sub, kl, cfg, backend, scratch)?;
     let mut parts: Vec<Vec<usize>> = vec![Vec::new(); kl];
     for (local, &global) in group.iter().enumerate() {
@@ -128,7 +147,7 @@ fn split_group(
 /// session calls; fanned-out levels run on the pool with thread-local
 /// native backends (PJRT clients are not shared across threads).
 pub fn run_hierarchical_with_backend(
-    ds: &Dataset,
+    view: &DataView<'_>,
     spec: &[usize],
     cfg: &AbaConfig,
     backend: &mut dyn CostBackend,
@@ -137,11 +156,11 @@ pub fn run_hierarchical_with_backend(
     if spec.is_empty() {
         return Err(AbaError::BadHierSpec("empty hierarchy spec".into()));
     }
+    let n = view.n();
     let k_total: usize = spec.iter().product();
-    if k_total == 0 || k_total > ds.n {
+    if k_total == 0 || k_total > n {
         return Err(AbaError::BadHierSpec(format!(
-            "product {k_total} of {spec:?} is invalid for n={}",
-            ds.n
+            "product {k_total} of {spec:?} is invalid for n={n}"
         )));
     }
     // Flat config for the per-group subproblems (no recursion). The
@@ -152,9 +171,11 @@ pub fn run_hierarchical_with_backend(
     let fan_cfg = AbaConfig { parallelism: Parallelism::Serial, ..flat_cfg.clone() };
     let pool = scratch.pool_for(cfg.parallelism);
 
-    // Current groups of object indices; starts with everything.
-    let mut groups: Vec<Vec<usize>> = vec![(0..ds.n).collect()];
-    for (level, &kl) in spec.iter().enumerate() {
+    // Current groups of object indices; starts with everything. Groups
+    // travel down the levels as index views over `view` — the feature
+    // matrix is never gathered.
+    let mut groups: Vec<Vec<usize>> = vec![(0..n).collect()];
+    for &kl in spec.iter() {
         let results: Vec<Vec<Vec<usize>>> = match &pool {
             Some(pool) if groups.len() > 1 => {
                 let slots: Vec<Mutex<Option<AbaResult<Vec<Vec<usize>>>>>> =
@@ -163,7 +184,7 @@ pub fn run_hierarchical_with_backend(
                     let res = WORKER_STATE.with(|state| {
                         let mut guard = state.borrow_mut();
                         let (be, sc) = &mut *guard;
-                        split_group(ds, &groups[gi], kl, level, &fan_cfg, be, sc)
+                        split_group(view, &groups[gi], kl, &fan_cfg, be, sc)
                     });
                     *slots[gi].lock().unwrap() = Some(res);
                 });
@@ -176,7 +197,7 @@ pub fn run_hierarchical_with_backend(
             _ => {
                 let mut out = Vec::with_capacity(groups.len());
                 for g in &groups {
-                    out.push(split_group(ds, g, kl, level, &flat_cfg, backend, scratch)?);
+                    out.push(split_group(view, g, kl, &flat_cfg, backend, scratch)?);
                 }
                 out
             }
@@ -186,7 +207,7 @@ pub fn run_hierarchical_with_backend(
     }
 
     debug_assert_eq!(groups.len(), k_total);
-    let mut labels = vec![0u32; ds.n];
+    let mut labels = vec![0u32; n];
     for (gi, group) in groups.iter().enumerate() {
         for &obj in group {
             labels[obj] = gi as u32;

@@ -34,7 +34,8 @@ pub use hierarchical::{auto_spec, run_hierarchical};
 pub use objective::ClusterStats;
 
 use crate::assignment::SolverKind;
-use crate::data::Dataset;
+use crate::data::dataset::ensure_nonempty;
+use crate::data::{DataView, Dataset};
 use crate::error::{AbaError, AbaResult};
 use crate::runtime::{BackendKind, CostBackend, Parallelism};
 
@@ -144,39 +145,39 @@ pub fn resolve_variant(variant: Variant, n: usize, k: usize) -> Variant {
     }
 }
 
-/// Validate `(ds, k)` once, up front. `strict` additionally rejects
+/// Validate `(n, k)` once, up front (callers pass `view.n()` / `ds.n`).
+/// Emptiness is rejected through the same [`ensure_nonempty`] check the
+/// data layer applies at construction — one source of truth for
+/// [`AbaError::EmptyDataset`]. `strict` additionally rejects
 /// `n % k != 0`; otherwise the ragged case is only logged, since ABA
 /// still guarantees sizes within one of each other.
-pub fn validate(ds: &Dataset, k: usize, strict: bool) -> AbaResult<()> {
-    if ds.n == 0 {
-        return Err(AbaError::EmptyDataset);
-    }
+pub fn validate(n: usize, k: usize, strict: bool) -> AbaResult<()> {
+    ensure_nonempty(n)?;
     if k == 0 {
-        return Err(AbaError::InvalidK { k, n: ds.n, reason: "k must be >= 1".into() });
+        return Err(AbaError::InvalidK { k, n, reason: "k must be >= 1".into() });
     }
-    if k > ds.n {
+    if k > n {
         return Err(AbaError::InvalidK {
             k,
-            n: ds.n,
+            n,
             reason: "k exceeds the number of objects".into(),
         });
     }
-    if ds.n % k != 0 {
+    if n % k != 0 {
         if strict {
             return Err(AbaError::InvalidK {
                 k,
-                n: ds.n,
+                n,
                 reason: format!(
                     "n % k = {} != 0 and strict divisibility was requested",
-                    ds.n % k
+                    n % k
                 ),
             });
         }
         // eprintln rather than log::warn!: no logger is initialized in
         // the CLI, and this message must actually reach users.
         eprintln!(
-            "warning: n={} is not divisible by k={k}; anticluster sizes will differ by one",
-            ds.n
+            "warning: n={n} is not divisible by k={k}; anticluster sizes will differ by one"
         );
     }
     Ok(())
@@ -202,12 +203,12 @@ pub fn validate(ds: &Dataset, k: usize, strict: bool) -> AbaResult<()> {
 pub fn run_aba(ds: &Dataset, k: usize, cfg: &AbaConfig) -> AbaResult<Vec<u32>> {
     // Labels-only path: legacy callers don't pay the Partition stats
     // pass the session API computes.
-    validate(ds, k, cfg.strict_divisibility)?;
-    if let Some(spec) = effective_spec(ds, k, cfg) {
+    validate(ds.n, k, cfg.strict_divisibility)?;
+    if let Some(spec) = effective_spec(ds.n, k, cfg) {
         return run_hierarchical(ds, &spec, cfg);
     }
     let mut backend = crate::runtime::make_backend(cfg.backend)?;
-    Ok(flat_with_scratch(ds, k, cfg, backend.as_mut(), &mut core::Scratch::default())?.0)
+    Ok(flat_with_scratch(&ds.view(), k, cfg, backend.as_mut(), &mut core::Scratch::default())?.0)
 }
 
 /// As the `Aba` session but with a caller-supplied backend (lets the
@@ -219,38 +220,47 @@ pub fn run_aba_with_backend(
     cfg: &AbaConfig,
     backend: &mut dyn CostBackend,
 ) -> AbaResult<Vec<u32>> {
-    validate(ds, k, cfg.strict_divisibility)?;
-    Ok(flat_with_scratch(ds, k, cfg, backend, &mut core::Scratch::default())?.0)
+    validate(ds.n, k, cfg.strict_divisibility)?;
+    Ok(flat_with_scratch(&ds.view(), k, cfg, backend, &mut core::Scratch::default())?.0)
 }
 
 /// The single flat-run implementation shared by [`run_aba_with_backend`],
 /// the hierarchical driver, and [`crate::solver::Aba`] sessions: build
-/// the order, run the assignment loop. Does **not** validate — callers
-/// validate exactly once at their entry point (k bounds are still
-/// enforced by the core loop). Returns `(labels, order_secs,
-/// assign_secs)` so sessions can report phase timings.
+/// the order, run the assignment loop — both straight off the borrowed
+/// view (the hierarchical driver passes zero-copy group selections
+/// here). Does **not** validate — callers validate exactly once at
+/// their entry point (k bounds are still enforced by the core loop).
+/// Returns `(labels, order_secs, assign_secs)` so sessions can report
+/// phase timings.
 pub(crate) fn flat_with_scratch(
-    ds: &Dataset,
+    view: &DataView<'_>,
     k: usize,
     cfg: &AbaConfig,
     backend: &mut dyn CostBackend,
     scratch: &mut core::Scratch,
 ) -> AbaResult<(Vec<u32>, f64, f64)> {
     if k == 1 {
-        return Ok((vec![0; ds.n], 0.0, 0.0));
+        return Ok((vec![0; view.n()], 0.0, 0.0));
     }
-    let variant = resolve_variant(cfg.variant, ds.n, k);
+    let variant = resolve_variant(cfg.variant, view.n(), k);
     let t = std::time::Instant::now();
-    let order = batching::build_order(ds, k, variant, backend);
+    let order = batching::build_order(view, k, variant, backend);
     let order_secs = t.elapsed().as_secs_f64();
     let t = std::time::Instant::now();
-    let labels =
-        core::run_with_order_scratch(ds, k, &order, cfg.solver, backend, scratch, cfg.parallelism)?;
+    let labels = core::run_with_order_scratch(
+        view,
+        k,
+        &order,
+        cfg.solver,
+        backend,
+        scratch,
+        cfg.parallelism,
+    )?;
     Ok((labels, order_secs, t.elapsed().as_secs_f64()))
 }
 
-/// The decomposition actually used for this run, if any.
-pub fn effective_spec(ds: &Dataset, k: usize, cfg: &AbaConfig) -> Option<Vec<usize>> {
+/// The decomposition actually used for a run on `n` objects, if any.
+pub fn effective_spec(n: usize, k: usize, cfg: &AbaConfig) -> Option<Vec<usize>> {
     if let Some(spec) = &cfg.hier {
         if spec.len() > 1 {
             return Some(spec.clone());
@@ -258,7 +268,7 @@ pub fn effective_spec(ds: &Dataset, k: usize, cfg: &AbaConfig) -> Option<Vec<usi
         return None;
     }
     if cfg.auto_hier {
-        let spec = auto_spec(ds.n, k);
+        let spec = auto_spec(n, k);
         if spec.len() > 1 {
             return Some(spec);
         }
@@ -282,32 +292,35 @@ mod tests {
 
     #[test]
     fn validate_rejects_empty_dataset() {
-        let empty = Dataset { name: "empty".into(), n: 0, d: 2, x: Vec::new(), categories: None };
-        assert_eq!(validate(&empty, 1, false), Err(AbaError::EmptyDataset));
+        // Same single-sourced check the data layer applies at
+        // construction time (`Dataset::from_flat`).
+        assert_eq!(validate(0, 1, false), Err(AbaError::EmptyDataset));
+        assert_eq!(
+            Dataset::from_flat("empty", 0, 2, Vec::new()).unwrap_err(),
+            AbaError::EmptyDataset
+        );
     }
 
     #[test]
     fn validate_rejects_k_zero_and_k_beyond_n() {
-        let ds = generate(SynthKind::Uniform, 10, 2, 2, "u");
         assert!(matches!(
-            validate(&ds, 0, false),
+            validate(10, 0, false),
             Err(AbaError::InvalidK { k: 0, n: 10, .. })
         ));
         assert!(matches!(
-            validate(&ds, 11, false),
+            validate(10, 11, false),
             Err(AbaError::InvalidK { k: 11, n: 10, .. })
         ));
     }
 
     #[test]
     fn validate_divisibility_strict_vs_lax() {
-        let ds = generate(SynthKind::Uniform, 10, 2, 3, "u");
-        assert!(validate(&ds, 3, false).is_ok());
+        assert!(validate(10, 3, false).is_ok());
         assert!(matches!(
-            validate(&ds, 3, true),
+            validate(10, 3, true),
             Err(AbaError::InvalidK { k: 3, n: 10, .. })
         ));
-        assert!(validate(&ds, 5, true).is_ok());
+        assert!(validate(10, 5, true).is_ok());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! 6/10 and the min/max size ratio of Table 11.
 
 use crate::data::dataset::sq_dist_to_f64;
-use crate::data::Dataset;
+use crate::data::DataView;
 
 /// Per-anticluster statistics of a partition.
 #[derive(Clone, Debug)]
@@ -24,13 +24,16 @@ pub struct ClusterStats {
 }
 
 impl ClusterStats {
-    /// Compute centroids and per-cluster SSDs in two passes.
-    pub fn compute(ds: &Dataset, labels: &[u32], k: usize) -> Self {
-        assert_eq!(labels.len(), ds.n);
-        let d = ds.d;
+    /// Compute centroids and per-cluster SSDs in two passes. Accepts a
+    /// `&Dataset` or a zero-copy [`DataView`] (labels are per view row).
+    pub fn compute<'a>(data: impl Into<DataView<'a>>, labels: &[u32], k: usize) -> Self {
+        let ds: DataView<'a> = data.into();
+        let n = ds.n();
+        assert_eq!(labels.len(), n);
+        let d = ds.d();
         let mut sums = vec![0f64; k * d];
         let mut sizes = vec![0usize; k];
-        for i in 0..ds.n {
+        for i in 0..n {
             let c = labels[i] as usize;
             assert!(c < k, "label {c} out of range (k={k})");
             sizes[c] += 1;
@@ -47,7 +50,7 @@ impl ClusterStats {
             }
         }
         let mut ssd = vec![0f64; k];
-        for i in 0..ds.n {
+        for i in 0..n {
             let c = labels[i] as usize;
             ssd[c] += sq_dist_to_f64(ds.row(i), &centroids[c * d..(c + 1) * d]);
         }
@@ -108,10 +111,11 @@ impl ClusterStats {
 /// et al. 2025a — which the paper reviews in §3). O(sum |C_k|^2 d);
 /// intended for evaluation, not the hot path. Returns `f64::INFINITY`
 /// when every anticluster is a singleton.
-pub fn dispersion(ds: &Dataset, labels: &[u32], k: usize) -> f64 {
+pub fn dispersion<'a>(data: impl Into<DataView<'a>>, labels: &[u32], k: usize) -> f64 {
+    let ds: DataView<'a> = data.into();
     let mut min = f64::INFINITY;
     for c in 0..k as u32 {
-        let members: Vec<usize> = (0..ds.n).filter(|&i| labels[i] == c).collect();
+        let members: Vec<usize> = (0..ds.n()).filter(|&i| labels[i] == c).collect();
         for (a, &i) in members.iter().enumerate() {
             for &j in &members[a + 1..] {
                 let d = ds.dist2(i, j);
@@ -126,10 +130,11 @@ pub fn dispersion(ds: &Dataset, labels: &[u32], k: usize) -> f64 {
 
 /// Brute-force pairwise within-cluster sum — O(sum |C_k|^2 d), the
 /// independent ground truth used to validate Fact 1 in tests.
-pub fn pairwise_within_brute(ds: &Dataset, labels: &[u32], k: usize) -> f64 {
+pub fn pairwise_within_brute<'a>(data: impl Into<DataView<'a>>, labels: &[u32], k: usize) -> f64 {
+    let ds: DataView<'a> = data.into();
     let mut total = 0f64;
     for c in 0..k as u32 {
-        let members: Vec<usize> = (0..ds.n).filter(|&i| labels[i] == c).collect();
+        let members: Vec<usize> = (0..ds.n()).filter(|&i| labels[i] == c).collect();
         for (a, &i) in members.iter().enumerate() {
             for &j in &members[a + 1..] {
                 total += ds.dist2(i, j);

@@ -20,7 +20,7 @@
 //! under a time cap).
 
 use crate::data::dataset::sq_dist_to_f64;
-use crate::data::Dataset;
+use crate::data::DataView;
 use crate::error::AbaResult;
 use crate::solver::{Anticlusterer, Partition, PhaseTimings};
 use std::time::{Duration, Instant};
@@ -53,14 +53,14 @@ impl ExactSolver {
 }
 
 impl Anticlusterer for ExactSolver {
-    fn partition(&mut self, ds: &Dataset, k: usize) -> AbaResult<Partition> {
-        crate::algo::validate(ds, k, false)?;
+    fn partition_view(&mut self, view: &DataView<'_>, k: usize) -> AbaResult<Partition> {
+        crate::algo::validate(view.n(), k, false)?;
         let mut timings = PhaseTimings::default();
         let t = Instant::now();
-        let res = solve(ds, k, self.deadline);
+        let res = solve(view, k, self.deadline);
         timings.assign_secs = t.elapsed().as_secs_f64();
         self.last_optimal = res.optimal;
-        Ok(Partition::from_labels(ds, res.labels, k, timings))
+        Ok(Partition::from_labels(view, res.labels, k, timings))
     }
 
     fn name(&self) -> String {
@@ -72,11 +72,17 @@ impl Anticlusterer for ExactSolver {
     }
 }
 
-/// Exact (or time-capped) max-diversity anticlustering.
-pub fn solve(ds: &Dataset, k: usize, deadline: Option<Duration>) -> ExactResult {
-    assert!(k >= 1 && k <= ds.n);
-    let n = ds.n;
-    let d = ds.d;
+/// Exact (or time-capped) max-diversity anticlustering. Accepts a
+/// `&Dataset` or a zero-copy [`DataView`] subset.
+pub fn solve<'a>(
+    data: impl Into<DataView<'a>>,
+    k: usize,
+    deadline: Option<Duration>,
+) -> ExactResult {
+    let ds: DataView<'a> = data.into();
+    let n = ds.n();
+    let d = ds.d();
+    assert!(k >= 1 && k <= n);
     // Per-object squared norms.
     let norms: Vec<f64> = (0..n)
         .map(|i| ds.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum())
@@ -120,7 +126,7 @@ pub fn solve(ds: &Dataset, k: usize, deadline: Option<Duration>) -> ExactResult 
 }
 
 struct Search<'a> {
-    ds: &'a Dataset,
+    ds: DataView<'a>,
     norms: Vec<f64>,
     n: usize,
     k: usize,

@@ -18,7 +18,7 @@
 //! only touches two clusters.
 
 use super::random_part;
-use crate::data::Dataset;
+use crate::data::DataView;
 use crate::error::{AbaError, AbaResult};
 use crate::knn;
 use crate::rng::Pcg32;
@@ -94,17 +94,17 @@ impl FastAnticlustering {
 }
 
 impl Anticlusterer for FastAnticlustering {
-    fn partition(&mut self, ds: &Dataset, k: usize) -> AbaResult<Partition> {
-        crate::algo::validate(ds, k, false)?;
+    fn partition_view(&mut self, view: &DataView<'_>, k: usize) -> AbaResult<Partition> {
+        crate::algo::validate(view.n(), k, false)?;
         let mut timings = PhaseTimings::default();
         let t = Instant::now();
-        let res = fast_anticlustering(ds, k, &self.cfg);
+        let res = fast_anticlustering(view, k, &self.cfg);
         timings.assign_secs = t.elapsed().as_secs_f64();
         if res.timed_out {
             let limit_secs = self.cfg.time_limit.map(|d| d.as_secs_f64()).unwrap_or(0.0);
             return Err(AbaError::TimeLimit { limit_secs });
         }
-        Ok(Partition::from_labels(ds, res.labels, k, timings))
+        Ok(Partition::from_labels(view, res.labels, k, timings))
     }
 
     fn name(&self) -> String {
@@ -115,16 +115,24 @@ impl Anticlusterer for FastAnticlustering {
     }
 }
 
-/// Run the exchange heuristic.
-pub fn fast_anticlustering(ds: &Dataset, k: usize, cfg: &ExchangeConfig) -> ExchangeResult {
-    assert!(k >= 1 && k <= ds.n);
+/// Run the exchange heuristic. Accepts a `&Dataset` or a zero-copy
+/// [`DataView`] subset.
+pub fn fast_anticlustering<'a>(
+    data: impl Into<DataView<'a>>,
+    k: usize,
+    cfg: &ExchangeConfig,
+) -> ExchangeResult {
+    let ds: DataView<'a> = data.into();
+    let n = ds.n();
+    let d = ds.d();
+    assert!(k >= 1 && k <= n);
     let start = Instant::now();
-    let n = ds.n;
-    let d = ds.d;
     let mut rng = Pcg32::new(cfg.seed);
 
-    // Initial random partition (category-aware when present).
-    let mut labels = match &ds.categories {
+    // Initial random partition (category-aware when present). For
+    // identity views `categories()` is a zero-copy borrow.
+    let categories = ds.categories();
+    let mut labels = match &categories {
         Some(cats) => random_part::random_partition_categorical(cats, k, rng.next_u64()),
         None => random_part::random_partition(n, k, rng.next_u64()),
     };
@@ -164,7 +172,7 @@ pub fn fast_anticlustering(ds: &Dataset, k: usize, cfg: &ExchangeConfig) -> Exch
             // Nearest-neighbor search; in categorical mode anticlust
             // cannot use NN partners (the paper notes this), so callers
             // use Random there — but be safe and fall back to same-cat NN.
-            Some(knn::knn_all(ds, partner_count))
+            Some(knn::knn_all(&ds, partner_count))
         }
         Partners::Random(_) => None,
     };
@@ -198,7 +206,7 @@ pub fn fast_anticlustering(ds: &Dataset, k: usize, cfg: &ExchangeConfig) -> Exch
         }
         // In categorical mode a swap must stay within the category (it
         // would otherwise violate constraint (5)).
-        if let Some(cats) = &ds.categories {
+        if let Some(cats) = &categories {
             let ci = cats[i];
             candidates.retain(|&j| cats[j] == ci);
         }

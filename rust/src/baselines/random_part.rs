@@ -5,14 +5,14 @@
 //! starting cluster so the `N mod K` remainders spread out), satisfying
 //! the §2 constraint (5) bounds.
 
-use crate::data::Dataset;
+use crate::data::DataView;
 use crate::error::AbaResult;
 use crate::rng::Pcg32;
 use crate::solver::{Anticlusterer, Partition, PhaseTimings};
 use std::time::Instant;
 
 /// The `Rand` baseline as a reusable [`Anticlusterer`] session.
-/// Category-aware: when the dataset carries a categorical feature, each
+/// Category-aware: when the data carries a categorical feature, each
 /// category is dealt independently (constraint (5)).
 pub struct RandomPartition {
     pub seed: u64,
@@ -25,16 +25,16 @@ impl RandomPartition {
 }
 
 impl Anticlusterer for RandomPartition {
-    fn partition(&mut self, ds: &Dataset, k: usize) -> AbaResult<Partition> {
-        crate::algo::validate(ds, k, false)?;
+    fn partition_view(&mut self, view: &DataView<'_>, k: usize) -> AbaResult<Partition> {
+        crate::algo::validate(view.n(), k, false)?;
         let mut timings = PhaseTimings::default();
         let t = Instant::now();
-        let labels = match &ds.categories {
-            Some(cats) => random_partition_categorical(cats, k, self.seed),
-            None => random_partition(ds.n, k, self.seed),
+        let labels = match view.categories() {
+            Some(cats) => random_partition_categorical(&cats, k, self.seed),
+            None => random_partition(view.n(), k, self.seed),
         };
         timings.assign_secs = t.elapsed().as_secs_f64();
-        Ok(Partition::from_labels(ds, labels, k, timings))
+        Ok(Partition::from_labels(view, labels, k, timings))
     }
 
     fn name(&self) -> String {

@@ -1,49 +1,57 @@
 //! CSV load/save for datasets and label vectors — lets the examples
 //! exchange data with external tools and persists experiment inputs.
+//!
+//! Errors are typed ([`AbaError::Io`] / [`AbaError::ParseError`]); the
+//! CLI boundary converts them into `anyhow` like every other library
+//! error.
 
 use super::dataset::Dataset;
-use anyhow::{bail, Context, Result};
+use crate::error::{AbaError, AbaResult};
 use std::fs;
 use std::io::Write;
 use std::path::Path;
 
+fn io_err(action: &str, path: &Path, e: std::io::Error) -> AbaError {
+    AbaError::Io(format!("{action} {path:?}: {e}"))
+}
+
 /// Save a dataset as headered CSV: columns `f0..f{d-1}` plus optional
 /// trailing `category` column.
-pub fn save(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
-    let f = fs::File::create(path.as_ref())
-        .with_context(|| format!("create {:?}", path.as_ref()))?;
+pub fn save(ds: &Dataset, path: impl AsRef<Path>) -> AbaResult<()> {
+    let path = path.as_ref();
+    let f = fs::File::create(path).map_err(|e| io_err("create", path, e))?;
     let mut w = std::io::BufWriter::new(f);
     let mut header: Vec<String> = (0..ds.d).map(|j| format!("f{j}")).collect();
     if ds.categories.is_some() {
         header.push("category".into());
     }
-    writeln!(w, "{}", header.join(","))?;
+    writeln!(w, "{}", header.join(",")).map_err(|e| io_err("write", path, e))?;
     for i in 0..ds.n {
         let mut cells: Vec<String> =
             ds.row(i).iter().map(|v| format!("{v}")).collect();
         if let Some(c) = &ds.categories {
             cells.push(format!("{}", c[i]));
         }
-        writeln!(w, "{}", cells.join(","))?;
+        writeln!(w, "{}", cells.join(",")).map_err(|e| io_err("write", path, e))?;
     }
     Ok(())
 }
 
 /// Load a dataset from headered CSV. A trailing column literally named
 /// `category` becomes the categorical feature.
-pub fn load(path: impl AsRef<Path>, name: &str) -> Result<Dataset> {
-    let text = fs::read_to_string(path.as_ref())
-        .with_context(|| format!("read {:?}", path.as_ref()))?;
+pub fn load(path: impl AsRef<Path>, name: &str) -> AbaResult<Dataset> {
+    let path = path.as_ref();
+    let text = fs::read_to_string(path).map_err(|e| io_err("read", path, e))?;
     let mut lines = text.lines();
-    let header = lines.next().context("empty csv")?;
+    let header = lines.next().ok_or(AbaError::ParseError {
+        line: 1,
+        msg: "empty csv (no header)".into(),
+    })?;
     let cols: Vec<&str> = header.split(',').collect();
-    if cols.is_empty() {
-        bail!("no columns");
-    }
     let has_cat = *cols.last().unwrap() == "category";
     let d = cols.len() - usize::from(has_cat);
     if d == 0 {
-        bail!("no feature columns");
+        return Err(AbaError::ParseError { line: 1, msg: "no feature columns".into() });
     }
     let mut x = Vec::new();
     let mut cats = Vec::new();
@@ -53,22 +61,22 @@ pub fn load(path: impl AsRef<Path>, name: &str) -> Result<Dataset> {
         }
         let cells: Vec<&str> = line.split(',').collect();
         if cells.len() != cols.len() {
-            bail!("line {}: {} cells, expected {}", lineno + 2, cells.len(), cols.len());
+            return Err(AbaError::ParseError {
+                line: lineno + 2,
+                msg: format!("{} cells, expected {}", cells.len(), cols.len()),
+            });
         }
         for c in &cells[..d] {
-            x.push(
-                c.trim()
-                    .parse::<f32>()
-                    .with_context(|| format!("line {}: bad float '{c}'", lineno + 2))?,
-            );
+            x.push(c.trim().parse::<f32>().map_err(|_| AbaError::ParseError {
+                line: lineno + 2,
+                msg: format!("bad float '{c}'"),
+            })?);
         }
         if has_cat {
-            cats.push(
-                cells[d]
-                    .trim()
-                    .parse::<u32>()
-                    .with_context(|| format!("line {}: bad category", lineno + 2))?,
-            );
+            cats.push(cells[d].trim().parse::<u32>().map_err(|_| AbaError::ParseError {
+                line: lineno + 2,
+                msg: format!("bad category '{}'", cells[d]),
+            })?);
         }
     }
     let n = x.len() / d;
@@ -81,12 +89,13 @@ pub fn load(path: impl AsRef<Path>, name: &str) -> Result<Dataset> {
 }
 
 /// Save a label vector (one integer per line with an `label` header).
-pub fn save_labels(labels: &[u32], path: impl AsRef<Path>) -> Result<()> {
+pub fn save_labels(labels: &[u32], path: impl AsRef<Path>) -> AbaResult<()> {
+    let path = path.as_ref();
     let mut out = String::from("label\n");
     for l in labels {
         out.push_str(&format!("{l}\n"));
     }
-    fs::write(path.as_ref(), out)?;
+    fs::write(path, out).map_err(|e| io_err("write", path, e))?;
     Ok(())
 }
 
@@ -117,16 +126,24 @@ mod tests {
         save(&ds, &path).unwrap();
         let back = load(&path, "rtc").unwrap();
         assert_eq!(back.categories, ds.categories);
+        assert_eq!(back.n_categories(), 3);
     }
 
     #[test]
-    fn rejects_ragged_and_bad_floats() {
+    fn rejects_ragged_and_bad_floats_with_typed_errors() {
         let dir = std::env::temp_dir();
         let p1 = dir.join("aba_csv_bad1.csv");
         fs::write(&p1, "f0,f1\n1.0\n").unwrap();
-        assert!(load(&p1, "x").is_err());
+        assert!(matches!(
+            load(&p1, "x"),
+            Err(AbaError::ParseError { line: 2, .. })
+        ));
         let p2 = dir.join("aba_csv_bad2.csv");
         fs::write(&p2, "f0\nnotafloat\n").unwrap();
-        assert!(load(&p2, "x").is_err());
+        assert!(matches!(load(&p2, "x"), Err(AbaError::ParseError { .. })));
+        assert!(matches!(
+            load(dir.join("aba_csv_nonexistent.csv"), "x"),
+            Err(AbaError::Io(_))
+        ));
     }
 }

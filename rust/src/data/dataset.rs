@@ -1,7 +1,23 @@
 //! The core `Dataset` type: a dense row-major `f32` feature matrix with an
 //! optional categorical label per object (for the §4.3 variant).
+//!
+//! `Dataset` is the *owning* type; everything downstream of the data
+//! layer consumes it through the borrowed [`super::view::DataView`]
+//! (`ds.view()`), which subsets by index indirection instead of copying
+//! feature rows.
 
-use anyhow::{bail, Result};
+use super::view::DataView;
+use crate::error::{AbaError, AbaResult};
+
+/// Shared emptiness check — the single source of the `EmptyDataset`
+/// rejection, used both at construction ([`Dataset::from_flat`]) and at
+/// solve time ([`crate::algo::validate`]).
+pub fn ensure_nonempty(n: usize) -> AbaResult<()> {
+    if n == 0 {
+        return Err(AbaError::EmptyDataset);
+    }
+    Ok(())
+}
 
 /// A dataset of `n` objects with `d` features, stored row-major.
 #[derive(Clone, Debug)]
@@ -16,34 +32,51 @@ pub struct Dataset {
     pub x: Vec<f32>,
     /// Optional per-object category in `0..n_categories` (§4.3 variant).
     pub categories: Option<Vec<u32>>,
+    /// Cached distinct-category count (`max + 1`; 0 when none). Attach
+    /// categories through [`Dataset::with_categories`] — which maintains
+    /// this — rather than by writing the fields directly.
+    pub n_cats: usize,
 }
 
 impl Dataset {
     /// Build from a flat row-major buffer.
-    pub fn from_flat(name: impl Into<String>, n: usize, d: usize, x: Vec<f32>) -> Result<Self> {
+    pub fn from_flat(name: impl Into<String>, n: usize, d: usize, x: Vec<f32>) -> AbaResult<Self> {
         if x.len() != n * d {
-            bail!("buffer length {} != n*d = {}", x.len(), n * d);
+            return Err(AbaError::BadShape(format!(
+                "buffer length {} != n*d = {}",
+                x.len(),
+                n * d
+            )));
         }
-        if n == 0 || d == 0 {
-            bail!("empty dataset (n={n}, d={d})");
+        ensure_nonempty(n)?;
+        if d == 0 {
+            return Err(AbaError::BadShape(format!("dataset has no features (n={n}, d=0)")));
         }
-        Ok(Self { name: name.into(), n, d, x, categories: None })
+        Ok(Self { name: name.into(), n, d, x, categories: None, n_cats: 0 })
     }
 
     /// Build from rows (each of length `d`).
-    pub fn from_rows(name: impl Into<String>, rows: &[Vec<f32>]) -> Result<Self> {
-        if rows.is_empty() {
-            bail!("no rows");
-        }
+    pub fn from_rows(name: impl Into<String>, rows: &[Vec<f32>]) -> AbaResult<Self> {
+        ensure_nonempty(rows.len())?;
         let d = rows[0].len();
         let mut x = Vec::with_capacity(rows.len() * d);
         for (i, r) in rows.iter().enumerate() {
             if r.len() != d {
-                bail!("row {i} has {} features, expected {d}", r.len());
+                return Err(AbaError::BadShape(format!(
+                    "row {i} has {} features, expected {d}",
+                    r.len()
+                )));
             }
             x.extend_from_slice(r);
         }
         Self::from_flat(name, rows.len(), d, x)
+    }
+
+    /// A zero-copy [`DataView`] over all rows — the entry point to every
+    /// consumer layer (`partition_view`, hierarchical decomposition,
+    /// kNN, k-means, ...).
+    pub fn view(&self) -> DataView<'_> {
+        DataView::from(self)
     }
 
     /// The `i`-th object as a feature slice.
@@ -52,53 +85,50 @@ impl Dataset {
         &self.x[i * self.d..(i + 1) * self.d]
     }
 
-    /// Attach a categorical feature; values must be dense `0..g`.
-    pub fn with_categories(mut self, cats: Vec<u32>) -> Result<Self> {
+    /// Attach a categorical feature; values must be dense `0..g`. Caches
+    /// the category count so [`Dataset::n_categories`] (and views) never
+    /// rescan.
+    pub fn with_categories(mut self, cats: Vec<u32>) -> AbaResult<Self> {
         if cats.len() != self.n {
-            bail!("categories length {} != n {}", cats.len(), self.n);
+            return Err(AbaError::BadShape(format!(
+                "categories length {} != n {}",
+                cats.len(),
+                self.n
+            )));
         }
+        self.n_cats = cats.iter().copied().max().map_or(0, |m| m as usize + 1);
         self.categories = Some(cats);
         Ok(self)
     }
 
-    /// Number of distinct categories (0 if none attached).
+    /// Number of distinct categories (0 if none attached). O(1) off the
+    /// cache when categories were attached via
+    /// [`Dataset::with_categories`]; falls back to a rescan when a
+    /// caller wrote the pub `categories` field directly and left the
+    /// cache stale (`n_cats == 0` while categories are present) — so
+    /// direct writes stay correct, they just forfeit the caching.
     pub fn n_categories(&self) -> usize {
-        self.categories
-            .as_ref()
-            .map(|c| c.iter().copied().max().map_or(0, |m| m as usize + 1))
-            .unwrap_or(0)
+        if self.n_cats == 0 {
+            if let Some(c) = &self.categories {
+                return c.iter().copied().max().map_or(0, |m| m as usize + 1);
+            }
+        }
+        self.n_cats
     }
 
-    /// Gather a subset of objects (by index) into a new dataset; categories
-    /// are carried along. Used by the hierarchical decomposition.
+    /// Gather a subset of objects (by index) into a new owned dataset;
+    /// categories are carried along. A thin wrapper over
+    /// `view().select(..).materialize(..)` for tests and experiments
+    /// that genuinely need an owned copy — the hot paths (hierarchical
+    /// decomposition, pool fan-out) pass index views instead and never
+    /// materialize.
     pub fn subset(&self, indices: &[usize], name: impl Into<String>) -> Dataset {
-        let mut x = Vec::with_capacity(indices.len() * self.d);
-        for &i in indices {
-            x.extend_from_slice(self.row(i));
-        }
-        let categories = self
-            .categories
-            .as_ref()
-            .map(|c| indices.iter().map(|&i| c[i]).collect());
-        Dataset {
-            name: name.into(),
-            n: indices.len(),
-            d: self.d,
-            x,
-            categories,
-        }
+        self.view().select(indices).materialize(name)
     }
 
     /// Global centroid (mean of all rows), accumulated in f64.
     pub fn global_centroid(&self) -> Vec<f32> {
-        let mut acc = vec![0f64; self.d];
-        for i in 0..self.n {
-            let r = self.row(i);
-            for (a, &v) in acc.iter_mut().zip(r) {
-                *a += v as f64;
-            }
-        }
-        acc.iter().map(|&a| (a / self.n as f64) as f32).collect()
+        self.view().global_centroid()
     }
 
     /// Squared Euclidean distance between rows `i` and `j`.
@@ -149,15 +179,29 @@ mod tests {
     }
 
     #[test]
-    fn from_flat_validates() {
-        assert!(Dataset::from_flat("x", 2, 3, vec![0.0; 5]).is_err());
-        assert!(Dataset::from_flat("x", 0, 3, vec![]).is_err());
+    fn from_flat_validates_with_typed_errors() {
+        assert!(matches!(
+            Dataset::from_flat("x", 2, 3, vec![0.0; 5]),
+            Err(AbaError::BadShape(_))
+        ));
+        assert_eq!(
+            Dataset::from_flat("x", 0, 3, vec![]).unwrap_err(),
+            AbaError::EmptyDataset
+        );
+        assert!(matches!(
+            Dataset::from_flat("x", 2, 0, vec![]),
+            Err(AbaError::BadShape(_))
+        ));
         assert!(Dataset::from_flat("x", 2, 3, vec![0.0; 6]).is_ok());
     }
 
     #[test]
     fn from_rows_checks_ragged() {
-        assert!(Dataset::from_rows("x", &[vec![1.0], vec![1.0, 2.0]]).is_err());
+        assert!(matches!(
+            Dataset::from_rows("x", &[vec![1.0], vec![1.0, 2.0]]),
+            Err(AbaError::BadShape(_))
+        ));
+        assert_eq!(Dataset::from_rows("x", &[]).unwrap_err(), AbaError::EmptyDataset);
     }
 
     #[test]
@@ -187,14 +231,32 @@ mod tests {
     }
 
     #[test]
-    fn n_categories_counts_dense_labels() {
+    fn n_categories_cached_at_attach_time() {
         let ds = tiny().with_categories(vec![0, 2, 1, 2]).unwrap();
         assert_eq!(ds.n_categories(), 3);
+        assert_eq!(ds.n_cats, 3);
         assert_eq!(tiny().n_categories(), 0);
+        // Subsets carry the cached count instead of rescanning.
+        assert_eq!(ds.subset(&[0, 2], "sub").n_categories(), 3);
+    }
+
+    #[test]
+    fn n_categories_survives_direct_field_writes() {
+        // The struct's fields are pub; a direct write leaves the cache
+        // stale and must fall back to a rescan (both on the dataset and
+        // through views built from it).
+        let mut ds = tiny();
+        ds.categories = Some(vec![0, 1, 4, 1]);
+        assert_eq!(ds.n_cats, 0);
+        assert_eq!(ds.n_categories(), 5);
+        assert_eq!(ds.view().n_categories(), 5);
     }
 
     #[test]
     fn categories_length_checked() {
-        assert!(tiny().with_categories(vec![0, 1]).is_err());
+        assert!(matches!(
+            tiny().with_categories(vec![0, 1]),
+            Err(AbaError::BadShape(_))
+        ));
     }
 }

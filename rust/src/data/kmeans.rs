@@ -4,7 +4,8 @@
 //! experiments exactly as Croella et al. (2025) do, and (b) as a geometry
 //! probe in tests. Deterministic given the seed.
 
-use super::dataset::{sq_dist_to_f64, Dataset};
+use super::dataset::sq_dist_to_f64;
+use super::view::DataView;
 use crate::rng::Pcg32;
 
 /// Result of a k-means run.
@@ -20,13 +21,22 @@ pub struct KMeansResult {
     pub iterations: usize,
 }
 
-/// Run k-means.
-pub fn kmeans(ds: &Dataset, k: usize, max_iter: usize, seed: u64) -> KMeansResult {
-    assert!(k >= 1 && k <= ds.n, "k={k} out of range for n={}", ds.n);
-    let d = ds.d;
+/// Run k-means. Accepts anything that views as a feature matrix — a
+/// `&Dataset` or a zero-copy [`DataView`] subset (the Table 9/10
+/// categorical derivation runs on views without gathering rows).
+pub fn kmeans<'a>(
+    data: impl Into<DataView<'a>>,
+    k: usize,
+    max_iter: usize,
+    seed: u64,
+) -> KMeansResult {
+    let ds: DataView<'a> = data.into();
+    let n = ds.n();
+    assert!(k >= 1 && k <= n, "k={k} out of range for n={n}");
+    let d = ds.d();
     let mut rng = Pcg32::new(seed);
-    let mut centroids = plus_plus_init(ds, k, &mut rng);
-    let mut labels = vec![0u32; ds.n];
+    let mut centroids = plus_plus_init(&ds, k, &mut rng);
+    let mut labels = vec![0u32; n];
     let mut inertia = f64::INFINITY;
     let mut iterations = 0;
 
@@ -34,7 +44,7 @@ pub fn kmeans(ds: &Dataset, k: usize, max_iter: usize, seed: u64) -> KMeansResul
         iterations = it + 1;
         // Assignment step.
         let mut new_inertia = 0f64;
-        for i in 0..ds.n {
+        for i in 0..n {
             let row = ds.row(i);
             let mut best = 0usize;
             let mut best_d = f64::INFINITY;
@@ -51,7 +61,7 @@ pub fn kmeans(ds: &Dataset, k: usize, max_iter: usize, seed: u64) -> KMeansResul
         // Update step.
         let mut sums = vec![0f64; k * d];
         let mut counts = vec![0usize; k];
-        for i in 0..ds.n {
+        for i in 0..n {
             let c = labels[i] as usize;
             counts[c] += 1;
             for (s, &v) in sums[c * d..(c + 1) * d].iter_mut().zip(ds.row(i)) {
@@ -61,7 +71,7 @@ pub fn kmeans(ds: &Dataset, k: usize, max_iter: usize, seed: u64) -> KMeansResul
         for c in 0..k {
             if counts[c] == 0 {
                 // Re-seed an empty cluster at a random point.
-                let p = rng.gen_index(ds.n);
+                let p = rng.gen_index(n);
                 for (dst, &v) in centroids[c * d..(c + 1) * d].iter_mut().zip(ds.row(p)) {
                     *dst = v as f64;
                 }
@@ -82,19 +92,19 @@ pub fn kmeans(ds: &Dataset, k: usize, max_iter: usize, seed: u64) -> KMeansResul
 }
 
 /// k-means++ seeding (D² sampling).
-fn plus_plus_init(ds: &Dataset, k: usize, rng: &mut Pcg32) -> Vec<f64> {
-    let d = ds.d;
+fn plus_plus_init(ds: &DataView<'_>, k: usize, rng: &mut Pcg32) -> Vec<f64> {
+    let (n, d) = (ds.n(), ds.d());
     let mut centroids = vec![0f64; k * d];
-    let first = rng.gen_index(ds.n);
+    let first = rng.gen_index(n);
     for (dst, &v) in centroids[..d].iter_mut().zip(ds.row(first)) {
         *dst = v as f64;
     }
-    let mut min_d2 = vec![f64::INFINITY; ds.n];
+    let mut min_d2 = vec![f64::INFINITY; n];
     for c in 1..k {
         // Update nearest-centroid distances with the last added centroid.
         let prev = &centroids[(c - 1) * d..c * d];
         let mut total = 0f64;
-        for i in 0..ds.n {
+        for i in 0..n {
             let dist = sq_dist_to_f64(ds.row(i), prev);
             if dist < min_d2[i] {
                 min_d2[i] = dist;
@@ -104,8 +114,8 @@ fn plus_plus_init(ds: &Dataset, k: usize, rng: &mut Pcg32) -> Vec<f64> {
         // Sample proportional to D²; fall back to uniform if degenerate.
         let pick = if total > 0.0 {
             let mut target = rng.f64() * total;
-            let mut chosen = ds.n - 1;
-            for i in 0..ds.n {
+            let mut chosen = n - 1;
+            for i in 0..n {
                 target -= min_d2[i];
                 if target <= 0.0 {
                     chosen = i;
@@ -114,7 +124,7 @@ fn plus_plus_init(ds: &Dataset, k: usize, rng: &mut Pcg32) -> Vec<f64> {
             }
             chosen
         } else {
-            rng.gen_index(ds.n)
+            rng.gen_index(n)
         };
         for (dst, &v) in centroids[c * d..(c + 1) * d].iter_mut().zip(ds.row(pick)) {
             *dst = v as f64;
@@ -176,5 +186,15 @@ mod tests {
         let ds = generate(SynthKind::Uniform, 100, 2, 6, "u");
         let res = kmeans(&ds, 5, 20, 1);
         assert!(res.labels.iter().all(|&l| l < 5));
+    }
+
+    #[test]
+    fn view_subset_matches_owned_subset() {
+        let ds = generate(SynthKind::Uniform, 120, 3, 7, "u");
+        let idx: Vec<usize> = (0..120).step_by(3).collect();
+        let owned = kmeans(&ds.subset(&idx, "owned"), 4, 30, 9);
+        let viewed = kmeans(&ds.view().select(&idx), 4, 30, 9);
+        assert_eq!(owned.labels, viewed.labels);
+        assert_eq!(owned.centroids, viewed.centroids);
     }
 }

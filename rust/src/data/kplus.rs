@@ -12,12 +12,16 @@
 
 use super::dataset::Dataset;
 use super::preprocess::standardize;
+use super::view::DataView;
 
 /// Append deviation-moment features up to the `moments`-th moment
 /// (`moments = 1` returns a plain copy; `2` adds squared deviations, ...).
-pub fn kplus_augment(ds: &Dataset, moments: usize) -> Dataset {
+/// Accepts a `&Dataset` or any zero-copy [`DataView`] subset; the output
+/// is necessarily owned (it is new data).
+pub fn kplus_augment<'a>(data: impl Into<DataView<'a>>, moments: usize) -> Dataset {
     assert!(moments >= 1, "moments must be >= 1");
-    let (n, d) = (ds.n, ds.d);
+    let ds: DataView<'a> = data.into();
+    let (n, d) = (ds.n(), ds.d());
     let extra = moments - 1;
     let d2 = d * (1 + extra);
     // Column means of the original features.
@@ -41,13 +45,13 @@ pub fn kplus_augment(ds: &Dataset, moments: usize) -> Dataset {
             }
         }
     }
-    let mut out = Dataset {
-        name: format!("{}+kplus{moments}", ds.name),
-        n,
-        d: d2,
-        x,
-        categories: ds.categories.clone(),
-    };
+    let mut out = Dataset::from_flat(format!("{}+kplus{moments}", ds.name()), n, d2, x)
+        .expect("augmented matrix has a valid shape");
+    if let Some(cats) = ds.categories() {
+        out = out
+            .with_categories(cats.into_owned())
+            .expect("category length matches by construction");
+    }
     // Standardize the whole augmented matrix so each moment block
     // contributes comparably (Papenberg 2024's recommendation).
     standardize(&mut out);

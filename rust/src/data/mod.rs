@@ -1,7 +1,8 @@
-//! Datasets: in-memory feature matrices, synthetic generators mirroring
-//! the paper's Table 2 catalog, preprocessing, CSV I/O, and k-means (used
-//! to derive the categorical feature for the Table 9/10 experiments, as
-//! Croella et al. 2025 do).
+//! Datasets: in-memory feature matrices, zero-copy [`DataView`]s over
+//! them (the currency of every consumer layer), synthetic generators
+//! mirroring the paper's Table 2 catalog, preprocessing, CSV I/O, and
+//! k-means (used to derive the categorical feature for the Table 9/10
+//! experiments, as Croella et al. 2025 do).
 
 pub mod csv;
 pub mod dataset;
@@ -9,5 +10,7 @@ pub mod kmeans;
 pub mod kplus;
 pub mod preprocess;
 pub mod synth;
+pub mod view;
 
 pub use dataset::Dataset;
+pub use view::DataView;

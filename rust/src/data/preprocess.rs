@@ -3,6 +3,7 @@
 //! encoding of integer categorical columns.
 
 use super::dataset::Dataset;
+use super::view::DataView;
 
 /// Z-score standardize every column in place (columns with zero variance
 /// are centered only). Returns per-column (mean, sd) for reuse.
@@ -52,22 +53,26 @@ pub fn minmax_scale(ds: &mut Dataset) {
 }
 
 /// One-hot encode an integer label column into `k` binary features appended
-/// to a copy of the dataset (paper §5.1: "one binary feature per category").
-pub fn append_one_hot(ds: &Dataset, labels: &[u32]) -> Dataset {
-    assert_eq!(labels.len(), ds.n);
+/// to a copy of the data (paper §5.1: "one binary feature per category").
+/// Accepts a `&Dataset` or any zero-copy [`DataView`] subset.
+pub fn append_one_hot<'a>(data: impl Into<DataView<'a>>, labels: &[u32]) -> Dataset {
+    let ds: DataView<'a> = data.into();
+    let (n, d) = (ds.n(), ds.d());
+    assert_eq!(labels.len(), n);
     let k = labels.iter().copied().max().map_or(0, |m| m as usize + 1);
-    let d2 = ds.d + k;
-    let mut x = vec![0f32; ds.n * d2];
-    for i in 0..ds.n {
-        x[i * d2..i * d2 + ds.d].copy_from_slice(ds.row(i));
-        x[i * d2 + ds.d + labels[i] as usize] = 1.0;
+    let d2 = d + k;
+    let mut x = vec![0f32; n * d2];
+    for i in 0..n {
+        x[i * d2..i * d2 + d].copy_from_slice(ds.row(i));
+        x[i * d2 + d + labels[i] as usize] = 1.0;
     }
-    Dataset {
-        name: format!("{}+onehot", ds.name),
-        n: ds.n,
-        d: d2,
-        x,
-        categories: ds.categories.clone(),
+    let out = Dataset::from_flat(format!("{}+onehot", ds.name()), n, d2, x)
+        .expect("one-hot matrix has a valid shape");
+    match ds.categories() {
+        Some(cats) => out
+            .with_categories(cats.into_owned())
+            .expect("category length matches by construction"),
+        None => out,
     }
 }
 

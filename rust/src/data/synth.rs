@@ -10,8 +10,8 @@
 //! scaled-down (N, D) used by default on this single-core box.
 
 use super::dataset::Dataset;
+use crate::error::{AbaError, AbaResult};
 use crate::rng::Pcg32;
-use anyhow::{bail, Result};
 
 /// Kind of synthetic geometry to generate.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -144,12 +144,12 @@ pub fn catalog() -> Vec<CatalogEntry> {
 }
 
 /// Instantiate a catalog dataset by name at the given scale.
-pub fn load(name: &str, scale: Scale) -> Result<Dataset> {
+pub fn load(name: &str, scale: Scale) -> AbaResult<Dataset> {
     let Some(e) = catalog().into_iter().find(|e| e.name == name) else {
-        bail!(
+        return Err(AbaError::InvalidInput(format!(
             "unknown dataset '{name}'; known: {}",
             catalog().iter().map(|e| e.name).collect::<Vec<_>>().join(", ")
-        );
+        )));
     };
     let (n, d) = match scale {
         Scale::Paper => (e.paper_n, e.paper_d),
@@ -160,13 +160,13 @@ pub fn load(name: &str, scale: Scale) -> Result<Dataset> {
 }
 
 impl std::str::FromStr for Scale {
-    type Err = anyhow::Error;
-    fn from_str(s: &str) -> Result<Self> {
+    type Err = AbaError;
+    fn from_str(s: &str) -> AbaResult<Self> {
         match s {
             "paper" => Ok(Scale::Paper),
             "small" => Ok(Scale::Small),
             "tiny" => Ok(Scale::Tiny),
-            _ => bail!("unknown scale '{s}' (paper|small|tiny)"),
+            _ => Err(AbaError::InvalidInput(format!("unknown scale '{s}' (paper|small|tiny)"))),
         }
     }
 }

@@ -1,0 +1,346 @@
+//! Zero-copy views over feature matrices — the currency of every
+//! consumer layer.
+//!
+//! A [`DataView`] is a borrowed (matrix, optional index indirection,
+//! optional categories) triple. Constructing one from a [`Dataset`] is
+//! free, and selecting any index subset of an existing view
+//! ([`DataView::select`]) borrows the index slice instead of gathering
+//! feature rows — which is what lets the hierarchical driver descend
+//! through arbitrarily deep decompositions without copying the `n x d`
+//! matrix once per level. The only feature-row copies left on the hot
+//! path are the bounded per-batch stagings ([`DataView::gather_rows`] /
+//! [`DataView::gather_range`]), and those are metered: see
+//! [`gathered_bytes`].
+
+use super::dataset::Dataset;
+use std::borrow::Cow;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bytes of feature data gathered (copied) through view helpers and
+/// [`Dataset::subset`] since the last [`reset_gathered_bytes`]. Process
+/// wide; used by the benches to make the zero-copy win machine-readable.
+static GATHERED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Total feature bytes gathered process-wide since the last reset.
+pub fn gathered_bytes() -> u64 {
+    GATHERED_BYTES.load(Ordering::Relaxed)
+}
+
+/// Reset the gather meter (benches call this before a measured run).
+pub fn reset_gathered_bytes() {
+    GATHERED_BYTES.store(0, Ordering::Relaxed);
+}
+
+fn count_gathered(rows: usize, d: usize) {
+    GATHERED_BYTES.fetch_add((rows * d * std::mem::size_of::<f32>()) as u64, Ordering::Relaxed);
+}
+
+/// A borrowed, possibly index-indirected window onto a feature matrix.
+///
+/// Row `i` of the view is row `idx[i]` of the underlying matrix (or row
+/// `i` itself for an identity view). Categories, when present, are
+/// indirected the same way, and the distinct-category count is carried
+/// through subsetting instead of being rescanned.
+#[derive(Clone, Debug)]
+pub struct DataView<'a> {
+    /// Human-readable name inherited from the backing dataset.
+    name: &'a str,
+    /// The underlying row-major matrix (the *parent* rows, not the
+    /// view's).
+    x: &'a [f32],
+    /// Features per row.
+    d: usize,
+    /// Rows visible through the view.
+    n: usize,
+    /// Optional indirection: view row `i` -> parent row `idx[i]`.
+    /// `Borrowed` when selecting out of an identity view (the common
+    /// hierarchical case — zero allocation), `Owned` only when composing
+    /// a selection on top of an already-selected view.
+    idx: Option<Cow<'a, [usize]>>,
+    /// Parent-indexed categories.
+    categories: Option<&'a [u32]>,
+    /// Cached distinct-category count (0 when none attached).
+    n_cats: usize,
+}
+
+impl<'a> DataView<'a> {
+    /// Identity view over a raw row-major matrix (no dataset needed —
+    /// e.g. the constrained loop's super-object matrix).
+    pub fn over(name: &'a str, x: &'a [f32], n: usize, d: usize) -> Self {
+        assert_eq!(x.len(), n * d, "matrix length {} != n*d = {}", x.len(), n * d);
+        Self { name, x, d, n, idx: None, categories: None, n_cats: 0 }
+    }
+
+    /// Rows visible through the view.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Features per row.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Name inherited from the backing dataset.
+    pub fn name(&self) -> &'a str {
+        self.name
+    }
+
+    /// Map a view row to its parent row.
+    #[inline]
+    fn parent_row(&self, i: usize) -> usize {
+        match &self.idx {
+            Some(idx) => idx[i],
+            None => i,
+        }
+    }
+
+    /// The `i`-th view row as a feature slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        let p = self.parent_row(i) * self.d;
+        &self.x[p..p + self.d]
+    }
+
+    /// Whether a categorical feature is attached.
+    pub fn has_categories(&self) -> bool {
+        self.categories.is_some()
+    }
+
+    /// Category of view row `i`. Panics when no categories are attached
+    /// (callers gate on [`Self::has_categories`] / `n_categories() > 0`).
+    #[inline]
+    pub fn category(&self, i: usize) -> u32 {
+        self.categories.expect("view has no categories")[self.parent_row(i)]
+    }
+
+    /// Cached distinct-category count (0 when none attached). Carried
+    /// through [`Self::select`] — never rescans the labels.
+    pub fn n_categories(&self) -> usize {
+        self.n_cats
+    }
+
+    /// The view's categories in view-row order: borrowed (zero-copy) for
+    /// identity views, gathered for indirected ones (`n` u32s, never
+    /// feature rows).
+    pub fn categories(&self) -> Option<Cow<'a, [u32]>> {
+        let cats = self.categories?;
+        Some(match &self.idx {
+            None => Cow::Borrowed(cats),
+            Some(idx) => Cow::Owned(idx.iter().map(|&p| cats[p]).collect()),
+        })
+    }
+
+    /// The contiguous backing matrix, if the view is an identity view
+    /// (fast path for backends that consume whole matrices).
+    pub fn contiguous(&self) -> Option<&'a [f32]> {
+        match self.idx {
+            None => Some(self.x),
+            Some(_) => None,
+        }
+    }
+
+    /// Select a subset of view rows, for free: no feature row is copied.
+    /// `indices` hold *view-local* row ids; selecting out of an identity
+    /// view borrows them directly, selecting out of an already-selected
+    /// view composes the indirection (one `Vec<usize>`, never `n x d`
+    /// floats).
+    pub fn select<'b>(&self, indices: &'b [usize]) -> DataView<'b>
+    where
+        'a: 'b,
+    {
+        debug_assert!(indices.iter().all(|&i| i < self.n), "selection out of range");
+        let idx: Cow<'b, [usize]> = match &self.idx {
+            None => Cow::Borrowed(indices),
+            Some(parent) => Cow::Owned(indices.iter().map(|&i| parent[i]).collect()),
+        };
+        DataView {
+            name: self.name,
+            x: self.x,
+            d: self.d,
+            n: indices.len(),
+            idx: Some(idx),
+            categories: self.categories,
+            n_cats: self.n_cats,
+        }
+    }
+
+    /// Gather the given view rows contiguously into `dst` (resized).
+    /// This is the *bounded* staging copy of the assignment loop (one
+    /// batch at a time) — metered by [`gathered_bytes`].
+    pub fn gather_rows(&self, rows: &[usize], dst: &mut Vec<f32>) {
+        let d = self.d;
+        dst.resize(rows.len() * d, 0.0);
+        for (j, &i) in rows.iter().enumerate() {
+            dst[j * d..(j + 1) * d].copy_from_slice(self.row(i));
+        }
+        count_gathered(rows.len(), d);
+    }
+
+    /// Gather the contiguous view-row range `lo..hi` into `dst`
+    /// (resized) — for callers that need to tile an index view through
+    /// an API that consumes whole contiguous matrices.
+    pub fn gather_range(&self, lo: usize, hi: usize, dst: &mut Vec<f32>) {
+        let d = self.d;
+        dst.resize((hi - lo) * d, 0.0);
+        for (j, i) in (lo..hi).enumerate() {
+            dst[j * d..(j + 1) * d].copy_from_slice(self.row(i));
+        }
+        count_gathered(hi - lo, d);
+    }
+
+    /// Mean of all view rows, accumulated in f64.
+    pub fn global_centroid(&self) -> Vec<f32> {
+        let mut acc = vec![0f64; self.d];
+        for i in 0..self.n {
+            for (a, &v) in acc.iter_mut().zip(self.row(i)) {
+                *a += v as f64;
+            }
+        }
+        acc.iter().map(|&a| (a / self.n as f64) as f32).collect()
+    }
+
+    /// Squared Euclidean distance between view rows `i` and `j`.
+    pub fn dist2(&self, i: usize, j: usize) -> f64 {
+        super::dataset::sq_dist(self.row(i), self.row(j))
+    }
+
+    /// Materialize the view into an owned [`Dataset`] (gathers every
+    /// row — metered). The escape hatch for tests and experiments that
+    /// genuinely need an owned copy; hot paths stay on views.
+    pub fn materialize(&self, name: impl Into<String>) -> Dataset {
+        let mut x = Vec::with_capacity(self.n * self.d);
+        for i in 0..self.n {
+            x.extend_from_slice(self.row(i));
+        }
+        count_gathered(self.n, self.d);
+        let categories = self.categories().map(Cow::into_owned);
+        Dataset {
+            name: name.into(),
+            n: self.n,
+            d: self.d,
+            x,
+            categories,
+            n_cats: self.n_cats,
+        }
+    }
+}
+
+impl<'a> From<&'a Dataset> for DataView<'a> {
+    fn from(ds: &'a Dataset) -> Self {
+        Self {
+            name: &ds.name,
+            x: &ds.x,
+            d: ds.d,
+            n: ds.n,
+            idx: None,
+            categories: ds.categories.as_deref(),
+            // Through the accessor, not the field: it repairs a stale
+            // cache when `categories` was written directly.
+            n_cats: ds.n_categories(),
+        }
+    }
+}
+
+impl<'a> From<&'_ DataView<'a>> for DataView<'a> {
+    fn from(view: &DataView<'a>) -> Self {
+        view.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::from_rows(
+            "tiny",
+            &[
+                vec![0.0, 0.0],
+                vec![1.0, 0.0],
+                vec![0.0, 2.0],
+                vec![3.0, 4.0],
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn identity_view_mirrors_dataset() {
+        let ds = tiny();
+        let v = ds.view();
+        assert_eq!((v.n(), v.d()), (4, 2));
+        assert_eq!(v.name(), "tiny");
+        assert_eq!(v.row(3), ds.row(3));
+        assert_eq!(v.dist2(0, 1), ds.dist2(0, 1));
+        assert_eq!(v.contiguous(), Some(&ds.x[..]));
+        assert_eq!(v.global_centroid(), ds.global_centroid());
+    }
+
+    #[test]
+    fn select_is_zero_copy_and_composes() {
+        let ds = tiny();
+        let v = ds.view();
+        let idx = [3usize, 0, 2];
+        let sub = v.select(&idx);
+        assert_eq!(sub.n(), 3);
+        assert_eq!(sub.row(0), &[3.0, 4.0]);
+        assert!(sub.contiguous().is_none());
+        // Composed selection maps through the parent's indirection.
+        let comp = [1usize, 2];
+        let subsub = sub.select(&comp);
+        assert_eq!(subsub.row(0), &[0.0, 0.0]);
+        assert_eq!(subsub.row(1), &[0.0, 2.0]);
+    }
+
+    #[test]
+    fn categories_carried_with_cached_count() {
+        let ds = tiny().with_categories(vec![0, 2, 1, 2]).unwrap();
+        let v = ds.view();
+        assert_eq!(v.n_categories(), 3);
+        assert_eq!(v.category(1), 2);
+        assert_eq!(v.categories().unwrap().as_ref(), &[0, 2, 1, 2]);
+        let idx = [3usize, 0];
+        let sub = v.select(&idx);
+        // Count carries through without a rescan (stays the parent's).
+        assert_eq!(sub.n_categories(), 3);
+        assert_eq!(sub.category(0), 2);
+        assert_eq!(sub.categories().unwrap().as_ref(), &[2, 0]);
+    }
+
+    #[test]
+    fn materialize_matches_owned_subset() {
+        let ds = tiny().with_categories(vec![0, 1, 0, 1]).unwrap();
+        let idx = [3usize, 0];
+        let owned = ds.subset(&idx, "sub");
+        let via_view = ds.view().select(&idx).materialize("sub");
+        assert_eq!(owned.x, via_view.x);
+        assert_eq!(owned.categories, via_view.categories);
+        assert_eq!(owned.n_categories(), via_view.n_categories());
+    }
+
+    #[test]
+    fn gather_helpers_stage_rows_and_meter_bytes() {
+        let ds = tiny();
+        let v = ds.view();
+        let before = gathered_bytes();
+        let mut buf = Vec::new();
+        v.gather_rows(&[2, 0], &mut buf);
+        assert_eq!(buf, vec![0.0, 2.0, 0.0, 0.0]);
+        v.gather_range(1, 3, &mut buf);
+        assert_eq!(buf, vec![1.0, 0.0, 0.0, 2.0]);
+        assert_eq!(gathered_bytes() - before, (4 * 2 * 4) as u64);
+    }
+
+    #[test]
+    fn raw_matrix_views() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let v = DataView::over("raw", &x, 2, 2);
+        assert_eq!(v.row(1), &[3.0, 4.0]);
+        assert!(!v.has_categories());
+        assert_eq!(v.n_categories(), 0);
+        assert!(v.categories().is_none());
+    }
+}

@@ -17,6 +17,14 @@ pub type AbaResult<T> = Result<T, AbaError>;
 pub enum AbaError {
     /// The dataset has no objects.
     EmptyDataset,
+    /// A buffer or shape mismatch while building or transforming a
+    /// dataset (ragged rows, wrong buffer length, category-length
+    /// mismatch).
+    BadShape(String),
+    /// A data file could not be parsed (1-based line number).
+    ParseError { line: usize, msg: String },
+    /// An I/O failure reading or writing a data file.
+    Io(String),
     /// `k` is out of range for the dataset (or violates strict
     /// divisibility when requested).
     InvalidK { k: usize, n: usize, reason: String },
@@ -40,6 +48,9 @@ impl fmt::Display for AbaError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             AbaError::EmptyDataset => write!(f, "dataset has no objects"),
+            AbaError::BadShape(msg) => write!(f, "bad data shape: {msg}"),
+            AbaError::ParseError { line, msg } => write!(f, "parse error at line {line}: {msg}"),
+            AbaError::Io(msg) => write!(f, "i/o error: {msg}"),
             AbaError::InvalidK { k, n, reason } => {
                 write!(f, "invalid k={k} for n={n}: {reason}")
             }
@@ -70,6 +81,9 @@ mod tests {
         assert!(msg.contains("k=7") && msg.contains("n=3"), "{msg}");
         assert!(AbaError::EmptyDataset.to_string().contains("no objects"));
         assert!(AbaError::TimeLimit { limit_secs: 2.0 }.to_string().contains("2s"));
+        assert!(AbaError::BadShape("row 3".into()).to_string().contains("row 3"));
+        let p = AbaError::ParseError { line: 7, msg: "bad float".into() }.to_string();
+        assert!(p.contains("line 7") && p.contains("bad float"), "{p}");
     }
 
     #[test]

@@ -40,7 +40,7 @@ pub fn table8(opts: &ExpOptions) -> Result<Table> {
     for k in ks {
         eprintln!("  [t8] k={k}");
         let cfg = AbaConfig::default();
-        let spec = effective_spec(&ds, k, &cfg)
+        let spec = effective_spec(ds.n, k, &cfg)
             .map(|s| s.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("x"))
             .unwrap_or_else(|| "flat".into());
         let aba = run_algo(&ds, k, Algo::Aba, 0, opts.time_limit_secs)

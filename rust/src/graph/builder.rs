@@ -3,24 +3,27 @@
 //! neighbors with the corresponding edge weights as integers".
 
 use super::csr::Graph;
-use crate::data::Dataset;
+use crate::data::DataView;
 use crate::rng::Pcg32;
 
 /// Build the paper's sparse random-neighbor graph: `p` random distinct
 /// neighbors per node, edge weight `ceil(squared distance)` (METIS needs
 /// integers; the paper rounds up). Zero-weight edges get weight 1 so the
-/// graph stays connected-ish for the partitioner.
-pub fn random_neighbor_graph(ds: &Dataset, p: usize, seed: u64) -> Graph {
+/// graph stays connected-ish for the partitioner. Accepts a `&Dataset`
+/// or a zero-copy [`DataView`] subset.
+pub fn random_neighbor_graph<'a>(data: impl Into<DataView<'a>>, p: usize, seed: u64) -> Graph {
+    let ds: DataView<'a> = data.into();
+    let n = ds.n();
     let mut rng = Pcg32::new(seed);
-    let p = p.min(ds.n - 1);
-    let mut edges = Vec::with_capacity(ds.n * p);
-    for u in 0..ds.n {
+    let p = p.min(n - 1);
+    let mut edges = Vec::with_capacity(n * p);
+    for u in 0..n {
         let mut picked = 0usize;
         let mut guard = 0usize;
         let mut seen: Vec<usize> = Vec::with_capacity(p);
         while picked < p && guard < 20 * p {
             guard += 1;
-            let v = rng.gen_index(ds.n);
+            let v = rng.gen_index(n);
             if v == u || seen.contains(&v) {
                 continue;
             }
@@ -30,7 +33,7 @@ pub fn random_neighbor_graph(ds: &Dataset, p: usize, seed: u64) -> Graph {
             edges.push((u as u32, v as u32, w.max(1)));
         }
     }
-    Graph::from_edges(ds.n, &edges)
+    Graph::from_edges(n, &edges)
 }
 
 #[cfg(test)]

@@ -1,20 +1,22 @@
 //! Brute-force kNN — oracle and high-dimensional fallback.
 
 use crate::data::dataset::sq_dist;
-use crate::data::Dataset;
+use crate::data::DataView;
 
 /// `k` nearest neighbors of every object (excluding self), row-major
 /// `n x k`. O(n² d) — fine for the sizes the exchange baseline handles.
-pub fn knn_all(ds: &Dataset, k: usize) -> Vec<usize> {
-    assert!(k < ds.n);
-    let mut out = Vec::with_capacity(ds.n * k);
+pub fn knn_all<'a>(data: impl Into<DataView<'a>>, k: usize) -> Vec<usize> {
+    let ds: DataView<'a> = data.into();
+    let n = ds.n();
+    assert!(k < n);
+    let mut out = Vec::with_capacity(n * k);
     // Reused per-row heap of (dist, idx) as a simple insertion buffer.
     let mut best: Vec<(f64, usize)> = Vec::with_capacity(k + 1);
-    for i in 0..ds.n {
+    for i in 0..n {
         best.clear();
         let ri = ds.row(i);
         let mut worst = f64::INFINITY;
-        for j in 0..ds.n {
+        for j in 0..n {
             if j == i {
                 continue;
             }
@@ -41,9 +43,10 @@ pub fn knn_all(ds: &Dataset, k: usize) -> Vec<usize> {
     out
 }
 
-/// `k` nearest neighbors of a single query point among dataset rows.
-pub fn knn_query(ds: &Dataset, query: &[f32], k: usize) -> Vec<usize> {
-    let mut d: Vec<(f64, usize)> = (0..ds.n).map(|j| (sq_dist(query, ds.row(j)), j)).collect();
+/// `k` nearest neighbors of a single query point among the view's rows.
+pub fn knn_query<'a>(data: impl Into<DataView<'a>>, query: &[f32], k: usize) -> Vec<usize> {
+    let ds: DataView<'a> = data.into();
+    let mut d: Vec<(f64, usize)> = (0..ds.n()).map(|j| (sq_dist(query, ds.row(j)), j)).collect();
     d.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
     d.truncate(k);
     d.into_iter().map(|(_, j)| j).collect()

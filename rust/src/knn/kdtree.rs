@@ -4,7 +4,7 @@
 //! best-first descent with hypersphere/plane pruning for queries.
 
 use crate::data::dataset::sq_dist;
-use crate::data::Dataset;
+use crate::data::DataView;
 
 struct Node {
     /// Splitting dimension.
@@ -17,37 +17,39 @@ struct Node {
     right: Option<Box<Node>>,
 }
 
-/// An immutable kd-tree over a dataset's rows.
+/// An immutable kd-tree over a view's rows (a `&Dataset` or any
+/// zero-copy index subset).
 pub struct KdTree<'a> {
-    ds: &'a Dataset,
+    ds: DataView<'a>,
     root: Option<Box<Node>>,
 }
 
 impl<'a> KdTree<'a> {
     /// Build in O(n log² n) (median via sort per level).
-    pub fn build(ds: &'a Dataset) -> Self {
-        let mut idx: Vec<usize> = (0..ds.n).collect();
-        let root = build_node(ds, &mut idx, 0);
+    pub fn build(data: impl Into<DataView<'a>>) -> Self {
+        let ds: DataView<'a> = data.into();
+        let mut idx: Vec<usize> = (0..ds.n()).collect();
+        let root = build_node(&ds, &mut idx, 0);
         Self { ds, root }
     }
 
     /// Indices of the `k` nearest rows to `query` (may include an
     /// identical point; callers filter self-matches).
     pub fn knn(&self, query: &[f32], k: usize) -> Vec<usize> {
-        assert_eq!(query.len(), self.ds.d);
-        let k = k.min(self.ds.n);
+        assert_eq!(query.len(), self.ds.d());
+        let k = k.min(self.ds.n());
         // Max-heap by distance, capped at k, as a sorted vec (k is small).
         let mut best: Vec<(f64, usize)> = Vec::with_capacity(k + 1);
-        search(self.ds, self.root.as_deref(), query, k, &mut best);
+        search(&self.ds, self.root.as_deref(), query, k, &mut best);
         best.into_iter().map(|(_, i)| i).collect()
     }
 }
 
-fn build_node(ds: &Dataset, idx: &mut [usize], depth: usize) -> Option<Box<Node>> {
+fn build_node(ds: &DataView<'_>, idx: &mut [usize], depth: usize) -> Option<Box<Node>> {
     if idx.is_empty() {
         return None;
     }
-    let dim = depth % ds.d;
+    let dim = depth % ds.d();
     idx.sort_unstable_by(|&a, &b| ds.row(a)[dim].total_cmp(&ds.row(b)[dim]));
     let mid = idx.len() / 2;
     let point = idx[mid];
@@ -64,7 +66,7 @@ fn build_node(ds: &Dataset, idx: &mut [usize], depth: usize) -> Option<Box<Node>
 }
 
 fn search(
-    ds: &Dataset,
+    ds: &DataView<'_>,
     node: Option<&Node>,
     query: &[f32],
     k: usize,

@@ -4,27 +4,30 @@
 //! nearest-neighbor exchange partners) and by the graph builder. A
 //! kd-tree handles the low-dimensional tabular datasets; brute force is
 //! both the oracle and the high-D fallback (kd-trees degrade past ~16
-//! dimensions).
+//! dimensions). Everything consumes a zero-copy [`DataView`] — a
+//! `&Dataset` or any index subset works without gathering rows.
 
 pub mod brute;
 pub mod kdtree;
 
-use crate::data::Dataset;
+use crate::data::DataView;
 
 /// Find the `k` nearest neighbors (by squared Euclidean distance,
 /// excluding self) of every object. Returns an `n x k` row-major index
 /// matrix. Picks kd-tree vs brute force by dimensionality.
-pub fn knn_all(ds: &Dataset, k: usize) -> Vec<usize> {
-    assert!(k < ds.n, "k={k} must be < n={}", ds.n);
-    if ds.d <= 16 {
-        let tree = kdtree::KdTree::build(ds);
-        let mut out = Vec::with_capacity(ds.n * k);
-        for i in 0..ds.n {
-            out.extend(tree.knn(ds.row(i), k + 1).into_iter().filter(|&j| j != i).take(k));
+pub fn knn_all<'a>(data: impl Into<DataView<'a>>, k: usize) -> Vec<usize> {
+    let view: DataView<'a> = data.into();
+    let n = view.n();
+    assert!(k < n, "k={k} must be < n={n}");
+    if view.d() <= 16 {
+        let tree = kdtree::KdTree::build(&view);
+        let mut out = Vec::with_capacity(n * k);
+        for i in 0..n {
+            out.extend(tree.knn(view.row(i), k + 1).into_iter().filter(|&j| j != i).take(k));
         }
         out
     } else {
-        brute::knn_all(ds, k)
+        brute::knn_all(&view, k)
     }
 }
 
@@ -59,5 +62,14 @@ mod tests {
         for i in 0..ds.n {
             assert!(!nn[i * k..(i + 1) * k].contains(&i));
         }
+    }
+
+    #[test]
+    fn view_subset_matches_owned_subset() {
+        let ds = generate(SynthKind::Uniform, 160, 3, 79, "u");
+        let idx: Vec<usize> = (0..160).step_by(2).collect();
+        let owned = knn_all(&ds.subset(&idx, "owned"), 4);
+        let viewed = knn_all(&ds.view().select(&idx), 4);
+        assert_eq!(owned, viewed);
     }
 }

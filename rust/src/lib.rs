@@ -32,6 +32,7 @@
 //! | [`runtime`] | §5 (implementation) | Cost backends (native / Pallas-XLA via PJRT) and the [`runtime::pool`] parallel runtime |
 //! | [`baselines`] | §5 (competitors) | `Rand`, the exchange heuristic, branch-and-bound |
 //! | [`data`] | §5, Table 2 | Dataset catalog, synthetic generators, k-means/k-plus seeding |
+//! | [`data::view`] | §4.4 (scale) | Zero-copy [`data::DataView`]s — the borrowed (matrix, index, categories) currency every consumer layer reads; what lets hierarchical levels descend without per-level matrix copies |
 //! | [`experiments`] | §5, Tables 4–11, Figs. 5–7 | The harness that regenerates each table and figure |
 //! | [`pipeline`] | §6 (application) | Streaming anticlustered mini-batches into an SGD consumer |
 //! | [`graph`], [`knn`] | §6 (application) | Balanced K-cut partitioning on kNN graphs |
@@ -64,6 +65,33 @@
 //! # Ok::<(), aba::AbaError>(())
 //! ```
 //!
+//! ## Zero-copy data views
+//!
+//! Every consumer layer reads data through a borrowed
+//! [`data::DataView`]: constructing one from a [`data::Dataset`] is
+//! free, and selecting any index subset borrows the indices instead of
+//! gathering feature rows. [`Anticlusterer::partition_view`] partitions
+//! a subset — and the hierarchical driver splits its groups level by
+//! level — without copying the feature matrix once; the only copies
+//! left are the assignment loop's bounded per-batch stagings (metered
+//! by [`data::view::gathered_bytes`]):
+//!
+//! ```
+//! use aba::{Aba, Anticlusterer};
+//! use aba::data::synth::{generate, SynthKind};
+//!
+//! let ds = generate(SynthKind::Uniform, 400, 8, 3, "views");
+//! // Hierarchically partition only the even rows — zero-copy: the view
+//! // borrows the matrix and the 2x5 decomposition descends through
+//! // index selections, never materializing a sub-dataset.
+//! let even: Vec<usize> = (0..ds.n).step_by(2).collect();
+//! let view = ds.view().select(&even);
+//! let part = Aba::builder().hier(vec![2, 5]).build()?.partition_view(&view, 10)?;
+//! assert_eq!(part.labels.len(), 200);
+//! assert!(part.sizes().iter().all(|&s| s == 20));
+//! # Ok::<(), aba::AbaError>(())
+//! ```
+//!
 //! ## Parallel execution
 //!
 //! Parallelism is a session knob ([`runtime::Parallelism`]): `Serial`
@@ -91,11 +119,12 @@
 //! [`baselines::RandomPartition`], [`baselines::FastAnticlustering`],
 //! and [`baselines::ExactSolver`].
 //!
-//! Errors are typed ([`AbaError`]) throughout the library core; `anyhow`
-//! survives only at the CLI / experiment-harness boundary. The free
-//! functions `algo::run_aba` / `algo::run_aba_constrained` are
-//! deprecated shims, deleted in 0.3.0 — see their docs for the migration
-//! path.
+//! Errors are typed ([`AbaError`]) throughout the library core,
+//! including the data layer ([`AbaError::BadShape`],
+//! [`AbaError::ParseError`], [`AbaError::Io`]); `anyhow` survives only
+//! at the CLI / experiment-harness boundary. The free functions
+//! `algo::run_aba` / `algo::run_aba_constrained` are deprecated shims,
+//! deleted in 0.3.0 — see their docs for the migration path.
 
 pub mod algo;
 pub mod assignment;

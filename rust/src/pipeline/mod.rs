@@ -14,7 +14,7 @@ pub mod sgd;
 
 use crate::algo::AbaConfig;
 use crate::baselines::random_part;
-use crate::data::Dataset;
+use crate::data::DataView;
 use crate::error::{AbaError, AbaResult};
 use crate::solver::{Aba, Anticlusterer};
 use std::sync::mpsc;
@@ -65,16 +65,20 @@ pub struct PipelineStats {
 
 /// Run the pipeline: produce mini-batches per `cfg`, invoke `consumer`
 /// for each. The consumer runs on the caller's thread; production runs on
-/// a worker thread with backpressure `queue_depth`.
-pub fn run_pipeline(
-    ds: &Dataset,
+/// a worker thread with backpressure `queue_depth`. Accepts a `&Dataset`
+/// or a zero-copy [`DataView`] subset — building per-epoch batches over
+/// a fold or shard costs no feature-row copy.
+pub fn run_pipeline<'a>(
+    data: impl Into<DataView<'a>>,
     cfg: &PipelineConfig,
     mut consumer: impl FnMut(&MiniBatch),
 ) -> AbaResult<PipelineStats> {
-    if cfg.k == 0 || cfg.k > ds.n {
+    let view: DataView<'a> = data.into();
+    let n = view.n();
+    if cfg.k == 0 || cfg.k > n {
         return Err(AbaError::InvalidK {
             k: cfg.k,
-            n: ds.n,
+            n,
             reason: "mini-batch count must be in 1..=n".into(),
         });
     }
@@ -83,6 +87,7 @@ pub fn run_pipeline(
     let mut stats = PipelineStats::default();
 
     let produced = std::thread::scope(|scope| -> AbaResult<(usize, f64, f64)> {
+        let view = &view;
         let producer = scope.spawn(move || -> AbaResult<(usize, f64, f64)> {
             let mut produced = 0usize;
             let mut produce_secs = 0f64;
@@ -100,7 +105,7 @@ pub fn run_pipeline(
                             // deterministic, so its Partition::groups()
                             // are computed once and reused across epochs.
                             let mut session = Aba::from_config(aba_cfg.clone())?;
-                            aba_batches = Some(session.partition(ds, cfg.k)?.groups());
+                            aba_batches = Some(session.partition_view(view, cfg.k)?.groups());
                         }
                         let mut order: Vec<usize> = (0..cfg.k).collect();
                         let mut rng =
@@ -111,7 +116,7 @@ pub fn run_pipeline(
                     }
                     BatchStrategy::Random { seed } => {
                         let labels = random_part::random_partition(
-                            ds.n,
+                            n,
                             cfg.k,
                             seed.wrapping_add(epoch as u64),
                         );
@@ -154,6 +159,7 @@ pub fn run_pipeline(
 mod tests {
     use super::*;
     use crate::data::synth::{generate, SynthKind};
+    use crate::data::Dataset;
 
     fn ds() -> Dataset {
         generate(SynthKind::Uniform, 120, 4, 71, "p")

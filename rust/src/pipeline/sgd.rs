@@ -6,7 +6,7 @@
 //! lower-variance gradients than random batches, which shows up as a
 //! smoother per-batch loss trajectory at equal data budget.
 
-use crate::data::Dataset;
+use crate::data::DataView;
 use crate::rng::Pcg32;
 
 /// Binary logistic regression trained with plain SGD.
@@ -31,8 +31,10 @@ impl LogReg {
         z
     }
 
-    /// Mean log-loss of the model on the given rows.
-    pub fn loss(&self, ds: &Dataset, y: &[f32], indices: &[usize]) -> f64 {
+    /// Mean log-loss of the model on the given rows. Accepts a
+    /// `&Dataset` or a zero-copy [`DataView`].
+    pub fn loss<'a>(&self, data: impl Into<DataView<'a>>, y: &[f32], indices: &[usize]) -> f64 {
+        let ds: DataView<'a> = data.into();
         let mut total = 0f64;
         for &i in indices {
             let z = self.margin(ds.row(i));
@@ -45,7 +47,13 @@ impl LogReg {
 
     /// One SGD step on a mini-batch (mean gradient); returns the batch
     /// loss *before* the update.
-    pub fn train_batch(&mut self, ds: &Dataset, y: &[f32], indices: &[usize]) -> f64 {
+    pub fn train_batch<'a>(
+        &mut self,
+        data: impl Into<DataView<'a>>,
+        y: &[f32],
+        indices: &[usize],
+    ) -> f64 {
+        let ds: DataView<'a> = data.into();
         let m = indices.len().max(1) as f64;
         let mut grad_w = vec![0f64; self.w.len()];
         let mut grad_b = 0f64;
@@ -69,11 +77,13 @@ impl LogReg {
     }
 
     /// Classification accuracy at threshold 0.5.
-    pub fn accuracy(&self, ds: &Dataset, y: &[f32]) -> f64 {
-        let correct = (0..ds.n)
+    pub fn accuracy<'a>(&self, data: impl Into<DataView<'a>>, y: &[f32]) -> f64 {
+        let ds: DataView<'a> = data.into();
+        let n = ds.n();
+        let correct = (0..n)
             .filter(|&i| (self.margin(ds.row(i)) > 0.0) == (y[i] > 0.5))
             .count();
-        correct as f64 / ds.n as f64
+        correct as f64 / n as f64
     }
 }
 
@@ -84,10 +94,11 @@ fn sigmoid(z: f64) -> f64 {
 
 /// Synthesize binary labels from a random ground-truth hyperplane with
 /// the given label-noise rate. Returns labels in {0.0, 1.0}.
-pub fn synth_labels(ds: &Dataset, noise: f64, seed: u64) -> Vec<f32> {
+pub fn synth_labels<'a>(data: impl Into<DataView<'a>>, noise: f64, seed: u64) -> Vec<f32> {
+    let ds: DataView<'a> = data.into();
     let mut rng = Pcg32::new(seed);
-    let w: Vec<f64> = (0..ds.d).map(|_| rng.normal()).collect();
-    (0..ds.n)
+    let w: Vec<f64> = (0..ds.d()).map(|_| rng.normal()).collect();
+    (0..ds.n())
         .map(|i| {
             let z: f64 = ds
                 .row(i)

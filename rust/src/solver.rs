@@ -33,7 +33,7 @@
 
 use crate::algo::{self, AbaConfig, ClusterStats, Constraints, Variant};
 use crate::assignment::SolverKind;
-use crate::data::Dataset;
+use crate::data::{DataView, Dataset};
 use crate::error::{AbaError, AbaResult};
 use crate::runtime::{make_backend, BackendKind, CostBackend, Parallelism};
 use std::time::Instant;
@@ -42,9 +42,21 @@ use std::time::Instant;
 ///
 /// `&mut self` lets implementations keep state across calls: scratch
 /// buffers, compiled executables, RNG state.
+///
+/// The required entry point is [`Anticlusterer::partition_view`], which
+/// consumes a borrowed zero-copy [`DataView`] — partitioning any index
+/// subset of a dataset costs no feature-row copy. [`Anticlusterer::partition`]
+/// is a provided convenience over the identity view, so existing
+/// `partition(&ds, k)` call sites keep working unchanged.
 pub trait Anticlusterer {
-    /// Partition `ds` into `k` anticlusters.
-    fn partition(&mut self, ds: &Dataset, k: usize) -> AbaResult<Partition>;
+    /// Partition the rows of `view` into `k` anticlusters.
+    fn partition_view(&mut self, view: &DataView<'_>, k: usize) -> AbaResult<Partition>;
+
+    /// Partition a whole dataset — a convenience over
+    /// [`Anticlusterer::partition_view`] on the identity view.
+    fn partition(&mut self, ds: &Dataset, k: usize) -> AbaResult<Partition> {
+        self.partition_view(&ds.view(), k)
+    }
 
     /// Short human-readable algorithm name (used in tables and logs).
     fn name(&self) -> String;
@@ -95,15 +107,16 @@ pub struct Partition {
 
 impl Partition {
     /// Assemble a `Partition` from raw labels, computing the stats and
-    /// stamping the stats phase into `timings`.
-    pub fn from_labels(
-        ds: &Dataset,
+    /// stamping the stats phase into `timings`. Accepts a `&Dataset` or
+    /// the [`DataView`] the labels were computed over.
+    pub fn from_labels<'a>(
+        data: impl Into<DataView<'a>>,
         labels: Vec<u32>,
         k: usize,
         mut timings: PhaseTimings,
     ) -> Self {
         let t = Instant::now();
-        let stats = ClusterStats::compute(ds, &labels, k);
+        let stats = ClusterStats::compute(data, &labels, k);
         timings.stats_secs = t.elapsed().as_secs_f64();
         timings.total_secs = timings.order_secs + timings.assign_secs + timings.stats_secs;
         let objective = stats.ssd_total();
@@ -265,23 +278,23 @@ impl Aba {
         &self.cfg
     }
 
-    fn partition_flat(&mut self, ds: &Dataset, k: usize) -> AbaResult<Partition> {
+    fn partition_flat(&mut self, view: &DataView<'_>, k: usize) -> AbaResult<Partition> {
         // One shared flat implementation with run_aba_with_backend; the
         // session threads its own backend and scratch through it.
         let (labels, order_secs, assign_secs) = algo::flat_with_scratch(
-            ds,
+            view,
             k,
             &self.cfg,
             self.backend.as_mut(),
             &mut self.scratch,
         )?;
         let timings = PhaseTimings { order_secs, assign_secs, ..PhaseTimings::default() };
-        Ok(Partition::from_labels(ds, labels, k, timings))
+        Ok(Partition::from_labels(view, labels, k, timings))
     }
 }
 
 impl Anticlusterer for Aba {
-    fn partition(&mut self, ds: &Dataset, k: usize) -> AbaResult<Partition> {
+    fn partition_view(&mut self, view: &DataView<'_>, k: usize) -> AbaResult<Partition> {
         // Each branch validates exactly once: the constrained loop
         // validates internally; the other paths validate here.
         if let Some(cons) = &self.constraints {
@@ -292,17 +305,17 @@ impl Anticlusterer for Aba {
             let mut timings = PhaseTimings::default();
             let t = Instant::now();
             let labels = algo::constraints::constrained_with_backend(
-                ds,
+                view,
                 k,
                 &self.cfg,
                 cons,
                 self.backend.as_mut(),
             )?;
             timings.assign_secs = t.elapsed().as_secs_f64();
-            return Ok(Partition::from_labels(ds, labels, k, timings));
+            return Ok(Partition::from_labels(view, labels, k, timings));
         }
-        algo::validate(ds, k, self.cfg.strict_divisibility)?;
-        if let Some(spec) = algo::effective_spec(ds, k, &self.cfg) {
+        algo::validate(view.n(), k, self.cfg.strict_divisibility)?;
+        if let Some(spec) = algo::effective_spec(view.n(), k, &self.cfg) {
             let prod: usize = spec.iter().product();
             if prod != k {
                 return Err(AbaError::BadHierSpec(format!(
@@ -314,18 +327,19 @@ impl Anticlusterer for Aba {
             // Single-group levels reuse the session's backend and
             // scratch (one XLA compilation, one persistent worker pool
             // for the whole decomposition); fanned-out levels run on
-            // that pool with thread-local native backends.
+            // that pool with thread-local native backends. Groups
+            // descend as zero-copy index views of `view`.
             let labels = algo::hierarchical::run_hierarchical_with_backend(
-                ds,
+                view,
                 &spec,
                 &self.cfg,
                 self.backend.as_mut(),
                 &mut self.scratch,
             )?;
             timings.assign_secs = t.elapsed().as_secs_f64();
-            return Ok(Partition::from_labels(ds, labels, k, timings));
+            return Ok(Partition::from_labels(view, labels, k, timings));
         }
-        self.partition_flat(ds, k)
+        self.partition_flat(view, k)
     }
 
     fn name(&self) -> String {
@@ -381,6 +395,21 @@ mod tests {
             .unwrap();
         assert_eq!(a.labels, b.labels);
         assert_eq!(a.objective, b.objective);
+    }
+
+    #[test]
+    fn partition_view_subset_matches_owned_subset() {
+        // The zero-copy view path must be observationally identical to
+        // materializing the subset first — labels and objectives bit-equal.
+        let ds = generate(SynthKind::Uniform, 240, 4, 19, "s");
+        let idx: Vec<usize> = (0..240).rev().step_by(2).collect();
+        let owned = ds.subset(&idx, "owned");
+        let a = Aba::new().unwrap().partition(&owned, 6).unwrap();
+        let view = ds.view().select(&idx);
+        let b = Aba::new().unwrap().partition_view(&view, 6).unwrap();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.objective, b.objective);
+        assert_eq!(a.pairwise, b.pairwise);
     }
 
     #[test]

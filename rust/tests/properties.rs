@@ -258,6 +258,79 @@ fn parallel_flat_large_k_matches_serial() {
 }
 
 #[test]
+fn prop_view_path_bit_identical_to_owned_copy_path() {
+    // The zero-copy DataView path must be observationally identical to
+    // materializing the same subset into an owned Dataset first: labels
+    // and both objectives bit-equal, across the flat, hierarchical,
+    // categorical, and constrained dispatch paths, under both serial
+    // and threaded execution.
+    use aba::algo::Constraints;
+    use aba::runtime::Parallelism;
+    PropRunner::new(6).run("view == owned copy", |rng| {
+        let plain = rand_dataset(rng, 200, 5);
+        if plain.n < 48 {
+            return Ok(()); // need room for a >= 24-row subset
+        }
+        // Categorical twin of the same geometry (categories attached to
+        // the *base*, so the view must indirect them too).
+        let g = 2 + rng.gen_index(3);
+        let cats: Vec<u32> = (0..plain.n).map(|_| rng.gen_below(g as u32)).collect();
+        let catted = plain.clone().with_categories(cats).map_err(|e| e.to_string())?;
+        // A random subset in shuffled order, at least 24 rows.
+        let mut idx: Vec<usize> = (0..plain.n).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate((24 + rng.gen_index(plain.n - 23)).min(plain.n));
+        let m = idx.len();
+
+        for par in [Parallelism::Serial, Parallelism::Threads(3)] {
+            for mode in 0..4usize {
+                let base = if mode == 2 { &catted } else { &plain };
+                let (k, hier): (usize, Option<Vec<usize>>) = match mode {
+                    1 => (4, Some(vec![2, 2])),
+                    _ => (2 + rng.gen_index(6.min(m / 2)), None),
+                };
+                let build = || -> Result<aba::Aba, String> {
+                    let mut b = Aba::builder().parallelism(par);
+                    if let Some(spec) = &hier {
+                        b = b.hier(spec.clone());
+                    }
+                    if mode == 3 {
+                        b = b.constraints(Constraints {
+                            must_link: vec![vec![0, 1]],
+                            cannot_link: vec![(2, 3)],
+                        });
+                    }
+                    b.build().map_err(|e| e.to_string())
+                };
+                let owned_ds = base.subset(&idx, "owned");
+                let owned = build()?
+                    .partition(&owned_ds, k)
+                    .map_err(|e| e.to_string())?;
+                let view = base.view().select(&idx);
+                let viewed = build()?
+                    .partition_view(&view, k)
+                    .map_err(|e| e.to_string())?;
+                prop_assert!(
+                    owned.labels == viewed.labels,
+                    "labels diverge (mode={mode} par={par:?} m={m} k={k})"
+                );
+                prop_assert!(
+                    owned.objective == viewed.objective,
+                    "objective {} vs {} (mode={mode} par={par:?})",
+                    owned.objective,
+                    viewed.objective
+                );
+                prop_assert!(
+                    owned.pairwise == viewed.pairwise,
+                    "pairwise diverges (mode={mode} par={par:?})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_hierarchical_proposition1() {
     PropRunner::new(25).run("proposition 1 sizes", |rng| {
         let ds = rand_dataset(rng, 400, 6);
