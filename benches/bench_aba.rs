@@ -13,18 +13,44 @@
 //!
 //! Besides the human-readable report, every measurement is appended to
 //! `BENCH_aba.json` (section, label, n, k, d, threads, algorithm
-//! seconds, wall seconds, objective, gathered bytes) so the perf
-//! trajectory is tracked across PRs by machines, not eyeballs. The
-//! `deep_hier_bytes` section runs a 3-level decomposition with the
-//! zero-copy view path and records the bytes actually gathered next to
-//! what the old per-level `Dataset::subset` copy would have cost.
+//! seconds, wall seconds, objective, gathered bytes, cost-buffer bytes)
+//! so the perf trajectory is tracked across PRs by machines, not
+//! eyeballs. The `deep_hier_bytes` section runs a 3-level decomposition
+//! with the zero-copy view path and records the bytes actually gathered
+//! next to what the old per-level `Dataset::subset` copy would have
+//! cost. The `large_k_sparse` section runs the candidate-pruned
+//! assignment path at a scale whose dense `k x k` cost buffer would
+//! exceed 256 MiB, next to a one-batch dense LAPJV reference at the
+//! same `k` (a *full* dense run at this scale is `O(k^3)` per batch x
+//! 20 batches — not worth anyone's wall clock).
+//!
+//! Set `ABA_BENCH_ONLY=section[,section...]` to run a subset of the
+//! sections (e.g. `ABA_BENCH_ONLY=large_k_sparse`). Filtered runs
+//! write `BENCH_aba.partial.json` so they never truncate the canonical
+//! cross-PR record in `BENCH_aba.json` (which only full runs rewrite).
 
 use aba::algo::{AbaConfig, Variant};
-use aba::assignment::SolverKind;
+use aba::assignment::{CandidateMode, SolverKind};
 use aba::data::synth::{generate, SynthKind};
 use aba::runtime::Parallelism;
 use aba::util::timer::timed;
 use aba::{Aba, Anticlusterer, Partition};
+
+/// Whether a section filter is active (`ABA_BENCH_ONLY=a,b`).
+fn section_filter() -> Option<String> {
+    match std::env::var("ABA_BENCH_ONLY") {
+        Ok(v) if !v.trim().is_empty() => Some(v),
+        _ => None,
+    }
+}
+
+/// Section filter: `ABA_BENCH_ONLY=a,b` runs only those sections.
+fn section_enabled(name: &str) -> bool {
+    match section_filter() {
+        Some(v) => v.split(',').any(|s| s.trim() == name),
+        None => true,
+    }
+}
 
 fn mk(n: usize, d: usize, seed: u64) -> aba::data::Dataset {
     generate(SynthKind::GaussianMixture { components: 8, spread: 3.0 }, n, d, seed, "bench")
@@ -46,6 +72,9 @@ struct Rec {
     /// Feature bytes actually gathered (copied) during the run, from the
     /// `data::view` meter. 0 where the section does not measure it.
     gathered_bytes: u64,
+    /// Peak bytes of the per-batch cost structure (dense `m*k` f32s or
+    /// the sparse CSR). 0 where the section does not measure it.
+    cost_buffer_bytes: u64,
 }
 
 fn record(
@@ -69,6 +98,7 @@ fn record(
         total_secs: wall_secs,
         objective: part.objective,
         gathered_bytes: 0,
+        cost_buffer_bytes: 0,
     });
 }
 
@@ -78,7 +108,7 @@ fn write_json(path: &str, recs: &[Rec]) {
         s.push_str(&format!(
             "  {{\"section\": \"{}\", \"label\": \"{}\", \"n\": {}, \"k\": {}, \"d\": {}, \
              \"threads\": {}, \"algo_secs\": {:.6}, \"total_secs\": {:.6}, \
-             \"objective\": {:.3}, \"gathered_bytes\": {}}}{}\n",
+             \"objective\": {:.3}, \"gathered_bytes\": {}, \"cost_buffer_bytes\": {}}}{}\n",
             r.section,
             r.label,
             r.n,
@@ -89,6 +119,7 @@ fn write_json(path: &str, recs: &[Rec]) {
             r.total_secs,
             r.objective,
             r.gathered_bytes,
+            r.cost_buffer_bytes,
             if i + 1 < recs.len() { "," } else { "" }
         ));
     }
@@ -114,31 +145,42 @@ fn cold_partition(ds: &aba::data::Dataset, k: usize, cfg: &AbaConfig) -> (Partit
 fn main() {
     let mut recs: Vec<Rec> = Vec::new();
     println!("# bench_aba — end-to-end runtime scaling");
-    println!("\n## N scaling (D=16, K=50, flat)");
-    let flat = AbaConfig { auto_hier: false, ..AbaConfig::default() };
-    for &n in &[10_000usize, 20_000, 40_000, 80_000] {
-        let ds = mk(n, 16, 1);
-        let (part, secs) = cold_partition(&ds, 50, &flat);
-        println!("  n={n:>7}: {secs:>7.3}s  ofv={:.1}", part.objective);
-        record(&mut recs, "n_scaling", format!("n{n}"), &ds, 50, 1, &part, secs);
+    // The flat baseline stays on the dense (exact) solve even where K
+    // crosses the sparse Auto threshold — these sections measure the
+    // dense machinery; `large_k_sparse` below measures the sparse path.
+    let flat = AbaConfig {
+        auto_hier: false,
+        candidates: CandidateMode::Dense,
+        ..AbaConfig::default()
+    };
+    if section_enabled("n_scaling") {
+        println!("\n## N scaling (D=16, K=50, flat)");
+        for &n in &[10_000usize, 20_000, 40_000, 80_000] {
+            let ds = mk(n, 16, 1);
+            let (part, secs) = cold_partition(&ds, 50, &flat);
+            println!("  n={n:>7}: {secs:>7.3}s  ofv={:.1}", part.objective);
+            record(&mut recs, "n_scaling", format!("n{n}"), &ds, 50, 1, &part, secs);
+        }
     }
 
-    println!("\n## K scaling (N=20000, D=16): flat vs auto-hierarchical");
-    for &k in &[50usize, 100, 200, 400, 800] {
-        let ds = mk(20_000, 16, 2);
-        let (fp, flat_secs) = cold_partition(&ds, k, &flat);
-        let (ap, auto_secs) = cold_partition(&ds, k, &AbaConfig::default());
-        println!(
-            "  k={k:>4}: flat {flat_secs:>7.3}s | auto {auto_secs:>7.3}s ({:>5.1}x) | ofv loss {:>7.4}%",
-            flat_secs / auto_secs.max(1e-9),
-            100.0 * (ap.objective - fp.objective) / fp.objective
-        );
-        record(&mut recs, "k_scaling_flat", format!("k{k}"), &ds, k, 1, &fp, flat_secs);
-        record(&mut recs, "k_scaling_auto", format!("k{k}"), &ds, k, 1, &ap, auto_secs);
+    if section_enabled("k_scaling") {
+        println!("\n## K scaling (N=20000, D=16): flat vs auto-hierarchical");
+        for &k in &[50usize, 100, 200, 400, 800] {
+            let ds = mk(20_000, 16, 2);
+            let (fp, flat_secs) = cold_partition(&ds, k, &flat);
+            let (ap, auto_secs) = cold_partition(&ds, k, &AbaConfig::default());
+            println!(
+                "  k={k:>4}: flat {flat_secs:>7.3}s | auto {auto_secs:>7.3}s ({:>5.1}x) | ofv loss {:>7.4}%",
+                flat_secs / auto_secs.max(1e-9),
+                100.0 * (ap.objective - fp.objective) / fp.objective
+            );
+            record(&mut recs, "k_scaling_flat", format!("k{k}"), &ds, k, 1, &fp, flat_secs);
+            record(&mut recs, "k_scaling_auto", format!("k{k}"), &ds, k, 1, &ap, auto_secs);
+        }
     }
 
-    println!("\n## session reuse (N=40000, D=16, K=50): cold per-call vs one warm session");
-    {
+    if section_enabled("session_reuse") {
+        println!("\n## session reuse (N=40000, D=16, K=50): cold per-call vs one warm session");
         let ds = mk(40_000, 16, 6);
         // Two cold calls, each paying session construction + scratch
         // warm-up (the behaviour of the deprecated one-shot functions).
@@ -167,11 +209,18 @@ fn main() {
     }
 
     let auto_threads = Parallelism::Auto.effective_threads();
-    println!("\n## parallel cost path (N=20000, D=16, K=2000 flat): serial vs {auto_threads} threads");
-    {
+    if section_enabled("parallel_flat") {
+        println!("\n## parallel cost path (N=20000, D=16, K=2000 flat): serial vs {auto_threads} threads");
         let ds = mk(20_000, 16, 7);
         let run = |par: Parallelism| {
-            let cfg = AbaConfig { auto_hier: false, parallelism: par, ..AbaConfig::default() };
+            let cfg = AbaConfig {
+                auto_hier: false,
+                parallelism: par,
+                // This section measures the chunk-parallel *dense* cost
+                // kernel, so keep candidate pruning off.
+                candidates: CandidateMode::Dense,
+                ..AbaConfig::default()
+            };
             cold_partition(&ds, 2_000, &cfg)
         };
         let (sp, serial_secs) = run(Parallelism::Serial);
@@ -185,8 +234,8 @@ fn main() {
         record(&mut recs, "parallel_flat", "threads", &ds, 2_000, auto_threads, &tp, par_secs);
     }
 
-    println!("\n## parallel fan-out (N=65536, D=16, K=4096 via 64x64): serial vs {auto_threads} threads");
-    {
+    if section_enabled("parallel_hier") {
+        println!("\n## parallel fan-out (N=65536, D=16, K=4096 via 64x64): serial vs {auto_threads} threads");
         let ds = mk(65_536, 16, 8);
         let run = |par: Parallelism| {
             let cfg = AbaConfig {
@@ -208,8 +257,8 @@ fn main() {
         record(&mut recs, "parallel_hier", "threads", &ds, 4_096, auto_threads, &tp, par_secs);
     }
 
-    println!("\n## variant ablation (small anticlusters, N=8192, K=2048, i.e. size 4)");
-    {
+    if section_enabled("variant") {
+        println!("\n## variant ablation (small anticlusters, N=8192, K=2048, i.e. size 4)");
         let ds = mk(8_192, 16, 3);
         for (name, variant) in [("base", Variant::Base), ("small", Variant::Small)] {
             let cfg = AbaConfig { variant, hier: Some(vec![32, 64]), ..AbaConfig::default() };
@@ -219,8 +268,8 @@ fn main() {
         }
     }
 
-    println!("\n## solver ablation (N=10000, D=16, K=100, flat)");
-    {
+    if section_enabled("solver") {
+        println!("\n## solver ablation (N=10000, D=16, K=100, flat)");
         let ds = mk(10_000, 16, 4);
         for (name, solver) in [
             ("lapjv", SolverKind::Lapjv),
@@ -234,8 +283,8 @@ fn main() {
         }
     }
 
-    println!("\n## 3-level decomposition (N=65536, D=32, K=4096, size 16)");
-    {
+    if section_enabled("decomposition") {
+        println!("\n## 3-level decomposition (N=65536, D=32, K=4096, size 16)");
         let ds = mk(65_536, 32, 5);
         for spec in [vec![64, 64], vec![16, 16, 16], vec![4, 32, 32]] {
             let label = spec.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("x");
@@ -246,8 +295,8 @@ fn main() {
         }
     }
 
-    println!("\n## deep hierarchy, zero-copy views (N=100000, D=16, K=5000 via 25x20x10)");
-    {
+    if section_enabled("deep_hier_bytes") {
+        println!("\n## deep hierarchy, zero-copy views (N=100000, D=16, K=5000 via 25x20x10)");
         // Levels descend as index views: the only feature copies are the
         // bounded per-batch stagings, metered by data::view. The old
         // per-level `Dataset::subset` path would have gathered the full
@@ -278,5 +327,91 @@ fn main() {
         deep("per_level_copy_equivalent", gathered + per_level_copy);
     }
 
-    write_json("BENCH_aba.json", &recs);
+    if section_enabled("large_k_sparse") {
+        // The headline large-K claim: an instance whose dense k x k cost
+        // buffer (10_000^2 f32 = 400 MiB > 256 MiB) the dense path cannot
+        // reasonably serve. The sparse path runs the full instance; the
+        // dense reference solves exactly ONE batch at the same k (an
+        // n = 2k dense run seeds batch 1 and dense-solves batch 2), since
+        // a full dense run is O(k^3) per batch x 20 batches. Expect the
+        // dense reference to take minutes — that asymmetry is the point.
+        let (n, k, d) = (200_000usize, 10_000usize, 16usize);
+        println!("\n## large-K sparse candidate path (N={n}, D={d}, K={k} flat)");
+        let ds = mk(n, d, 10);
+        let sparse_cfg = AbaConfig {
+            auto_hier: false,
+            candidates: CandidateMode::Auto, // k >= 512 -> C = 32
+            ..AbaConfig::default()
+        };
+        let mut session = Aba::from_config(sparse_cfg).unwrap();
+        let (sp, sparse_secs) = timed(|| session.partition(&ds, k).unwrap());
+        let stats = session.sparse_stats();
+        let solved_batches = (stats.sparse_batches + stats.dense_batches).max(1);
+        let sparse_per_batch = sp.timings.assign_secs / solved_batches as f64;
+        let dense_bytes = (k * k * 4) as u64;
+        let mib = |b: u64| b as f64 / (1 << 20) as f64;
+        println!(
+            "  sparse (C=32): {sparse_secs:>8.3}s total, {sparse_per_batch:>7.3}s/batch \
+             over {solved_batches} batches, ofv={:.1}",
+            sp.objective
+        );
+        println!(
+            "  cost buffers:  sparse peak {:.1} MiB vs dense k x k {:.1} MiB \
+             ({} sparse / {} dense batches, {} escalations, {} fallbacks)",
+            mib(stats.peak_cost_bytes as u64),
+            mib(dense_bytes),
+            stats.sparse_batches,
+            stats.dense_batches,
+            stats.escalations,
+            stats.fallback_batches
+        );
+
+        println!("  dense LAPJV reference (one k x k batch; this takes a while)...");
+        let dense_ds = mk(2 * k, d, 10);
+        let dense_cfg = AbaConfig {
+            auto_hier: false,
+            candidates: CandidateMode::Dense,
+            ..AbaConfig::default()
+        };
+        let (dp, _dense_secs) = cold_partition(&dense_ds, k, &dense_cfg);
+        let dense_per_batch = dp.timings.assign_secs; // exactly one solved batch
+        println!(
+            "  dense: {dense_per_batch:>8.3}s/batch at k={k} -> sparse is {:.1}x faster per batch",
+            dense_per_batch / sparse_per_batch.max(1e-9)
+        );
+
+        record(&mut recs, "large_k_sparse", "sparse_full", &ds, k, 1, &sp, sparse_secs);
+        recs.last_mut().unwrap().cost_buffer_bytes = stats.peak_cost_bytes as u64;
+        record(&mut recs, "large_k_sparse", "sparse_per_batch", &ds, k, 1, &sp, sparse_secs);
+        {
+            let r = recs.last_mut().unwrap();
+            r.algo_secs = sparse_per_batch;
+            r.total_secs = sparse_per_batch;
+            r.cost_buffer_bytes = stats.peak_cost_bytes as u64;
+        }
+        record(
+            &mut recs,
+            "large_k_sparse",
+            "dense_per_batch",
+            &dense_ds,
+            k,
+            1,
+            &dp,
+            dense_per_batch,
+        );
+        {
+            let r = recs.last_mut().unwrap();
+            r.algo_secs = dense_per_batch;
+            r.total_secs = dense_per_batch;
+            r.cost_buffer_bytes = dense_bytes;
+        }
+    }
+
+    // A filtered run must not truncate the canonical cross-PR record,
+    // which carries every section: divert it to a scratch file.
+    if section_filter().is_some() {
+        write_json("BENCH_aba.partial.json", &recs);
+    } else {
+        write_json("BENCH_aba.json", &recs);
+    }
 }

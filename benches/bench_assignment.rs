@@ -58,4 +58,70 @@ fn main() {
         let stats = bench(1, 10, || solver.solve(&cost, nr, k, true));
         println!("  {nr}x{k}: lapjv {:.3} ms", stats.mean * 1e3);
     }
+
+    // The sparse large-K path: K x K instances restricted to C
+    // candidates per row (feasible by construction — row i always
+    // carries column i). At K where a dense solve is still practical,
+    // the dense time is printed next to it for the contrast.
+    println!("\n# sparse candidate-pruned solves (CSR LAPJV), C candidates/row");
+    for &(k, c) in &[(256usize, 16usize), (1024, 32), (4096, 32), (10_000, 32)] {
+        let mut rng = Pcg32::new(k as u64 + 7);
+        let mut row_ptr = Vec::with_capacity(k + 1);
+        let mut cols: Vec<u32> = Vec::with_capacity(k * c);
+        let mut vals: Vec<f32> = Vec::with_capacity(k * c);
+        row_ptr.push(0usize);
+        let mut seen = vec![usize::MAX; k];
+        for i in 0..k {
+            seen[i] = i; // guarantee a perfect matching exists
+            cols.push(i as u32);
+            vals.push(rng.f32() * 100.0);
+            let mut added = 1;
+            while added < c {
+                let j = rng.gen_index(k);
+                if seen[j] != i {
+                    seen[j] = i;
+                    cols.push(j as u32);
+                    vals.push(rng.f32() * 100.0);
+                    added += 1;
+                }
+            }
+            row_ptr.push(cols.len());
+            // Reset the dedupe marks touched by this row.
+            for &jc in &cols[row_ptr[i]..row_ptr[i + 1]] {
+                seen[jc as usize] = usize::MAX;
+            }
+        }
+        let csr = aba::assignment::sparse::CsrCost {
+            row_ptr: &row_ptr,
+            cols: &cols,
+            vals: &vals,
+            nc: k,
+        };
+        let mut sparse = aba::assignment::sparse::SparseLapjv::new();
+        let iters = if k >= 4096 { 3 } else { 10 };
+        let sparse_stats = bench(1, iters, || sparse.solve_max(&csr).unwrap());
+        if k <= 1024 {
+            // Dense equivalent (missing entries = 0, never optimal to
+            // pick): timing-only contrast at matched k.
+            let mut dense_cost = vec![0f32; k * k];
+            for i in 0..k {
+                for t in row_ptr[i]..row_ptr[i + 1] {
+                    dense_cost[i * k + cols[t] as usize] = vals[t];
+                }
+            }
+            let mut dense = Lapjv::new();
+            let dense_stats = bench(1, 3, || dense.solve(&dense_cost, k, k, true));
+            println!(
+                "  K={k:>6} C={c:>3}: sparse {:>9.3} ms | dense {:>10.3} ms ({:>6.1}x)",
+                sparse_stats.mean * 1e3,
+                dense_stats.mean * 1e3,
+                dense_stats.mean / sparse_stats.mean.max(1e-12)
+            );
+        } else {
+            println!(
+                "  K={k:>6} C={c:>3}: sparse {:>9.3} ms | dense (skipped: O(K^3))",
+                sparse_stats.mean * 1e3
+            );
+        }
+    }
 }

@@ -33,11 +33,30 @@
 //! bit-identical to the serial path — tasks compute the same values in
 //! the same per-entry order — which the determinism property tests
 //! assert.
+//!
+//! # Sparse (candidate-pruned) batches
+//!
+//! When the session's [`CandidateMode`] resolves to `C < k` candidates
+//! (large K), the loop skips the dense `m x k` cost matrix entirely:
+//! a per-batch farthest-point index over the centroids
+//! ([`crate::knn::farthest`]) yields each object's top-`C` highest-cost
+//! candidate anticlusters (capacity-aware — §4.3-saturated clusters are
+//! excluded during the query), a CSR cost structure is assembled in the
+//! scratch (chunk-parallel over objects on the worker pool), and a
+//! sparse solver ([`crate::assignment::sparse`]) runs on it. When the
+//! pruned graph admits no perfect matching, feasibility repair doubles
+//! `C` and regenerates; once `C` would reach `k` the batch falls back
+//! to the exact dense path. Per-batch work drops from `O(k²d + k³)` to
+//! roughly `O(k·C·(d + log k))`; telemetry accumulates in
+//! [`SparseStats`] on the scratch.
 
 use super::batching::batch_ranges;
-use crate::assignment::{self, Lapjv, SolverKind};
+use crate::assignment::auction::Auction;
+use crate::assignment::sparse::{CsrCost, SparseAuction, SparseLapjv, SparseStats};
+use crate::assignment::{greedy, CandidateMode, Lapjv, SolverKind};
 use crate::data::DataView;
 use crate::error::{AbaError, AbaResult};
+use crate::knn::farthest::FarthestIndex;
 use crate::runtime::{CostBackend, Parallelism, WorkerPool};
 use std::sync::{Arc, Mutex};
 
@@ -46,11 +65,34 @@ use std::sync::{Arc, Mutex};
 /// feasible, yet far from f32 infinity to keep dual arithmetic finite.
 const MASK_COST: f32 = -1e30;
 
+/// The single §4.3 saturation predicate shared by the dense mask and
+/// the sparse candidate filter — one definition, so the two paths can
+/// never drift on cap semantics.
+#[inline]
+fn cat_saturated(cat_counts: &[usize], caps: &[usize], kk: usize, cat: usize, g: usize) -> bool {
+    cat_counts[kk * g + cat] >= caps[cat]
+}
+
+/// The default for [`Lapjv::warm_start`] on the assignment loop,
+/// consulted **once** per scratch construction (session build time) —
+/// never on the per-run hot path.
+///
+/// Profiling finding (EXPERIMENTS.md §Perf): the JV column/row-
+/// reduction warm start speeds up *random* cost matrices ~1.7x, but
+/// ABA's structured matrices (all entries = distances to centroids that
+/// have contracted toward the global mean, heavy ties) make the greedy
+/// tight matching adversarial for the remaining augmenting paths —
+/// measured ~1.5–2x SLOWER end to end. Hence cold start by default;
+/// `ABA_LAPJV_WARM=1` (or `Aba::builder().lapjv_warm_start(true)`)
+/// re-enables it for ablation.
+pub(crate) fn warm_start_env_default() -> bool {
+    std::env::var_os("ABA_LAPJV_WARM").is_some()
+}
+
 /// Reusable buffers for the assignment loop. An [`crate::solver::Aba`]
 /// session owns one of these so repeated `partition` calls perform no
 /// large allocations after the first call; `run_with_order` creates a
 /// throwaway one for one-shot use.
-#[derive(Default)]
 pub struct Scratch {
     /// f64 anticluster centroids (`k * d`).
     centroids: Vec<f64>,
@@ -62,18 +104,70 @@ pub struct Scratch {
     xb: Vec<f32>,
     /// Back buffer: the next batch's rows, staged during the solve.
     xb_next: Vec<f32>,
-    /// Per-batch cost matrix.
+    /// Per-batch cost matrix (dense path only).
     cost: Vec<f32>,
     /// Per-(anticluster, category) counters for the §4.3 variant.
     cat_counts: Vec<usize>,
-    /// The LAP solver (owns its own scratch).
+    /// Per-category saturated-cluster lists, rebuilt per batch (the fast
+    /// §4.3 masking path).
+    saturated: Vec<Vec<u32>>,
+    /// The dense LAP solver (owns its own scratch). `warm_start` is set
+    /// at construction — see [`warm_start_env_default`].
     lapjv: Lapjv,
+    /// The dense auction solver (reused so its rectangular padding
+    /// scratch survives across batches).
+    auction: Auction,
+    /// Everything the candidate-pruned path needs (centroid index,
+    /// candidate/CSR buffers, sparse solvers, telemetry).
+    sparse: SparseScratch,
     /// Session worker pool, built lazily on the first parallel run and
     /// kept across runs (thread spawning is the expensive part).
     pool: Option<Arc<WorkerPool>>,
 }
 
+impl Default for Scratch {
+    /// Consults `ABA_LAPJV_WARM` once, here at construction; sessions
+    /// built through `Aba::builder()` can override with
+    /// `lapjv_warm_start(..)`.
+    fn default() -> Self {
+        Self::with_lapjv_warm(warm_start_env_default())
+    }
+}
+
 impl Scratch {
+    /// A scratch with an explicit LAPJV warm-start setting (the session
+    /// builder resolves its `lapjv_warm_start` option into this).
+    pub fn with_lapjv_warm(warm: bool) -> Self {
+        let mut lapjv = Lapjv::new();
+        lapjv.warm_start = warm;
+        Self {
+            centroids: Vec::new(),
+            counts: Vec::new(),
+            centroids_f32: Vec::new(),
+            xb: Vec::new(),
+            xb_next: Vec::new(),
+            cost: Vec::new(),
+            cat_counts: Vec::new(),
+            saturated: Vec::new(),
+            lapjv,
+            auction: Auction::new(),
+            sparse: SparseScratch::default(),
+            pool: None,
+        }
+    }
+
+    /// Sparse-path telemetry accumulated by every run through this
+    /// scratch (see [`SparseStats`]).
+    pub fn sparse_stats(&self) -> SparseStats {
+        self.sparse.stats
+    }
+
+    /// Zero the sparse-path telemetry (benches call this between
+    /// measured configurations).
+    pub fn reset_sparse_stats(&mut self) {
+        self.sparse.stats = SparseStats::default();
+    }
+
     /// The pool for `par`, if it resolves to more than one thread.
     /// Cached: rebuilt only when the requested thread count changes.
     pub(crate) fn pool_for(&mut self, par: Parallelism) -> Option<Arc<WorkerPool>> {
@@ -88,8 +182,263 @@ impl Scratch {
     }
 }
 
+/// Buffers and solvers for the candidate-pruned batches, bundled so the
+/// assignment loop can borrow them disjointly from the rest of
+/// [`Scratch`].
+#[derive(Default)]
+pub(crate) struct SparseScratch {
+    /// Per-batch farthest-point index over the centroids (buffers
+    /// reused across rebuilds).
+    index: FarthestIndex,
+    /// Fixed-width candidate staging: row `j`'s candidates at
+    /// `j*C..j*C+len[j]`. Filled chunk-parallel (disjoint slices).
+    cand_cols: Vec<u32>,
+    cand_vals: Vec<f32>,
+    cand_len: Vec<u32>,
+    /// The compacted CSR handed to the sparse solvers.
+    row_ptr: Vec<usize>,
+    csr_cols: Vec<u32>,
+    csr_vals: Vec<f32>,
+    jv: SparseLapjv,
+    auction: SparseAuction,
+    pub(crate) stats: SparseStats,
+}
+
+impl SparseScratch {
+    /// Fill the candidate staging buffers with each batch object's
+    /// top-`c` farthest non-saturated centroids and compact them into
+    /// CSR. `cents` is the `k x d` centroid matrix the index was built
+    /// over. Chunk-parallel over objects when a pool is present — each
+    /// task writes a disjoint slice, so serial and pooled fills are
+    /// bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    fn build_candidates(
+        &mut self,
+        xb: &[f32],
+        d: usize,
+        cents: &[f32],
+        c: usize,
+        batch: &[usize],
+        ds: &DataView<'_>,
+        g: usize,
+        caps: &[usize],
+        cat_counts: &[usize],
+        pool: Option<&WorkerPool>,
+    ) {
+        let m = batch.len();
+        self.cand_cols.clear();
+        self.cand_cols.resize(m * c, 0);
+        self.cand_vals.clear();
+        self.cand_vals.resize(m * c, 0.0);
+        self.cand_len.clear();
+        self.cand_len.resize(m, 0);
+        let index = &self.index;
+        let fill_rows = |r0: usize, cols: &mut [u32], vals: &mut [f32], lens: &mut [u32]| {
+            let mut best: Vec<(f64, u32)> = Vec::with_capacity(c + 1);
+            for (local, len_slot) in lens.iter_mut().enumerate() {
+                let j = r0 + local;
+                let q = &xb[j * d..(j + 1) * d];
+                if g > 0 {
+                    let cat = ds.category(batch[j]) as usize;
+                    // Capacity-aware: §4.3-saturated clusters are not
+                    // candidates (the dense path masks them instead).
+                    let valid = |kk: usize| !cat_saturated(cat_counts, caps, kk, cat, g);
+                    index.farthest_into(cents, q, c, &valid, &mut best);
+                } else {
+                    index.farthest_into(cents, q, c, &|_| true, &mut best);
+                }
+                *len_slot = best.len() as u32;
+                for (t, &(dist, col)) in best.iter().enumerate() {
+                    cols[local * c + t] = col;
+                    vals[local * c + t] = dist as f32;
+                }
+            }
+        };
+        match pool {
+            Some(pool) if pool.threads() > 1 && m >= 2 => {
+                let rows_per = m.div_ceil(pool.threads() * 4).max(8);
+                struct Chunk<'b> {
+                    r0: usize,
+                    cols: &'b mut [u32],
+                    vals: &'b mut [f32],
+                    lens: &'b mut [u32],
+                }
+                let mut chunks: Vec<Chunk<'_>> = self
+                    .cand_cols
+                    .chunks_mut(rows_per * c)
+                    .zip(self.cand_vals.chunks_mut(rows_per * c))
+                    .zip(self.cand_len.chunks_mut(rows_per))
+                    .enumerate()
+                    .map(|(ci, ((cols, vals), lens))| Chunk {
+                        r0: ci * rows_per,
+                        cols,
+                        vals,
+                        lens,
+                    })
+                    .collect();
+                pool.run_mut(&mut chunks, &|_i, ch| {
+                    fill_rows(ch.r0, ch.cols, ch.vals, ch.lens);
+                });
+            }
+            _ => fill_rows(0, &mut self.cand_cols, &mut self.cand_vals, &mut self.cand_len),
+        }
+        // Compact the fixed-width staging into CSR (cheap O(m·c) copy;
+        // short rows occur when saturation filtered candidates out).
+        self.row_ptr.clear();
+        self.row_ptr.reserve(m + 1);
+        self.row_ptr.push(0);
+        let mut nnz = 0usize;
+        for &l in &self.cand_len {
+            nnz += l as usize;
+            self.row_ptr.push(nnz);
+        }
+        self.csr_cols.clear();
+        self.csr_cols.reserve(nnz);
+        self.csr_vals.clear();
+        self.csr_vals.reserve(nnz);
+        for j in 0..m {
+            let l = self.cand_len[j] as usize;
+            self.csr_cols.extend_from_slice(&self.cand_cols[j * c..j * c + l]);
+            self.csr_vals.extend_from_slice(&self.cand_vals[j * c..j * c + l]);
+        }
+    }
+}
+
+/// Escalation stops once the *next* candidate structure would cross
+/// this byte budget: past it, a doubled CSR rivals the dense matrix and
+/// the dense path is the better exact escape hatch (repair must stay
+/// bounded — it must never allocate more than the thing it avoids).
+const ESCALATION_BYTES_CAP: usize = 256 << 20;
+
+/// One batch through the candidate-pruned path: build the centroid
+/// index, generate top-`c0` candidates, solve sparsely; on an
+/// infeasible pruned graph escalate `C` (×2) and regenerate. Returns
+/// `None` when repair would reach `C = k` or blow the escalation byte
+/// budget — the caller then runs the exact dense path for this batch.
+/// (That fallback allocates the full `m x k` matrix: it is the exact
+/// escape hatch, so at scales where even that cannot be represented a
+/// repair-exhausted batch is a hard stop by design.)
+#[allow(clippy::too_many_arguments)]
+fn solve_batch_sparse(
+    sp: &mut SparseScratch,
+    xb: &[f32],
+    m: usize,
+    d: usize,
+    centroids_f32: &[f32],
+    k: usize,
+    c0: usize,
+    solver: SolverKind,
+    batch: &[usize],
+    ds: &DataView<'_>,
+    g: usize,
+    caps: &[usize],
+    cat_counts: &[usize],
+    pool: Option<&WorkerPool>,
+) -> Option<Vec<usize>> {
+    debug_assert_eq!(xb.len(), m * d);
+    debug_assert!(c0 >= 1 && c0 < k);
+    if matches!(solver, SolverKind::Greedy) {
+        return None; // no sparse mode for greedy; the caller gates this
+    }
+    sp.index.build(centroids_f32, k, d);
+    let mut c = c0;
+    loop {
+        sp.build_candidates(xb, d, centroids_f32, c, batch, ds, g, caps, cat_counts, pool);
+        // A row with zero valid candidates can never match at any C —
+        // its §4.3-valid cluster set itself is empty, so escalation
+        // cannot help; only the dense path (masked costs) can place it.
+        if (0..m).any(|j| sp.row_ptr[j] == sp.row_ptr[j + 1]) {
+            return None;
+        }
+        let nnz = sp.row_ptr[m];
+        let csr_bytes = nnz * (std::mem::size_of::<u32>() + std::mem::size_of::<f32>())
+            + (m + 1) * std::mem::size_of::<usize>();
+        sp.stats.peak_cost_bytes = sp.stats.peak_cost_bytes.max(csr_bytes);
+        let csr = CsrCost {
+            row_ptr: &sp.row_ptr,
+            cols: &sp.csr_cols,
+            vals: &sp.csr_vals,
+            nc: k,
+        };
+        let solved = match solver {
+            SolverKind::Lapjv => sp.jv.solve_max(&csr),
+            SolverKind::Auction => sp.auction.solve_max(&csr, 1e-6),
+            // Greedy has no sparse mode; the caller never routes it here.
+            SolverKind::Greedy => None,
+        };
+        if let Some(assign) = solved {
+            sp.stats.sparse_batches += 1;
+            return Some(assign);
+        }
+        let next_bytes = m * (c * 2) * (std::mem::size_of::<u32>() + std::mem::size_of::<f32>());
+        if c * 2 >= k || next_bytes > ESCALATION_BYTES_CAP {
+            return None;
+        }
+        c *= 2;
+        sp.stats.escalations += 1;
+    }
+}
+
+/// §4.3 categorical masking on a dense cost matrix. Instead of scanning
+/// all `m x k` (object, cluster) pairs, build the per-category list of
+/// saturated clusters once per batch (`O(k·g)`) and only touch those
+/// entries — same entries, same mask value, bit-identical to the old
+/// full scan.
+#[allow(clippy::too_many_arguments)]
+fn mask_saturated(
+    cost: &mut [f32],
+    k: usize,
+    batch: &[usize],
+    ds: &DataView<'_>,
+    g: usize,
+    caps: &[usize],
+    cat_counts: &[usize],
+    saturated: &mut Vec<Vec<u32>>,
+) {
+    if g == 0 {
+        return;
+    }
+    if saturated.len() < g {
+        saturated.resize_with(g, Vec::new);
+    }
+    for list in saturated.iter_mut() {
+        list.clear();
+    }
+    for kk in 0..k {
+        for cat in 0..g {
+            if cat_saturated(cat_counts, caps, kk, cat, g) {
+                saturated[cat].push(kk as u32);
+            }
+        }
+    }
+    for (j, &obj) in batch.iter().enumerate() {
+        let cat = ds.category(obj) as usize;
+        let row = &mut cost[j * k..(j + 1) * k];
+        for &kk in &saturated[cat] {
+            row[kk as usize] = MASK_COST;
+        }
+    }
+}
+
+/// Dense per-batch solve through the scratch-owned solvers.
+fn dense_solve(
+    solver: SolverKind,
+    cost: &[f32],
+    m: usize,
+    k: usize,
+    lapjv: &mut Lapjv,
+    auction: &mut Auction,
+) -> Vec<usize> {
+    match solver {
+        SolverKind::Lapjv => lapjv.solve(cost, m, k, true),
+        SolverKind::Auction => auction.solve_max(cost, m, k),
+        SolverKind::Greedy => greedy::solve_max(cost, m, k),
+    }
+}
+
 /// Run Algorithm 1 over the given processing order with throwaway
-/// scratch, serially. Accepts a `&Dataset` or a zero-copy [`DataView`];
+/// scratch, serially and densely (no candidate pruning — the exact
+/// paper algorithm). Accepts a `&Dataset` or a zero-copy [`DataView`];
 /// `order` must be a permutation of `0..n` (view rows).
 pub fn run_with_order<'a>(
     data: impl Into<DataView<'a>>,
@@ -106,14 +455,19 @@ pub fn run_with_order<'a>(
         backend,
         &mut Scratch::default(),
         Parallelism::Serial,
+        CandidateMode::Dense,
     )
 }
 
 /// Run Algorithm 1 over the given processing order, reusing the caller's
 /// [`Scratch`] across calls (the session hot path). `par` selects the
 /// execution strategy — see the module docs; any setting produces
-/// bit-identical labels. The view is read in place: the only feature
-/// copies are the per-batch stagings into `Scratch.xb`/`xb_next`.
+/// bit-identical labels. `candidates` selects the dense vs
+/// candidate-pruned per-batch solve; any resolution with `C >= k`
+/// (including `Dense` and `Fixed(C >= k)`) runs the identical dense
+/// code path. The view is read in place: the only feature copies are
+/// the per-batch stagings into `Scratch.xb`/`xb_next`.
+#[allow(clippy::too_many_arguments)]
 pub fn run_with_order_scratch(
     ds: &DataView<'_>,
     k: usize,
@@ -122,6 +476,7 @@ pub fn run_with_order_scratch(
     backend: &mut dyn CostBackend,
     scratch: &mut Scratch,
     par: Parallelism,
+    candidates: CandidateMode,
 ) -> AbaResult<Vec<u32>> {
     let n = ds.n();
     if order.len() != n {
@@ -198,14 +553,17 @@ pub fn run_with_order_scratch(
     let xb_next = &mut scratch.xb_next;
     let cost = &mut scratch.cost;
     let lapjv = &mut scratch.lapjv;
-    // Profiling finding (EXPERIMENTS.md §Perf): the JV column/row-
-    // reduction warm start speeds up *random* cost matrices ~1.7x, but
-    // ABA's structured matrices (all entries = distances to centroids
-    // that have contracted toward the global mean, heavy ties) make the
-    // greedy tight matching adversarial for the remaining augmenting
-    // paths — measured ~1.5–2x SLOWER end to end. Default to the cold
-    // start here; ABA_LAPJV_WARM=1 re-enables it for ablation.
-    lapjv.warm_start = std::env::var_os("ABA_LAPJV_WARM").is_some();
+    let auction = &mut scratch.auction;
+    let saturated = &mut scratch.saturated;
+    let sparse = &mut scratch.sparse;
+    // `lapjv.warm_start` was fixed at scratch construction (session
+    // build time) — see `warm_start_env_default`; no env reads here.
+
+    // Candidate pruning resolves once per run; `C >= k` (incl. `Dense`)
+    // is the dense path. Greedy has no sparse mode — it falls through
+    // to dense regardless of the candidate setting.
+    let cand_c = candidates.effective(k);
+    let use_sparse = cand_c < k && matches!(solver, SolverKind::Lapjv | SolverKind::Auction);
 
     // Contiguous row gather for one batch (centroid-independent, so it
     // is safe to stage ahead of the solve). This bounded staging is the
@@ -221,23 +579,15 @@ pub fn run_with_order_scratch(
         let m = hi - lo;
         let batch = &order[lo..hi];
         debug_assert_eq!(xb.len(), m * d, "batch {t} was staged with the wrong shape");
-        // Mirror centroids to f32 for the backend.
+        // Mirror centroids to f32 for the backend / candidate index.
         for (dst, &src) in centroids_f32.iter_mut().zip(centroids.iter()) {
             *dst = src as f32;
         }
-        // Cost matrix through the backend (Pallas/XLA artifact or native).
-        backend.batch_costs(&xb[..], m, d, &centroids_f32[..], k, cost);
-
-        // Categorical upper-bound masking (§4.3).
-        if g > 0 {
-            for (j, &obj) in batch.iter().enumerate() {
-                let c = ds.category(obj) as usize;
-                for kk in 0..k {
-                    if cat_counts[kk * g + c] >= caps[c] {
-                        cost[j * k + kk] = MASK_COST;
-                    }
-                }
-            }
+        if !use_sparse {
+            // Dense path: cost matrix through the backend (Pallas/XLA
+            // artifact or native), then §4.3 masking.
+            backend.batch_costs(&xb[..], m, d, &centroids_f32[..], k, cost);
+            mask_saturated(cost, k, batch, ds, g, &caps, cat_counts, saturated);
         }
 
         // Max-cost assignment on the calling thread; meanwhile a
@@ -255,9 +605,42 @@ pub fn run_with_order_scratch(
                 (Some(p), Some(_)) => Some(p.defer(&prefetch)),
                 _ => None,
             };
-            let assign = match solver {
-                SolverKind::Lapjv => lapjv.solve(&cost[..], m, k, true),
-                other => assignment::solve_max(other, &cost[..], m, k),
+            let assign = if use_sparse {
+                match solve_batch_sparse(
+                    sparse,
+                    &xb[..],
+                    m,
+                    d,
+                    &centroids_f32[..],
+                    k,
+                    cand_c,
+                    solver,
+                    batch,
+                    ds,
+                    g,
+                    &caps,
+                    cat_counts,
+                    pool.as_deref(),
+                ) {
+                    Some(a) => a,
+                    None => {
+                        // Feasibility repair exhausted: even the
+                        // escalated candidate graph admits no perfect
+                        // matching — run this batch on the exact dense
+                        // path instead.
+                        sparse.stats.fallback_batches += 1;
+                        sparse.stats.dense_batches += 1;
+                        sparse.stats.peak_cost_bytes =
+                            sparse.stats.peak_cost_bytes.max(m * k * 4);
+                        backend.batch_costs(&xb[..], m, d, &centroids_f32[..], k, cost);
+                        mask_saturated(cost, k, batch, ds, g, &caps, cat_counts, saturated);
+                        dense_solve(solver, &cost[..], m, k, lapjv, auction)
+                    }
+                }
+            } else {
+                sparse.stats.dense_batches += 1;
+                sparse.stats.peak_cost_bytes = sparse.stats.peak_cost_bytes.max(m * k * 4);
+                dense_solve(solver, &cost[..], m, k, lapjv, auction)
             };
             match deferred {
                 Some(df) => df.wait(),
@@ -418,6 +801,7 @@ mod tests {
                 &mut be,
                 &mut scratch,
                 Parallelism::Serial,
+                CandidateMode::Dense,
             )
             .unwrap();
             let fresh = run_with_order(&ds, k, &order, SolverKind::Lapjv, &mut be).unwrap();
@@ -449,9 +833,156 @@ mod tests {
                 &mut be,
                 &mut scratch,
                 Parallelism::Threads(3),
+                CandidateMode::Dense,
             )
             .unwrap();
             assert_eq!(serial, parallel, "n={n} k={k}");
+        }
+    }
+
+    /// Run with an explicit candidate mode (serial), returning labels
+    /// and the scratch for stats inspection.
+    fn run_with_candidates(
+        ds: &Dataset,
+        k: usize,
+        solver: SolverKind,
+        cand: CandidateMode,
+        par: Parallelism,
+    ) -> (Vec<u32>, Scratch) {
+        let mut be = NativeBackend::default();
+        let order =
+            crate::algo::batching::build_order(&ds.view(), k, crate::algo::Variant::Base, &mut be);
+        let mut scratch = Scratch::default();
+        let labels = run_with_order_scratch(
+            &ds.view(),
+            k,
+            &order,
+            solver,
+            &mut be,
+            &mut scratch,
+            par,
+            cand,
+        )
+        .unwrap();
+        (labels, scratch)
+    }
+
+    #[test]
+    fn sparse_path_produces_valid_balanced_partitions() {
+        for solver in [SolverKind::Lapjv, SolverKind::Auction] {
+            let ds = generate(
+                SynthKind::GaussianMixture { components: 6, spread: 4.0 },
+                240,
+                4,
+                77,
+                "g",
+            );
+            let k = 24;
+            let (labels, scratch) =
+                run_with_candidates(&ds, k, solver, CandidateMode::Fixed(6), Parallelism::Serial);
+            let stats = ClusterStats::compute(&ds, &labels, k);
+            assert!(stats.sizes.iter().all(|&s| s == 10), "{solver:?}: {:?}", stats.sizes);
+            let sp = scratch.sparse_stats();
+            assert!(sp.sparse_batches > 0, "{solver:?}: sparse path never engaged: {sp:?}");
+        }
+    }
+
+    #[test]
+    fn sparse_path_serial_and_parallel_bit_identical() {
+        let ds = generate(SynthKind::Uniform, 300, 5, 78, "u");
+        let k = 20;
+        let (serial, _) = run_with_candidates(
+            &ds,
+            k,
+            SolverKind::Lapjv,
+            CandidateMode::Fixed(5),
+            Parallelism::Serial,
+        );
+        let (parallel, _) = run_with_candidates(
+            &ds,
+            k,
+            SolverKind::Lapjv,
+            CandidateMode::Fixed(5),
+            Parallelism::Threads(3),
+        );
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn full_candidate_count_dispatches_to_the_dense_path_bitwise() {
+        // C >= k is defined as "no pruning": the run must take the
+        // literal dense code path, so labels are bit-identical and no
+        // sparse batch is ever counted.
+        let ds = generate(SynthKind::Uniform, 180, 4, 79, "u");
+        let k = 12;
+        let (dense, _) = run_with_candidates(
+            &ds,
+            k,
+            SolverKind::Lapjv,
+            CandidateMode::Dense,
+            Parallelism::Serial,
+        );
+        for cand in [CandidateMode::Fixed(k), CandidateMode::Fixed(10 * k), CandidateMode::Auto] {
+            let (got, scratch) =
+                run_with_candidates(&ds, k, SolverKind::Lapjv, cand, Parallelism::Serial);
+            assert_eq!(dense, got, "{cand:?}");
+            let sp = scratch.sparse_stats();
+            assert_eq!(sp.sparse_batches, 0, "{cand:?}: {sp:?}");
+        }
+    }
+
+    #[test]
+    fn sparse_infeasible_candidates_fall_back_to_dense() {
+        // All-identical points: every object's top-C candidate list is
+        // the same C clusters (distances all tie, traversal order is
+        // canonical), so for C < k the pruned bipartite graph violates
+        // Hall's condition; feasibility repair must escalate and then
+        // hand the batch to the exact dense path — and the result must
+        // still be a valid balanced partition.
+        let rows = vec![vec![1.0f32, 2.0]; 40];
+        let ds = Dataset::from_rows("dup", &rows).unwrap();
+        let k = 8;
+        let (labels, scratch) = run_with_candidates(
+            &ds,
+            k,
+            SolverKind::Lapjv,
+            CandidateMode::Fixed(2),
+            Parallelism::Serial,
+        );
+        let sp = scratch.sparse_stats();
+        assert!(sp.escalations > 0, "repair never escalated: {sp:?}");
+        assert!(sp.fallback_batches > 0, "dense fallback never engaged: {sp:?}");
+        assert_eq!(sp.sparse_batches, 0, "{sp:?}");
+        let stats = ClusterStats::compute(&ds, &labels, k);
+        assert!(stats.sizes.iter().all(|&s| s == 5), "{:?}", stats.sizes);
+    }
+
+    #[test]
+    fn sparse_path_respects_categorical_caps() {
+        let n = 120;
+        let mut ds = generate(SynthKind::Uniform, n, 3, 80, "u");
+        let cats: Vec<u32> = (0..n).map(|i| (i % 3) as u32).collect();
+        ds = ds.with_categories(cats.clone()).unwrap();
+        let k = 12;
+        let (labels, _) = run_with_candidates(
+            &ds,
+            k,
+            SolverKind::Lapjv,
+            CandidateMode::Fixed(4),
+            Parallelism::Serial,
+        );
+        for gcat in 0..3u32 {
+            let total = cats.iter().filter(|&&c| c == gcat).count();
+            let (floor, ceil) = (total / k, total.div_ceil(k));
+            for kk in 0..k as u32 {
+                let cnt = (0..n)
+                    .filter(|&i| labels[i] == kk && cats[i] == gcat)
+                    .count();
+                assert!(
+                    (floor..=ceil).contains(&cnt),
+                    "cat {gcat} cluster {kk}: {cnt} not in [{floor},{ceil}]"
+                );
+            }
         }
     }
 

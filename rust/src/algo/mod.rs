@@ -33,7 +33,7 @@ pub use constraints::run_aba_constrained;
 pub use hierarchical::{auto_spec, run_hierarchical};
 pub use objective::ClusterStats;
 
-use crate::assignment::SolverKind;
+use crate::assignment::{CandidateMode, SolverKind};
 use crate::data::dataset::ensure_nonempty;
 use crate::data::{DataView, Dataset};
 use crate::error::{AbaError, AbaResult};
@@ -120,6 +120,18 @@ pub struct AbaConfig {
     /// Reject (instead of warn about) `n % k != 0`, where anticluster
     /// sizes must differ by one.
     pub strict_divisibility: bool,
+    /// Candidate pruning for the per-batch assignment: `Dense` is the
+    /// paper-exact solve; `Fixed(C)` / `Auto` switch large-K batches to
+    /// the sparse candidate-pruned path
+    /// ([`crate::assignment::sparse`]), dropping per-batch work from
+    /// `O(k²d + k³)` to roughly `O(k·C·(d + log k))`.
+    pub candidates: CandidateMode,
+    /// LAPJV warm-start override. `None` (default) consults the
+    /// `ABA_LAPJV_WARM` env var **once at session construction** — never
+    /// on the per-run hot path. Cold start is the measured-faster
+    /// default on ABA's structured matrices (see the note on
+    /// [`core::Scratch`]).
+    pub lapjv_warm: Option<bool>,
 }
 
 impl Default for AbaConfig {
@@ -132,6 +144,8 @@ impl Default for AbaConfig {
             auto_hier: true,
             parallelism: Parallelism::Serial,
             strict_divisibility: false,
+            candidates: CandidateMode::Auto,
+            lapjv_warm: None,
         }
     }
 }
@@ -255,6 +269,7 @@ pub(crate) fn flat_with_scratch(
         backend,
         scratch,
         cfg.parallelism,
+        cfg.candidates,
     )?;
     Ok((labels, order_secs, t.elapsed().as_secs_f64()))
 }

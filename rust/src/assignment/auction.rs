@@ -10,79 +10,141 @@
 //! ε-phase terminates with an assignment within `nr·ε` of optimal;
 //! ε-scaling (divide by 4 each phase) drives the gap to a configurable
 //! tolerance.
+//!
+//! The solver is a reusable struct ([`Auction`]): prices, assignment
+//! arrays, and — for rectangular instances — the squared padding buffer
+//! all live in owned scratch, so repeated per-batch solves (the
+//! `--solver auction` hot path, where every final ragged batch is
+//! rectangular) perform no allocations after warm-up beyond the returned
+//! assignment itself. The free functions remain as one-shot conveniences.
 
-/// Max-cost rectangular assignment (`nr <= nc`) via ε-scaled auction.
+/// Reusable ε-scaling auction solver. See the module docs; build once
+/// (the assignment loop's scratch owns one) and call
+/// [`Auction::solve_max`] per batch.
+#[derive(Default)]
+pub struct Auction {
+    /// Zero-padded `nc x nc` copy for rectangular instances (reused —
+    /// this used to be a fresh allocation on every call).
+    square: Vec<f32>,
+    prices: Vec<f64>,
+    /// column -> row
+    row_of: Vec<usize>,
+    /// row -> column
+    col_of: Vec<usize>,
+    unassigned: Vec<usize>,
+}
+
+impl Auction {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Max-cost rectangular assignment (`nr <= nc`) with the default
+    /// final ε (1e-6 relative to max |cost|).
+    pub fn solve_max(&mut self, cost: &[f32], nr: usize, nc: usize) -> Vec<usize> {
+        self.solve_max_eps(cost, nr, nc, 1e-6)
+    }
+
+    /// As [`Auction::solve_max`] with an explicit final ε (relative to
+    /// max |cost|).
+    pub fn solve_max_eps(
+        &mut self,
+        cost: &[f32],
+        nr: usize,
+        nc: usize,
+        rel_eps: f64,
+    ) -> Vec<usize> {
+        assert!(nr <= nc);
+        assert_eq!(cost.len(), nr * nc);
+        if nr == 0 {
+            return Vec::new();
+        }
+        // Rectangular instances are squared by padding with zero-cost
+        // dummy rows: the ε-CS optimality bound of the forward auction
+        // only holds when every column ends up assigned (stale prices on
+        // abandoned columns otherwise break the duality argument). The
+        // padded copy lives in reusable scratch.
+        if nr < nc {
+            let mut square = std::mem::take(&mut self.square);
+            square.clear();
+            square.resize(nc * nc, 0.0);
+            square[..nr * nc].copy_from_slice(cost);
+            let mut full = self.solve_square(&square, nc, rel_eps);
+            self.square = square;
+            full.truncate(nr);
+            return full;
+        }
+        self.solve_square(cost, nc, rel_eps)
+    }
+
+    fn solve_square(&mut self, cost: &[f32], n: usize, rel_eps: f64) -> Vec<usize> {
+        debug_assert_eq!(cost.len(), n * n);
+        let max_abs = cost
+            .iter()
+            .fold(0f64, |m, &c| m.max((c as f64).abs()))
+            .max(1e-12);
+        let eps_final = rel_eps * max_abs;
+        let mut eps = (max_abs / 4.0).max(eps_final);
+        self.prices.clear();
+        self.prices.resize(n, 0.0);
+        self.row_of.clear();
+        self.row_of.resize(n, usize::MAX);
+        self.col_of.clear();
+        self.col_of.resize(n, usize::MAX);
+
+        loop {
+            // Reset assignments for this ε-phase (prices persist — the
+            // warm start is what makes ε-scaling effective).
+            self.row_of.fill(usize::MAX);
+            self.col_of.fill(usize::MAX);
+            self.unassigned.clear();
+            self.unassigned.extend(0..n);
+            while let Some(i) = self.unassigned.pop() {
+                let row = &cost[i * n..(i + 1) * n];
+                // Best and second-best net value.
+                let mut best_j = 0usize;
+                let mut best_v = f64::NEG_INFINITY;
+                let mut second_v = f64::NEG_INFINITY;
+                for (j, &c) in row.iter().enumerate() {
+                    let v = c as f64 - self.prices[j];
+                    if v > best_v {
+                        second_v = best_v;
+                        best_v = v;
+                        best_j = j;
+                    } else if v > second_v {
+                        second_v = v;
+                    }
+                }
+                if second_v == f64::NEG_INFINITY {
+                    second_v = best_v; // n == 1 degenerate case
+                }
+                self.prices[best_j] += best_v - second_v + eps;
+                if self.row_of[best_j] != usize::MAX {
+                    let evicted = self.row_of[best_j];
+                    self.col_of[evicted] = usize::MAX;
+                    self.unassigned.push(evicted);
+                }
+                self.row_of[best_j] = i;
+                self.col_of[i] = best_j;
+            }
+            if eps <= eps_final {
+                break;
+            }
+            eps = (eps / 4.0).max(eps_final * 0.999_999);
+        }
+        self.col_of.clone()
+    }
+}
+
+/// Max-cost rectangular assignment (`nr <= nc`) via ε-scaled auction —
+/// one-shot convenience over a throwaway [`Auction`].
 pub fn solve_max(cost: &[f32], nr: usize, nc: usize) -> Vec<usize> {
-    solve_max_eps(cost, nr, nc, 1e-6)
+    Auction::new().solve_max(cost, nr, nc)
 }
 
 /// As [`solve_max`] with an explicit final ε (relative to max |cost|).
 pub fn solve_max_eps(cost: &[f32], nr: usize, nc: usize, rel_eps: f64) -> Vec<usize> {
-    assert!(nr <= nc);
-    assert_eq!(cost.len(), nr * nc);
-    if nr == 0 {
-        return Vec::new();
-    }
-    // Rectangular instances are squared by padding with zero-cost dummy
-    // rows: the ε-CS optimality bound of the forward auction only holds
-    // when every column ends up assigned (stale prices on abandoned
-    // columns otherwise break the duality argument).
-    if nr < nc {
-        let mut square = vec![0f32; nc * nc];
-        square[..nr * nc].copy_from_slice(cost);
-        let full = solve_max_eps(&square, nc, nc, rel_eps);
-        return full[..nr].to_vec();
-    }
-    let max_abs = cost
-        .iter()
-        .fold(0f64, |m, &c| m.max((c as f64).abs()))
-        .max(1e-12);
-    let eps_final = rel_eps * max_abs;
-    let mut eps = (max_abs / 4.0).max(eps_final);
-    let mut prices = vec![0f64; nc];
-    let mut row_of = vec![usize::MAX; nc]; // column -> row
-    let mut col_of = vec![usize::MAX; nr]; // row -> column
-
-    loop {
-        // Reset assignments for this ε-phase (prices persist — the warm
-        // start is what makes ε-scaling effective).
-        row_of.fill(usize::MAX);
-        col_of.fill(usize::MAX);
-        let mut unassigned: Vec<usize> = (0..nr).collect();
-        while let Some(i) = unassigned.pop() {
-            let row = &cost[i * nc..(i + 1) * nc];
-            // Best and second-best net value.
-            let mut best_j = 0usize;
-            let mut best_v = f64::NEG_INFINITY;
-            let mut second_v = f64::NEG_INFINITY;
-            for (j, &c) in row.iter().enumerate() {
-                let v = c as f64 - prices[j];
-                if v > best_v {
-                    second_v = best_v;
-                    best_v = v;
-                    best_j = j;
-                } else if v > second_v {
-                    second_v = v;
-                }
-            }
-            if second_v == f64::NEG_INFINITY {
-                second_v = best_v; // nc == 1 degenerate case
-            }
-            prices[best_j] += best_v - second_v + eps;
-            if row_of[best_j] != usize::MAX {
-                let evicted = row_of[best_j];
-                col_of[evicted] = usize::MAX;
-                unassigned.push(evicted);
-            }
-            row_of[best_j] = i;
-            col_of[i] = best_j;
-        }
-        if eps <= eps_final {
-            break;
-        }
-        eps = (eps / 4.0).max(eps_final * 0.999_999);
-    }
-    col_of
+    Auction::new().solve_max_eps(cost, nr, nc, rel_eps)
 }
 
 #[cfg(test)]
@@ -123,6 +185,22 @@ mod tests {
                 assignment_cost(&cost, nc, &b),
             );
             assert!(ac >= bc - 1e-3 * bc.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn reused_instance_matches_one_shot_across_shapes() {
+        // Buffer reuse (incl. the rectangular padding scratch) must be
+        // invisible: a solver instance cycled through mixed shapes gives
+        // the same assignments as fresh one-shot calls.
+        let mut solver = Auction::new();
+        let mut rng = Pcg32::new(33);
+        for &(nr, nc) in &[(4usize, 9usize), (5, 5), (2, 7), (6, 6), (3, 8)] {
+            let cost: Vec<f32> = (0..nr * nc).map(|_| rng.f32() * 7.0).collect();
+            let reused = solver.solve_max(&cost, nr, nc);
+            let fresh = solve_max(&cost, nr, nc);
+            assert!(is_valid_assignment(&reused, nc), "{nr}x{nc}");
+            assert_eq!(reused, fresh, "{nr}x{nc}");
         }
     }
 

@@ -8,7 +8,11 @@
 //! Solvers:
 //! * [`lapjv`] — Jonker–Volgenant-style shortest-augmenting-path solver
 //!   with dual potentials (the paper's LAPJV; exact, O(nr·nc²)). This is
-//!   the production solver on the hot path.
+//!   the production solver on the dense hot path.
+//! * [`sparse`] — the candidate-pruned subsystem for large K: CSR cost
+//!   structures plus CSR-aware LAPJV and auction variants generalized
+//!   over a [`sparse::CostAccess`] trait. Selected per session through
+//!   [`CandidateMode`].
 //! * [`auction`] — Bertsekas auction with ε-scaling (the paper's §6
 //!   future-work item; exact for integer-scaled costs, benchmarked as an
 //!   ablation).
@@ -20,8 +24,10 @@ pub mod auction;
 pub mod brute;
 pub mod greedy;
 pub mod lapjv;
+pub mod sparse;
 
 pub use lapjv::Lapjv;
+pub use sparse::SparseStats;
 
 /// Which solver to use for the per-batch assignment.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -78,6 +84,82 @@ impl std::str::FromStr for SolverKind {
     }
 }
 
+/// How many candidate anticlusters each batch object is scored against
+/// (the sparse large-K assignment path, see [`sparse`]). `Dense` scores
+/// every object against all `k` anticlusters — the paper's exact
+/// per-batch solve; a candidate count `C < k` prunes the per-batch work
+/// from `O(k²d + k³)` to roughly `O(k·C·(d + log k))` at a small,
+/// bench-tracked objective cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum CandidateMode {
+    /// Dense below [`CandidateMode::AUTO_MIN_K`] anticlusters, top-
+    /// [`CandidateMode::AUTO_C`] candidates at or above it. The default.
+    #[default]
+    Auto,
+    /// Always the dense path.
+    Dense,
+    /// Exactly this many candidates per object (clamped to `1..=k`;
+    /// `C >= k` means no pruning and dispatches to the dense path).
+    Fixed(usize),
+}
+
+impl CandidateMode {
+    /// `Auto` stays dense below this many anticlusters: the dense solve
+    /// is exact and still cheap, and the candidate machinery only pays
+    /// for itself once `k²`-sized matrices start to hurt.
+    pub const AUTO_MIN_K: usize = 512;
+    /// Candidates per object once `Auto` goes sparse.
+    pub const AUTO_C: usize = 32;
+
+    /// The per-object candidate count for a `k`-anticluster batch. A
+    /// result `>= k` means "run the dense path" (no pruning).
+    pub fn effective(self, k: usize) -> usize {
+        match self {
+            CandidateMode::Dense => k,
+            CandidateMode::Fixed(c) => c.clamp(1, k.max(1)),
+            CandidateMode::Auto => {
+                if k < Self::AUTO_MIN_K {
+                    k
+                } else {
+                    Self::AUTO_C
+                }
+            }
+        }
+    }
+
+    /// Accepted CLI spellings, for help and error messages.
+    pub fn accepted() -> &'static str {
+        "auto|dense|<C>"
+    }
+}
+
+impl std::fmt::Display for CandidateMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CandidateMode::Auto => f.write_str("auto"),
+            CandidateMode::Dense => f.write_str("dense"),
+            CandidateMode::Fixed(c) => write!(f, "{c}"),
+        }
+    }
+}
+
+impl std::str::FromStr for CandidateMode {
+    type Err = crate::error::AbaError;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(CandidateMode::Auto),
+            "dense" => Ok(CandidateMode::Dense),
+            _ => match s.parse::<usize>() {
+                Ok(c) if c >= 1 => Ok(CandidateMode::Fixed(c)),
+                _ => Err(crate::error::AbaError::InvalidInput(format!(
+                    "invalid candidate count '{s}' (accepted: {})",
+                    CandidateMode::accepted()
+                ))),
+            },
+        }
+    }
+}
+
 /// Solve a max-cost rectangular assignment (`nr <= nc`), returning for each
 /// row the assigned column. `cost` is row-major `nr x nc`.
 pub fn solve_max(kind: SolverKind, cost: &[f32], nr: usize, nc: usize) -> Vec<usize> {
@@ -128,6 +210,32 @@ mod tests {
         assert_eq!(SolverKind::accepted(), "lapjv|auction|greedy");
         let err = "nope".parse::<SolverKind>().unwrap_err();
         assert!(err.to_string().contains("lapjv|auction|greedy"), "{err}");
+    }
+
+    #[test]
+    fn candidate_mode_round_trips_and_resolves() {
+        for (s, want) in [
+            ("auto", CandidateMode::Auto),
+            ("dense", CandidateMode::Dense),
+            ("24", CandidateMode::Fixed(24)),
+        ] {
+            assert_eq!(s.parse::<CandidateMode>().unwrap(), want);
+            assert_eq!(want.to_string(), s);
+        }
+        for bad in ["0", "-3", "sparse", ""] {
+            assert!(bad.parse::<CandidateMode>().is_err(), "{bad}");
+        }
+        // Dense and any C >= k resolve to "no pruning" (effective == k).
+        assert_eq!(CandidateMode::Dense.effective(100), 100);
+        assert_eq!(CandidateMode::Fixed(100).effective(100), 100);
+        assert_eq!(CandidateMode::Fixed(500).effective(100), 100);
+        assert_eq!(CandidateMode::Fixed(8).effective(100), 8);
+        // Auto: dense below the threshold, AUTO_C above it.
+        assert_eq!(CandidateMode::Auto.effective(100), 100);
+        assert_eq!(
+            CandidateMode::Auto.effective(CandidateMode::AUTO_MIN_K),
+            CandidateMode::AUTO_C
+        );
     }
 
     #[test]

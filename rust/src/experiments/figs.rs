@@ -183,6 +183,9 @@ pub fn fig7(opts: &ExpOptions) -> Result<Table> {
         let cfg = AbaConfig {
             auto_hier: false,
             hier: if spec.len() > 1 { Some(spec.clone()) } else { None },
+            // The flat row is the figure's *exact* reference: keep it on
+            // the dense solve even at large K (no candidate pruning).
+            candidates: crate::assignment::CandidateMode::Dense,
             ..AbaConfig::default()
         };
         let mut session = Aba::from_config(cfg)?;

@@ -1,0 +1,335 @@
+//! Farthest-candidate queries over a point set (the per-batch centroid
+//! index of the sparse assignment path).
+//!
+//! The assignment objective is **max**-cost, so candidate pruning needs
+//! each object's top-`C` *farthest* centroids — the opposite of what
+//! [`super::kdtree`] answers. Plane-distance pruning is useless for
+//! farthest queries (the near half-space is unbounded away from the
+//! query), so this index stores a bounding box per kd-node and prunes a
+//! subtree when the maximum possible squared distance from the query to
+//! the box cannot beat the current `C`-th best.
+//!
+//! Centroids move every batch, so the index is rebuilt per batch
+//! (`O(k log² k)`, sort-based median); [`FarthestIndex`] therefore owns
+//! its buffers and [`FarthestIndex::build`] reuses them, making repeated
+//! rebuilds allocation-free after warm-up. Queries take a `valid`
+//! predicate so capacity-aware callers (the §4.3 categorical bounds)
+//! exclude saturated anticlusters *during* the search instead of
+//! post-filtering a too-short list.
+
+/// Squared Euclidean distance accumulated in f64 (matches the pruning
+/// bound arithmetic, so bound >= point distance holds exactly).
+fn sq_dist_f64(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let diff = (x - y) as f64;
+        s += diff * diff;
+    }
+    s
+}
+
+/// A kd-tree with per-node bounding boxes over `n` points in `d`
+/// dimensions, answering top-`C` farthest-point queries. The tree is
+/// implicit: the subtree of slice `[lo, hi)` has its median point at
+/// `ids[(lo + hi) / 2]` and stores that slice's bounding box at the
+/// median slot of `lo`/`hi`.
+#[derive(Default)]
+pub struct FarthestIndex {
+    d: usize,
+    n: usize,
+    ids: Vec<u32>,
+    bb_lo: Vec<f32>,
+    bb_hi: Vec<f32>,
+}
+
+impl FarthestIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Points indexed.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// (Re)build over `n` row-major `d`-dimensional points, reusing the
+    /// index's buffers.
+    pub fn build(&mut self, pts: &[f32], n: usize, d: usize) {
+        assert_eq!(pts.len(), n * d, "point matrix shape mismatch");
+        assert!(d > 0 || n == 0, "zero-dimensional points");
+        self.d = d;
+        self.n = n;
+        self.ids.clear();
+        self.ids.extend(0..n as u32);
+        self.bb_lo.clear();
+        self.bb_lo.resize(n * d, 0.0);
+        self.bb_hi.clear();
+        self.bb_hi.resize(n * d, 0.0);
+        if n > 0 {
+            build_rec(pts, d, &mut self.ids, 0, n, 0, &mut self.bb_lo, &mut self.bb_hi);
+        }
+    }
+
+    /// Collect into `best` the up-to-`c` valid points farthest from `q`
+    /// (squared distance, descending; ties broken by traversal order,
+    /// which is deterministic). `valid` filters points during the
+    /// search — e.g. capacity-saturated anticlusters.
+    pub fn farthest_into(
+        &self,
+        pts: &[f32],
+        q: &[f32],
+        c: usize,
+        valid: &dyn Fn(usize) -> bool,
+        best: &mut Vec<(f64, u32)>,
+    ) {
+        assert_eq!(q.len(), self.d, "query dimension mismatch");
+        best.clear();
+        if c == 0 || self.n == 0 {
+            return;
+        }
+        self.rec(pts, q, c, valid, 0, self.n, 0, best);
+    }
+
+    /// Max possible squared distance from `q` to the bounding box stored
+    /// at node `mid` (per-dimension farthest corner).
+    fn bbox_bound(&self, q: &[f32], mid: usize) -> f64 {
+        let d = self.d;
+        let lo = &self.bb_lo[mid * d..(mid + 1) * d];
+        let hi = &self.bb_hi[mid * d..(mid + 1) * d];
+        let mut s = 0f64;
+        for t in 0..d {
+            let far = (q[t] - lo[t]).abs().max((q[t] - hi[t]).abs()) as f64;
+            s += far * far;
+        }
+        s
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn rec(
+        &self,
+        pts: &[f32],
+        q: &[f32],
+        c: usize,
+        valid: &dyn Fn(usize) -> bool,
+        lo_i: usize,
+        hi_i: usize,
+        depth: usize,
+        best: &mut Vec<(f64, u32)>,
+    ) {
+        if lo_i >= hi_i {
+            return;
+        }
+        let mid = (lo_i + hi_i) / 2;
+        // The node's box covers its whole subtree (median point
+        // included): prune everything when it cannot beat the kept set.
+        if best.len() == c && self.bbox_bound(q, mid) <= best[c - 1].0 {
+            return;
+        }
+        let id = self.ids[mid] as usize;
+        if valid(id) {
+            let dist = sq_dist_f64(q, &pts[id * self.d..(id + 1) * self.d]);
+            if best.len() < c || dist > best[best.len() - 1].0 {
+                let pos = best.partition_point(|&(d0, _)| d0 >= dist);
+                best.insert(pos, (dist, id as u32));
+                if best.len() > c {
+                    best.pop();
+                }
+            }
+        }
+        let dim = depth % self.d;
+        let split = pts[id * self.d + dim];
+        // Descend the half farther from the query first — it is the one
+        // more likely to tighten the kept set and enable pruning.
+        let (first, second) = if q[dim] <= split {
+            ((mid + 1, hi_i), (lo_i, mid))
+        } else {
+            ((lo_i, mid), (mid + 1, hi_i))
+        };
+        self.rec(pts, q, c, valid, first.0, first.1, depth + 1, best);
+        self.rec(pts, q, c, valid, second.0, second.1, depth + 1, best);
+    }
+}
+
+/// Sort `ids[lo_i..hi_i]` by the cycling dimension, store the slice's
+/// bounding box at the median slot, recurse into both halves.
+#[allow(clippy::too_many_arguments)]
+fn build_rec(
+    pts: &[f32],
+    d: usize,
+    ids: &mut [u32],
+    lo_i: usize,
+    hi_i: usize,
+    depth: usize,
+    bb_lo: &mut [f32],
+    bb_hi: &mut [f32],
+) {
+    if lo_i >= hi_i {
+        return;
+    }
+    let mid = (lo_i + hi_i) / 2;
+    {
+        let first = ids[lo_i] as usize;
+        let prow = &pts[first * d..(first + 1) * d];
+        let blo = &mut bb_lo[mid * d..(mid + 1) * d];
+        let bhi = &mut bb_hi[mid * d..(mid + 1) * d];
+        blo.copy_from_slice(prow);
+        bhi.copy_from_slice(prow);
+        for &idp in &ids[lo_i..hi_i] {
+            let row = &pts[idp as usize * d..(idp as usize + 1) * d];
+            for t in 0..d {
+                if row[t] < blo[t] {
+                    blo[t] = row[t];
+                }
+                if row[t] > bhi[t] {
+                    bhi[t] = row[t];
+                }
+            }
+        }
+    }
+    let dim = depth % d;
+    // Secondary id order makes ties fully canonical, so candidate sets
+    // are reproducible across builds.
+    ids[lo_i..hi_i].sort_unstable_by(|&a, &b| {
+        pts[a as usize * d + dim]
+            .total_cmp(&pts[b as usize * d + dim])
+            .then(a.cmp(&b))
+    });
+    build_rec(pts, d, ids, lo_i, mid, depth + 1, bb_lo, bb_hi);
+    build_rec(pts, d, ids, mid + 1, hi_i, depth + 1, bb_lo, bb_hi);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn rand_pts(rng: &mut Pcg32, n: usize, d: usize) -> Vec<f32> {
+        (0..n * d).map(|_| rng.normal_f32(0.0, 2.0)).collect()
+    }
+
+    /// Brute-force top-c farthest among valid points (distance sums are
+    /// compared, so tie permutations don't matter).
+    fn brute_farthest(
+        pts: &[f32],
+        n: usize,
+        d: usize,
+        q: &[f32],
+        c: usize,
+        valid: &dyn Fn(usize) -> bool,
+    ) -> Vec<(f64, u32)> {
+        let mut all: Vec<(f64, u32)> = (0..n)
+            .filter(|&i| valid(i))
+            .map(|i| (sq_dist_f64(q, &pts[i * d..(i + 1) * d]), i as u32))
+            .collect();
+        all.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        all.truncate(c);
+        all
+    }
+
+    #[test]
+    fn matches_brute_force_random() {
+        let mut rng = Pcg32::new(71);
+        for &(n, d, c) in &[(50usize, 2usize, 4usize), (300, 3, 8), (200, 6, 16), (64, 4, 64)] {
+            let pts = rand_pts(&mut rng, n, d);
+            let mut index = FarthestIndex::new();
+            index.build(&pts, n, d);
+            let mut best = Vec::new();
+            for _ in 0..20 {
+                let q: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+                index.farthest_into(&pts, &q, c, &|_| true, &mut best);
+                let want = brute_farthest(&pts, n, d, &q, c, &|_| true);
+                assert_eq!(best.len(), want.len(), "n={n} d={d} c={c}");
+                let got_sum: f64 = best.iter().map(|&(dd, _)| dd).sum();
+                let want_sum: f64 = want.iter().map(|&(dd, _)| dd).sum();
+                assert!(
+                    (got_sum - want_sum).abs() < 1e-9 * want_sum.max(1.0),
+                    "n={n} d={d} c={c}: {got_sum} vs {want_sum}"
+                );
+                // Descending order.
+                for w in best.windows(2) {
+                    assert!(w[0].0 >= w[1].0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validity_filter_is_respected() {
+        let mut rng = Pcg32::new(72);
+        let (n, d, c) = (120usize, 3usize, 6usize);
+        let pts = rand_pts(&mut rng, n, d);
+        let mut index = FarthestIndex::new();
+        index.build(&pts, n, d);
+        let valid = |i: usize| i % 3 != 0;
+        let q = [0.5f32, -0.25, 1.0];
+        let mut best = Vec::new();
+        index.farthest_into(&pts, &q, c, &valid, &mut best);
+        assert_eq!(best.len(), c);
+        assert!(best.iter().all(|&(_, i)| valid(i as usize)));
+        let want = brute_farthest(&pts, n, d, &q, c, &valid);
+        let got_sum: f64 = best.iter().map(|&(dd, _)| dd).sum();
+        let want_sum: f64 = want.iter().map(|&(dd, _)| dd).sum();
+        assert!((got_sum - want_sum).abs() < 1e-9 * want_sum.max(1.0));
+    }
+
+    #[test]
+    fn duplicate_points_yield_distinct_ids() {
+        let pts = vec![1.0f32; 20 * 2];
+        let mut index = FarthestIndex::new();
+        index.build(&pts, 20, 2);
+        let mut best = Vec::new();
+        index.farthest_into(&pts, &[1.0, 1.0], 5, &|_| true, &mut best);
+        assert_eq!(best.len(), 5);
+        let mut ids: Vec<u32> = best.iter().map(|&(_, i)| i).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 5, "must return 5 distinct points");
+    }
+
+    #[test]
+    fn rebuild_reuses_buffers_and_stays_correct() {
+        let mut rng = Pcg32::new(73);
+        let mut index = FarthestIndex::new();
+        let mut best = Vec::new();
+        for &(n, d) in &[(60usize, 2usize), (33, 5), (60, 2)] {
+            let pts = rand_pts(&mut rng, n, d);
+            index.build(&pts, n, d);
+            assert_eq!(index.len(), n);
+            let q: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            index.farthest_into(&pts, &q, 3, &|_| true, &mut best);
+            let want = brute_farthest(&pts, n, d, &q, 3, &|_| true);
+            let got_sum: f64 = best.iter().map(|&(dd, _)| dd).sum();
+            let want_sum: f64 = want.iter().map(|&(dd, _)| dd).sum();
+            assert!((got_sum - want_sum).abs() < 1e-9 * want_sum.max(1.0));
+        }
+    }
+
+    #[test]
+    fn fewer_valid_points_than_c_returns_them_all() {
+        let mut rng = Pcg32::new(74);
+        let pts = rand_pts(&mut rng, 10, 2);
+        let mut index = FarthestIndex::new();
+        index.build(&pts, 10, 2);
+        let mut best = Vec::new();
+        index.farthest_into(&pts, &[0.0, 0.0], 50, &|i| i < 4, &mut best);
+        assert_eq!(best.len(), 4);
+    }
+
+    #[test]
+    fn empty_and_zero_c_are_empty() {
+        let mut index = FarthestIndex::new();
+        index.build(&[], 0, 3);
+        let mut best = vec![(1.0, 0u32)];
+        index.farthest_into(&[], &[0.0, 0.0, 0.0], 4, &|_| true, &mut best);
+        assert!(best.is_empty());
+        let pts = vec![0.5f32, 0.5, 0.5];
+        index.build(&pts, 1, 3);
+        index.farthest_into(&pts, &[0.0, 0.0, 0.0], 0, &|_| true, &mut best);
+        assert!(best.is_empty());
+    }
+}

@@ -6,8 +6,13 @@
 //! both the oracle and the high-D fallback (kd-trees degrade past ~16
 //! dimensions). Everything consumes a zero-copy [`DataView`] — a
 //! `&Dataset` or any index subset works without gathering rows.
+//!
+//! [`farthest`] is the inverse query: top-`C` *farthest* points via a
+//! bounding-box kd-tree — the per-batch centroid index behind the
+//! sparse (candidate-pruned) assignment path.
 
 pub mod brute;
+pub mod farthest;
 pub mod kdtree;
 
 use crate::data::DataView;

@@ -26,6 +26,8 @@
 //! | [`algo::batching`] | §4.1–§4.3, Figs. 1–3 | The `N↓` sorted order and the small-anticluster / categorical rearrangements that define the batches |
 //! | [`algo::core`] | §4, Algorithm 1 | The assignment loop: per-batch cost matrix → max-cost solve → incremental centroid updates, with categorical cost masking |
 //! | [`assignment`] | §4.2 | The per-batch solvers: LAPJV (default), auction, greedy, and the brute-force oracle the property tests compare against |
+//! | [`assignment::sparse`] | §4.5 (scale), §6 | The candidate-pruned large-K path: CSR cost structures, a CSR-aware LAPJV, and a sparse auction, generic over a cost-access trait |
+//! | [`knn::farthest`] | §4.5 (scale) | Bounding-box kd-tree answering top-`C` *farthest*-centroid queries — the per-batch candidate index |
 //! | [`algo::constraints`] | §4.3 (extension) | Must-link / cannot-link via super-object contraction and cost masking |
 //! | [`algo::hierarchical`] | §4.4, Lemma 1, Prop. 1 | Multi-level decomposition for large K, fanned out on the worker pool |
 //! | [`algo::objective`] | §3, Fact 1 | Both paper objectives and the per-cluster diversity stats |
@@ -89,6 +91,42 @@
 //! let part = Aba::builder().hier(vec![2, 5]).build()?.partition_view(&view, 10)?;
 //! assert_eq!(part.labels.len(), 200);
 //! assert!(part.sizes().iter().all(|&s| s == 20));
+//! # Ok::<(), aba::AbaError>(())
+//! ```
+//!
+//! ## Sparse candidate-pruned assignment (large K)
+//!
+//! The dense per-batch solve costs `O(k²d)` to build the cost matrix
+//! and `O(k³)` to solve it — unrepresentable at the paper's
+//! "hundreds of thousands of anticlusters" scale (`k = 100_000` means
+//! a ~40 GB matrix per batch). The [`assignment::CandidateMode`] knob
+//! (`Aba::builder().candidates(..)`, CLI `--candidates auto|<C>|dense`)
+//! switches large-K batches to a sparse path: a per-batch
+//! farthest-point index over the centroids ([`knn::farthest`]) gives
+//! each object its top-`C` highest-cost candidate anticlusters, a CSR
+//! structure is assembled in the session scratch, and a CSR-aware
+//! LAPJV ([`assignment::sparse`]) solves it — `O(k·C·(d + log k))`
+//! per batch, with automatic feasibility repair (escalate `C`, then
+//! dense fallback) when the pruned graph admits no perfect matching.
+//! `Auto` (the default) stays dense below `k = 512`; `C >= k` is
+//! bit-identical to `Dense` (property-tested):
+//!
+//! ```
+//! use aba::{Aba, Anticlusterer};
+//! use aba::assignment::CandidateMode;
+//! use aba::data::synth::{generate, SynthKind};
+//!
+//! let ds = generate(SynthKind::Uniform, 64, 4, 11, "sparse");
+//! let mut solver = Aba::builder()
+//!     .auto_hier(false)
+//!     .candidates(CandidateMode::Fixed(4)) // top-4 candidates per object
+//!     .build()?;
+//! let part = solver.partition(&ds, 8)?;
+//! assert!(part.sizes().iter().all(|&s| s == 8));
+//! // Every solved batch went through the candidate machinery: either
+//! // sparsely, or via the dense fallback of feasibility repair.
+//! let stats = solver.sparse_stats();
+//! assert_eq!(stats.sparse_batches + stats.dense_batches, 7);
 //! # Ok::<(), aba::AbaError>(())
 //! ```
 //!

@@ -11,7 +11,7 @@
 //! ```
 
 use aba::algo::{AbaConfig, Variant};
-use aba::assignment::SolverKind;
+use aba::assignment::{CandidateMode, SolverKind};
 use aba::data::synth::{catalog, load, Scale};
 use aba::experiments::{common::ExpOptions, figs, t11, t4, t4x, t8, t9};
 use aba::pipeline::{run_pipeline, BatchStrategy, PipelineConfig};
@@ -62,7 +62,7 @@ fn print_help() {
                [--scale paper|small|tiny] [--variant {variants}]\n\
                [--solver {solvers}] [--backend {backends}]\n\
                [--hier K1xK2[xK3]] [--threads {threads}] [--parallel]\n\
-               [--strict] [--out labels.csv]\n\
+               [--candidates {candidates}] [--flat] [--strict] [--out labels.csv]\n\
            table t4|t6|t8|t9|t10|t11        regenerate a paper table\n\
                [--k K] [--datasets a,b|all] [--scale ...] [--quick]\n\
                [--time-limit SECS] [--out-dir DIR]\n\
@@ -74,6 +74,7 @@ fn print_help() {
         solvers = SolverKind::accepted(),
         backends = BackendKind::accepted(),
         threads = Parallelism::accepted(),
+        candidates = CandidateMode::accepted(),
     );
 }
 
@@ -114,6 +115,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(h) = args.get("hier") {
         builder = builder.hier(parse_hier(h)?);
     }
+    // `--candidates auto|<C>|dense`: the sparse large-K assignment path.
+    if let Some(c) = args.get_parse::<CandidateMode>("candidates")? {
+        builder = builder.candidates(c);
+    }
+    // `--flat` disables the automatic Table-5 decomposition (e.g. to
+    // exercise the sparse flat path at large K).
+    if args.has_flag("flat") {
+        builder = builder.auto_hier(false);
+    }
     // `--threads serial|auto|<n>` is the parallelism knob; the bare
     // `--parallel` flag is kept as an alias for `--threads auto`.
     let par = match args.get_parse::<Parallelism>("threads")? {
@@ -153,6 +163,21 @@ fn cmd_run(args: &Args) -> Result<()> {
         part.sizes().iter().max().unwrap(),
         stats.min_max_ratio_pct()
     );
+    let sp = solver.sparse_stats();
+    // Print whenever the candidate machinery was in play — including the
+    // all-batches-fell-back case, which is exactly when users need to see
+    // the escalation counters to understand a dense-speed run.
+    if sp.sparse_batches + sp.fallback_batches + sp.escalations > 0 {
+        println!(
+            "sparse path    {} sparse / {} dense batches ({} escalations, \
+             {} fallbacks), peak cost buffer {:.1} MiB",
+            sp.sparse_batches,
+            sp.dense_batches,
+            sp.escalations,
+            sp.fallback_batches,
+            sp.peak_cost_bytes as f64 / (1u64 << 20) as f64
+        );
+    }
     if let Some(path) = args.get("out") {
         aba::data::csv::save_labels(&part.labels, path)?;
         println!("labels written to {path}");

@@ -24,7 +24,7 @@ use super::pool::WorkerPool;
 use crate::error::AbaError;
 #[cfg(feature = "xla")]
 use anyhow::Result;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Which backend to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -219,8 +219,8 @@ pub fn cost_matrix_native(x: &[f32], m: usize, d: usize, c: &[f32], k: usize, ou
 }
 
 /// Chunk-parallel cost matrix: contiguous row chunks of `out`, one pool
-/// task per chunk, all through [`cost_rows`] — bit-identical to the
-/// serial path for any thread count.
+/// task per chunk through [`WorkerPool::run_mut`], all via [`cost_rows`]
+/// — bit-identical to the serial path for any thread count.
 #[allow(clippy::too_many_arguments)]
 fn cost_matrix_pooled(
     pool: &WorkerPool,
@@ -235,19 +235,14 @@ fn cost_matrix_pooled(
 ) {
     // ~4 chunks per thread for load balance without dispatch overhead.
     let chunk_rows = m.div_ceil(pool.threads() * 4).max(8);
-    let tasks: Vec<Mutex<(usize, &mut [f32])>> = out
+    let mut chunks: Vec<(usize, &mut [f32])> = out
         .chunks_mut(chunk_rows * k)
         .enumerate()
-        .map(|(ci, chunk)| Mutex::new((ci * chunk_rows, chunk)))
+        .map(|(ci, chunk)| (ci * chunk_rows, chunk))
         .collect();
-    pool.run(tasks.len(), &|ti| {
-        // Each task owns exactly one disjoint chunk; the lock is
-        // uncontended and only converts the shared borrow into the
-        // mutable one the kernel needs.
-        let mut guard = tasks[ti].lock().unwrap();
-        let r0 = guard.0;
-        let rows = guard.1.len() / k;
-        cost_rows(x, xn, r0, r0 + rows, d, c, cn, k, &mut guard.1);
+    pool.run_mut(&mut chunks, &|_ti, (r0, chunk)| {
+        let rows = chunk.len() / k;
+        cost_rows(x, xn, *r0, *r0 + rows, d, c, cn, k, chunk);
     });
 }
 

@@ -286,6 +286,23 @@ impl WorkerPool {
         job.check_panic();
     }
 
+    /// Run `f(i, &mut items[i])` for every element across the pool and
+    /// block until all of them finished — the chunk-parallel building
+    /// block shared by the cost-matrix kernel and the sparse path's
+    /// candidate generation: callers split a large output buffer into
+    /// disjoint `&mut` chunks and each task gets exclusive access to its
+    /// own. The per-element `Mutex` only converts the shared borrow into
+    /// the exclusive one the task body needs; task `i` is claimed exactly
+    /// once, so it is never contended. Determinism matches [`Self::run`]:
+    /// task `i` always processes element `i`.
+    pub fn run_mut<T: Send>(&self, items: &mut [T], f: &(dyn Fn(usize, &mut T) + Sync)) {
+        let cells: Vec<Mutex<&mut T>> = items.iter_mut().map(Mutex::new).collect();
+        self.run(cells.len(), &|i| {
+            let mut guard = cells[i].lock().unwrap();
+            f(i, &mut **guard);
+        });
+    }
+
     /// Hand `f` to the pool as a single background task and return a
     /// [`Deferred`] that must be waited on (dropping waits too). The
     /// caller keeps its own thread free in the meantime — the overlap
@@ -377,6 +394,25 @@ mod tests {
                 "tasks={tasks}"
             );
         }
+    }
+
+    #[test]
+    fn run_mut_gives_each_task_exclusive_chunk_access() {
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0usize; 1000];
+        let mut chunks: Vec<(usize, &mut [usize])> = data
+            .chunks_mut(64)
+            .enumerate()
+            .map(|(ci, ch)| (ci * 64, ch))
+            .collect();
+        pool.run_mut(&mut chunks, &|_i, (r0, ch)| {
+            for (off, v) in ch.iter_mut().enumerate() {
+                *v = *r0 + off;
+            }
+        });
+        drop(chunks);
+        let want: Vec<usize> = (0..1000).collect();
+        assert_eq!(data, want);
     }
 
     #[test]

@@ -333,3 +333,80 @@ fn baselines_are_interchangeable_behind_the_trait() {
         assert!(part.objective > 0.0, "{}", solver.name());
     }
 }
+
+// ---------------------------------------------------------------------------
+// Sparse candidate-pruned path.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sparse_candidates_end_to_end_matches_dense_quality_closely() {
+    // Moderate scale so it stays fast in debug: the pruned path must be
+    // a valid balanced partition within a fraction of a percent of the
+    // dense objective.
+    use aba::assignment::CandidateMode;
+    let ds = generate(
+        SynthKind::GaussianMixture { components: 8, spread: 4.0 },
+        2_000,
+        8,
+        42,
+        "sp",
+    );
+    let k = 40;
+    let cfg_for = |cand: CandidateMode| AbaConfig {
+        auto_hier: false,
+        candidates: cand,
+        ..AbaConfig::default()
+    };
+    let dense = aba_labels(&ds, k, &cfg_for(CandidateMode::Dense));
+    let mut session = Aba::from_config(cfg_for(CandidateMode::Fixed(8))).unwrap();
+    let part = session.partition(&ds, k).unwrap();
+    assert!(part.sizes().iter().all(|&s| s == 50), "{:?}", part.sizes());
+    let stats = session.sparse_stats();
+    assert!(stats.sparse_batches > 0, "sparse path never engaged: {stats:?}");
+    let dense_ofv = ClusterStats::compute(&ds, &dense, k).ssd_total();
+    assert!(
+        part.objective > 0.99 * dense_ofv,
+        "sparse {} vs dense {} lost more than 1%",
+        part.objective,
+        dense_ofv
+    );
+}
+
+/// Release-profile large-K smoke: CI runs this with
+/// `cargo test --release -q --test integration -- --ignored large_k_sparse_smoke`.
+/// The dense path at this scale would build a 25 MiB cost matrix per
+/// batch and spend `O(k^3)` per solve; the sparse path must finish the
+/// whole instance quickly and stay far below that buffer size.
+#[test]
+#[ignore = "release-profile large-K smoke; run explicitly (CI does)"]
+fn large_k_sparse_smoke() {
+    use aba::assignment::CandidateMode;
+    use aba::runtime::Parallelism;
+    let ds = generate(
+        SynthKind::GaussianMixture { components: 16, spread: 3.0 },
+        50_000,
+        8,
+        44,
+        "smoke",
+    );
+    let k = 2_500;
+    let mut session = Aba::builder()
+        .auto_hier(false)
+        .candidates(CandidateMode::Fixed(32))
+        .parallelism(Parallelism::Auto)
+        .build()
+        .unwrap();
+    let part = session.partition(&ds, k).unwrap();
+    assert_eq!(part.labels.len(), 50_000);
+    assert!(part.sizes().iter().all(|&s| s == 20));
+    let stats = session.sparse_stats();
+    assert!(stats.sparse_batches > 0, "sparse path must engage: {stats:?}");
+    if stats.fallback_batches == 0 {
+        // Without fallbacks the peak cost structure is the CSR, which
+        // must be far below the dense k x k buffer.
+        assert!(
+            stats.peak_cost_bytes < k * k * 4 / 10,
+            "cost structure unexpectedly large: {stats:?}"
+        );
+    }
+}

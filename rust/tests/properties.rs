@@ -331,6 +331,169 @@ fn prop_view_path_bit_identical_to_owned_copy_path() {
 }
 
 #[test]
+fn prop_full_candidates_bit_identical_to_dense() {
+    // The sparse knob at C = k is *defined* as "no pruning": a session
+    // with full candidate lists must take the literal dense code path,
+    // so labels and objectives are bit-identical to an explicitly dense
+    // session across the flat, hierarchical, categorical, and
+    // constrained dispatch paths, under serial and threaded execution.
+    // (On the constrained path the knob does not apply at all — that
+    // mode pins the documented no-op behaviour rather than exercising
+    // the sparse machinery.)
+    use aba::algo::Constraints;
+    use aba::assignment::CandidateMode;
+    use aba::runtime::Parallelism;
+    PropRunner::new(6).run("candidates C=k == dense", |rng| {
+        let plain = rand_dataset(rng, 200, 5);
+        if plain.n < 48 {
+            return Ok(());
+        }
+        let g = 2 + rng.gen_index(3);
+        let cats: Vec<u32> = (0..plain.n).map(|_| rng.gen_below(g as u32)).collect();
+        let catted = plain.clone().with_categories(cats).map_err(|e| e.to_string())?;
+
+        for par in [Parallelism::Serial, Parallelism::Threads(3)] {
+            for mode in 0..4usize {
+                let ds = if mode == 2 { &catted } else { &plain };
+                let (k, hier): (usize, Option<Vec<usize>>) = match mode {
+                    1 => (4, Some(vec![2, 2])),
+                    _ => (2 + rng.gen_index(6), None),
+                };
+                let build = |cand: CandidateMode| -> Result<aba::Aba, String> {
+                    let mut b = Aba::builder().parallelism(par).candidates(cand);
+                    if let Some(spec) = &hier {
+                        b = b.hier(spec.clone());
+                    }
+                    if mode == 3 {
+                        b = b.constraints(Constraints {
+                            must_link: vec![vec![0, 1]],
+                            cannot_link: vec![(2, 3)],
+                        });
+                    }
+                    b.build().map_err(|e| e.to_string())
+                };
+                let dense = build(CandidateMode::Dense)?
+                    .partition(ds, k)
+                    .map_err(|e| e.to_string())?;
+                let full = build(CandidateMode::Fixed(k))?
+                    .partition(ds, k)
+                    .map_err(|e| e.to_string())?;
+                prop_assert!(
+                    dense.labels == full.labels,
+                    "labels diverge (mode={mode} par={par:?} k={k})"
+                );
+                prop_assert!(
+                    dense.objective == full.objective,
+                    "objective {} vs {} (mode={mode} par={par:?})",
+                    dense.objective,
+                    full.objective
+                );
+                prop_assert!(dense.pairwise == full.pairwise, "pairwise diverges");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_lapjv_matches_dense_lapjv_on_full_graphs() {
+    // The CSR-aware LAPJV is exact: with every edge present (no
+    // pruning) its assignment cost must equal the dense solver's, on
+    // both access paths (dense wrapper and a materialized full CSR).
+    use aba::assignment::sparse::{CsrCost, DenseCost, SparseLapjv};
+    PropRunner::new(60).run("sparse lapjv exact", |rng| {
+        let nr = 1 + rng.gen_index(7);
+        let nc = nr + rng.gen_index(4);
+        let scale = [0.01f32, 1.0, 100.0][rng.gen_index(3)];
+        let cost: Vec<f32> = (0..nr * nc).map(|_| (rng.f32() - 0.4) * scale).collect();
+        let want = Lapjv::new().solve(&cost, nr, nc, true);
+        let wc = assignment_cost(&cost, nc, &want);
+
+        let via_dense = SparseLapjv::new()
+            .solve_max(&DenseCost { cost: &cost, nr, nc })
+            .ok_or("full graph reported infeasible")?;
+        prop_assert!(is_valid_assignment(&via_dense, nc), "validity (dense access)");
+        let dc = assignment_cost(&cost, nc, &via_dense);
+        prop_assert!(
+            (dc - wc).abs() <= 1e-4 * wc.abs().max(1.0),
+            "dense-access {dc} vs lapjv {wc} ({nr}x{nc})"
+        );
+
+        let mut row_ptr = vec![0usize];
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..nr {
+            for j in 0..nc {
+                cols.push(j as u32);
+                vals.push(cost[i * nc + j]);
+            }
+            row_ptr.push(cols.len());
+        }
+        let csr = CsrCost { row_ptr: &row_ptr, cols: &cols, vals: &vals, nc };
+        let via_csr = SparseLapjv::new()
+            .solve_max(&csr)
+            .ok_or("full CSR reported infeasible")?;
+        prop_assert!(is_valid_assignment(&via_csr, nc), "validity (csr access)");
+        let cc = assignment_cost(&cost, nc, &via_csr);
+        prop_assert!(
+            (cc - wc).abs() <= 1e-4 * wc.abs().max(1.0),
+            "csr {cc} vs lapjv {wc} ({nr}x{nc})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_path_partitions_stay_valid_and_deterministic() {
+    // With real pruning (C < k) the partition is an approximation, but
+    // it must remain a *valid* balanced partition, identical between
+    // serial and threaded runs, and no worse than random on the
+    // pairwise objective.
+    use aba::assignment::CandidateMode;
+    use aba::runtime::Parallelism;
+    PropRunner::new(10).run("sparse path validity", |rng| {
+        let ds = rand_dataset(rng, 280, 6);
+        if ds.n < 60 {
+            return Ok(());
+        }
+        let k = 8 + rng.gen_index(8);
+        let c = 2 + rng.gen_index(4); // genuinely pruned: c << k
+        let build = |par: Parallelism| -> Result<aba::Aba, String> {
+            Aba::builder()
+                .auto_hier(false)
+                .candidates(CandidateMode::Fixed(c))
+                .parallelism(par)
+                .build()
+                .map_err(|e| e.to_string())
+        };
+        let a = build(Parallelism::Serial)?
+            .partition(&ds, k)
+            .map_err(|e| e.to_string())?;
+        let b = build(Parallelism::Threads(3))?
+            .partition(&ds, k)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(a.labels == b.labels, "serial vs threads diverge (n={} k={k} c={c})", ds.n);
+        let stats = ClusterStats::compute(&ds, &a.labels, k);
+        let (min, max) = (
+            *stats.sizes.iter().min().unwrap(),
+            *stats.sizes.iter().max().unwrap(),
+        );
+        prop_assert!(max - min <= 1, "balance (n={} k={k} c={c}): {:?}", ds.n, stats.sizes);
+        prop_assert!(stats.sizes.iter().sum::<usize>() == ds.n, "coverage");
+        let rand = aba::baselines::random_part::random_partition(ds.n, k, rng.next_u64());
+        let rand_w = ClusterStats::compute(&ds, &rand, k).pairwise_total();
+        prop_assert!(
+            a.pairwise >= rand_w * 0.98,
+            "sparse {} vs random {} (n={} k={k} c={c})",
+            a.pairwise,
+            rand_w,
+            ds.n
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_hierarchical_proposition1() {
     PropRunner::new(25).run("proposition 1 sizes", |rng| {
         let ds = rand_dataset(rng, 400, 6);
