@@ -22,7 +22,10 @@
 //! assignment path at a scale whose dense `k x k` cost buffer would
 //! exceed 256 MiB, next to a one-batch dense LAPJV reference at the
 //! same `k` (a *full* dense run at this scale is `O(k^3)` per batch x
-//! 20 batches — not worth anyone's wall clock).
+//! 20 batches — not worth anyone's wall clock). The `online_churn`
+//! section drives a live `OnlinePartition` through remove+insert+refine
+//! rounds and records sustained updates/sec, the refine cost, and the
+//! delta-maintained vs from-scratch objective gap.
 //!
 //! Set `ABA_BENCH_ONLY=section[,section...]` to run a subset of the
 //! sections (e.g. `ABA_BENCH_ONLY=large_k_sparse`). Filtered runs
@@ -405,6 +408,71 @@ fn main() {
             r.total_secs = dense_per_batch;
             r.cost_buffer_bytes = dense_bytes;
         }
+    }
+
+    if section_enabled("online_churn") {
+        // The serving path: one live OnlinePartition under churn vs
+        // re-solving from scratch. Reported: sustained row updates/sec
+        // (insert+remove with repair), the refine cost, and the
+        // delta-vs-scratch objective gap after all rounds.
+        let (n, k, d, rounds, churn) = (20_000usize, 100usize, 16usize, 20usize, 250usize);
+        println!("\n## online churn (N={n}, D={d}, K={k}): {rounds} rounds of +{churn}/-{churn}");
+        let ds = mk(n, d, 11);
+        let arrivals = mk(4 * churn, d, 12);
+        let mut session = Aba::from_config(flat.clone()).unwrap();
+        let (mut live, init_secs) = timed(|| session.partition_online(&ds.view(), k).unwrap());
+        let mut oldest: std::collections::VecDeque<u64> = (0..n as u64).collect();
+        let mut next = 0usize;
+        let mut refine_secs = 0f64;
+        let mut refine_swaps = 0usize;
+        let t = std::time::Instant::now();
+        for _ in 0..rounds {
+            let idx: Vec<usize> = (0..churn).map(|j| (next + j) % arrivals.n).collect();
+            next += churn;
+            let ids = live.insert_batch(&arrivals.view().select(&idx)).unwrap();
+            let expire: Vec<u64> = oldest.drain(..churn).collect();
+            live.remove(&expire).unwrap();
+            oldest.extend(ids);
+            let tr = std::time::Instant::now();
+            refine_swaps += live.refine(50_000).swapped;
+            refine_secs += tr.elapsed().as_secs_f64();
+        }
+        let total_secs = t.elapsed().as_secs_f64();
+        let churn_secs = total_secs - refine_secs;
+        let updates = 2 * rounds * churn;
+        let delta_obj = live.objective();
+        let current = live.to_dataset("current").unwrap();
+        let (fresh, scratch_secs) =
+            timed(|| Aba::from_config(flat.clone()).unwrap().partition(&current, k).unwrap());
+        let gap_pct = 100.0 * (delta_obj - fresh.objective) / fresh.objective;
+        println!(
+            "  init {init_secs:>7.3}s | {updates} updates in {churn_secs:.3}s \
+             ({:.0} updates/s) | refine {refine_secs:.3}s ({refine_swaps} swaps)",
+            updates as f64 / churn_secs.max(1e-9)
+        );
+        println!(
+            "  delta-maintained ofv {delta_obj:.1} vs from-scratch {:.1} ({gap_pct:+.4}%; \
+             re-solve costs {scratch_secs:.3}s per refresh)",
+            fresh.objective
+        );
+        let mut push = |label: &str, algo_secs: f64, total: f64, objective: f64| {
+            recs.push(Rec {
+                section: "online_churn",
+                label: label.into(),
+                n,
+                k,
+                d,
+                threads: 1,
+                algo_secs,
+                total_secs: total,
+                objective,
+                gathered_bytes: 0,
+                cost_buffer_bytes: 0,
+            });
+        };
+        push("churn_updates", churn_secs, total_secs, delta_obj);
+        push("refine", refine_secs, refine_secs, delta_obj);
+        push("scratch_resolve", fresh.timings.algo_secs(), scratch_secs, fresh.objective);
     }
 
     // A filtered run must not truncate the canonical cross-PR record,

@@ -63,7 +63,9 @@ use std::sync::{Arc, Mutex};
 /// Mask value for forbidden (anticluster, category) assignments. Large
 /// and negative so a max-cost solver avoids it whenever the instance is
 /// feasible, yet far from f32 infinity to keep dual arithmetic finite.
-const MASK_COST: f32 = -1e30;
+/// Shared with the online subsystem's insert rounds so both paths mask
+/// with the same sentinel.
+pub(crate) const MASK_COST: f32 = -1e30;
 
 /// The single §4.3 saturation predicate shared by the dense mask and
 /// the sparse candidate filter — one definition, so the two paths can

@@ -134,6 +134,24 @@ pub struct AbaConfig {
     pub lapjv_warm: Option<bool>,
 }
 
+impl AbaConfig {
+    /// Stable fingerprint of the configuration knobs that change how a
+    /// partition is *maintained* online: variant (bootstrap ordering),
+    /// solver, candidate mode, and strict divisibility. Persisted into
+    /// [`crate::online::OnlinePartition`] snapshots so a saved partition
+    /// cannot be resumed under an incompatible session
+    /// ([`AbaError::SnapshotMismatch`]). Wall-clock-only knobs
+    /// (`parallelism`, `backend`) and batch-only knobs (`hier`,
+    /// `auto_hier` — online updates never re-decompose) are deliberately
+    /// excluded.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "aba/1|variant={}|solver={}|candidates={}|strict={}",
+            self.variant, self.solver, self.candidates, self.strict_divisibility
+        )
+    }
+}
+
 impl Default for AbaConfig {
     fn default() -> Self {
         Self {

@@ -105,6 +105,144 @@ impl ClusterStats {
     }
 }
 
+/// Delta-maintained sufficient statistics of one anticluster: size `m`,
+/// f64 feature sum `S`, and squared-norm sum `Q = sum ||x_i||^2`.
+///
+/// The within-cluster SSD follows from the standard identity
+/// `ssd = Q - ||S||^2 / m`, so membership changes are **O(d)**:
+/// [`ClusterDelta::add`] / [`ClusterDelta::remove`] update `(m, S, Q)`,
+/// and [`ClusterDelta::add_gain`] / [`ClusterDelta::remove_loss`] price a
+/// prospective change without applying it. This is the currency of the
+/// online subsystem ([`crate::online`]): live handles maintain one
+/// `ClusterDelta` per anticluster for decision-making, while exact
+/// objective reads rebuild drifting clusters canonically via
+/// [`ClusterDelta::from_rows`] (incremental f64 sums are mathematically
+/// exact but not bit-stable under long add/remove sequences, so reads
+/// that must match a from-scratch recompute re-accumulate in member
+/// order).
+#[derive(Clone, Debug)]
+pub struct ClusterDelta {
+    m: usize,
+    s: Vec<f64>,
+    q: f64,
+}
+
+#[inline]
+fn norm2(s: &[f64]) -> f64 {
+    s.iter().map(|&v| v * v).sum()
+}
+
+impl ClusterDelta {
+    /// An empty cluster over `d` features.
+    pub fn new(d: usize) -> Self {
+        Self { m: 0, s: vec![0.0; d], q: 0.0 }
+    }
+
+    /// Canonical (from-scratch) accumulation: fold rows in iteration
+    /// order. Two calls over the same rows in the same order produce
+    /// bit-identical state — the anchor the online subsystem's exact
+    /// reads are defined against.
+    pub fn from_rows<'r>(d: usize, rows: impl IntoIterator<Item = &'r [f32]>) -> Self {
+        let mut delta = Self::new(d);
+        for row in rows {
+            delta.add(row);
+        }
+        delta
+    }
+
+    /// Members currently folded in.
+    pub fn len(&self) -> usize {
+        self.m
+    }
+
+    /// Whether the cluster is empty.
+    pub fn is_empty(&self) -> bool {
+        self.m == 0
+    }
+
+    /// The maintained feature sum `S`.
+    pub fn sum(&self) -> &[f64] {
+        &self.s
+    }
+
+    /// The maintained squared-norm sum `Q`.
+    pub fn sumsq(&self) -> f64 {
+        self.q
+    }
+
+    /// Fold a member in — O(d).
+    pub fn add(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.s.len());
+        let mut xx = 0f64;
+        for (acc, &v) in self.s.iter_mut().zip(row) {
+            let v = v as f64;
+            *acc += v;
+            xx += v * v;
+        }
+        self.q += xx;
+        self.m += 1;
+    }
+
+    /// Fold a member out — O(d). The row must currently be a member.
+    pub fn remove(&mut self, row: &[f32]) {
+        debug_assert!(self.m > 0, "remove from an empty ClusterDelta");
+        debug_assert_eq!(row.len(), self.s.len());
+        let mut xx = 0f64;
+        for (acc, &v) in self.s.iter_mut().zip(row) {
+            let v = v as f64;
+            *acc -= v;
+            xx += v * v;
+        }
+        self.q -= xx;
+        self.m -= 1;
+    }
+
+    /// Within-cluster SSD to the centroid: `Q - ||S||^2 / m` (0 for an
+    /// empty cluster).
+    pub fn ssd(&self) -> f64 {
+        if self.m == 0 {
+            return 0.0;
+        }
+        self.q - norm2(&self.s) / self.m as f64
+    }
+
+    /// Exact SSD increase from adding `row`, without applying it — O(d).
+    /// Equals `m/(m+1) * ||row - centroid||^2`; 0 for an empty cluster.
+    pub fn add_gain(&self, row: &[f32]) -> f64 {
+        if self.m == 0 {
+            return 0.0;
+        }
+        let (mut sx, mut xx) = (0f64, 0f64);
+        for (&acc, &v) in self.s.iter().zip(row) {
+            let v = v as f64;
+            sx += acc * v;
+            xx += v * v;
+        }
+        let ss = norm2(&self.s);
+        let m = self.m as f64;
+        (self.q + xx - (ss + 2.0 * sx + xx) / (m + 1.0)) - (self.q - ss / m)
+    }
+
+    /// Exact SSD decrease from removing `row` (a current member),
+    /// without applying it — O(d). For a singleton this is the whole
+    /// remaining SSD.
+    pub fn remove_loss(&self, row: &[f32]) -> f64 {
+        debug_assert!(self.m > 0);
+        if self.m == 1 {
+            return self.ssd();
+        }
+        let (mut sx, mut xx) = (0f64, 0f64);
+        for (&acc, &v) in self.s.iter().zip(row) {
+            let v = v as f64;
+            sx += acc * v;
+            xx += v * v;
+        }
+        let ss = norm2(&self.s);
+        let m = self.m as f64;
+        (self.q - ss / m) - (self.q - xx - (ss - 2.0 * sx + xx) / (m - 1.0))
+    }
+}
+
 /// Dispersion of a partition: the minimum pairwise distance between two
 /// objects in the same anticluster (the second criterion of the
 /// bicriterion anticlustering literature — Brusco et al. 2020, Papenberg
@@ -115,7 +253,7 @@ pub fn dispersion<'a>(data: impl Into<DataView<'a>>, labels: &[u32], k: usize) -
     let ds: DataView<'a> = data.into();
     let mut min = f64::INFINITY;
     for c in 0..k as u32 {
-        let members: Vec<usize> = (0..ds.n()).filter(|&i| labels[i] == c).collect();
+        let members: Vec<usize> = crate::metrics::members_of(labels, c).collect();
         for (a, &i) in members.iter().enumerate() {
             for &j in &members[a + 1..] {
                 let d = ds.dist2(i, j);
@@ -134,7 +272,7 @@ pub fn pairwise_within_brute<'a>(data: impl Into<DataView<'a>>, labels: &[u32], 
     let ds: DataView<'a> = data.into();
     let mut total = 0f64;
     for c in 0..k as u32 {
-        let members: Vec<usize> = (0..ds.n()).filter(|&i| labels[i] == c).collect();
+        let members: Vec<usize> = crate::metrics::members_of(labels, c).collect();
         for (a, &i) in members.iter().enumerate() {
             for &j in &members[a + 1..] {
                 total += ds.dist2(i, j);
@@ -212,6 +350,65 @@ mod tests {
         // Cross pairing raises dispersion to 100 / 121 -> min 100.
         let labels = vec![0u32, 1, 0, 1];
         assert_eq!(dispersion(&ds, &labels, 2), 100.0);
+    }
+
+    #[test]
+    fn cluster_delta_matches_cluster_stats() {
+        let ds = generate(SynthKind::Uniform, 40, 3, 25, "u");
+        let mut rng = Pcg32::new(5);
+        let k = 4usize;
+        let labels: Vec<u32> = (0..ds.n).map(|_| rng.gen_below(k as u32)).collect();
+        let stats = ClusterStats::compute(&ds, &labels, k);
+        for c in 0..k {
+            let delta = ClusterDelta::from_rows(
+                ds.d,
+                crate::metrics::members_of(&labels, c as u32).map(|i| ds.row(i)),
+            );
+            assert_eq!(delta.len(), stats.sizes[c]);
+            assert!(
+                (delta.ssd() - stats.ssd[c]).abs() <= 1e-8 * stats.ssd[c].max(1.0),
+                "cluster {c}: {} vs {}",
+                delta.ssd(),
+                stats.ssd[c]
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_delta_add_remove_round_trip() {
+        let ds = generate(SynthKind::Uniform, 12, 4, 26, "u");
+        let mut delta = ClusterDelta::new(ds.d);
+        for i in 0..8 {
+            delta.add(ds.row(i));
+        }
+        let before = delta.ssd();
+        // Priced gain must equal the applied difference.
+        let gain = delta.add_gain(ds.row(9));
+        delta.add(ds.row(9));
+        let applied = delta.ssd() - before;
+        assert!((gain - applied).abs() < 1e-9 * (1.0 + applied.abs()), "{gain} vs {applied}");
+        // ... and remove_loss must price the inverse move exactly.
+        let loss = delta.remove_loss(ds.row(9));
+        assert!((loss - applied).abs() < 1e-9 * (1.0 + loss.abs()), "loss {loss} vs gain {applied}");
+        delta.remove(ds.row(9));
+        assert!((delta.ssd() - before).abs() < 1e-9 * (1.0 + before.abs()));
+        assert_eq!(delta.len(), 8);
+    }
+
+    #[test]
+    fn cluster_delta_edge_cases() {
+        let delta = ClusterDelta::new(3);
+        assert!(delta.is_empty());
+        assert_eq!(delta.ssd(), 0.0);
+        assert_eq!(delta.add_gain(&[1.0, 2.0, 3.0]), 0.0);
+        let mut single = ClusterDelta::new(2);
+        single.add(&[1.0, 2.0]);
+        // A singleton has zero SSD and removing it loses exactly that.
+        assert!(single.ssd().abs() < 1e-12);
+        assert_eq!(single.remove_loss(&[1.0, 2.0]), single.ssd());
+        // Adding a second member prices m/(m+1) * dist^2 = 0.5 * 8.
+        let gain = single.add_gain(&[3.0, 4.0]);
+        assert!((gain - 4.0).abs() < 1e-9, "{gain}");
     }
 
     #[test]

@@ -40,6 +40,10 @@ pub enum AbaError {
     ConstraintInfeasible(String),
     /// A solver gave up after exhausting its wall-clock budget.
     TimeLimit { limit_secs: f64 },
+    /// A persisted [`crate::online::OnlinePartition`] snapshot cannot be
+    /// resumed: its config fingerprint (or format version) does not
+    /// match the session trying to load it.
+    SnapshotMismatch { expected: String, found: String },
     /// Malformed input that fits no more specific variant.
     InvalidInput(String),
 }
@@ -63,6 +67,13 @@ impl fmt::Display for AbaError {
             AbaError::TimeLimit { limit_secs } => {
                 write!(f, "no solution within the {limit_secs}s time limit")
             }
+            AbaError::SnapshotMismatch { expected, found } => {
+                write!(
+                    f,
+                    "online-partition snapshot is incompatible with this session: \
+                     expected '{expected}', found '{found}'"
+                )
+            }
             AbaError::InvalidInput(msg) => write!(f, "{msg}"),
         }
     }
@@ -84,6 +95,9 @@ mod tests {
         assert!(AbaError::BadShape("row 3".into()).to_string().contains("row 3"));
         let p = AbaError::ParseError { line: 7, msg: "bad float".into() }.to_string();
         assert!(p.contains("line 7") && p.contains("bad float"), "{p}");
+        let s = AbaError::SnapshotMismatch { expected: "aba/1|x".into(), found: "aba/1|y".into() }
+            .to_string();
+        assert!(s.contains("aba/1|x") && s.contains("aba/1|y"), "{s}");
     }
 
     #[test]

@@ -107,6 +107,13 @@ impl AlgoRun {
     pub fn labels(&self) -> &[u32] {
         &self.partition.labels
     }
+
+    /// Iterate one anticluster's member indices without materializing
+    /// `Partition::groups()` — the per-cluster walks of the figure/table
+    /// code go through this.
+    pub fn members_of(&self, c: usize) -> impl Iterator<Item = usize> + Clone + '_ {
+        self.partition.members_of(c)
+    }
 }
 
 /// Run one algorithm with a time cap. `None` = the paper's dash (no

@@ -110,6 +110,9 @@ pub fn fig6(opts: &ExpOptions) -> Result<Table> {
                 *v /= counts[c].max(1) as f64;
             }
         }
+        // Single pass: bin each object's centroid distance into its
+        // cluster (per-cluster walks via members_of would rescan the
+        // label vector k times here — see t9 for the one-cluster case).
         let mut per_cluster: Vec<Vec<f64>> = vec![Vec::new(); k];
         for i in 0..ds.n {
             let c = labels[i] as usize;

@@ -161,8 +161,10 @@ mod tests {
                 let total = cats.iter().filter(|&&c| c == cat).count();
                 let (lo, hi) = (total / row.k, total.div_ceil(row.k));
                 for cl in 0..row.k as u32 {
-                    let cnt = (0..row.ds.n)
-                        .filter(|&i| cats[i] == cat && row.aba.partition.labels[i] == cl)
+                    let cnt = row
+                        .aba
+                        .members_of(cl as usize)
+                        .filter(|&i| cats[i] == cat)
                         .count();
                     assert!(
                         (lo..=hi).contains(&cnt),

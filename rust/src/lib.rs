@@ -30,7 +30,8 @@
 //! | [`knn::farthest`] | §4.5 (scale) | Bounding-box kd-tree answering top-`C` *farthest*-centroid queries — the per-batch candidate index |
 //! | [`algo::constraints`] | §4.3 (extension) | Must-link / cannot-link via super-object contraction and cost masking |
 //! | [`algo::hierarchical`] | §4.4, Lemma 1, Prop. 1 | Multi-level decomposition for large K, fanned out on the worker pool |
-//! | [`algo::objective`] | §3, Fact 1 | Both paper objectives and the per-cluster diversity stats |
+//! | [`algo::objective`] | §3, Fact 1 | Both paper objectives, the per-cluster diversity stats, and the O(d) [`algo::objective::ClusterDelta`] add/remove deltas behind the online handles |
+//! | [`online`] | §1, §6 (serving) | Live [`OnlinePartition`] handles: delta-maintained insert/remove/refine with balance repair, plus fingerprinted save/load persistence |
 //! | [`runtime`] | §5 (implementation) | Cost backends (native / Pallas-XLA via PJRT) and the [`runtime::pool`] parallel runtime |
 //! | [`baselines`] | §5 (competitors) | `Rand`, the exchange heuristic, branch-and-bound |
 //! | [`data`] | §5, Table 2 | Dataset catalog, synthetic generators, k-means/k-plus seeding |
@@ -130,6 +131,47 @@
 //! # Ok::<(), aba::AbaError>(())
 //! ```
 //!
+//! ## Online partitions: serving under churn
+//!
+//! Batch calls freeze their result; long-lived workloads (serving
+//! representative folds or mini-batches while users arrive and expire)
+//! instead hold a live [`OnlinePartition`] from
+//! [`Aba::partition_online`]. Inserts solve small max-gain rectangular
+//! assignments against capacity targets (reusing the dense and sparse
+//! per-batch solvers), removals repair the balance invariant, `refine`
+//! runs bounded exchange passes scoped to touched clusters, and
+//! `objective()`/`sizes()` read delta-maintained state instead of
+//! recomputing `O(n·d)` — exactly equal to a from-scratch recompute
+//! (property-tested). Versioned, fingerprinted snapshots let a serving
+//! process warm-restart:
+//!
+//! ```
+//! use aba::{Aba, OnlinePartition};
+//! use aba::data::synth::{generate, SynthKind};
+//!
+//! let ds = generate(SynthKind::Uniform, 120, 4, 5, "live");
+//! let mut session = Aba::builder().auto_hier(false).build()?;
+//! let mut live = session.partition_online(&ds.view(), 6)?;
+//!
+//! // New rows arrive; stale rows expire; a bounded polish follows.
+//! let arrivals = generate(SynthKind::Uniform, 12, 4, 6, "arrivals");
+//! let ids = live.insert_batch(&arrivals.view())?;
+//! assert_eq!(ids.len(), 12);
+//! live.remove(&ids[..6])?;
+//! live.refine(10_000);
+//! let sizes = live.sizes();
+//! assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+//! assert_eq!(live.objective(), live.recompute_objective());
+//!
+//! // Persist, then warm-restart under a compatible session.
+//! let path = std::env::temp_dir().join("aba_doc_online.json");
+//! live.save(&path)?;
+//! let mut back = OnlinePartition::load(&path, session.config())?;
+//! assert_eq!(back.objective(), live.objective());
+//! # std::fs::remove_file(&path).ok();
+//! # Ok::<(), aba::AbaError>(())
+//! ```
+//!
 //! ## Parallel execution
 //!
 //! Parallelism is a session knob ([`runtime::Parallelism`]): `Serial`
@@ -173,6 +215,7 @@ pub mod experiments;
 pub mod graph;
 pub mod knn;
 pub mod metrics;
+pub mod online;
 pub mod pipeline;
 pub mod rng;
 pub mod runtime;
@@ -181,6 +224,7 @@ pub mod testing;
 pub mod util;
 
 pub use error::{AbaError, AbaResult};
+pub use online::OnlinePartition;
 pub use solver::{Aba, AbaBuilder, Anticlusterer, Partition, PhaseTimings};
 
 /// CLI-boundary result type (anyhow-backed). Library-core functions

@@ -18,7 +18,7 @@ use aba::pipeline::{run_pipeline, BatchStrategy, PipelineConfig};
 use aba::runtime::{BackendKind, Parallelism};
 use aba::util::args::{parse_hier, Args};
 use aba::util::fmt_secs;
-use aba::{Aba, Anticlusterer};
+use aba::{Aba, Anticlusterer, OnlinePartition};
 use anyhow::{bail, Result};
 
 fn main() {
@@ -41,6 +41,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "table" => cmd_table(&args),
         "fig" => cmd_fig(&args),
         "pipeline" => cmd_pipeline(&args),
+        "update" => cmd_update(&args),
         "selftest" => cmd_selftest(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -63,12 +64,18 @@ fn print_help() {
                [--solver {solvers}] [--backend {backends}]\n\
                [--hier K1xK2[xK3]] [--threads {threads}] [--parallel]\n\
                [--candidates {candidates}] [--flat] [--strict] [--out labels.csv]\n\
+               [--save-partition part.json]\n\
            table t4|t6|t8|t9|t10|t11        regenerate a paper table\n\
                [--k K] [--datasets a,b|all] [--scale ...] [--quick]\n\
                [--time-limit SECS] [--out-dir DIR]\n\
            fig f5|f6|f7                     regenerate a paper figure\n\
            pipeline [--dataset NAME] [--k K] [--epochs E] [--queue Q]\n\
-                    [--strategy aba|random]  stream mini-batches into SGD\n\
+                    [--strategy aba|evolving|random] [--churn N] [--refine B]\n\
+                                            stream mini-batches into SGD\n\
+           update --partition FILE          load a saved OnlinePartition, apply churn,\n\
+               [--insert rows.csv] [--remove ids.csv] [--refine BUDGET]\n\
+               [--save FILE] [--variant ...] [--solver ...] [--candidates ...] [--strict]\n\
+                                            report delta vs from-scratch objective\n\
            selftest                         XLA artifacts vs native check",
         variants = Variant::accepted(),
         solvers = SolverKind::accepted(),
@@ -144,7 +151,17 @@ fn cmd_run(args: &Args) -> Result<()> {
         par.effective_threads()
     );
     let mut solver = builder.build()?;
-    let part = solver.partition(&ds, k)?;
+    // `--save-partition FILE` keeps the result live long enough to
+    // snapshot it for later `aba update` churn, then freezes it.
+    let part = match args.get("save-partition") {
+        Some(path) => {
+            let live = solver.partition_online(&ds.view(), k)?;
+            live.save(path)?;
+            println!("online partition saved to {path}");
+            live.into_partition()
+        }
+        None => solver.partition(&ds, k)?,
+    };
     let stats = &part.stats;
     println!(
         "cpu            {} s (order {}, assign {}, stats {})",
@@ -237,8 +254,14 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let queue: usize = args.get_parse("queue")?.unwrap_or(4);
     let strategy = match args.get("strategy").unwrap_or("aba") {
         "aba" => BatchStrategy::Aba { cfg: AbaConfig::default(), shuffle_seed: 1 },
+        "evolving" => BatchStrategy::Evolving {
+            cfg: AbaConfig::default(),
+            shuffle_seed: 1,
+            churn: args.get_parse("churn")?.unwrap_or(ds.n / 20),
+            refine_budget: args.get_parse("refine")?.unwrap_or(10_000),
+        },
         "random" => BatchStrategy::Random { seed: 1 },
-        other => bail!("unknown strategy '{other}' (aba|random)"),
+        other => bail!("unknown strategy '{other}' (aba|evolving|random)"),
     };
     let cfg = PipelineConfig { k, epochs, queue_depth: queue, strategy };
     println!(
@@ -271,6 +294,121 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         aba::metrics::Summary::of(&last).sd,
         model.accuracy(&ds, &y)
     );
+    Ok(())
+}
+
+/// Parse a one-column CSV of row ids (optional header line).
+fn read_id_csv(path: &str) -> Result<Vec<u64>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut ids = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match line.parse::<u64>() {
+            Ok(id) => ids.push(id),
+            // A non-numeric first line is a header; elsewhere it's bad.
+            Err(_) if i == 0 => continue,
+            Err(_) => bail!("{path}:{}: '{line}' is not a row id", i + 1),
+        }
+    }
+    Ok(ids)
+}
+
+/// `aba update`: load a persisted OnlinePartition, apply churn from CSV
+/// deltas, optionally refine and re-save, and report the maintained
+/// (delta) objective against a from-scratch re-solve of the current
+/// contents — the serving warm-restart loop, on the command line.
+fn cmd_update(args: &Args) -> Result<()> {
+    let Some(path) = args.get("partition") else {
+        bail!("--partition FILE is required (see `aba help`)");
+    };
+    // The session config must reproduce the snapshot's fingerprint.
+    let mut cfg = AbaConfig::default();
+    if let Some(v) = args.get_parse("variant")? {
+        cfg.variant = v;
+    }
+    if let Some(s) = args.get_parse("solver")? {
+        cfg.solver = s;
+    }
+    if let Some(c) = args.get_parse::<CandidateMode>("candidates")? {
+        cfg.candidates = c;
+    }
+    // `strict` participates in the fingerprint: snapshots written by
+    // `run --strict --save-partition` need it to load.
+    cfg.strict_divisibility = args.has_flag("strict");
+    let mut handle = OnlinePartition::load(path, &cfg)?;
+    println!(
+        "loaded {path}: n={}, k={}, d={}, objective {:.4}",
+        handle.len(),
+        handle.k(),
+        handle.d(),
+        handle.objective()
+    );
+    if let Some(rm) = args.get("remove") {
+        let ids = read_id_csv(rm)?;
+        let t = std::time::Instant::now();
+        handle.remove(&ids)?;
+        println!(
+            "removed {} rows (+balance repair) in {}",
+            ids.len(),
+            fmt_secs(t.elapsed().as_secs_f64())
+        );
+    }
+    if let Some(ins) = args.get("insert") {
+        let delta = aba::data::csv::load(ins, "delta")?;
+        let t = std::time::Instant::now();
+        let ids = handle.insert_batch(&delta.view())?;
+        println!(
+            "inserted {} rows (ids {}..={}) in {}",
+            ids.len(),
+            ids.first().unwrap(),
+            ids.last().unwrap(),
+            fmt_secs(t.elapsed().as_secs_f64())
+        );
+    }
+    if let Some(budget) = args.get_parse::<usize>("refine")? {
+        // With no preceding churn the loaded handle's touched set is
+        // empty (refine is scoped to touched clusters) — a standalone
+        // refine means "polish everything".
+        if args.get("remove").is_none() && args.get("insert").is_none() {
+            handle.touch_all();
+        }
+        let t = std::time::Instant::now();
+        let r = handle.refine(budget);
+        println!(
+            "refine: {} swaps out of {} priced candidates in {}",
+            r.swapped,
+            r.evaluated,
+            fmt_secs(t.elapsed().as_secs_f64())
+        );
+    }
+    let delta_obj = handle.objective();
+    let scratch = handle.recompute_objective();
+    // The headline report: maintained state vs a full re-solve.
+    let current = handle.to_dataset("current")?;
+    let t = std::time::Instant::now();
+    let fresh = Aba::from_config(cfg)?.partition(&current, handle.k())?;
+    let resolve_secs = t.elapsed().as_secs_f64();
+    println!("objective (delta-maintained)  {delta_obj:.4}");
+    println!("objective (scratch recompute) {scratch:.4}");
+    println!(
+        "objective (from-scratch solve) {:.4} ({:+.4}% vs maintained, {} to re-solve)",
+        fresh.objective,
+        100.0 * (delta_obj - fresh.objective) / fresh.objective.max(1e-12),
+        fmt_secs(resolve_secs)
+    );
+    let sizes = handle.sizes();
+    println!(
+        "sizes          min={} max={}",
+        sizes.iter().min().unwrap(),
+        sizes.iter().max().unwrap()
+    );
+    if let Some(out) = args.get("save") {
+        handle.save(out)?;
+        println!("partition saved to {out}");
+    }
     Ok(())
 }
 

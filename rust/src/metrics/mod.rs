@@ -1,5 +1,18 @@
 //! Summary statistics shared by the experiment harness and the pipeline.
 
+/// Iterate the object indices belonging to cluster `c` of a label
+/// vector, without materializing per-cluster index vectors. The shared
+/// non-allocating alternative to building `Vec<Vec<usize>>` via
+/// `Partition::groups()` when only one cluster is walked at a time;
+/// [`crate::solver::Partition::members_of`] delegates here. The
+/// iterator is `Clone`, so nested pair loops can fork it.
+pub fn members_of(labels: &[u32], c: u32) -> impl Iterator<Item = usize> + Clone + '_ {
+    labels
+        .iter()
+        .enumerate()
+        .filter_map(move |(i, &l)| (l == c).then_some(i))
+}
+
 /// Basic descriptive statistics of a sample.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Summary {
@@ -86,6 +99,19 @@ pub fn ascii_histogram(xs: &[f64], bins: usize, width: usize) -> Vec<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn members_of_partitions_indices() {
+        let labels = [0u32, 2, 1, 0, 2, 2];
+        assert_eq!(members_of(&labels, 0).collect::<Vec<_>>(), vec![0, 3]);
+        assert_eq!(members_of(&labels, 1).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(members_of(&labels, 2).collect::<Vec<_>>(), vec![1, 4, 5]);
+        assert_eq!(members_of(&labels, 3).count(), 0);
+        // Clone lets pair loops fork the iterator mid-walk.
+        let mut it = members_of(&labels, 2);
+        it.next();
+        assert_eq!(it.clone().collect::<Vec<_>>(), it.collect::<Vec<_>>());
+    }
 
     #[test]
     fn summary_basics() {

@@ -1,0 +1,1275 @@
+//! Live, incrementally maintained partitions — the serving-shaped API.
+//!
+//! A batch `partition` call answers "how do I split *this* dataset right
+//! now"; the paper's headline applications (representative CV folds, SGD
+//! mini-batches, balanced K-cut serving) are long-lived: rows arrive,
+//! rows expire, and re-solving from scratch on every change wastes the
+//! work the previous solution already encodes. An [`OnlinePartition`] —
+//! obtained from [`crate::Aba::partition_online`], or grown from an
+//! [`OnlinePartition::empty`] handle — turns the frozen result into a
+//! first-class, updatable artifact:
+//!
+//! * [`OnlinePartition::insert_batch`] assigns a batch of new rows to
+//!   anticlusters by solving small max-*gain* rectangular assignments
+//!   (the same dense LAPJV / auction / greedy solvers as the batch
+//!   algorithm, switching to the candidate-pruned CSR solvers of
+//!   [`crate::assignment::sparse`] at large K), with per-cluster
+//!   capacities derived from the post-insert balanced target sizes and
+//!   §4.3 categorical masking;
+//! * [`OnlinePartition::remove`] drops rows by id and repairs the
+//!   balance (and category) invariants with cheapest-loss relocations;
+//! * [`OnlinePartition::refine`] runs a bounded exchange pass scoped to
+//!   the clusters touched since the last refine;
+//! * [`OnlinePartition::objective`] / [`OnlinePartition::sizes`] read
+//!   delta-maintained state instead of recomputing `O(n·d)`: per-cluster
+//!   [`ClusterDelta`] sums price moves in O(d), and exact reads
+//!   re-accumulate only the clusters dirtied since the last read —
+//!   bit-identical to a from-scratch recompute
+//!   ([`OnlinePartition::recompute_objective`]);
+//! * [`OnlinePartition::save`] / [`OnlinePartition::load`] persist the
+//!   handle as versioned JSON with a config fingerprint
+//!   ([`crate::algo::AbaConfig::fingerprint`]) so a serving process can
+//!   warm-restart — resuming under an incompatible session is a typed
+//!   [`crate::AbaError::SnapshotMismatch`].
+//!
+//! Invariants after **every** operation: anticluster sizes within one
+//! of each other (unconditional), §4.3 per-(cluster, category) counts
+//! at most `ceil(total_g / k)` (restored whenever any cap-respecting
+//! relocation exists; best-effort under adversarial category geometry
+//! where the two invariants genuinely conflict), and `insert_batch`
+//! into an *empty* handle reproduces the flat batch solver's partition
+//! exactly (it runs the identical ordering + assignment loop). All of
+//! this is property-tested (`rust/tests/online.rs`).
+
+mod persist;
+mod state;
+
+use crate::algo::batching;
+use crate::algo::core::{warm_start_env_default, Scratch, MASK_COST};
+use crate::algo::objective::ClusterDelta;
+use crate::algo::{self, AbaConfig};
+use crate::assignment::sparse::{CsrCost, SparseAuction, SparseLapjv};
+use crate::assignment::{auction, greedy, Lapjv, SolverKind};
+use crate::data::dataset::sq_dist;
+use crate::data::{DataView, Dataset};
+use crate::error::{AbaError, AbaResult};
+use crate::knn::farthest::FarthestIndex;
+use crate::runtime::{NativeBackend, Parallelism};
+use crate::solver::{Partition, PhaseTimings};
+use state::{ClusterState, RowStore};
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+/// Outcome of one [`OnlinePartition::refine`] pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RefineStats {
+    /// Candidate swaps priced (the budget currency).
+    pub evaluated: usize,
+    /// Swaps applied.
+    pub swapped: usize,
+    /// Sum of the applied swaps' priced gains (running-sum estimate;
+    /// read [`OnlinePartition::objective`] for the exact value).
+    pub est_gain: f64,
+}
+
+/// A live anticlustering: owned rows with stable ids, delta-maintained
+/// per-cluster state, and bounded local repair. See the module docs.
+pub struct OnlinePartition {
+    k: usize,
+    n_cats: usize,
+    store: RowStore,
+    clusters: Vec<ClusterState>,
+    /// Per-category live totals (len `n_cats`).
+    cat_totals: Vec<usize>,
+    /// Clusters whose membership changed since the last refine.
+    touched: BTreeSet<usize>,
+    cfg: AbaConfig,
+    /// Reused solvers/buffers for insert rounds.
+    lapjv: Lapjv,
+    farthest: FarthestIndex,
+    sparse_jv: SparseLapjv,
+    sparse_auction: SparseAuction,
+    cost: Vec<f32>,
+    /// Timings of the initial solve (carried into a frozen `Partition`).
+    timings: PhaseTimings,
+}
+
+impl OnlinePartition {
+    fn with_parts(k: usize, d: usize, cfg: AbaConfig) -> Self {
+        let mut lapjv = Lapjv::new();
+        lapjv.warm_start = cfg.lapjv_warm.unwrap_or_else(warm_start_env_default);
+        Self {
+            k,
+            n_cats: 0,
+            store: RowStore::new(d),
+            clusters: (0..k).map(|_| ClusterState::new(d, 0)).collect(),
+            cat_totals: Vec::new(),
+            touched: BTreeSet::new(),
+            cfg,
+            lapjv,
+            farthest: FarthestIndex::new(),
+            sparse_jv: SparseLapjv::new(),
+            sparse_auction: SparseAuction::new(),
+            cost: Vec::new(),
+            timings: PhaseTimings::default(),
+        }
+    }
+
+    /// An empty handle over `d`-feature rows: the first
+    /// [`OnlinePartition::insert_batch`] bootstraps it through the exact
+    /// flat batch algorithm (serial, native backend), so filling an
+    /// empty handle with a whole dataset reproduces the batch solver's
+    /// partition.
+    pub fn empty(k: usize, d: usize, cfg: &AbaConfig) -> AbaResult<Self> {
+        if k == 0 {
+            return Err(AbaError::InvalidK { k, n: 0, reason: "k must be >= 1".into() });
+        }
+        if d == 0 {
+            return Err(AbaError::BadShape("online partition needs d >= 1".into()));
+        }
+        Ok(Self::with_parts(k, d, cfg.clone()))
+    }
+
+    /// Build a handle from a solved batch partition (the
+    /// [`crate::Aba::partition_online`] path). Labels are per view row;
+    /// ids are assigned `0..n` in view-row order.
+    pub(crate) fn from_labels(
+        view: &DataView<'_>,
+        labels: Vec<u32>,
+        k: usize,
+        cfg: AbaConfig,
+        timings: PhaseTimings,
+    ) -> Self {
+        let n_cats = view.n_categories();
+        let mut part = Self::with_parts(k, view.d(), cfg);
+        if n_cats > 0 {
+            part.grow_categories(n_cats);
+        }
+        part.timings = timings;
+        for (i, &label) in labels.iter().enumerate() {
+            let cat = if n_cats > 0 { view.category(i) } else { 0 };
+            if n_cats > 0 {
+                part.cat_totals[cat as usize] += 1;
+            }
+            let (id, slot) = part.store.insert(view.row(i), cat);
+            part.attach(id, slot, label as usize);
+        }
+        part.seal();
+        part.touched.clear();
+        part
+    }
+
+    // ---- observers -----------------------------------------------------
+
+    /// Live rows.
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    /// Whether the handle holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.store.len() == 0
+    }
+
+    /// Number of anticlusters.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Features per row.
+    pub fn d(&self) -> usize {
+        self.store.d
+    }
+
+    /// Distinct categories (0 when the handle is not categorical).
+    pub fn n_categories(&self) -> usize {
+        self.n_cats
+    }
+
+    /// The config fingerprint stamped into this handle's snapshots —
+    /// always derived from the owning config
+    /// ([`AbaConfig::fingerprint`]), never stored separately.
+    pub fn fingerprint(&self) -> String {
+        self.cfg.fingerprint()
+    }
+
+    /// Objects per anticluster, off the maintained state — O(k).
+    pub fn sizes(&self) -> Vec<usize> {
+        self.clusters.iter().map(|c| c.size()).collect()
+    }
+
+    /// Member ids of one anticluster, sorted ascending.
+    pub fn members(&self, c: usize) -> &[u64] {
+        &self.clusters[c].members
+    }
+
+    /// Member ids grouped by anticluster (the online analogue of
+    /// [`Partition::groups`]).
+    pub fn groups_ids(&self) -> Vec<Vec<u64>> {
+        self.clusters.iter().map(|c| c.members.clone()).collect()
+    }
+
+    /// `(id, anticluster)` pairs in ascending-id order.
+    pub fn entries(&self) -> Vec<(u64, u32)> {
+        self.store
+            .iter()
+            .map(|(id, slot)| (id, self.store.labels[slot]))
+            .collect()
+    }
+
+    /// Anticluster of a live row id.
+    pub fn label_of(&self, id: u64) -> Option<u32> {
+        self.store.slot_of(id).map(|slot| self.store.labels[slot])
+    }
+
+    /// Centroid-form objective (total SSD to anticluster centroids),
+    /// read from the maintained state: only clusters dirtied since the
+    /// last read are re-accumulated (canonically, in ascending-id member
+    /// order), so the result is **bit-identical** to
+    /// [`OnlinePartition::recompute_objective`].
+    pub fn objective(&mut self) -> f64 {
+        for c in 0..self.k {
+            if self.clusters[c].dirty {
+                self.refresh_cluster(c);
+            }
+        }
+        self.clusters.iter().map(|cl| cl.cached_ssd).sum()
+    }
+
+    /// Per-anticluster SSD contributions (same maintenance as
+    /// [`OnlinePartition::objective`]).
+    pub fn cluster_objectives(&mut self) -> Vec<f64> {
+        for c in 0..self.k {
+            if self.clusters[c].dirty {
+                self.refresh_cluster(c);
+            }
+        }
+        self.clusters.iter().map(|cl| cl.cached_ssd).collect()
+    }
+
+    /// From-scratch objective recompute over the current membership —
+    /// the verification oracle for [`OnlinePartition::objective`]
+    /// (property-tested to match it bit for bit) and the CLI's
+    /// delta-vs-scratch report.
+    pub fn recompute_objective(&self) -> f64 {
+        let d = self.store.d;
+        let mut total = 0f64;
+        for cl in &self.clusters {
+            let mut fresh = ClusterDelta::new(d);
+            for &id in &cl.members {
+                let slot = self.store.slot_of(id).expect("member resolves");
+                fresh.add(self.store.row(slot));
+            }
+            total += fresh.ssd();
+        }
+        total
+    }
+
+    /// Timings of the initial solve that produced this handle.
+    pub fn timings(&self) -> PhaseTimings {
+        self.timings
+    }
+
+    /// Materialize the current rows (ascending-id order) into an owned
+    /// [`Dataset`] — e.g. to hand the *current* contents to a
+    /// from-scratch re-solve for comparison.
+    pub fn to_dataset(&self, name: impl Into<String>) -> AbaResult<Dataset> {
+        let (n, d) = (self.store.len(), self.store.d);
+        let mut x = Vec::with_capacity(n * d);
+        let mut cats = Vec::with_capacity(if self.n_cats > 0 { n } else { 0 });
+        for (_, slot) in self.store.iter() {
+            x.extend_from_slice(self.store.row(slot));
+            if self.n_cats > 0 {
+                cats.push(self.store.cats[slot]);
+            }
+        }
+        let ds = Dataset::from_flat(name, n, d, x)?;
+        if self.n_cats > 0 {
+            ds.with_categories(cats)
+        } else {
+            Ok(ds)
+        }
+    }
+
+    /// Freeze into an immutable [`Partition`] (labels in ascending-id
+    /// order) — identical to what
+    /// [`crate::Anticlusterer::partition_view`] returns for the same
+    /// data (property-tested); the frozen path just skips the handle
+    /// and stamps labels off the borrowed view directly.
+    pub fn into_partition(self) -> Partition {
+        let (n, d) = (self.store.len(), self.store.d);
+        let mut x = Vec::with_capacity(n * d);
+        let mut labels = Vec::with_capacity(n);
+        for (_, slot) in self.store.iter() {
+            x.extend_from_slice(self.store.row(slot));
+            labels.push(self.store.labels[slot]);
+        }
+        let view = DataView::over("online", &x, n, d);
+        Partition::from_labels(&view, labels, self.k, self.timings)
+    }
+
+    // ---- updates -------------------------------------------------------
+
+    /// Insert a batch of rows, assigning each to an anticluster so that
+    /// diversity gain is maximized subject to the balance invariant:
+    /// per-cluster capacities come from the post-insert target sizes
+    /// (`n' = n + b` split `q`/`q+1` across the k clusters), and each
+    /// round solves a max-gain rectangular assignment of up to one new
+    /// row per capacity-bearing cluster — dense LAPJV/auction/greedy, or
+    /// the candidate-pruned CSR solvers once the active-cluster count
+    /// crosses the session's [`crate::assignment::CandidateMode`]
+    /// threshold. §4.3 category caps are masked exactly like the batch
+    /// loop. Returns the assigned row ids, in incoming row order.
+    ///
+    /// Inserting into an **empty** handle instead runs the exact flat
+    /// batch algorithm (serial, native) over the incoming view, so it
+    /// reproduces the batch solver's partition.
+    pub fn insert_batch(&mut self, view: &DataView<'_>) -> AbaResult<Vec<u64>> {
+        let b = view.n();
+        if b == 0 {
+            return Ok(Vec::new());
+        }
+        if view.d() != self.store.d {
+            return Err(AbaError::BadShape(format!(
+                "insert batch has d={}, the partition has d={}",
+                view.d(),
+                self.store.d
+            )));
+        }
+        if self.store.len() == 0 {
+            return self.bootstrap(view);
+        }
+        let vcats = view.n_categories();
+        if (self.n_cats > 0) != (vcats > 0) {
+            return Err(AbaError::BadShape(
+                "categorical presence of the batch does not match the partition".into(),
+            ));
+        }
+        if vcats > self.n_cats {
+            self.grow_categories(vcats);
+        }
+        // Stage the rows; ids are assigned in incoming order.
+        let mut ids = Vec::with_capacity(b);
+        let mut slots = Vec::with_capacity(b);
+        for i in 0..b {
+            let cat = if self.n_cats > 0 { view.category(i) } else { 0 };
+            if self.n_cats > 0 {
+                self.cat_totals[cat as usize] += 1;
+            }
+            let (id, slot) = self.store.insert(view.row(i), cat);
+            ids.push(id);
+            slots.push(slot);
+        }
+        let mut caps = self.insert_caps(b);
+        let cat_caps = self.cat_caps();
+        // N↓ over the incoming rows: decreasing distance to the
+        // maintained global centroid (ties by arrival order), mirroring
+        // the batch algorithm's processing order.
+        let mu = self.global_centroid_f64();
+        let dist: Vec<f64> = slots
+            .iter()
+            .map(|&slot| {
+                let mut s = 0f64;
+                for (&v, &m) in self.store.row(slot).iter().zip(&mu) {
+                    let diff = v as f64 - m;
+                    s += diff * diff;
+                }
+                s
+            })
+            .collect();
+        let mut order: Vec<usize> = (0..b).collect();
+        order.sort_unstable_by(|&x, &y| dist[y].total_cmp(&dist[x]).then(x.cmp(&y)));
+        // Rounds: at most one new row per capacity-bearing cluster each.
+        let mut pos = 0usize;
+        let mut round_slots: Vec<usize> = Vec::new();
+        while pos < b {
+            let active: Vec<usize> = (0..self.k).filter(|&c| caps[c] > 0).collect();
+            debug_assert!(!active.is_empty(), "capacities exhausted before all rows placed");
+            let m = (b - pos).min(active.len());
+            round_slots.clear();
+            round_slots.extend(order[pos..pos + m].iter().map(|&oi| slots[oi]));
+            let assign = self.solve_round(&round_slots, &active, &cat_caps);
+            for (j, &oi) in order[pos..pos + m].iter().enumerate() {
+                let c = active[assign[j]];
+                self.attach(ids[oi], slots[oi], c);
+                caps[c] -= 1;
+            }
+            pos += m;
+        }
+        // Masked rounds can be forced past a §4.3 cap on adversarially
+        // skewed batches — repair restores the invariants if so.
+        self.repair();
+        Ok(ids)
+    }
+
+    /// Remove rows by id, then repair the balance (and §4.3) invariants
+    /// with cheapest-loss relocations. The call is atomic: unknown or
+    /// duplicated ids fail with [`AbaError::InvalidInput`] before
+    /// anything is removed.
+    pub fn remove(&mut self, ids: &[u64]) -> AbaResult<()> {
+        let mut unique = BTreeSet::new();
+        for &id in ids {
+            if self.store.slot_of(id).is_none() {
+                return Err(AbaError::InvalidInput(format!("unknown row id {id}")));
+            }
+            if !unique.insert(id) {
+                return Err(AbaError::InvalidInput(format!("duplicate row id {id}")));
+            }
+        }
+        let d = self.store.d;
+        for &id in ids {
+            let slot = self.store.slot_of(id).expect("validated above");
+            let c = self.store.labels[slot] as usize;
+            let cat = self.store.cats[slot] as usize;
+            {
+                let row = &self.store.rows[slot * d..(slot + 1) * d];
+                let cl = &mut self.clusters[c];
+                cl.remove_member(id, row);
+                if self.n_cats > 0 {
+                    cl.cat_counts[cat] -= 1;
+                }
+            }
+            if self.n_cats > 0 {
+                self.cat_totals[cat] -= 1;
+            }
+            self.touched.insert(c);
+            self.store.remove(id);
+        }
+        self.repair();
+        Ok(())
+    }
+
+    /// One bounded exchange pass scoped to the clusters touched since
+    /// the last refine: candidate swaps between a touched cluster and
+    /// every other cluster are priced in O(d) off the maintained sums
+    /// and applied when they improve the objective (category-cap-safe
+    /// swaps only). `budget` caps the number of priced candidates;
+    /// `refine(0)` is a no-op that preserves the touched set, and when
+    /// the budget runs out mid-scope the unwalked clusters stay
+    /// touched, so repeated calls resume instead of dropping them.
+    /// Put every cluster in scope for the next [`OnlinePartition::refine`]
+    /// — a *global* polish pass. Freshly built or loaded handles have an
+    /// empty touched set (their state is exactly the solved partition),
+    /// so a standalone refine with no preceding churn wants this first;
+    /// the CLI's `update --refine` without `--insert`/`--remove` does it
+    /// automatically.
+    pub fn touch_all(&mut self) {
+        self.touched.extend(0..self.k);
+    }
+
+    pub fn refine(&mut self, budget: usize) -> RefineStats {
+        let mut stats = RefineStats::default();
+        if budget == 0 || self.k < 2 {
+            return stats;
+        }
+        let scope: Vec<usize> = self.touched.iter().copied().collect();
+        self.touched.clear();
+        let cat_caps = self.cat_caps();
+        // Scope entries leave the touched set only once fully walked:
+        // when the budget runs out mid-scope, the unfinished tail is
+        // put back so the next refine resumes where this one stopped.
+        let mut completed = 0usize;
+        'outer: for (si, &a) in scope.iter().enumerate() {
+            // One snapshot of a's members per touched cluster (stale
+            // entries are re-checked below); b's members are walked by
+            // position, which is safe because the list only mutates on
+            // an applied swap — and a swap exits the position loop.
+            let mems_a = self.clusters[a].members.clone();
+            for b in 0..self.k {
+                if b == a {
+                    continue;
+                }
+                'ia: for &ida in &mems_a {
+                    let mut pos_b = 0usize;
+                    while let Some(&idb) = self.clusters[b].members.get(pos_b) {
+                        pos_b += 1;
+                        if stats.evaluated >= budget {
+                            break 'outer;
+                        }
+                        // Snapshots go stale as swaps apply: skip pairs
+                        // whose rows have moved (or been removed).
+                        let (Some(sa), Some(sb)) =
+                            (self.store.slot_of(ida), self.store.slot_of(idb))
+                        else {
+                            continue;
+                        };
+                        if self.store.labels[sa] as usize != a
+                            || self.store.labels[sb] as usize != b
+                        {
+                            continue;
+                        }
+                        stats.evaluated += 1;
+                        let Some(gain) = self.swap_gain(a, sa, b, sb, &cat_caps) else {
+                            continue;
+                        };
+                        let eps = 1e-9
+                            * (1.0
+                                + self.clusters[a].delta.ssd().abs()
+                                + self.clusters[b].delta.ssd().abs());
+                        if gain > eps {
+                            self.apply_swap(ida, sa, a, idb, sb, b);
+                            stats.swapped += 1;
+                            stats.est_gain += gain;
+                            continue 'ia;
+                        }
+                    }
+                }
+            }
+            completed = si + 1;
+        }
+        for &a in &scope[completed..] {
+            self.touched.insert(a);
+        }
+        stats
+    }
+
+    // ---- internals -----------------------------------------------------
+
+    /// Record `id` (staged at `slot`) as a member of cluster `c`.
+    fn attach(&mut self, id: u64, slot: usize, c: usize) {
+        debug_assert!(c < self.k, "cluster {c} out of range (k={})", self.k);
+        let d = self.store.d;
+        self.store.labels[slot] = c as u32;
+        let cat = self.store.cats[slot] as usize;
+        let row = &self.store.rows[slot * d..(slot + 1) * d];
+        let cl = &mut self.clusters[c];
+        cl.add_member(id, row);
+        if self.n_cats > 0 {
+            cl.cat_counts[cat] += 1;
+        }
+        self.touched.insert(c);
+    }
+
+    /// Move a live row between clusters.
+    fn relocate(&mut self, id: u64, from: usize, to: usize) {
+        debug_assert_ne!(from, to);
+        let slot = self.store.slot_of(id).expect("id resolves");
+        let d = self.store.d;
+        let cat = self.store.cats[slot] as usize;
+        {
+            let row = &self.store.rows[slot * d..(slot + 1) * d];
+            let cl = &mut self.clusters[from];
+            cl.remove_member(id, row);
+            if self.n_cats > 0 {
+                cl.cat_counts[cat] -= 1;
+            }
+        }
+        {
+            let row = &self.store.rows[slot * d..(slot + 1) * d];
+            let cl = &mut self.clusters[to];
+            cl.add_member(id, row);
+            if self.n_cats > 0 {
+                cl.cat_counts[cat] += 1;
+            }
+        }
+        self.store.labels[slot] = to as u32;
+        self.touched.insert(from);
+        self.touched.insert(to);
+    }
+
+    /// Mark every cluster's cached SSD from its (canonically built)
+    /// running delta. Only valid right after a canonical full build
+    /// (`from_labels`, bootstrap, load).
+    fn seal(&mut self) {
+        for cl in &mut self.clusters {
+            cl.cached_ssd = cl.delta.ssd();
+            cl.dirty = false;
+        }
+    }
+
+    /// Canonically re-accumulate one cluster: ascending-id member
+    /// order, fresh f64 sums. Re-syncs the running delta (bounding
+    /// drift) and refreshes the cached SSD.
+    fn refresh_cluster(&mut self, c: usize) {
+        let d = self.store.d;
+        let mut fresh = ClusterDelta::new(d);
+        for idx in 0..self.clusters[c].members.len() {
+            let id = self.clusters[c].members[idx];
+            let slot = self.store.slot_of(id).expect("member resolves");
+            fresh.add(self.store.row(slot));
+        }
+        let cl = &mut self.clusters[c];
+        cl.cached_ssd = fresh.ssd();
+        cl.delta = fresh;
+        cl.dirty = false;
+    }
+
+    fn grow_categories(&mut self, n_cats: usize) {
+        debug_assert!(n_cats >= self.n_cats);
+        self.n_cats = n_cats;
+        self.cat_totals.resize(n_cats, 0);
+        for cl in &mut self.clusters {
+            cl.cat_counts.resize(n_cats, 0);
+        }
+    }
+
+    /// §4.3 upper bounds against the current totals.
+    fn cat_caps(&self) -> Vec<usize> {
+        (0..self.n_cats)
+            .map(|g| self.cat_totals[g].div_ceil(self.k))
+            .collect()
+    }
+
+    /// Per-cluster insert capacities by water-filling: the `b` new rows
+    /// raise the **smallest** clusters first, so insertion always moves
+    /// toward balance. On already-balanced sizes this reduces to the
+    /// `q`/`q+1` post-insert targets; on skewed sizes (a hand-edited
+    /// snapshot, or any future path that relaxes the invariant) it
+    /// assigns no capacity to oversized clusters instead of
+    /// under-allocating — the trailing `repair()` then finishes
+    /// whatever imbalance the inserts could not absorb. Always sums to
+    /// exactly `b`.
+    fn insert_caps(&self, b: usize) -> Vec<usize> {
+        // Largest level L with sum(max(0, L - size_c)) <= b, by binary
+        // search (the fill cost is monotone in L).
+        let fill_cost = |level: usize| -> usize {
+            self.clusters
+                .iter()
+                .map(|c| level.saturating_sub(c.size()))
+                .sum()
+        };
+        let min_size = self.clusters.iter().map(|c| c.size()).min().unwrap_or(0);
+        let (mut lo, mut hi) = (min_size, min_size + b);
+        while lo < hi {
+            let mid = lo + (hi - lo + 1) / 2;
+            if fill_cost(mid) <= b {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        let level = lo;
+        let mut caps: Vec<usize> =
+            self.clusters.iter().map(|c| level.saturating_sub(c.size())).collect();
+        // Distribute the remainder one-by-one to the lowest-water
+        // clusters (ties by index, deterministic).
+        let mut remainder = b - fill_cost(level);
+        let mut order: Vec<usize> = (0..self.k)
+            .filter(|&c| self.clusters[c].size() <= level)
+            .collect();
+        order.sort_by_key(|&c| (self.clusters[c].size(), c));
+        for &c in &order {
+            if remainder == 0 {
+                break;
+            }
+            caps[c] += 1;
+            remainder -= 1;
+        }
+        debug_assert_eq!(remainder, 0, "water level left remainder unplaced");
+        debug_assert_eq!(caps.iter().sum::<usize>(), b, "capacity mass mismatch");
+        caps
+    }
+
+    /// Mean of all live rows off the maintained cluster sums.
+    fn global_centroid_f64(&self) -> Vec<f64> {
+        let d = self.store.d;
+        let n: usize = self.clusters.iter().map(|c| c.size()).sum();
+        let mut mu = vec![0f64; d];
+        for cl in &self.clusters {
+            for (m, &s) in mu.iter_mut().zip(cl.delta.sum()) {
+                *m += s;
+            }
+        }
+        if n > 0 {
+            for m in mu.iter_mut() {
+                *m /= n as f64;
+            }
+        }
+        mu
+    }
+
+    /// Solve one insert round: max-gain assignment of `row_slots` to the
+    /// `active` clusters (cost = `m/(m+1) * ||x - centroid||^2`, §4.3
+    /// masked). Dispatches to the candidate-pruned CSR solvers when the
+    /// session's candidate mode prunes at this round's width, with dense
+    /// fallback on infeasibility — the same escape hatch as the batch
+    /// loop.
+    fn solve_round(&mut self, row_slots: &[usize], active: &[usize], cat_caps: &[usize]) -> Vec<usize> {
+        let m = row_slots.len();
+        let na = active.len();
+        let d = self.store.d;
+        // Active-cluster centroids and marginal-gain weights m/(m+1).
+        let mut cents = vec![0f32; na * d];
+        let mut w = vec![0f64; na];
+        for (a, &c) in active.iter().enumerate() {
+            let delta = &self.clusters[c].delta;
+            let sz = delta.len();
+            if sz > 0 {
+                for (t, &sv) in delta.sum().iter().enumerate() {
+                    cents[a * d + t] = (sv / sz as f64) as f32;
+                }
+                w[a] = sz as f64 / (sz as f64 + 1.0);
+            }
+        }
+        let c_eff = self.cfg.candidates.effective(na);
+        if c_eff < na && matches!(self.cfg.solver, SolverKind::Lapjv | SolverKind::Auction) {
+            if let Some(assign) =
+                self.solve_round_sparse(row_slots, active, &cents, &w, cat_caps, c_eff)
+            {
+                return assign;
+            }
+        }
+        self.cost.clear();
+        self.cost.resize(m * na, 0.0);
+        for (j, &slot) in row_slots.iter().enumerate() {
+            let row = self.store.row(slot);
+            let cat = self.store.cats[slot] as usize;
+            for (a, &c) in active.iter().enumerate() {
+                let masked = self.n_cats > 0 && self.clusters[c].cat_counts[cat] >= cat_caps[cat];
+                self.cost[j * na + a] = if masked {
+                    MASK_COST
+                } else {
+                    (w[a] * sq_dist(row, &cents[a * d..(a + 1) * d])) as f32
+                };
+            }
+        }
+        let cost = &self.cost[..m * na];
+        match self.cfg.solver {
+            SolverKind::Greedy => greedy::solve_max(cost, m, na),
+            SolverKind::Auction => auction::solve_max(cost, m, na),
+            SolverKind::Lapjv => self.lapjv.solve(cost, m, na, true),
+        }
+    }
+
+    /// The candidate-pruned round: top-`c0` farthest active centroids
+    /// per row (capacity-aware) via [`FarthestIndex`], CSR assembly,
+    /// CSR-aware LAPJV / sparse auction; on infeasibility the candidate
+    /// count escalates (×2) until it would reach the active width.
+    fn solve_round_sparse(
+        &mut self,
+        row_slots: &[usize],
+        active: &[usize],
+        cents: &[f32],
+        w: &[f64],
+        cat_caps: &[usize],
+        c0: usize,
+    ) -> Option<Vec<usize>> {
+        let m = row_slots.len();
+        let na = active.len();
+        let d = self.store.d;
+        self.farthest.build(cents, na, d);
+        let mut c = c0.max(1);
+        let mut row_ptr: Vec<usize> = Vec::with_capacity(m + 1);
+        let mut cols: Vec<u32> = Vec::new();
+        let mut vals: Vec<f32> = Vec::new();
+        let mut best: Vec<(f64, u32)> = Vec::new();
+        loop {
+            row_ptr.clear();
+            row_ptr.push(0);
+            cols.clear();
+            vals.clear();
+            {
+                let farthest = &self.farthest;
+                let clusters = &self.clusters;
+                let n_cats = self.n_cats;
+                for &slot in row_slots {
+                    let row = self.store.row(slot);
+                    let cat = self.store.cats[slot] as usize;
+                    let valid = |a: usize| {
+                        n_cats == 0 || clusters[active[a]].cat_counts[cat] < cat_caps[cat]
+                    };
+                    farthest.farthest_into(cents, row, c, &valid, &mut best);
+                    if best.is_empty() {
+                        // No §4.3-valid candidate at any C: only the
+                        // masked dense path can place this row.
+                        return None;
+                    }
+                    for &(dist, col) in &best {
+                        cols.push(col);
+                        vals.push((w[col as usize] * dist) as f32);
+                    }
+                    row_ptr.push(cols.len());
+                }
+            }
+            let csr = CsrCost { row_ptr: &row_ptr, cols: &cols, vals: &vals, nc: na };
+            let solved = match self.cfg.solver {
+                SolverKind::Auction => self.sparse_auction.solve_max(&csr, 1e-6),
+                _ => self.sparse_jv.solve_max(&csr),
+            };
+            if let Some(assign) = solved {
+                return Some(assign);
+            }
+            if c * 2 >= na {
+                return None;
+            }
+            c *= 2;
+        }
+    }
+
+    /// Restore the invariants: the §4.3 upper bounds (removals shrink
+    /// totals, so caps can tighten under a cluster's count) and size
+    /// balance (`max - min <= 1`), by relocating best-gain members.
+    /// The two stages alternate until a fixed point; the bound exists
+    /// only to guarantee termination against pathological oscillation
+    /// (a size move forced through a saturated category — taken only
+    /// when no cap-safe candidate exists anywhere — re-dirties the cap
+    /// its next category round then fixes). The size invariant is
+    /// unconditional: the loop always ends on a size stage and the size
+    /// stage always converges. The §4.3 bound is restored whenever any
+    /// cap-respecting relocation exists; under adversarial category
+    /// geometry where none does, it is best-effort.
+    fn repair(&mut self) {
+        for _ in 0..2 * self.k + 8 {
+            let cat_moves = self.repair_categories();
+            let size_moves = self.repair_sizes();
+            if cat_moves == 0 && size_moves == 0 {
+                return;
+            }
+        }
+        // Bound hit: one final unconditional size pass so the hard
+        // invariant holds no matter what the alternation was doing.
+        self.repair_sizes();
+    }
+
+    /// Relocate members of §4.3-overfull (cluster, category) cells to
+    /// the least-loaded cluster for that category. Returns moves made.
+    fn repair_categories(&mut self) -> usize {
+        let mut moves = 0usize;
+        if self.n_cats > 0 {
+            let caps = self.cat_caps();
+            for g in 0..self.n_cats {
+                loop {
+                    // Most-violating cluster for category g.
+                    let mut from = usize::MAX;
+                    for c in 0..self.k {
+                        if self.clusters[c].cat_counts[g] > caps[g]
+                            && (from == usize::MAX
+                                || self.clusters[c].cat_counts[g]
+                                    > self.clusters[from].cat_counts[g])
+                        {
+                            from = c;
+                        }
+                    }
+                    if from == usize::MAX {
+                        break;
+                    }
+                    // Recipient with the fewest g members (one with
+                    // headroom always exists while a violator does).
+                    let mut to = usize::MAX;
+                    for c in 0..self.k {
+                        if c == from || self.clusters[c].cat_counts[g] >= caps[g] {
+                            continue;
+                        }
+                        if to == usize::MAX
+                            || self.clusters[c].cat_counts[g] < self.clusters[to].cat_counts[g]
+                            || (self.clusters[c].cat_counts[g]
+                                == self.clusters[to].cat_counts[g]
+                                && self.clusters[c].size() < self.clusters[to].size())
+                        {
+                            to = c;
+                        }
+                    }
+                    if to == usize::MAX {
+                        break;
+                    }
+                    // Best g-member of the violator to relocate.
+                    let mut pick: Option<(u64, f64)> = None;
+                    for &id in &self.clusters[from].members {
+                        let slot = self.store.slot_of(id).expect("member resolves");
+                        if self.store.cats[slot] as usize != g {
+                            continue;
+                        }
+                        let row = self.store.row(slot);
+                        let gain = self.clusters[to].delta.add_gain(row)
+                            - self.clusters[from].delta.remove_loss(row);
+                        if pick.map_or(true, |(_, bg)| gain > bg) {
+                            pick = Some((id, gain));
+                        }
+                    }
+                    let Some((id, _)) = pick else { break };
+                    self.relocate(id, from, to);
+                    moves += 1;
+                }
+            }
+        }
+        moves
+    }
+
+    /// Move best-gain members from largest to smallest clusters until
+    /// `max - min <= 1`. Returns moves made.
+    fn repair_sizes(&mut self) -> usize {
+        let mut moves = 0usize;
+        loop {
+            let mut min_c = 0usize;
+            let mut max_c = 0usize;
+            for c in 1..self.k {
+                if self.clusters[c].size() < self.clusters[min_c].size() {
+                    min_c = c;
+                }
+                if self.clusters[c].size() > self.clusters[max_c].size() {
+                    max_c = c;
+                }
+            }
+            let (min_sz, max_sz) = (self.clusters[min_c].size(), self.clusters[max_c].size());
+            if max_sz - min_sz <= 1 {
+                break;
+            }
+            let donors: Vec<usize> =
+                (0..self.k).filter(|&c| self.clusters[c].size() == max_sz).collect();
+            let recipients: Vec<usize> =
+                (0..self.k).filter(|&c| self.clusters[c].size() == min_sz).collect();
+            let caps = self.cat_caps();
+            let mv = self
+                .best_move(&donors, &recipients, &caps, true)
+                .or_else(|| self.best_move(&donors, &recipients, &caps, false));
+            let Some((id, from, to, _)) = mv else { break };
+            self.relocate(id, from, to);
+            moves += 1;
+        }
+        moves
+    }
+
+    /// Highest-gain single relocation from a donor to a recipient
+    /// cluster; `require_cat_ok` restricts to moves that respect the
+    /// §4.3 caps.
+    fn best_move(
+        &self,
+        donors: &[usize],
+        recipients: &[usize],
+        cat_caps: &[usize],
+        require_cat_ok: bool,
+    ) -> Option<(u64, usize, usize, f64)> {
+        let mut best: Option<(u64, usize, usize, f64)> = None;
+        for &from in donors {
+            for &id in &self.clusters[from].members {
+                let slot = self.store.slot_of(id).expect("member resolves");
+                let row = self.store.row(slot);
+                let cat = self.store.cats[slot] as usize;
+                let loss = self.clusters[from].delta.remove_loss(row);
+                for &to in recipients {
+                    if to == from {
+                        continue;
+                    }
+                    if require_cat_ok
+                        && self.n_cats > 0
+                        && self.clusters[to].cat_counts[cat] >= cat_caps[cat]
+                    {
+                        continue;
+                    }
+                    let gain = self.clusters[to].delta.add_gain(row) - loss;
+                    if best.map_or(true, |(_, _, _, bg)| gain > bg) {
+                        best = Some((id, from, to, gain));
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Price the swap of member `sa` (cluster `a`) with member `sb`
+    /// (cluster `b`) — O(d) off the running sums. `None` when the swap
+    /// would break a §4.3 cap.
+    fn swap_gain(
+        &self,
+        a: usize,
+        sa: usize,
+        b: usize,
+        sb: usize,
+        cat_caps: &[usize],
+    ) -> Option<f64> {
+        let d = self.store.d;
+        let xa = &self.store.rows[sa * d..(sa + 1) * d];
+        let xb = &self.store.rows[sb * d..(sb + 1) * d];
+        if self.n_cats > 0 {
+            let ca = self.store.cats[sa] as usize;
+            let cb = self.store.cats[sb] as usize;
+            if ca != cb
+                && (self.clusters[b].cat_counts[ca] >= cat_caps[ca]
+                    || self.clusters[a].cat_counts[cb] >= cat_caps[cb])
+            {
+                return None;
+            }
+        }
+        let da = &self.clusters[a].delta;
+        let db = &self.clusters[b].delta;
+        let (ma, mb) = (da.len() as f64, db.len() as f64);
+        let (mut sa2, mut sb2, mut xa2, mut xb2) = (0f64, 0f64, 0f64, 0f64);
+        for t in 0..d {
+            let (va, vb) = (xa[t] as f64, xb[t] as f64);
+            xa2 += va * va;
+            xb2 += vb * vb;
+            let at = da.sum()[t] - va + vb;
+            sa2 += at * at;
+            let bt = db.sum()[t] - vb + va;
+            sb2 += bt * bt;
+        }
+        let before = da.ssd() + db.ssd();
+        let after =
+            (da.sumsq() - xa2 + xb2 - sa2 / ma) + (db.sumsq() - xb2 + xa2 - sb2 / mb);
+        Some(after - before)
+    }
+
+    fn apply_swap(&mut self, ida: u64, sa: usize, a: usize, idb: u64, sb: usize, b: usize) {
+        let d = self.store.d;
+        let (ca, cb) = (self.store.cats[sa] as usize, self.store.cats[sb] as usize);
+        {
+            let xa = &self.store.rows[sa * d..(sa + 1) * d];
+            let cl = &mut self.clusters[a];
+            cl.remove_member(ida, xa);
+            if self.n_cats > 0 {
+                cl.cat_counts[ca] -= 1;
+            }
+        }
+        {
+            let xb = &self.store.rows[sb * d..(sb + 1) * d];
+            let cl = &mut self.clusters[b];
+            cl.remove_member(idb, xb);
+            if self.n_cats > 0 {
+                cl.cat_counts[cb] -= 1;
+            }
+        }
+        {
+            let xb = &self.store.rows[sb * d..(sb + 1) * d];
+            let cl = &mut self.clusters[a];
+            cl.add_member(idb, xb);
+            if self.n_cats > 0 {
+                cl.cat_counts[cb] += 1;
+            }
+        }
+        {
+            let xa = &self.store.rows[sa * d..(sa + 1) * d];
+            let cl = &mut self.clusters[b];
+            cl.add_member(ida, xa);
+            if self.n_cats > 0 {
+                cl.cat_counts[ca] += 1;
+            }
+        }
+        self.store.labels[sa] = b as u32;
+        self.store.labels[sb] = a as u32;
+        self.touched.insert(a);
+        self.touched.insert(b);
+    }
+
+    /// Bootstrap an empty handle: the exact flat batch algorithm
+    /// (serial, native backend) over the incoming view.
+    fn bootstrap(&mut self, view: &DataView<'_>) -> AbaResult<Vec<u64>> {
+        // Adopt the batch's categorical structure wholesale, and reset
+        // the per-cluster state completely: a previously drained handle
+        // leaves residual f64 drift in the running deltas, and `seal`
+        // below assumes a canonical from-zero accumulation.
+        let n_cats = view.n_categories();
+        let d = self.store.d;
+        self.n_cats = 0;
+        self.cat_totals.clear();
+        for cl in &mut self.clusters {
+            debug_assert!(cl.members.is_empty(), "bootstrap on a non-empty handle");
+            *cl = ClusterState::new(d, 0);
+        }
+        if n_cats > 0 {
+            self.grow_categories(n_cats);
+        }
+        algo::validate(view.n(), self.k, self.cfg.strict_divisibility)?;
+        let (labels, order_secs, assign_secs) = if self.k == 1 {
+            (vec![0u32; view.n()], 0.0, 0.0)
+        } else {
+            let mut backend = NativeBackend::default();
+            let t = Instant::now();
+            let variant = algo::resolve_variant(self.cfg.variant, view.n(), self.k);
+            let order = batching::build_order(view, self.k, variant, &mut backend);
+            let order_secs = t.elapsed().as_secs_f64();
+            let t = Instant::now();
+            let mut scratch = Scratch::with_lapjv_warm(
+                self.cfg.lapjv_warm.unwrap_or_else(warm_start_env_default),
+            );
+            let labels = algo::core::run_with_order_scratch(
+                view,
+                self.k,
+                &order,
+                self.cfg.solver,
+                &mut backend,
+                &mut scratch,
+                Parallelism::Serial,
+                self.cfg.candidates,
+            )?;
+            (labels, order_secs, t.elapsed().as_secs_f64())
+        };
+        self.timings = PhaseTimings { order_secs, assign_secs, ..PhaseTimings::default() };
+        let mut ids = Vec::with_capacity(view.n());
+        for (i, &label) in labels.iter().enumerate() {
+            let cat = if n_cats > 0 { view.category(i) } else { 0 };
+            if n_cats > 0 {
+                self.cat_totals[cat as usize] += 1;
+            }
+            let (id, slot) = self.store.insert(view.row(i), cat);
+            self.attach(id, slot, label as usize);
+            ids.push(id);
+        }
+        self.seal();
+        self.touched.clear();
+        Ok(ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthKind};
+    use crate::solver::{Aba, Anticlusterer};
+
+    fn handle(n: usize, k: usize, seed: u64) -> (OnlinePartition, Dataset) {
+        let ds = generate(SynthKind::Uniform, n, 3, seed, "online");
+        let mut session = Aba::builder().auto_hier(false).build().unwrap();
+        let part = session.partition_online(&ds.view(), k).unwrap();
+        (part, ds)
+    }
+
+    fn assert_balanced(p: &OnlinePartition) {
+        let sizes = p.sizes();
+        let (min, max) = (
+            *sizes.iter().min().unwrap(),
+            *sizes.iter().max().unwrap(),
+        );
+        assert!(max - min <= 1, "unbalanced: {sizes:?}");
+        assert_eq!(sizes.iter().sum::<usize>(), p.len());
+    }
+
+    #[test]
+    fn handle_mirrors_the_frozen_partition() {
+        let (mut p, ds) = handle(60, 5, 1);
+        assert_eq!(p.len(), 60);
+        assert_eq!(p.k(), 5);
+        assert_eq!(p.d(), 3);
+        assert_balanced(&p);
+        let obj = p.objective();
+        assert_eq!(obj, p.recompute_objective());
+        let mut session = Aba::builder().auto_hier(false).build().unwrap();
+        let part = session.partition(&ds, 5).unwrap();
+        let entries = p.entries();
+        for (i, &(id, label)) in entries.iter().enumerate() {
+            assert_eq!(id, i as u64);
+            assert_eq!(label, part.labels[i]);
+        }
+        assert!((obj - part.objective).abs() <= 1e-6 * part.objective.max(1.0));
+    }
+
+    #[test]
+    fn insert_then_remove_round_trips_objective_reads() {
+        let (mut p, _) = handle(60, 5, 2);
+        let extra = generate(SynthKind::Uniform, 7, 3, 3, "extra");
+        let ids = p.insert_batch(&extra.view()).unwrap();
+        assert_eq!(ids, (60..67).collect::<Vec<u64>>());
+        assert_eq!(p.len(), 67);
+        assert_balanced(&p);
+        assert_eq!(p.objective(), p.recompute_objective());
+        p.remove(&ids).unwrap();
+        assert_eq!(p.len(), 60);
+        assert_balanced(&p);
+        assert_eq!(p.objective(), p.recompute_objective());
+    }
+
+    #[test]
+    fn remove_rejects_unknown_and_duplicate_ids_atomically() {
+        let (mut p, _) = handle(20, 4, 4);
+        assert!(matches!(p.remove(&[99]), Err(AbaError::InvalidInput(_))));
+        assert!(matches!(p.remove(&[3, 3]), Err(AbaError::InvalidInput(_))));
+        assert_eq!(p.len(), 20, "failed removes must not mutate");
+        assert_balanced(&p);
+    }
+
+    #[test]
+    fn refine_never_decreases_the_objective() {
+        let (mut p, _) = handle(80, 4, 5);
+        let extra = generate(SynthKind::GaussianMixture { components: 3, spread: 5.0 }, 12, 3, 6, "x");
+        p.insert_batch(&extra.view()).unwrap();
+        let before = p.objective();
+        let stats = p.refine(50_000);
+        let after = p.objective();
+        assert!(after >= before - 1e-9 * before.abs().max(1.0), "{before} -> {after}");
+        assert_eq!(after, p.recompute_objective());
+        assert_balanced(&p);
+        assert!(stats.evaluated > 0);
+    }
+
+    #[test]
+    fn touch_all_enables_standalone_refine() {
+        // A fresh handle has nothing touched: scoped refine is a no-op
+        // until churn (or an explicit global touch) gives it scope.
+        let (mut p, _) = handle(60, 4, 15);
+        assert_eq!(p.refine(10_000).evaluated, 0);
+        p.touch_all();
+        let stats = p.refine(10_000);
+        assert!(stats.evaluated > 0);
+        assert_eq!(p.objective(), p.recompute_objective());
+        assert_balanced(&p);
+    }
+
+    #[test]
+    fn empty_handle_insert_reproduces_the_batch_solver() {
+        let ds = generate(SynthKind::Uniform, 72, 4, 7, "boot");
+        let cfg = AbaConfig { auto_hier: false, ..AbaConfig::default() };
+        let mut empty = OnlinePartition::empty(6, 4, &cfg).unwrap();
+        let ids = empty.insert_batch(&ds.view()).unwrap();
+        assert_eq!(ids.len(), 72);
+        let mut session = Aba::from_config(cfg).unwrap();
+        let part = session.partition(&ds, 6).unwrap();
+        for (i, &(id, label)) in empty.entries().iter().enumerate() {
+            assert_eq!(id, ids[i]);
+            assert_eq!(label, part.labels[i], "row {i}");
+        }
+    }
+
+    #[test]
+    fn drained_handle_bootstraps_again() {
+        let (mut p, ds) = handle(30, 3, 8);
+        let all: Vec<u64> = p.entries().iter().map(|&(id, _)| id).collect();
+        p.remove(&all).unwrap();
+        assert!(p.is_empty());
+        assert_eq!(p.objective(), 0.0);
+        let ids = p.insert_batch(&ds.view()).unwrap();
+        assert_eq!(ids.len(), 30);
+        assert_eq!(ids[0], 30, "fresh ids continue after the old ones");
+        assert_balanced(&p);
+    }
+
+    #[test]
+    fn categorical_churn_respects_caps() {
+        let n = 60;
+        let ds = generate(SynthKind::Uniform, n, 3, 9, "cat")
+            .with_categories((0..n).map(|i| (i % 3) as u32).collect())
+            .unwrap();
+        let mut session = Aba::builder().auto_hier(false).build().unwrap();
+        let mut p = session.partition_online(&ds.view(), 5).unwrap();
+        let extra = generate(SynthKind::Uniform, 9, 3, 10, "cx")
+            .with_categories((0..9).map(|i| (i % 3) as u32).collect())
+            .unwrap();
+        let ids = p.insert_batch(&extra.view()).unwrap();
+        p.remove(&ids[..4]).unwrap();
+        p.refine(20_000);
+        assert_balanced(&p);
+        // §4.3 upper bounds on every (cluster, category) count.
+        let caps: Vec<usize> = (0..3).map(|g| p.cat_totals[g].div_ceil(p.k())).collect();
+        for c in 0..p.k() {
+            for g in 0..3 {
+                assert!(
+                    p.clusters[c].cat_counts[g] <= caps[g],
+                    "cluster {c} cat {g}: {} > cap {}",
+                    p.clusters[c].cat_counts[g],
+                    caps[g]
+                );
+            }
+        }
+        assert_eq!(p.objective(), p.recompute_objective());
+    }
+
+    #[test]
+    fn mismatched_batch_shapes_are_typed_errors() {
+        let (mut p, _) = handle(20, 4, 11);
+        let wrong_d = generate(SynthKind::Uniform, 5, 2, 12, "w");
+        assert!(matches!(p.insert_batch(&wrong_d.view()), Err(AbaError::BadShape(_))));
+        let catted = generate(SynthKind::Uniform, 5, 3, 13, "c")
+            .with_categories(vec![0, 1, 0, 1, 0])
+            .unwrap();
+        assert!(matches!(p.insert_batch(&catted.view()), Err(AbaError::BadShape(_))));
+    }
+
+    #[test]
+    fn freeze_matches_partition_view() {
+        let ds = generate(SynthKind::Uniform, 48, 3, 14, "f");
+        let mut a = Aba::builder().auto_hier(false).build().unwrap();
+        let mut b = Aba::builder().auto_hier(false).build().unwrap();
+        let frozen = a.partition_online(&ds.view(), 4).unwrap().into_partition();
+        let direct = crate::solver::Anticlusterer::partition_view(&mut b, &ds.view(), 4).unwrap();
+        assert_eq!(frozen.labels, direct.labels);
+        assert_eq!(frozen.objective, direct.objective);
+    }
+}

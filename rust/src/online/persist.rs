@@ -1,0 +1,285 @@
+//! Persistence for [`OnlinePartition`]: versioned JSON snapshots with a
+//! config fingerprint, so serving processes can warm-restart.
+//!
+//! Format (version 1), written through [`crate::util::json`]:
+//!
+//! ```json
+//! {
+//!   "format": 1,
+//!   "fingerprint": "aba/1|variant=auto|solver=lapjv|candidates=auto|strict=false",
+//!   "k": 16, "d": 8, "n_cats": 0, "next_id": 8200,
+//!   "ids":    [0, 1, 5, ...],          // ascending
+//!   "labels": [3, 0, 12, ...],         // parallel to ids
+//!   "cats":   [0, 2, 1, ...],          // only when n_cats > 0
+//!   "rows":   [0.25, -1.5, ...]        // row-major f32, ids order
+//! }
+//! ```
+//!
+//! Rows are f32 values embedded exactly in f64 JSON numbers, and Rust's
+//! shortest-round-trip float formatting preserves them bit for bit —
+//! `save -> load -> save` reproduces the file byte-identically
+//! (property-tested). Loading checks the format version and the
+//! [`crate::algo::AbaConfig::fingerprint`] and fails with
+//! [`AbaError::SnapshotMismatch`] rather than resuming a partition
+//! under an incompatible session.
+
+use super::OnlinePartition;
+use crate::algo::AbaConfig;
+use crate::error::{AbaError, AbaResult};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Snapshot format version.
+const FORMAT: usize = 1;
+
+fn io_err(action: &str, path: &Path, e: std::io::Error) -> AbaError {
+    AbaError::Io(format!("{action} {path:?}: {e}"))
+}
+
+fn field<'a>(doc: &'a Json, key: &str) -> AbaResult<&'a Json> {
+    doc.get(key).ok_or_else(|| AbaError::ParseError {
+        line: 1,
+        msg: format!("snapshot is missing '{key}'"),
+    })
+}
+
+fn as_usize(doc: &Json, key: &str) -> AbaResult<usize> {
+    field(doc, key)?.as_usize().ok_or_else(|| AbaError::ParseError {
+        line: 1,
+        msg: format!("snapshot field '{key}' is not a number"),
+    })
+}
+
+fn num_array<'a>(doc: &'a Json, key: &str) -> AbaResult<&'a [Json]> {
+    field(doc, key)?.as_arr().ok_or_else(|| AbaError::ParseError {
+        line: 1,
+        msg: format!("snapshot field '{key}' is not an array"),
+    })
+}
+
+impl OnlinePartition {
+    /// Serialize the handle to the version-1 JSON snapshot format.
+    pub fn save(&self, path: impl AsRef<Path>) -> AbaResult<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.snapshot_string()).map_err(|e| io_err("write", path, e))
+    }
+
+    /// The snapshot document as a string (what [`OnlinePartition::save`]
+    /// writes) — exposed so tests can assert byte-identical round trips.
+    pub fn snapshot_string(&self) -> String {
+        let mut doc: BTreeMap<String, Json> = BTreeMap::new();
+        doc.insert("format".into(), Json::Num(FORMAT as f64));
+        doc.insert("fingerprint".into(), Json::Str(self.cfg.fingerprint()));
+        doc.insert("k".into(), Json::Num(self.k as f64));
+        doc.insert("d".into(), Json::Num(self.store.d as f64));
+        doc.insert("n_cats".into(), Json::Num(self.n_cats as f64));
+        doc.insert("next_id".into(), Json::Num(self.store.next_id as f64));
+        let mut ids = Vec::with_capacity(self.store.len());
+        let mut labels = Vec::with_capacity(self.store.len());
+        let mut cats = Vec::with_capacity(if self.n_cats > 0 { self.store.len() } else { 0 });
+        let mut rows = Vec::with_capacity(self.store.len() * self.store.d);
+        for (id, slot) in self.store.iter() {
+            ids.push(Json::Num(id as f64));
+            labels.push(Json::Num(f64::from(self.store.labels[slot])));
+            if self.n_cats > 0 {
+                cats.push(Json::Num(f64::from(self.store.cats[slot])));
+            }
+            for &v in self.store.row(slot) {
+                rows.push(Json::Num(f64::from(v)));
+            }
+        }
+        doc.insert("ids".into(), Json::Arr(ids));
+        doc.insert("labels".into(), Json::Arr(labels));
+        if self.n_cats > 0 {
+            doc.insert("cats".into(), Json::Arr(cats));
+        }
+        doc.insert("rows".into(), Json::Arr(rows));
+        json::to_string(&Json::Obj(doc))
+    }
+
+    /// Load a snapshot written by [`OnlinePartition::save`]. The
+    /// session config must produce the same fingerprint the snapshot
+    /// was taken under — [`AbaError::SnapshotMismatch`] otherwise.
+    pub fn load(path: impl AsRef<Path>, cfg: &AbaConfig) -> AbaResult<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| io_err("read", path, e))?;
+        Self::from_snapshot_str(&text, cfg)
+    }
+
+    /// Parse a snapshot document (the inverse of
+    /// [`OnlinePartition::snapshot_string`]).
+    pub fn from_snapshot_str(text: &str, cfg: &AbaConfig) -> AbaResult<Self> {
+        let doc = json::parse(text).map_err(|e| AbaError::ParseError {
+            line: 1,
+            msg: format!("snapshot json: {e}"),
+        })?;
+        let format = as_usize(&doc, "format")?;
+        if format != FORMAT {
+            return Err(AbaError::SnapshotMismatch {
+                expected: format!("format {FORMAT}"),
+                found: format!("format {format}"),
+            });
+        }
+        let found = field(&doc, "fingerprint")?
+            .as_str()
+            .ok_or_else(|| AbaError::ParseError {
+                line: 1,
+                msg: "snapshot fingerprint is not a string".into(),
+            })?
+            .to_string();
+        let expected = cfg.fingerprint();
+        if found != expected {
+            return Err(AbaError::SnapshotMismatch { expected, found });
+        }
+        let k = as_usize(&doc, "k")?;
+        let d = as_usize(&doc, "d")?;
+        let n_cats = as_usize(&doc, "n_cats")?;
+        let next_id = as_usize(&doc, "next_id")? as u64;
+        let ids = num_array(&doc, "ids")?;
+        let labels = num_array(&doc, "labels")?;
+        let rows = num_array(&doc, "rows")?;
+        let n = ids.len();
+        if labels.len() != n || rows.len() != n * d {
+            return Err(AbaError::ParseError {
+                line: 1,
+                msg: format!(
+                    "snapshot shape mismatch: {n} ids, {} labels, {} row values (d={d})",
+                    labels.len(),
+                    rows.len()
+                ),
+            });
+        }
+        let cats: Option<&[Json]> = if n_cats > 0 {
+            let cats = num_array(&doc, "cats")?;
+            if cats.len() != n {
+                return Err(AbaError::ParseError {
+                    line: 1,
+                    msg: format!("snapshot has {} cats for {n} ids", cats.len()),
+                });
+            }
+            Some(cats)
+        } else {
+            None
+        };
+        let mut part = Self::empty(k, d, cfg)?;
+        if n_cats > 0 {
+            part.grow_categories(n_cats);
+        }
+        let bad = |what: &str, i: usize| AbaError::ParseError {
+            line: 1,
+            msg: format!("snapshot {what} #{i} is not a valid number"),
+        };
+        let mut row = vec![0f32; d];
+        let mut prev_id: Option<u64> = None;
+        for i in 0..n {
+            let id = ids[i].as_f64().ok_or_else(|| bad("id", i))? as u64;
+            if prev_id.is_some_and(|p| p >= id) {
+                return Err(AbaError::ParseError {
+                    line: 1,
+                    msg: format!("snapshot ids are not strictly ascending at #{i}"),
+                });
+            }
+            prev_id = Some(id);
+            let label = labels[i].as_f64().ok_or_else(|| bad("label", i))? as usize;
+            if label >= k {
+                return Err(AbaError::ParseError {
+                    line: 1,
+                    msg: format!("snapshot label {label} out of range (k={k})"),
+                });
+            }
+            for (t, dst) in row.iter_mut().enumerate() {
+                *dst = rows[i * d + t].as_f64().ok_or_else(|| bad("row value", i))? as f32;
+            }
+            let cat = match cats {
+                Some(cats) => {
+                    let c = cats[i].as_f64().ok_or_else(|| bad("category", i))? as usize;
+                    if c >= n_cats {
+                        return Err(AbaError::ParseError {
+                            line: 1,
+                            msg: format!("snapshot category {c} out of range (n_cats={n_cats})"),
+                        });
+                    }
+                    part.cat_totals[c] += 1;
+                    c as u32
+                }
+                None => 0,
+            };
+            let slot = part.store.insert_with_id(id, &row, cat, super::state::UNASSIGNED);
+            part.attach(id, slot, label);
+        }
+        part.store.next_id = next_id.max(prev_id.map_or(0, |p| p + 1));
+        part.seal();
+        part.touched.clear();
+        Ok(part)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthKind};
+    use crate::solver::Aba;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(name)
+    }
+
+    #[test]
+    fn save_load_round_trips_byte_identically() {
+        let ds = generate(SynthKind::Uniform, 40, 3, 31, "p");
+        let mut session = Aba::builder().auto_hier(false).build().unwrap();
+        let mut part = session.partition_online(&ds.view(), 4).unwrap();
+        // Churn so ids are non-contiguous and slots recycled.
+        let extra = generate(SynthKind::Uniform, 6, 3, 32, "px");
+        let ids = part.insert_batch(&extra.view()).unwrap();
+        part.remove(&ids[..3]).unwrap();
+        let path = tmp("aba_online_rt.json");
+        part.save(&path).unwrap();
+        let mut back = OnlinePartition::load(&path, session.config()).unwrap();
+        assert_eq!(back.len(), part.len());
+        assert_eq!(back.entries(), part.entries());
+        assert_eq!(back.sizes(), part.sizes());
+        assert_eq!(back.objective(), part.objective());
+        assert_eq!(back.snapshot_string(), part.snapshot_string());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn incompatible_fingerprint_is_a_typed_error() {
+        let ds = generate(SynthKind::Uniform, 20, 2, 33, "p");
+        let mut session = Aba::builder().auto_hier(false).build().unwrap();
+        let part = session.partition_online(&ds.view(), 4).unwrap();
+        let path = tmp("aba_online_fp.json");
+        part.save(&path).unwrap();
+        let other = AbaConfig {
+            solver: crate::assignment::SolverKind::Greedy,
+            ..AbaConfig::default()
+        };
+        let err = OnlinePartition::load(&path, &other).unwrap_err();
+        assert!(matches!(err, AbaError::SnapshotMismatch { .. }), "{err}");
+        assert!(err.to_string().contains("greedy"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_snapshots_are_parse_errors() {
+        let cfg = AbaConfig::default();
+        assert!(matches!(
+            OnlinePartition::from_snapshot_str("{not json", &cfg),
+            Err(AbaError::ParseError { .. })
+        ));
+        assert!(matches!(
+            OnlinePartition::from_snapshot_str("{\"format\": 1}", &cfg),
+            Err(AbaError::ParseError { .. })
+        ));
+        assert!(matches!(
+            OnlinePartition::from_snapshot_str("{\"format\": 2}", &cfg),
+            Err(AbaError::SnapshotMismatch { .. })
+        ));
+        assert!(matches!(
+            OnlinePartition::load(tmp("aba_online_nonexistent.json"), &cfg),
+            Err(AbaError::Io(_))
+        ));
+    }
+}

@@ -1,0 +1,219 @@
+//! Internal state of an [`super::OnlinePartition`]: the owned row store
+//! with stable external ids, and the per-anticluster maintained state.
+//!
+//! The row store is slot-based: removing a row frees its slot for the
+//! next insert instead of compacting the matrix, so ids handed to
+//! callers stay valid across arbitrary churn. Everything observable is
+//! keyed by *id*, and every canonical walk (objective refresh,
+//! persistence, freezing) iterates ids in ascending order — that fixed
+//! order is what makes exact reads and save/load round-trips
+//! bit-reproducible.
+
+use crate::algo::objective::ClusterDelta;
+use std::collections::BTreeMap;
+
+/// Label sentinel for a slot that is free or not yet assigned.
+pub(super) const UNASSIGNED: u32 = u32::MAX;
+
+/// Owned feature rows with stable external ids and free-slot reuse.
+pub(super) struct RowStore {
+    /// Features per row.
+    pub d: usize,
+    /// Slot-major feature matrix (`capacity_slots * d`).
+    pub rows: Vec<f32>,
+    /// External id per slot (stale for free slots).
+    pub ids: Vec<u64>,
+    /// Anticluster per slot; [`UNASSIGNED`] marks free/staged slots.
+    pub labels: Vec<u32>,
+    /// Category per slot (only meaningful when the handle is
+    /// categorical; 0 otherwise).
+    pub cats: Vec<u32>,
+    /// Recyclable slots.
+    free: Vec<usize>,
+    /// id -> slot. A BTreeMap so iteration order is ascending id — the
+    /// canonical order of every exact walk.
+    index: BTreeMap<u64, usize>,
+    /// The next id to hand out.
+    pub next_id: u64,
+}
+
+impl RowStore {
+    pub fn new(d: usize) -> Self {
+        Self {
+            d,
+            rows: Vec::new(),
+            ids: Vec::new(),
+            labels: Vec::new(),
+            cats: Vec::new(),
+            free: Vec::new(),
+            index: BTreeMap::new(),
+            next_id: 0,
+        }
+    }
+
+    /// Live rows.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Feature slice of a slot.
+    #[inline]
+    pub fn row(&self, slot: usize) -> &[f32] {
+        &self.rows[slot * self.d..(slot + 1) * self.d]
+    }
+
+    /// Slot of an id, if live.
+    #[inline]
+    pub fn slot_of(&self, id: u64) -> Option<usize> {
+        self.index.get(&id).copied()
+    }
+
+    /// `(id, slot)` pairs in ascending-id order — the canonical full
+    /// walk (no second per-row tree lookup).
+    pub fn iter(&self) -> impl Iterator<Item = (u64, usize)> + '_ {
+        self.index.iter().map(|(&id, &slot)| (id, slot))
+    }
+
+    /// Stage a new unassigned row, allocating the next id. Returns
+    /// `(id, slot)`.
+    pub fn insert(&mut self, row: &[f32], cat: u32) -> (u64, usize) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let slot = self.insert_with_id(id, row, cat, UNASSIGNED);
+        (id, slot)
+    }
+
+    /// Stage a row under an explicit id/label (the persistence loader).
+    /// The caller guarantees the id is fresh.
+    pub fn insert_with_id(&mut self, id: u64, row: &[f32], cat: u32, label: u32) -> usize {
+        debug_assert_eq!(row.len(), self.d);
+        debug_assert!(!self.index.contains_key(&id), "duplicate id {id}");
+        let slot = match self.free.pop() {
+            Some(slot) => {
+                self.rows[slot * self.d..(slot + 1) * self.d].copy_from_slice(row);
+                self.ids[slot] = id;
+                self.labels[slot] = label;
+                self.cats[slot] = cat;
+                slot
+            }
+            None => {
+                let slot = self.ids.len();
+                self.rows.extend_from_slice(row);
+                self.ids.push(id);
+                self.labels.push(label);
+                self.cats.push(cat);
+                slot
+            }
+        };
+        self.index.insert(id, slot);
+        slot
+    }
+
+    /// Free the slot behind an id. Returns the freed slot.
+    pub fn remove(&mut self, id: u64) -> Option<usize> {
+        let slot = self.index.remove(&id)?;
+        debug_assert_eq!(self.ids[slot], id, "index/slot id drift");
+        self.labels[slot] = UNASSIGNED;
+        self.free.push(slot);
+        Some(slot)
+    }
+}
+
+/// Maintained state of one anticluster.
+pub(super) struct ClusterState {
+    /// Member ids, kept sorted ascending (the canonical walk order).
+    pub members: Vec<u64>,
+    /// Running O(d)-updated sufficient statistics, used to price
+    /// prospective moves. Mathematically exact; bit-wise it may drift
+    /// from a fresh accumulation under long churn, which is why exact
+    /// reads go through `cached_ssd`.
+    pub delta: ClusterDelta,
+    /// Canonical SSD contribution: the value a from-scratch member-order
+    /// accumulation produces. Valid only when `!dirty`.
+    pub cached_ssd: f64,
+    /// Whether membership changed since `cached_ssd` was computed.
+    pub dirty: bool,
+    /// Per-category member counts (len = handle `n_cats`).
+    pub cat_counts: Vec<usize>,
+}
+
+impl ClusterState {
+    pub fn new(d: usize, n_cats: usize) -> Self {
+        Self {
+            members: Vec::new(),
+            delta: ClusterDelta::new(d),
+            cached_ssd: 0.0,
+            dirty: false,
+            cat_counts: vec![0; n_cats],
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Record a new member (keeps `members` sorted, updates the running
+    /// delta, marks dirty). The caller updates category counters.
+    pub fn add_member(&mut self, id: u64, row: &[f32]) {
+        match self.members.binary_search(&id) {
+            Err(pos) => self.members.insert(pos, id),
+            Ok(_) => unreachable!("id {id} already a member"),
+        }
+        self.delta.add(row);
+        self.dirty = true;
+    }
+
+    /// Drop a member (must be present).
+    pub fn remove_member(&mut self, id: u64, row: &[f32]) {
+        match self.members.binary_search(&id) {
+            Ok(pos) => {
+                self.members.remove(pos);
+            }
+            Err(_) => unreachable!("id {id} is not a member"),
+        }
+        self.delta.remove(row);
+        self.dirty = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_recycle_and_ids_stay_stable() {
+        let mut store = RowStore::new(2);
+        let (a, sa) = store.insert(&[1.0, 2.0], 0);
+        let (b, sb) = store.insert(&[3.0, 4.0], 1);
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.remove(a), Some(sa));
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.slot_of(a), None);
+        // The freed slot is reused, the id is fresh.
+        let (c, sc) = store.insert(&[5.0, 6.0], 2);
+        assert_eq!(c, 2);
+        assert_eq!(sc, sa);
+        assert_eq!(store.row(sc), &[5.0, 6.0]);
+        assert_eq!(store.row(sb), &[3.0, 4.0]);
+        assert_eq!(store.cats[sc], 2);
+        assert_eq!(
+            store.iter().map(|(id, _)| id).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+    }
+
+    #[test]
+    fn cluster_state_keeps_members_sorted() {
+        let mut cl = ClusterState::new(1, 0);
+        cl.add_member(5, &[1.0]);
+        cl.add_member(2, &[2.0]);
+        cl.add_member(9, &[3.0]);
+        assert_eq!(cl.members, vec![2, 5, 9]);
+        assert_eq!(cl.size(), 3);
+        assert!(cl.dirty);
+        cl.remove_member(5, &[1.0]);
+        assert_eq!(cl.members, vec![2, 9]);
+        assert_eq!(cl.delta.len(), 2);
+    }
+}

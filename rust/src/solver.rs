@@ -35,6 +35,7 @@ use crate::algo::{self, AbaConfig, ClusterStats, Constraints, Variant};
 use crate::assignment::{CandidateMode, SolverKind, SparseStats};
 use crate::data::{DataView, Dataset};
 use crate::error::{AbaError, AbaResult};
+use crate::online::OnlinePartition;
 use crate::runtime::{make_backend, BackendKind, CostBackend, Parallelism};
 use std::time::Instant;
 
@@ -130,13 +131,21 @@ impl Partition {
     }
 
     /// Object indices grouped by anticluster (e.g. one group = one
-    /// mini-batch in the SGD pipeline).
+    /// mini-batch in the SGD pipeline). Walking a *single* cluster does
+    /// not need this materialization — use [`Partition::members_of`].
     pub fn groups(&self) -> Vec<Vec<usize>> {
         let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.k];
         for (i, &l) in self.labels.iter().enumerate() {
             groups[l as usize].push(i);
         }
         groups
+    }
+
+    /// Iterate the object indices of anticluster `c` without allocating
+    /// (the non-materializing alternative to [`Partition::groups`];
+    /// shared with raw label vectors via [`crate::metrics::members_of`]).
+    pub fn members_of(&self, c: usize) -> impl Iterator<Item = usize> + Clone + '_ {
+        crate::metrics::members_of(&self.labels, c as u32)
     }
 }
 
@@ -316,25 +325,15 @@ impl Aba {
         self.scratch.sparse_stats()
     }
 
-    fn partition_flat(&mut self, view: &DataView<'_>, k: usize) -> AbaResult<Partition> {
-        // One shared flat implementation with run_aba_with_backend; the
-        // session threads its own backend and scratch through it.
-        let (labels, order_secs, assign_secs) = algo::flat_with_scratch(
-            view,
-            k,
-            &self.cfg,
-            self.backend.as_mut(),
-            &mut self.scratch,
-        )?;
-        let timings = PhaseTimings { order_secs, assign_secs, ..PhaseTimings::default() };
-        Ok(Partition::from_labels(view, labels, k, timings))
-    }
-}
-
-impl Anticlusterer for Aba {
-    fn partition_view(&mut self, view: &DataView<'_>, k: usize) -> AbaResult<Partition> {
-        // Each branch validates exactly once: the constrained loop
-        // validates internally; the other paths validate here.
+    /// The label-producing core shared by [`Aba::partition_online`] and
+    /// the frozen [`Anticlusterer::partition_view`] path. Each branch
+    /// validates exactly once: the constrained loop validates
+    /// internally; the other paths validate here.
+    fn partition_labels(
+        &mut self,
+        view: &DataView<'_>,
+        k: usize,
+    ) -> AbaResult<(Vec<u32>, PhaseTimings)> {
         if let Some(cons) = &self.constraints {
             // The constrained loop computes its costs directly through
             // the backend, so parallelism rides on the backend pool.
@@ -350,7 +349,7 @@ impl Anticlusterer for Aba {
                 self.backend.as_mut(),
             )?;
             timings.assign_secs = t.elapsed().as_secs_f64();
-            return Ok(Partition::from_labels(view, labels, k, timings));
+            return Ok((labels, timings));
         }
         algo::validate(view.n(), k, self.cfg.strict_divisibility)?;
         if let Some(spec) = algo::effective_spec(view.n(), k, &self.cfg) {
@@ -375,9 +374,86 @@ impl Anticlusterer for Aba {
                 &mut self.scratch,
             )?;
             timings.assign_secs = t.elapsed().as_secs_f64();
-            return Ok(Partition::from_labels(view, labels, k, timings));
+            return Ok((labels, timings));
         }
-        self.partition_flat(view, k)
+        // Flat path: one shared implementation with
+        // run_aba_with_backend; the session threads its own backend and
+        // scratch through it.
+        let (labels, order_secs, assign_secs) = algo::flat_with_scratch(
+            view,
+            k,
+            &self.cfg,
+            self.backend.as_mut(),
+            &mut self.scratch,
+        )?;
+        Ok((labels, PhaseTimings { order_secs, assign_secs, ..PhaseTimings::default() }))
+    }
+
+    /// Partition into a **live** [`OnlinePartition`] handle: the same
+    /// solve as [`Anticlusterer::partition_view`] (hierarchical
+    /// decomposition and the sparse candidate path both apply), but the
+    /// result stays updatable — `insert_batch`,
+    /// `remove`, `refine`, delta-maintained `objective()`/`sizes()`,
+    /// and `save`/`load` persistence. The handle owns a copy of the
+    /// partitioned rows (ids `0..n` in view-row order), so the borrowed
+    /// view can be dropped immediately.
+    ///
+    /// [`Anticlusterer::partition_view`] runs the same solving core and
+    /// freezes on return without building a handle (zero extra copies);
+    /// [`OnlinePartition::into_partition`] converts a live handle into
+    /// the identical frozen [`Partition`] (property-tested).
+    ///
+    /// Sessions carrying must-link / cannot-link constraints are
+    /// rejected ([`AbaError::ConstraintInfeasible`]): the handle's
+    /// incremental operations (insert rounds, balance repair, refine
+    /// swaps) do not maintain pairwise constraints, and silently
+    /// dropping them after the initial solve would be worse than
+    /// refusing. Constrained workloads stay on the frozen
+    /// [`Anticlusterer::partition_view`] path.
+    pub fn partition_online(
+        &mut self,
+        view: &DataView<'_>,
+        k: usize,
+    ) -> AbaResult<OnlinePartition> {
+        if self.constraints.is_some() {
+            return Err(AbaError::ConstraintInfeasible(
+                "online partitions do not maintain must-link/cannot-link constraints; \
+                 use partition_view for constrained sessions"
+                    .into(),
+            ));
+        }
+        let (labels, timings) = self.partition_labels(view, k)?;
+        Ok(OnlinePartition::from_labels(view, labels, k, self.cfg.clone(), timings))
+    }
+
+    /// Resume a persisted [`OnlinePartition`] under this session's
+    /// configuration (fingerprint-checked —
+    /// [`AbaError::SnapshotMismatch`] when incompatible). Constrained
+    /// sessions are rejected for the same reason as
+    /// [`Aba::partition_online`].
+    pub fn resume_online(&self, path: impl AsRef<std::path::Path>) -> AbaResult<OnlinePartition> {
+        if self.constraints.is_some() {
+            return Err(AbaError::ConstraintInfeasible(
+                "online partitions do not maintain must-link/cannot-link constraints"
+                    .into(),
+            ));
+        }
+        OnlinePartition::load(path, &self.cfg)
+    }
+}
+
+impl Anticlusterer for Aba {
+    fn partition_view(&mut self, view: &DataView<'_>, k: usize) -> AbaResult<Partition> {
+        // The freeze-on-return sibling of [`Aba::partition_online`]:
+        // both are thin wrappers over the same `partition_labels` core.
+        // The frozen path stamps the result straight off the borrowed
+        // view — zero feature-row copies, preserving the zero-copy
+        // contract of the DataView layer — while the online path pays
+        // the handle's owned-row ingest only when the caller actually
+        // wants a live handle. `OnlinePartition::into_partition`
+        // produces the identical `Partition` (property-tested).
+        let (labels, timings) = self.partition_labels(view, k)?;
+        Ok(Partition::from_labels(view, labels, k, timings))
     }
 
     fn name(&self) -> String {
@@ -470,9 +546,51 @@ mod tests {
         let part = Aba::new().unwrap().partition(&ds, 5).unwrap();
         let groups = part.groups();
         assert_eq!(groups.len(), 5);
+        // members_of is the non-allocating view of the same structure.
+        for (c, group) in groups.iter().enumerate() {
+            assert_eq!(&part.members_of(c).collect::<Vec<_>>(), group);
+        }
         let mut seen: Vec<usize> = groups.into_iter().flatten().collect();
         seen.sort_unstable();
         assert_eq!(seen, (0..60).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn constrained_sessions_cannot_go_online() {
+        // The handle's incremental ops do not maintain pairwise
+        // constraints, so a constrained session must refuse to hand one
+        // out instead of silently dropping the constraints after the
+        // initial solve. The frozen path still honors them.
+        let ds = generate(SynthKind::Uniform, 40, 3, 24, "s");
+        let cons = crate::algo::Constraints {
+            must_link: vec![vec![0, 1]],
+            cannot_link: vec![(2, 3)],
+        };
+        let mut session = Aba::builder().constraints(cons).build().unwrap();
+        let err = session.partition_online(&ds.view(), 4).unwrap_err();
+        assert!(matches!(err, AbaError::ConstraintInfeasible(_)), "{err}");
+        assert!(matches!(
+            session.resume_online("nonexistent.json").unwrap_err(),
+            AbaError::ConstraintInfeasible(_)
+        ));
+        assert!(session.partition(&ds, 4).is_ok());
+    }
+
+    #[test]
+    fn partition_online_matches_the_frozen_path() {
+        let ds = generate(SynthKind::Uniform, 90, 3, 23, "s");
+        let mut session = Aba::new().unwrap();
+        let frozen = session.partition(&ds, 6).unwrap();
+        let live = session.partition_online(&ds.view(), 6).unwrap();
+        assert_eq!(live.len(), 90);
+        assert_eq!(live.sizes(), frozen.sizes());
+        for (i, &(id, label)) in live.entries().iter().enumerate() {
+            assert_eq!(id, i as u64);
+            assert_eq!(label, frozen.labels[i]);
+        }
+        let refrozen = live.into_partition();
+        assert_eq!(refrozen.labels, frozen.labels);
+        assert_eq!(refrozen.objective, frozen.objective);
     }
 
     #[test]

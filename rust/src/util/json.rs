@@ -47,13 +47,23 @@ impl Json {
     }
 }
 
-/// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+/// Parse error with byte offset. Display/Error are hand-implemented:
+/// the offline vendor set ships no `thiserror`, and the library core's
+/// error story is the typed [`crate::AbaError`] anyway (callers convert
+/// via its `ParseError` variant).
+#[derive(Debug)]
 pub struct JsonError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],

@@ -1,0 +1,262 @@
+//! Property tests for the online subsystem — the acceptance contract of
+//! the live-handle API:
+//!
+//! * for any churn sequence (inserts / removes / refines) over flat and
+//!   categorical data, under serial and threaded initial solves, the
+//!   maintained `objective()` and `sizes()` exactly match a from-scratch
+//!   recompute on the final membership;
+//! * balance invariants (max - min size <= 1, §4.3 category caps) hold
+//!   after every operation;
+//! * `save` -> `load` round-trips bit-identically;
+//! * `insert_batch` of a whole dataset into an empty handle reproduces
+//!   the batch solver's partition.
+
+use aba::algo::AbaConfig;
+use aba::data::synth::{generate, SynthKind};
+use aba::data::Dataset;
+use aba::prop_assert;
+use aba::rng::Pcg32;
+use aba::runtime::Parallelism;
+use aba::testing::PropRunner;
+use aba::{Aba, AbaError, Anticlusterer, OnlinePartition};
+
+/// Balance + §4.3 invariants, checked after every operation.
+fn check_invariants(p: &OnlinePartition, ctx: &str) -> Result<(), String> {
+    let sizes = p.sizes();
+    let (min, max) = (
+        *sizes.iter().min().unwrap(),
+        *sizes.iter().max().unwrap(),
+    );
+    prop_assert!(max - min <= 1, "{ctx}: unbalanced sizes {sizes:?}");
+    prop_assert!(
+        sizes.iter().sum::<usize>() == p.len(),
+        "{ctx}: sizes {sizes:?} do not cover n={}",
+        p.len()
+    );
+    if p.n_categories() > 0 {
+        // Recount categories from the authoritative entries.
+        let g = p.n_categories();
+        let entries = p.entries();
+        let ds = p.to_dataset("check").map_err(|e| e.to_string())?;
+        let cats = ds.categories.as_ref().expect("categorical handle");
+        let mut totals = vec![0usize; g];
+        let mut counts = vec![0usize; g * p.k()];
+        for (i, &(_, label)) in entries.iter().enumerate() {
+            let cat = cats[i] as usize;
+            totals[cat] += 1;
+            counts[cat * p.k() + label as usize] += 1;
+        }
+        for cat in 0..g {
+            let cap = totals[cat].div_ceil(p.k());
+            for c in 0..p.k() {
+                prop_assert!(
+                    counts[cat * p.k() + c] <= cap,
+                    "{ctx}: cat {cat} cluster {c}: {} > cap {cap}",
+                    counts[cat * p.k() + c]
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Maintained reads must equal the from-scratch oracle bit for bit.
+fn check_exact_reads(p: &mut OnlinePartition, ctx: &str) -> Result<(), String> {
+    let maintained = p.objective();
+    let scratch = p.recompute_objective();
+    prop_assert!(
+        maintained == scratch,
+        "{ctx}: maintained {maintained} != scratch {scratch}"
+    );
+    Ok(())
+}
+
+fn churn_source(rng: &mut Pcg32, b: usize, d: usize, g: usize) -> Dataset {
+    let ds = generate(SynthKind::Uniform, b, d, rng.next_u64(), "churn");
+    if g > 0 {
+        ds.with_categories((0..b).map(|_| rng.gen_below(g as u32)).collect())
+            .unwrap()
+    } else {
+        ds
+    }
+}
+
+#[test]
+fn prop_online_churn_keeps_exact_reads_and_invariants() {
+    PropRunner::new(12).run("online churn consistency", |rng| {
+        let d = 1 + rng.gen_index(4);
+        let n = 40 + rng.gen_index(120);
+        let k = 2 + rng.gen_index(6);
+        // Mode: flat or categorical; initial solve serial or threaded.
+        let g = if rng.gen_index(2) == 0 { 0 } else { 2 + rng.gen_index(3) };
+        let par = if rng.gen_index(2) == 0 {
+            Parallelism::Serial
+        } else {
+            Parallelism::Threads(3)
+        };
+        let mut base = generate(SynthKind::Uniform, n, d, rng.next_u64(), "base");
+        if g > 0 {
+            base = base
+                .with_categories((0..n).map(|_| rng.gen_below(g as u32)).collect())
+                .map_err(|e| e.to_string())?;
+        }
+        let mut session = Aba::builder()
+            .auto_hier(false)
+            .parallelism(par)
+            .build()
+            .map_err(|e| e.to_string())?;
+        let mut p = session
+            .partition_online(&base.view(), k)
+            .map_err(|e| e.to_string())?;
+        check_invariants(&p, "initial")?;
+        check_exact_reads(&mut p, "initial")?;
+
+        // A random churn sequence; invariants and exact reads are
+        // checked after every single operation.
+        for step in 0..6 {
+            let ctx = format!("step {step} (n={}, k={k}, g={g}, par={par:?})", p.len());
+            match rng.gen_index(3) {
+                0 => {
+                    let b = 1 + rng.gen_index(9);
+                    let batch = churn_source(rng, b, d, g);
+                    let ids = p.insert_batch(&batch.view()).map_err(|e| e.to_string())?;
+                    prop_assert!(ids.len() == b, "{ctx}: {} ids for {b} rows", ids.len());
+                }
+                1 => {
+                    let live: Vec<u64> = p.entries().iter().map(|&(id, _)| id).collect();
+                    if live.len() > k {
+                        let m = 1 + rng.gen_index((live.len() - k).min(10));
+                        let mut pick = live;
+                        rng.shuffle(&mut pick);
+                        pick.truncate(m);
+                        p.remove(&pick).map_err(|e| e.to_string())?;
+                    }
+                }
+                _ => {
+                    p.refine(rng.gen_index(3_000));
+                }
+            }
+            check_invariants(&p, &ctx)?;
+            check_exact_reads(&mut p, &ctx)?;
+        }
+
+        // Persistence: byte-identical round trip, and resuming under an
+        // incompatible config is a typed error.
+        let snapshot = p.snapshot_string();
+        let mut back = OnlinePartition::from_snapshot_str(&snapshot, session.config())
+            .map_err(|e| e.to_string())?;
+        prop_assert!(back.snapshot_string() == snapshot, "snapshot round trip drifted");
+        prop_assert!(back.entries() == p.entries(), "membership drifted through save/load");
+        prop_assert!(
+            back.objective() == p.objective(),
+            "objective drifted through save/load"
+        );
+        let other = AbaConfig {
+            solver: aba::assignment::SolverKind::Greedy,
+            ..session.config().clone()
+        };
+        prop_assert!(
+            matches!(
+                OnlinePartition::from_snapshot_str(&snapshot, &other),
+                Err(AbaError::SnapshotMismatch { .. })
+            ),
+            "incompatible fingerprint must be SnapshotMismatch"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_empty_handle_insert_reproduces_the_batch_solver() {
+    PropRunner::new(12).run("empty-handle bootstrap parity", |rng| {
+        let d = 1 + rng.gen_index(4);
+        let n = 24 + rng.gen_index(120);
+        let k = 2 + rng.gen_index(8.min(n / 2));
+        let g = if rng.gen_index(2) == 0 { 0 } else { 2 + rng.gen_index(3) };
+        let mut ds = generate(SynthKind::Uniform, n, d, rng.next_u64(), "boot");
+        if g > 0 {
+            ds = ds
+                .with_categories((0..n).map(|_| rng.gen_below(g as u32)).collect())
+                .map_err(|e| e.to_string())?;
+        }
+        let cfg = AbaConfig { auto_hier: false, ..AbaConfig::default() };
+        let mut empty = OnlinePartition::empty(k, d, &cfg).map_err(|e| e.to_string())?;
+        let ids = empty.insert_batch(&ds.view()).map_err(|e| e.to_string())?;
+        let mut session = Aba::from_config(cfg).map_err(|e| e.to_string())?;
+        let part = session.partition(&ds, k).map_err(|e| e.to_string())?;
+        let entries = empty.entries();
+        prop_assert!(entries.len() == n, "entry count");
+        for (i, &(id, label)) in entries.iter().enumerate() {
+            prop_assert!(id == ids[i], "id order drifted at {i}");
+            prop_assert!(
+                label == part.labels[i],
+                "label diverges at row {i}: online {label} vs batch {} (n={n} k={k} g={g})",
+                part.labels[i]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn online_partition_freeze_equals_partition_view() {
+    // The frozen path is literally partition_online + into_partition —
+    // pin that equivalence through the public API.
+    let ds = generate(SynthKind::Uniform, 150, 5, 77, "freeze");
+    let mut a = Aba::new().unwrap();
+    let mut b = Aba::new().unwrap();
+    let frozen = a.partition_online(&ds.view(), 10).unwrap().into_partition();
+    let direct = b.partition(&ds, 10).unwrap();
+    assert_eq!(frozen.labels, direct.labels);
+    assert_eq!(frozen.objective, direct.objective);
+    assert_eq!(frozen.pairwise, direct.pairwise);
+    assert_eq!(frozen.sizes(), direct.sizes());
+}
+
+#[test]
+fn evolving_handle_outlives_heavy_churn() {
+    // A longer single-scenario soak: 10 rounds of churn on a larger
+    // handle, exact reads and invariants at the end, then a from-scratch
+    // re-solve for a sanity band on quality (the maintained partition
+    // must stay within 25% of a full re-solve on this easy data).
+    let ds = generate(
+        SynthKind::GaussianMixture { components: 5, spread: 4.0 },
+        1_200,
+        6,
+        91,
+        "soak",
+    );
+    let mut session = Aba::builder().auto_hier(false).build().unwrap();
+    let mut p = session.partition_online(&ds.view(), 12).unwrap();
+    let arrivals = generate(
+        SynthKind::GaussianMixture { components: 5, spread: 4.0 },
+        600,
+        6,
+        92,
+        "soak-arrivals",
+    );
+    let mut next = 0usize;
+    for round in 0..10 {
+        let idx: Vec<usize> = (0..60).map(|j| (next + j) % arrivals.n).collect();
+        next += 60;
+        let ids = p.insert_batch(&arrivals.view().select(&idx)).unwrap();
+        // Expire 60 arbitrary live rows (deterministic pick).
+        let live: Vec<u64> = p.entries().iter().map(|&(id, _)| id).collect();
+        let expire: Vec<u64> = live.iter().copied().step_by(live.len() / 60).take(60).collect();
+        p.remove(&expire).unwrap();
+        p.refine(30_000);
+        assert_eq!(p.len(), 1_200, "round {round}");
+        assert!(!ids.is_empty());
+    }
+    assert_eq!(p.objective(), p.recompute_objective());
+    let sizes = p.sizes();
+    assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    let current = p.to_dataset("soak-current").unwrap();
+    let fresh = session.partition(&current, 12).unwrap();
+    let maintained = p.objective();
+    assert!(
+        maintained >= 0.75 * fresh.objective,
+        "maintained {maintained} collapsed vs fresh {}",
+        fresh.objective
+    );
+}
