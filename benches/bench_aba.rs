@@ -25,7 +25,10 @@
 //! 20 batches — not worth anyone's wall clock). The `online_churn`
 //! section drives a live `OnlinePartition` through remove+insert+refine
 //! rounds and records sustained updates/sec, the refine cost, and the
-//! delta-maintained vs from-scratch objective gap.
+//! delta-maintained vs from-scratch objective gap. The
+//! `serve_throughput` section stands up an in-process `serve::Server`
+//! with fewer resident-handle slots than partitions and records req/s,
+//! p50/p99 request latency, and forced eviction count.
 //!
 //! Set `ABA_BENCH_ONLY=section[,section...]` to run a subset of the
 //! sections (e.g. `ABA_BENCH_ONLY=large_k_sparse`). Filtered runs
@@ -473,6 +476,107 @@ fn main() {
         push("churn_updates", churn_secs, total_secs, delta_obj);
         push("refine", refine_secs, refine_secs, delta_obj);
         push("scratch_resolve", fresh.timings.algo_secs(), scratch_secs, fresh.objective);
+    }
+
+    if section_enabled("serve_throughput") {
+        // The HTTP serving path end to end: an in-process `serve::Server`
+        // with more partitions than resident-handle slots, hammered with
+        // round-robin reads so requests constantly re-load evicted
+        // handles from snapshots — the steady-state cost of serving many
+        // partitions from bounded memory. Reported: sustained req/s,
+        // p50/p99 request latency from the server's own ring, and how
+        // many evictions the run forced.
+        let (parts, n, k, d, reads) = (8usize, 2_000usize, 10usize, 8usize, 200usize);
+        println!(
+            "\n## serve throughput ({parts} partitions of N={n}, K={k}, D={d}; \
+             4 resident handles; {reads} round-robin reads)"
+        );
+        let dir = std::env::temp_dir().join(format!("aba_bench_serve_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let server = aba::serve::Server::start(aba::serve::ServeConfig {
+            workers: 4,
+            queue: 256,
+            max_handles: 4,
+            snapshot_dir: dir.clone(),
+            cfg: flat.clone(),
+            ..aba::serve::ServeConfig::default()
+        })
+        .unwrap();
+        let addr = server.addr();
+        let get = |path: &str, body: &str| -> u16 {
+            use std::io::{Read, Write};
+            let mut s = std::net::TcpStream::connect(addr).unwrap();
+            let method = if body.is_empty() { "GET" } else { "POST" };
+            s.write_all(
+                format!(
+                    "{method} {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+                    body.len()
+                )
+                .as_bytes(),
+            )
+            .unwrap();
+            let mut text = String::new();
+            s.read_to_string(&mut text).unwrap();
+            text.split_whitespace().nth(1).unwrap().parse().unwrap()
+        };
+        for p in 0..parts {
+            let ds = mk(n, d, 20 + p as u64);
+            let mut csv: String =
+                (0..d).map(|j| format!("f{j}")).collect::<Vec<_>>().join(",");
+            csv.push('\n');
+            for i in 0..n {
+                let cells: Vec<String> = ds.row(i).iter().map(|v| format!("{v}")).collect();
+                csv.push_str(&cells.join(","));
+                csv.push('\n');
+            }
+            let mut body = std::collections::BTreeMap::new();
+            body.insert("id".to_string(), aba::util::json::Json::Str(format!("bench{p}")));
+            body.insert("k".to_string(), aba::util::json::Json::Num(k as f64));
+            body.insert("csv".to_string(), aba::util::json::Json::Str(csv));
+            let status = get(
+                "/v1/partitions",
+                &aba::util::json::to_string(&aba::util::json::Json::Obj(body)),
+            );
+            assert_eq!(status, 201, "bench partition create failed");
+        }
+        let t = std::time::Instant::now();
+        for r in 0..reads {
+            let status = get(&format!("/v1/partitions/bench{}", r % parts), "");
+            assert_eq!(status, 200);
+        }
+        let wall = t.elapsed().as_secs_f64();
+        let rps = reads as f64 / wall.max(1e-9);
+        let metrics = server.metrics();
+        let (p50_us, p99_us) = metrics.latency_percentiles_us();
+        let evictions =
+            metrics.evictions.load(std::sync::atomic::Ordering::Relaxed) as usize;
+        println!(
+            "  {reads} reads in {wall:.3}s -> {rps:.0} req/s | p50 {:.2} ms, p99 {:.2} ms | \
+             {evictions} evictions (handle cache 4/{parts})",
+            p50_us as f64 / 1e3,
+            p99_us as f64 / 1e3
+        );
+        server.drain().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        let mut push = |label: &str, algo_secs: f64, total: f64, objective: f64| {
+            recs.push(Rec {
+                section: "serve_throughput",
+                label: label.into(),
+                n,
+                k,
+                d,
+                threads: 4,
+                algo_secs,
+                total_secs: total,
+                objective,
+                gathered_bytes: 0,
+                cost_buffer_bytes: 0,
+            });
+        };
+        push("throughput_rps", wall, wall, rps);
+        push("p50_latency", p50_us as f64 / 1e6, p50_us as f64 / 1e6, rps);
+        push("p99_latency", p99_us as f64 / 1e6, p99_us as f64 / 1e6, rps);
+        push("evictions", 0.0, wall, evictions as f64);
     }
 
     // A filtered run must not truncate the canonical cross-PR record,

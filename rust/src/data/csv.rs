@@ -42,6 +42,12 @@ pub fn save(ds: &Dataset, path: impl AsRef<Path>) -> AbaResult<()> {
 pub fn load(path: impl AsRef<Path>, name: &str) -> AbaResult<Dataset> {
     let path = path.as_ref();
     let text = fs::read_to_string(path).map_err(|e| io_err("read", path, e))?;
+    parse_str(&text, name)
+}
+
+/// Parse headered CSV text (the in-memory core of [`load`] — the serve
+/// layer feeds request bodies through here without touching disk).
+pub fn parse_str(text: &str, name: &str) -> AbaResult<Dataset> {
     let mut lines = text.lines();
     let header = lines.next().ok_or(AbaError::ParseError {
         line: 1,

@@ -32,6 +32,7 @@
 //! | [`algo::hierarchical`] | §4.4, Lemma 1, Prop. 1 | Multi-level decomposition for large K, fanned out on the worker pool |
 //! | [`algo::objective`] | §3, Fact 1 | Both paper objectives, the per-cluster diversity stats, and the O(d) [`algo::objective::ClusterDelta`] add/remove deltas behind the online handles |
 //! | [`online`] | §1, §6 (serving) | Live [`OnlinePartition`] handles: delta-maintained insert/remove/refine with balance repair, plus fingerprinted save/load persistence |
+//! | [`serve`] | §6 (serving) | The `aba serve` HTTP service: a bounded accept/worker server managing concurrent [`OnlinePartition`] handles behind an LRU registry, with shard-and-merge solves and text metrics |
 //! | [`runtime`] | §5 (implementation) | Cost backends (native / Pallas-XLA via PJRT) and the [`runtime::pool`] parallel runtime |
 //! | [`baselines`] | §5 (competitors) | `Rand`, the exchange heuristic, branch-and-bound |
 //! | [`data`] | §5, Table 2 | Dataset catalog, synthetic generators, k-means/k-plus seeding |
@@ -172,6 +173,27 @@
 //! # Ok::<(), aba::AbaError>(())
 //! ```
 //!
+//! ## Serving
+//!
+//! The [`serve`] module wraps the online handles in a dependency-light
+//! HTTP/1.1 service (`aba serve` on the CLI, [`serve::Server`] embedded):
+//! a bounded accept/worker model on [`std::net::TcpListener`], one
+//! solver session per worker, and an LRU handle registry that evicts
+//! cold partitions to fingerprinted snapshots and warm-restarts them on
+//! demand — bit-identically, and with HTTP 409 when the snapshot was
+//! written under an incompatible config. `POST /v1/partitions` solves
+//! inline CSV (optionally via [`serve::shard::solve_sharded`]:
+//! `S` independent shard solves reconciled by centroid-level Ward
+//! assignment, near-linear speedup for a few percent of objective);
+//! `insert` / `remove` / `refine` hit the delta-maintained handle ops;
+//! `GET /metrics` exposes request counts, latency percentiles, queue
+//! depth, evictions, and the library's own staging/sparse meters. When
+//! the bounded queue fills, new connections get `429 Retry-After`
+//! instead of unbounded latency; `SIGTERM` (or
+//! `POST /v1/admin/drain`) stops accepting, finishes queued requests,
+//! and snapshots every resident handle. See the README's "Serving over
+//! HTTP" section for a curl quickstart.
+//!
 //! ## Parallel execution
 //!
 //! Parallelism is a session knob ([`runtime::Parallelism`]): `Serial`
@@ -219,6 +241,7 @@ pub mod online;
 pub mod pipeline;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod testing;
 pub mod util;

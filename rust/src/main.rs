@@ -42,6 +42,8 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "fig" => cmd_fig(&args),
         "pipeline" => cmd_pipeline(&args),
         "update" => cmd_update(&args),
+        "serve" => cmd_serve(&args),
+        "snapshot" => cmd_snapshot(&args),
         "selftest" => cmd_selftest(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -76,6 +78,11 @@ fn print_help() {
                [--insert rows.csv] [--remove ids.csv] [--refine BUDGET]\n\
                [--save FILE] [--variant ...] [--solver ...] [--candidates ...] [--strict]\n\
                                             report delta vs from-scratch objective\n\
+           serve [--addr HOST:PORT]         HTTP service over OnlinePartition handles\n\
+               [--workers N] [--queue N] [--max-handles N] [--snapshot-dir DIR]\n\
+               [--variant ...] [--solver ...] [--candidates ...] [--strict]\n\
+               [--threads {threads}]        (SIGTERM or POST /v1/admin/drain to stop)\n\
+           snapshot inspect FILE            print snapshot header without loading it\n\
            selftest                         XLA artifacts vs native check",
         variants = Variant::accepted(),
         solvers = SolverKind::accepted(),
@@ -408,6 +415,77 @@ fn cmd_update(args: &Args) -> Result<()> {
     if let Some(out) = args.get("save") {
         handle.save(out)?;
         println!("partition saved to {out}");
+    }
+    Ok(())
+}
+
+/// Solver config for the serve session from CLI flags — the same
+/// fingerprint-participating four as `aba update`, plus parallelism
+/// (which shard-merge solves fan out on).
+fn serve_aba_config(args: &Args) -> Result<AbaConfig> {
+    let mut cfg = AbaConfig::default();
+    if let Some(v) = args.get_parse("variant")? {
+        cfg.variant = v;
+    }
+    if let Some(s) = args.get_parse("solver")? {
+        cfg.solver = s;
+    }
+    if let Some(c) = args.get_parse::<CandidateMode>("candidates")? {
+        cfg.candidates = c;
+    }
+    cfg.strict_divisibility = args.has_flag("strict");
+    if let Some(p) = args.get_parse::<Parallelism>("threads")? {
+        cfg.parallelism = p;
+    }
+    Ok(cfg)
+}
+
+/// `aba serve`: run the HTTP service in the foreground until SIGTERM or
+/// `POST /v1/admin/drain`, then snapshot every resident handle and exit.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let config = aba::serve::ServeConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7341").to_string(),
+        workers: args.get_parse("workers")?.unwrap_or(4),
+        queue: args.get_parse("queue")?.unwrap_or(64),
+        max_handles: args.get_parse("max-handles")?.unwrap_or(64),
+        snapshot_dir: args.get("snapshot-dir").unwrap_or("aba-snapshots").into(),
+        cfg: serve_aba_config(args)?,
+        test_delay_ms: args.get_parse("test-delay-ms")?.unwrap_or(0),
+    };
+    let snapshot_dir = config.snapshot_dir.clone();
+    let server = aba::serve::Server::start(config)?;
+    // CI and scripts parse this line to discover the bound port.
+    println!("listening on {}", server.addr());
+    println!("snapshots in {} — SIGTERM or POST /v1/admin/drain to stop", snapshot_dir.display());
+    let written = server.wait()?;
+    println!("drained: {written} handle(s) snapshotted to {}", snapshot_dir.display());
+    Ok(())
+}
+
+/// `aba snapshot inspect FILE`: print the snapshot header (format
+/// version, config fingerprint, shape, cluster sizes) without
+/// constructing a session or checking fingerprint compatibility.
+fn cmd_snapshot(args: &Args) -> Result<()> {
+    let verb = args.pos(1, "snapshot subcommand (inspect)")?;
+    if verb != "inspect" {
+        bail!("unknown snapshot subcommand '{verb}' (try `aba snapshot inspect FILE`)");
+    }
+    let path = args.pos(2, "snapshot file")?;
+    let info = aba::online::inspect_snapshot(path)?;
+    println!("file         {path}");
+    println!("format       {}", info.format);
+    println!("fingerprint  {}", info.fingerprint);
+    println!("n            {}", info.n);
+    println!("k            {}", info.k);
+    println!("d            {}", info.d);
+    println!("categories   {}", info.n_cats);
+    let (min, max) = (
+        info.sizes.iter().min().copied().unwrap_or(0),
+        info.sizes.iter().max().copied().unwrap_or(0),
+    );
+    println!("sizes        min={min} max={max}");
+    if info.k <= 24 {
+        println!("             {:?}", info.sizes);
     }
     Ok(())
 }

@@ -44,6 +44,8 @@
 mod persist;
 mod state;
 
+pub use persist::{inspect_snapshot, inspect_snapshot_str, SnapshotInfo};
+
 use crate::algo::batching;
 use crate::algo::core::{warm_start_env_default, Scratch, MASK_COST};
 use crate::algo::objective::ClusterDelta;

@@ -58,6 +58,80 @@ fn num_array<'a>(doc: &'a Json, key: &str) -> AbaResult<&'a [Json]> {
     })
 }
 
+/// Header + shape summary of a snapshot file, readable without a
+/// session config (ops debugging: `aba snapshot inspect <file>`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SnapshotInfo {
+    /// Snapshot format version (currently always 1).
+    pub format: usize,
+    /// The [`AbaConfig::fingerprint`] the snapshot was taken under.
+    pub fingerprint: String,
+    /// Live rows.
+    pub n: usize,
+    /// Anticluster count.
+    pub k: usize,
+    /// Feature dimension.
+    pub d: usize,
+    /// Categorical levels (0 = no categorical feature).
+    pub n_cats: usize,
+    /// Per-anticluster sizes, counted from the label vector.
+    pub sizes: Vec<usize>,
+}
+
+/// Inspect a snapshot document without constructing an
+/// [`OnlinePartition`] (and without a config: the fingerprint is
+/// *reported*, not checked). Unlike [`OnlinePartition::load`] this
+/// never rebuilds cluster state — it only parses the header and counts
+/// labels — so it is safe to point at a snapshot from any session.
+pub fn inspect_snapshot_str(text: &str) -> AbaResult<SnapshotInfo> {
+    let doc = json::parse(text).map_err(|e| AbaError::ParseError {
+        line: 1,
+        msg: format!("snapshot json: {e}"),
+    })?;
+    let format = as_usize(&doc, "format")?;
+    let fingerprint = field(&doc, "fingerprint")?
+        .as_str()
+        .ok_or_else(|| AbaError::ParseError {
+            line: 1,
+            msg: "snapshot fingerprint is not a string".into(),
+        })?
+        .to_string();
+    let k = as_usize(&doc, "k")?;
+    let d = as_usize(&doc, "d")?;
+    let n_cats = as_usize(&doc, "n_cats")?;
+    let ids = num_array(&doc, "ids")?;
+    let labels = num_array(&doc, "labels")?;
+    let n = ids.len();
+    if labels.len() != n {
+        return Err(AbaError::ParseError {
+            line: 1,
+            msg: format!("snapshot shape mismatch: {n} ids, {} labels", labels.len()),
+        });
+    }
+    let mut sizes = vec![0usize; k];
+    for (i, l) in labels.iter().enumerate() {
+        let label = l.as_f64().ok_or_else(|| AbaError::ParseError {
+            line: 1,
+            msg: format!("snapshot label #{i} is not a valid number"),
+        })? as usize;
+        if label >= k {
+            return Err(AbaError::ParseError {
+                line: 1,
+                msg: format!("snapshot label {label} out of range (k={k})"),
+            });
+        }
+        sizes[label] += 1;
+    }
+    Ok(SnapshotInfo { format, fingerprint, n, k, d, n_cats, sizes })
+}
+
+/// [`inspect_snapshot_str`] over a file path.
+pub fn inspect_snapshot(path: impl AsRef<Path>) -> AbaResult<SnapshotInfo> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path).map_err(|e| io_err("read", path, e))?;
+    inspect_snapshot_str(&text)
+}
+
 impl OnlinePartition {
     /// Serialize the handle to the version-1 JSON snapshot format.
     pub fn save(&self, path: impl AsRef<Path>) -> AbaResult<()> {
@@ -260,6 +334,30 @@ mod tests {
         assert!(matches!(err, AbaError::SnapshotMismatch { .. }), "{err}");
         assert!(err.to_string().contains("greedy"), "{err}");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn inspect_reports_header_without_a_config() {
+        let ds = generate(SynthKind::Uniform, 30, 3, 34, "p");
+        let mut session = Aba::builder().auto_hier(false).build().unwrap();
+        let mut part = session.partition_online(&ds.view(), 5).unwrap();
+        let info = inspect_snapshot_str(&part.snapshot_string()).unwrap();
+        assert_eq!(info.format, 1);
+        assert_eq!(info.fingerprint, session.config().fingerprint());
+        assert_eq!(info.n, 30);
+        assert_eq!(info.k, 5);
+        assert_eq!(info.d, 3);
+        assert_eq!(info.n_cats, 0);
+        assert_eq!(info.sizes, part.sizes());
+        // Truncated snapshots fail with a located parse error, not a
+        // bare failure (the util/json context excerpt flows through).
+        let text = part.snapshot_string();
+        let err = inspect_snapshot_str(&text[..text.len() / 2]).unwrap_err();
+        assert!(err.to_string().contains("byte"), "{err}");
+        assert!(matches!(
+            inspect_snapshot(tmp("aba_online_nonexistent.json")),
+            Err(AbaError::Io(_))
+        ));
     }
 
     #[test]

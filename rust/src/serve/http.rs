@@ -1,0 +1,223 @@
+//! Minimal HTTP/1.1 framing for the serve subsystem: request parsing
+//! and response writing over blocking [`TcpStream`]s.
+//!
+//! Deliberately small — the offline vendor set ships no HTTP crate, and
+//! the service only needs `Content-Length`-framed request/response
+//! exchanges with `Connection: close` semantics (no keep-alive, no
+//! chunked transfer, no TLS). Every request is one connection; clients
+//! read to EOF.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+
+/// Largest accepted header block. Requests past this are malformed.
+const MAX_HEAD: usize = 64 * 1024;
+/// Largest accepted body (inline CSV uploads dominate; 64 MiB covers
+/// millions of rows while bounding per-connection memory).
+const MAX_BODY: usize = 64 * 1024 * 1024;
+
+/// A parsed request: method, path (query string stripped), lowercased
+/// headers, raw body bytes.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Header value by (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Read one request off the stream. `Ok(None)` means the peer
+    /// closed the connection before sending anything (not an error).
+    pub fn read_from(stream: &mut TcpStream) -> io::Result<Option<Request>> {
+        let bad = |msg: &str| io::Error::new(io::ErrorKind::InvalidData, msg.to_string());
+        let mut buf: Vec<u8> = Vec::new();
+        let mut chunk = [0u8; 4096];
+        let head_end = loop {
+            if let Some(p) = find_head_end(&buf) {
+                break p;
+            }
+            if buf.len() > MAX_HEAD {
+                return Err(bad("header block too large"));
+            }
+            let n = stream.read(&mut chunk)?;
+            if n == 0 {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed inside header block",
+                ));
+            }
+            buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = std::str::from_utf8(&buf[..head_end])
+            .map_err(|_| bad("header block is not utf-8"))?;
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split_whitespace();
+        let method = parts.next().ok_or_else(|| bad("empty request line"))?.to_string();
+        let target = parts.next().ok_or_else(|| bad("request line has no target"))?;
+        let path = target.split('?').next().unwrap_or(target).to_string();
+        let mut headers = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            if let Some((k, v)) = line.split_once(':') {
+                headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+            }
+        }
+        let content_len = headers
+            .iter()
+            .find(|(k, _)| k == "content-length")
+            .map(|(_, v)| v.parse::<usize>())
+            .transpose()
+            .map_err(|_| bad("bad content-length"))?
+            .unwrap_or(0);
+        if content_len > MAX_BODY {
+            return Err(bad("body too large"));
+        }
+        let mut body = buf[head_end + 4..].to_vec();
+        while body.len() < content_len {
+            let n = stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed inside body",
+                ));
+            }
+            body.extend_from_slice(&chunk[..n]);
+        }
+        body.truncate(content_len);
+        Ok(Some(Request { method, path, headers, body }))
+    }
+}
+
+/// Byte offset of the `\r\n\r\n` terminating the header block, if seen.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// An outgoing response. `Connection: close` always — one request per
+/// connection keeps the worker model trivial and drain exact.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    content_type: &'static str,
+    pub body: String,
+    /// `Retry-After` seconds, set on 429 backpressure rejections.
+    pub retry_after: Option<u64>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Self {
+        Self { status, content_type: "application/json", body, retry_after: None }
+    }
+
+    pub fn text(status: u16, body: String) -> Self {
+        Self { status, content_type: "text/plain; charset=utf-8", body, retry_after: None }
+    }
+
+    /// A `{"error": "..."}` body with proper JSON escaping.
+    pub fn error(status: u16, msg: &str) -> Self {
+        use crate::util::json::{to_string, Json};
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("error".to_string(), Json::Str(msg.to_string()));
+        Self::json(status, to_string(&Json::Obj(m)))
+    }
+
+    pub fn with_retry_after(mut self, secs: u64) -> Self {
+        self.retry_after = Some(secs);
+        self
+    }
+
+    pub fn write_to(&self, stream: &mut TcpStream) -> io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len()
+        );
+        if let Some(secs) = self.retry_after {
+            head.push_str(&format!("Retry-After: {secs}\r\n"));
+        }
+        head.push_str("\r\n");
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(self.body.as_bytes())?;
+        stream.flush()
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Round-trip one raw request through a real localhost socket.
+    fn parse_raw(raw: &str) -> Request {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_string();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(raw.as_bytes()).unwrap();
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let req = Request::read_from(&mut stream).unwrap().unwrap();
+        client.join().unwrap();
+        req
+    }
+
+    #[test]
+    fn parses_request_with_body() {
+        let req = parse_raw(
+            "POST /v1/partitions?x=1 HTTP/1.1\r\nHost: aba\r\nContent-Length: 11\r\n\r\nhello world",
+        );
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/partitions");
+        assert_eq!(req.header("host"), Some("aba"));
+        assert_eq!(req.header("Content-Length"), Some("11"));
+        assert_eq!(req.body, b"hello world");
+    }
+
+    #[test]
+    fn parses_bodyless_get() {
+        let req = parse_raw("GET /metrics HTTP/1.1\r\n\r\n");
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/metrics");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn head_end_detection() {
+        assert_eq!(find_head_end(b"a\r\n\r\nb"), Some(1));
+        assert_eq!(find_head_end(b"a\r\nb"), None);
+    }
+}

@@ -1,0 +1,164 @@
+//! Service telemetry behind `GET /metrics`: request/response counters,
+//! a bounded latency ring for p50/p99, queue depth, handle-cache
+//! evictions, and the library's own meters (the process-wide
+//! [`crate::data::view::gathered_bytes`] staging meter and the
+//! per-session [`crate::assignment::sparse::SparseStats`] accumulated
+//! across solve requests).
+//!
+//! Rendered as plain `name value` text lines — no exposition format
+//! dependency, trivially curl-able and diffable.
+
+use crate::assignment::sparse::SparseStats;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Latency samples kept for percentile estimation (a sliding window of
+/// the most recent requests, not process-lifetime).
+const LATENCY_RING: usize = 4096;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_total: AtomicU64,
+    pub responses_2xx: AtomicU64,
+    pub responses_4xx: AtomicU64,
+    pub responses_5xx: AtomicU64,
+    /// Backpressure rejections (subset of `responses_4xx`).
+    pub rejected_429: AtomicU64,
+    /// Handles evicted from the registry to snapshots.
+    pub evictions: AtomicU64,
+    /// Current pending-connection queue depth (gauge).
+    pub queue_depth: AtomicU64,
+    pub sparse_batches: AtomicU64,
+    pub dense_batches: AtomicU64,
+    pub sparse_escalations: AtomicU64,
+    pub sparse_fallbacks: AtomicU64,
+    /// Request latencies in microseconds, most recent `LATENCY_RING`.
+    latencies_us: Mutex<VecDeque<u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one finished request: status class and latency.
+    pub fn observe(&self, status: u16, micros: u64) {
+        self.requests_total.fetch_add(1, Ordering::Relaxed);
+        let class = match status {
+            200..=299 => &self.responses_2xx,
+            400..=499 => &self.responses_4xx,
+            _ => &self.responses_5xx,
+        };
+        class.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.latencies_us.lock().unwrap();
+        if ring.len() == LATENCY_RING {
+            ring.pop_front();
+        }
+        ring.push_back(micros);
+    }
+
+    /// Fold one solve's [`SparseStats`] into the service totals (the
+    /// caller resets the session counters afterwards, so each request
+    /// contributes exactly once).
+    pub fn add_sparse(&self, s: &SparseStats) {
+        self.sparse_batches.fetch_add(s.sparse_batches as u64, Ordering::Relaxed);
+        self.dense_batches.fetch_add(s.dense_batches as u64, Ordering::Relaxed);
+        self.sparse_escalations.fetch_add(s.escalations as u64, Ordering::Relaxed);
+        self.sparse_fallbacks.fetch_add(s.fallback_batches as u64, Ordering::Relaxed);
+    }
+
+    /// (p50, p99) request latency in microseconds over the ring window.
+    pub fn latency_percentiles_us(&self) -> (u64, u64) {
+        let ring = self.latencies_us.lock().unwrap();
+        if ring.is_empty() {
+            return (0, 0);
+        }
+        let mut sorted: Vec<u64> = ring.iter().copied().collect();
+        sorted.sort_unstable();
+        let at = |q: f64| sorted[((sorted.len() - 1) as f64 * q).round() as usize];
+        (at(0.50), at(0.99))
+    }
+
+    /// The `GET /metrics` text document. `handles` is the registry's
+    /// current resident handle count.
+    pub fn render(&self, handles: usize) -> String {
+        let (p50, p99) = self.latency_percentiles_us();
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        format!(
+            "aba_requests_total {}\n\
+             aba_responses_2xx {}\n\
+             aba_responses_4xx {}\n\
+             aba_responses_5xx {}\n\
+             aba_rejected_429 {}\n\
+             aba_queue_depth {}\n\
+             aba_handles {}\n\
+             aba_evictions {}\n\
+             aba_latency_p50_us {}\n\
+             aba_latency_p99_us {}\n\
+             aba_gathered_bytes {}\n\
+             aba_sparse_batches {}\n\
+             aba_dense_batches {}\n\
+             aba_sparse_escalations {}\n\
+             aba_sparse_fallbacks {}\n",
+            g(&self.requests_total),
+            g(&self.responses_2xx),
+            g(&self.responses_4xx),
+            g(&self.responses_5xx),
+            g(&self.rejected_429),
+            g(&self.queue_depth),
+            handles,
+            g(&self.evictions),
+            p50,
+            p99,
+            crate::data::view::gathered_bytes(),
+            g(&self.sparse_batches),
+            g(&self.dense_batches),
+            g(&self.sparse_escalations),
+            g(&self.sparse_fallbacks),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_percentiles() {
+        let m = Metrics::new();
+        for us in [100u64, 200, 300, 400, 1000] {
+            m.observe(200, us);
+        }
+        m.observe(404, 50);
+        m.observe(500, 50);
+        assert_eq!(m.requests_total.load(Ordering::Relaxed), 7);
+        assert_eq!(m.responses_2xx.load(Ordering::Relaxed), 5);
+        assert_eq!(m.responses_4xx.load(Ordering::Relaxed), 1);
+        assert_eq!(m.responses_5xx.load(Ordering::Relaxed), 1);
+        let (p50, p99) = m.latency_percentiles_us();
+        assert!(p50 >= 100 && p50 <= 400, "{p50}");
+        assert_eq!(p99, 1000);
+        let text = m.render(3);
+        assert!(text.contains("aba_requests_total 7"), "{text}");
+        assert!(text.contains("aba_handles 3"), "{text}");
+        assert!(text.contains("aba_gathered_bytes "), "{text}");
+    }
+
+    #[test]
+    fn sparse_stats_fold_in() {
+        let m = Metrics::new();
+        m.add_sparse(&SparseStats {
+            sparse_batches: 3,
+            dense_batches: 1,
+            fallback_batches: 1,
+            escalations: 2,
+            peak_cost_bytes: 64,
+        });
+        m.add_sparse(&SparseStats { sparse_batches: 2, ..Default::default() });
+        assert_eq!(m.sparse_batches.load(Ordering::Relaxed), 5);
+        assert_eq!(m.dense_batches.load(Ordering::Relaxed), 1);
+        assert_eq!(m.sparse_escalations.load(Ordering::Relaxed), 2);
+        assert_eq!(m.sparse_fallbacks.load(Ordering::Relaxed), 1);
+    }
+}

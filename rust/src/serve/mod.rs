@@ -1,0 +1,635 @@
+//! `aba serve`: a sharded anticlustering service over
+//! [`OnlinePartition`] handles.
+//!
+//! A dependency-light HTTP/1.1 server on [`std::net::TcpListener`] with
+//! a bounded accept/worker model: one accept thread feeds a bounded
+//! connection queue drained by a fixed pool of worker threads, each
+//! owning its own [`Aba`] session. Live partitions sit behind a
+//! [`registry::Registry`] keyed by id — an LRU cache that evicts cold
+//! handles to fingerprinted snapshots and warm-restarts them on demand
+//! (an incompatible snapshot is HTTP 409).
+//!
+//! Endpoints (all bodies JSON, every response `Connection: close`):
+//!
+//! | method & path                      | action                              |
+//! |------------------------------------|-------------------------------------|
+//! | `POST /v1/partitions`              | solve inline CSV into a new handle  |
+//! | `GET  /v1/partitions/{id}`         | labels / sizes / objective          |
+//! | `POST /v1/partitions/{id}/insert`  | stream new rows in (inline CSV)     |
+//! | `POST /v1/partitions/{id}/remove`  | retire rows by id                   |
+//! | `POST /v1/partitions/{id}/refine`  | budgeted swap repair                |
+//! | `GET  /metrics`                    | text telemetry ([`metrics`])        |
+//! | `GET  /healthz`                    | liveness                            |
+//! | `POST /v1/admin/drain`             | graceful drain (as does `SIGTERM`)  |
+//!
+//! The create endpoint accepts `"shards": S` to route the solve through
+//! [`shard::solve_sharded`] — `S` independent shard solves on the
+//! worker pool reconciled by centroid-level rectangular assignment.
+//!
+//! When the queue is full the accept thread answers `429` with
+//! `Retry-After` inline rather than letting latency grow unboundedly.
+//! On `SIGTERM` (or the drain endpoint) the server stops accepting,
+//! finishes queued requests, snapshots every resident handle, and
+//! exits.
+//!
+//! The process-wide [`crate::data::view::gathered_bytes`] meter is
+//! reported cumulatively in `/metrics` and deliberately *not* reset per
+//! request: workers run concurrently, and a per-request reset would
+//! race. Single-tenant embedders that want per-request numbers can call
+//! [`crate::data::view::reset_gathered_bytes`] themselves.
+
+pub mod http;
+pub mod metrics;
+pub mod registry;
+pub mod shard;
+
+use crate::algo::AbaConfig;
+use crate::data::csv;
+use crate::error::{AbaError, AbaResult};
+use crate::online::OnlinePartition;
+use crate::solver::{Aba, PhaseTimings};
+use crate::util::json::{self, Json};
+use http::{Request, Response};
+use metrics::Metrics;
+use registry::Registry;
+use std::collections::{BTreeMap, VecDeque};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Set by the `SIGTERM` handler; polled by the accept loop.
+static SIGTERM: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_sigterm_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    extern "C" fn on_sigterm(_sig: i32) {
+        // An atomic store is async-signal-safe; everything else happens
+        // on the accept thread when it notices the flag.
+        SIGTERM.store(true, Ordering::SeqCst);
+    }
+    const SIGTERM_NUM: i32 = 15;
+    let handler: extern "C" fn(i32) = on_sigterm;
+    unsafe {
+        signal(SIGTERM_NUM, handler as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_sigterm_handler() {}
+
+/// Server construction parameters (see [`Server::start`]).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks a free port (reported by
+    /// [`Server::addr`]).
+    pub addr: String,
+    /// Worker threads, each with its own solver session.
+    pub workers: usize,
+    /// Bounded pending-connection queue; overflow is answered `429`.
+    pub queue: usize,
+    /// Max resident [`OnlinePartition`] handles before LRU eviction.
+    pub max_handles: usize,
+    /// Where evicted/drained handles snapshot to.
+    pub snapshot_dir: PathBuf,
+    /// Solver configuration shared by all sessions and handles.
+    pub cfg: AbaConfig,
+    /// Artificial per-request delay, for backpressure tests only.
+    pub test_delay_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            workers: 4,
+            queue: 64,
+            max_handles: 64,
+            snapshot_dir: std::env::temp_dir().join("aba-serve"),
+            cfg: AbaConfig::default(),
+            test_delay_ms: 0,
+        }
+    }
+}
+
+/// Accept-queue state shared between the accept thread and workers.
+struct Shared {
+    queue: Mutex<VecDeque<TcpStream>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    /// Request shutdown and wake every waiting worker. Notifying while
+    /// holding the queue lock closes the race where a worker checks the
+    /// flag, misses the notify, and then blocks in `wait` forever.
+    fn trigger_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _guard = self.queue.lock().unwrap();
+        self.cv.notify_all();
+    }
+}
+
+/// Per-request context handed to the router.
+struct Ctx {
+    registry: Arc<Registry>,
+    metrics: Arc<Metrics>,
+    shared: Arc<Shared>,
+    cfg: AbaConfig,
+    next_id: AtomicU64,
+    test_delay_ms: u64,
+}
+
+/// A running service. Dropping it without [`Server::drain`] leaves the
+/// threads running; call [`Server::drain`] (or [`Server::wait`] from a
+/// CLI) for a clean shutdown with snapshots on disk.
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    registry: Arc<Registry>,
+    metrics: Arc<Metrics>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, spawn the accept thread and `workers` worker threads, and
+    /// return. Fails fast if the solver config or bind address is bad.
+    pub fn start(config: ServeConfig) -> AbaResult<Server> {
+        install_sigterm_handler();
+        // Surface a bad solver config now, not on the first request.
+        drop(Aba::from_config(config.cfg.clone())?);
+        let metrics = Arc::new(Metrics::new());
+        let registry = Arc::new(Registry::new(
+            &config.snapshot_dir,
+            config.max_handles,
+            config.cfg.clone(),
+            Arc::clone(&metrics),
+        )?);
+        let listener = TcpListener::bind(&config.addr)
+            .map_err(|e| AbaError::Io(format!("bind {}: {e}", config.addr)))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| AbaError::Io(format!("local_addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| AbaError::Io(format!("set_nonblocking: {e}")))?;
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let ctx = Arc::new(Ctx {
+            registry: Arc::clone(&registry),
+            metrics: Arc::clone(&metrics),
+            shared: Arc::clone(&shared),
+            cfg: config.cfg.clone(),
+            next_id: AtomicU64::new(0),
+            test_delay_ms: config.test_delay_ms,
+        });
+        let mut workers = Vec::with_capacity(config.workers.max(1));
+        for wi in 0..config.workers.max(1) {
+            let ctx = Arc::clone(&ctx);
+            let handle = std::thread::Builder::new()
+                .name(format!("aba-serve-{wi}"))
+                .spawn(move || worker_loop(&ctx))
+                .map_err(|e| AbaError::Io(format!("spawn worker: {e}")))?;
+            workers.push(handle);
+        }
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let metrics = Arc::clone(&metrics);
+            let queue_cap = config.queue.max(1);
+            std::thread::Builder::new()
+                .name("aba-serve-accept".into())
+                .spawn(move || accept_loop(listener, &shared, &metrics, queue_cap))
+                .map_err(|e| AbaError::Io(format!("spawn accept: {e}")))?
+        };
+        Ok(Server { addr, shared, registry, metrics, accept: Some(accept), workers })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    pub fn registry(&self) -> Arc<Registry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Whether a drain has been requested (endpoint, `SIGTERM`, or
+    /// [`Server::request_drain`]).
+    pub fn draining(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Ask the server to stop accepting and finish queued work.
+    pub fn request_drain(&self) {
+        self.shared.trigger_shutdown();
+    }
+
+    /// Drain now: stop accepting, finish queued requests, snapshot all
+    /// resident handles. Returns how many snapshots were written.
+    pub fn drain(mut self) -> AbaResult<usize> {
+        self.request_drain();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        self.registry.drain_all()
+    }
+
+    /// Block until a drain is requested (e.g. `SIGTERM`), then
+    /// [`Server::drain`]. The CLI's foreground path.
+    pub fn wait(self) -> AbaResult<usize> {
+        while !self.draining() {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        self.drain()
+    }
+}
+
+/// Accept connections and enqueue them, rejecting with `429` when the
+/// queue is full. Exits when a drain is requested.
+fn accept_loop(listener: TcpListener, shared: &Shared, metrics: &Metrics, queue_cap: usize) {
+    loop {
+        if SIGTERM.load(Ordering::SeqCst) {
+            shared.shutdown.store(true, Ordering::SeqCst);
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            shared.trigger_shutdown();
+            return;
+        }
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                // Accepted sockets must block: workers read bodies with
+                // a timeout, not busy-wait.
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+                let mut queue = shared.queue.lock().unwrap();
+                if queue.len() >= queue_cap {
+                    drop(queue);
+                    metrics.rejected_429.fetch_add(1, Ordering::Relaxed);
+                    metrics.observe(429, 0);
+                    let resp =
+                        Response::error(429, "request queue full").with_retry_after(1);
+                    let _ = resp.write_to(&mut stream);
+                } else {
+                    queue.push_back(stream);
+                    metrics.queue_depth.store(queue.len() as u64, Ordering::Relaxed);
+                    drop(queue);
+                    shared.cv.notify_one();
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Pop connections and serve them until the queue is empty *and* a
+/// drain was requested — queued requests finish during a drain.
+fn worker_loop(ctx: &Ctx) {
+    // Config was validated in `Server::start`.
+    let mut session = Aba::from_config(ctx.cfg.clone()).expect("config validated at start");
+    loop {
+        let next = {
+            let mut queue = ctx.shared.queue.lock().unwrap();
+            loop {
+                if let Some(stream) = queue.pop_front() {
+                    ctx.metrics.queue_depth.store(queue.len() as u64, Ordering::Relaxed);
+                    break Some(stream);
+                }
+                if ctx.shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                queue = ctx.shared.cv.wait(queue).unwrap();
+            }
+        };
+        let Some(mut stream) = next else { return };
+        if ctx.test_delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(ctx.test_delay_ms));
+        }
+        let start = Instant::now();
+        match Request::read_from(&mut stream) {
+            Ok(Some(req)) => {
+                let resp = route(ctx, &mut session, &req);
+                ctx.metrics.observe(resp.status, start.elapsed().as_micros() as u64);
+                let _ = resp.write_to(&mut stream);
+            }
+            Ok(None) => {}
+            Err(e) => {
+                let resp = Response::error(400, &format!("bad request: {e}"));
+                ctx.metrics.observe(400, start.elapsed().as_micros() as u64);
+                let _ = resp.write_to(&mut stream);
+            }
+        }
+    }
+}
+
+/// Map a solver error to its HTTP status: snapshot/config divergence is
+/// a conflict, I/O is the server's fault, everything else is the
+/// request's.
+fn err_status(e: &AbaError) -> u16 {
+    match e {
+        AbaError::SnapshotMismatch { .. } => 409,
+        AbaError::Io(_) => 500,
+        _ => 400,
+    }
+}
+
+fn err_response(e: &AbaError) -> Response {
+    Response::error(err_status(e), &e.to_string())
+}
+
+/// Compact JSON object from literal pairs.
+fn obj(pairs: Vec<(&str, Json)>) -> String {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    json::to_string(&Json::Obj(m))
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+/// Parse and minimally validate a JSON request body.
+fn parse_body(req: &Request) -> Result<Json, Response> {
+    let text = std::str::from_utf8(&req.body)
+        .map_err(|_| Response::error(400, "body is not utf-8"))?;
+    if text.trim().is_empty() {
+        return Err(Response::error(400, "empty body (expected a JSON object)"));
+    }
+    json::parse(text).map_err(|e| Response::error(400, &format!("bad JSON body: {e}")))
+}
+
+fn route(ctx: &Ctx, session: &mut Aba, req: &Request) -> Response {
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => Response::text(200, "ok\n".into()),
+        ("GET", ["metrics"]) => {
+            Response::text(200, ctx.metrics.render(ctx.registry.handles()))
+        }
+        ("POST", ["v1", "admin", "drain"]) => {
+            ctx.shared.trigger_shutdown();
+            Response::json(200, obj(vec![("draining", Json::Bool(true))]))
+        }
+        ("POST", ["v1", "partitions"]) => create_partition(ctx, session, req),
+        ("GET", ["v1", "partitions", id]) => get_partition(ctx, id),
+        ("POST", ["v1", "partitions", id, "insert"]) => op_insert(ctx, id, req),
+        ("POST", ["v1", "partitions", id, "remove"]) => op_remove(ctx, id, req),
+        ("POST", ["v1", "partitions", id, "refine"]) => op_refine(ctx, id, req),
+        _ => Response::error(404, &format!("no route for {} {}", req.method, req.path)),
+    }
+}
+
+/// `POST /v1/partitions` — solve inline CSV into a new registered
+/// handle. Body: `{"k": .., "csv": "..", "id"?: "..", "shards"?: S}`.
+fn create_partition(ctx: &Ctx, session: &mut Aba, req: &Request) -> Response {
+    let body = match parse_body(req) {
+        Ok(b) => b,
+        Err(resp) => return resp,
+    };
+    let Some(k) = body.get("k").and_then(Json::as_usize) else {
+        return Response::error(400, "missing numeric field 'k'");
+    };
+    let Some(csv_text) = body.get("csv").and_then(Json::as_str) else {
+        return Response::error(400, "missing string field 'csv'");
+    };
+    let id = match body.get("id").and_then(Json::as_str) {
+        Some(s) => s.to_string(),
+        None => format!("p{}", ctx.next_id.fetch_add(1, Ordering::Relaxed)),
+    };
+    if !Registry::valid_id(&id) {
+        return Response::error(400, &format!("invalid partition id '{id}'"));
+    }
+    if ctx.registry.contains(&id) {
+        return Response::error(409, &format!("partition '{id}' already exists"));
+    }
+    let ds = match csv::parse_str(csv_text, &id) {
+        Ok(ds) => ds,
+        Err(e) => return err_response(&e),
+    };
+    let shards = body.get("shards").and_then(Json::as_usize).unwrap_or(1);
+    let part = if shards >= 2 {
+        match shard::solve_sharded(&ds.view(), k, shards, &ctx.cfg) {
+            Ok(labels) => OnlinePartition::from_labels(
+                &ds.view(),
+                labels,
+                k,
+                ctx.cfg.clone(),
+                PhaseTimings::default(),
+            ),
+            Err(e) => return err_response(&e),
+        }
+    } else {
+        match session.partition_online(&ds.view(), k) {
+            Ok(p) => p,
+            Err(e) => return err_response(&e),
+        }
+    };
+    ctx.metrics.add_sparse(&session.sparse_stats());
+    session.reset_sparse_stats();
+    let mut part = part;
+    let n = part.len();
+    let objective = part.objective();
+    if let Err(e) = ctx.registry.insert(&id, part) {
+        return err_response(&e);
+    }
+    Response::json(
+        201,
+        obj(vec![
+            ("id", Json::Str(id)),
+            ("n", num(n as f64)),
+            ("k", num(k as f64)),
+            ("objective", num(objective)),
+        ]),
+    )
+}
+
+/// Fetch a handle or the error response that explains why not.
+fn load_handle(
+    ctx: &Ctx,
+    id: &str,
+) -> Result<Arc<Mutex<OnlinePartition>>, Response> {
+    match ctx.registry.get_or_load(id) {
+        Ok(Some(handle)) => Ok(handle),
+        Ok(None) => Err(Response::error(404, &format!("no partition '{id}'"))),
+        Err(e) => Err(err_response(&e)),
+    }
+}
+
+/// `GET /v1/partitions/{id}` — full state: sizes, objective, labels.
+fn get_partition(ctx: &Ctx, id: &str) -> Response {
+    let handle = match load_handle(ctx, id) {
+        Ok(h) => h,
+        Err(resp) => return resp,
+    };
+    let mut part = handle.lock().unwrap();
+    let sizes = Json::Arr(part.sizes().iter().map(|&s| num(s as f64)).collect());
+    let labels = Json::Arr(
+        part.entries()
+            .into_iter()
+            .map(|(id, lab)| Json::Arr(vec![num(id as f64), num(lab as f64)]))
+            .collect(),
+    );
+    let objective = part.objective();
+    Response::json(
+        200,
+        obj(vec![
+            ("id", Json::Str(id.to_string())),
+            ("n", num(part.len() as f64)),
+            ("k", num(part.k() as f64)),
+            ("d", num(part.d() as f64)),
+            ("objective", num(objective)),
+            ("sizes", sizes),
+            ("labels", labels),
+        ]),
+    )
+}
+
+/// `POST /v1/partitions/{id}/insert` — body `{"csv": ".."}`; rows are
+/// routed by delta objective and assigned fresh stable ids.
+fn op_insert(ctx: &Ctx, id: &str, req: &Request) -> Response {
+    let body = match parse_body(req) {
+        Ok(b) => b,
+        Err(resp) => return resp,
+    };
+    let Some(csv_text) = body.get("csv").and_then(Json::as_str) else {
+        return Response::error(400, "missing string field 'csv'");
+    };
+    let ds = match csv::parse_str(csv_text, "insert") {
+        Ok(ds) => ds,
+        Err(e) => return err_response(&e),
+    };
+    let handle = match load_handle(ctx, id) {
+        Ok(h) => h,
+        Err(resp) => return resp,
+    };
+    let mut part = handle.lock().unwrap();
+    match part.insert_batch(&ds.view()) {
+        Ok(ids) => Response::json(
+            200,
+            obj(vec![
+                ("ids", Json::Arr(ids.iter().map(|&i| num(i as f64)).collect())),
+                ("n", num(part.len() as f64)),
+            ]),
+        ),
+        Err(e) => err_response(&e),
+    }
+}
+
+/// `POST /v1/partitions/{id}/remove` — body `{"ids": [..]}`.
+fn op_remove(ctx: &Ctx, id: &str, req: &Request) -> Response {
+    let body = match parse_body(req) {
+        Ok(b) => b,
+        Err(resp) => return resp,
+    };
+    let Some(raw) = body.get("ids").and_then(Json::as_arr) else {
+        return Response::error(400, "missing array field 'ids'");
+    };
+    let mut ids = Vec::with_capacity(raw.len());
+    for v in raw {
+        match v.as_f64() {
+            Some(x) if x >= 0.0 => ids.push(x as u64),
+            _ => return Response::error(400, "'ids' must be non-negative numbers"),
+        }
+    }
+    let handle = match load_handle(ctx, id) {
+        Ok(h) => h,
+        Err(resp) => return resp,
+    };
+    let mut part = handle.lock().unwrap();
+    match part.remove(&ids) {
+        Ok(()) => Response::json(
+            200,
+            obj(vec![
+                ("removed", num(ids.len() as f64)),
+                ("n", num(part.len() as f64)),
+            ]),
+        ),
+        Err(e) => err_response(&e),
+    }
+}
+
+/// `POST /v1/partitions/{id}/refine` — body
+/// `{"budget"?: .., "global"?: true}`; `global` prices every cluster,
+/// not just churn-touched ones.
+fn op_refine(ctx: &Ctx, id: &str, req: &Request) -> Response {
+    let body = match parse_body(req) {
+        Ok(b) => b,
+        Err(resp) => return resp,
+    };
+    let budget = body.get("budget").and_then(Json::as_usize).unwrap_or(10_000);
+    let global = matches!(body.get("global"), Some(Json::Bool(true)));
+    let handle = match load_handle(ctx, id) {
+        Ok(h) => h,
+        Err(resp) => return resp,
+    };
+    let mut part = handle.lock().unwrap();
+    if global {
+        part.touch_all();
+    }
+    let stats = part.refine(budget);
+    Response::json(
+        200,
+        obj(vec![
+            ("evaluated", num(stats.evaluated as f64)),
+            ("swapped", num(stats.swapped as f64)),
+            ("est_gain", num(stats.est_gain)),
+        ]),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    /// One-shot raw HTTP exchange: write, read to EOF, return the text.
+    fn exchange(addr: SocketAddr, raw: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn healthz_and_drain_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("aba_serve_unit_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let server = Server::start(ServeConfig {
+            workers: 1,
+            snapshot_dir: dir,
+            cfg: AbaConfig { auto_hier: false, ..AbaConfig::default() },
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let addr = server.addr();
+        let ok = exchange(addr, "GET /healthz HTTP/1.1\r\n\r\n");
+        assert!(ok.starts_with("HTTP/1.1 200"), "{ok}");
+        assert!(ok.ends_with("ok\n"), "{ok}");
+        let missing = exchange(addr, "GET /v1/partitions/ghost HTTP/1.1\r\n\r\n");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+        let drain = exchange(addr, "POST /v1/admin/drain HTTP/1.1\r\n\r\n");
+        assert!(drain.contains("\"draining\":true"), "{drain}");
+        assert_eq!(server.wait().unwrap(), 0);
+    }
+}

@@ -1,0 +1,269 @@
+//! The partition-handle registry: many live [`OnlinePartition`]s keyed
+//! by id, behind an LRU cache that spills to fingerprinted snapshots.
+//!
+//! Each handle lives in its own `Arc<Mutex<..>>`, so operations on
+//! *distinct* partitions run concurrently across server workers while
+//! operations on the *same* partition serialize. When the resident
+//! count exceeds `max_handles`, the least-recently-used handle is
+//! evicted: its snapshot (`{dir}/{id}.json`, the versioned
+//! [`crate::online`] persistence format) is written and the in-memory
+//! handle dropped. A later request for that id warm-restarts it from
+//! the snapshot — gated by the session config fingerprint, so resuming
+//! under an incompatible config is a typed
+//! [`AbaError::SnapshotMismatch`] (HTTP 409 at the service boundary).
+//!
+//! Lock order is always registry → handle: eviction takes the handle
+//! lock while holding the registry lock (so in-flight operations finish
+//! before the snapshot is cut), and request handlers clone the `Arc`
+//! out of the registry *before* locking the handle — never the other
+//! way around — which rules out deadlock.
+
+use super::metrics::Metrics;
+use crate::algo::AbaConfig;
+use crate::error::{AbaError, AbaResult};
+use crate::online::OnlinePartition;
+use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+struct Inner {
+    map: HashMap<String, Arc<Mutex<OnlinePartition>>>,
+    /// Ids from least- to most-recently used.
+    lru: VecDeque<String>,
+}
+
+pub struct Registry {
+    inner: Mutex<Inner>,
+    snapshot_dir: PathBuf,
+    max_handles: usize,
+    cfg: AbaConfig,
+    metrics: Arc<Metrics>,
+}
+
+impl Registry {
+    /// Create a registry spilling to `snapshot_dir` (created if
+    /// missing). `max_handles` is clamped to at least 1.
+    pub fn new(
+        snapshot_dir: impl Into<PathBuf>,
+        max_handles: usize,
+        cfg: AbaConfig,
+        metrics: Arc<Metrics>,
+    ) -> AbaResult<Self> {
+        let snapshot_dir = snapshot_dir.into();
+        std::fs::create_dir_all(&snapshot_dir)
+            .map_err(|e| AbaError::Io(format!("create {snapshot_dir:?}: {e}")))?;
+        Ok(Self {
+            inner: Mutex::new(Inner { map: HashMap::new(), lru: VecDeque::new() }),
+            snapshot_dir,
+            max_handles: max_handles.max(1),
+            cfg,
+            metrics,
+        })
+    }
+
+    /// Ids double as snapshot file stems, so they are restricted to a
+    /// filesystem- and URL-safe alphabet.
+    pub fn valid_id(id: &str) -> bool {
+        !id.is_empty()
+            && id.len() <= 64
+            && id.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'-')
+    }
+
+    /// Where `id`'s snapshot lives (whether or not one exists yet).
+    pub fn snapshot_path(&self, id: &str) -> PathBuf {
+        self.snapshot_dir.join(format!("{id}.json"))
+    }
+
+    /// The session config handles are maintained (and loaded) under.
+    pub fn config(&self) -> &AbaConfig {
+        &self.cfg
+    }
+
+    /// Resident (in-memory) handle count.
+    pub fn handles(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// Whether `id` is resident or has a snapshot on disk.
+    pub fn contains(&self, id: &str) -> bool {
+        self.inner.lock().unwrap().map.contains_key(id) || self.snapshot_path(id).exists()
+    }
+
+    /// Register a freshly solved partition under `id`, evicting LRU
+    /// handles past capacity. Fails if the id is taken (resident or
+    /// snapshotted) or invalid.
+    pub fn insert(&self, id: &str, part: OnlinePartition) -> AbaResult<Arc<Mutex<OnlinePartition>>> {
+        if !Self::valid_id(id) {
+            return Err(AbaError::InvalidInput(format!(
+                "invalid partition id '{id}' (want [A-Za-z0-9_-]{{1,64}})"
+            )));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.contains_key(id) || self.snapshot_path(id).exists() {
+            return Err(AbaError::InvalidInput(format!("partition '{id}' already exists")));
+        }
+        let handle = Arc::new(Mutex::new(part));
+        inner.map.insert(id.to_string(), Arc::clone(&handle));
+        inner.lru.push_back(id.to_string());
+        self.evict_over_capacity(&mut inner, id)?;
+        Ok(handle)
+    }
+
+    /// Fetch a handle: resident → touch LRU and return; snapshot on
+    /// disk → warm-restart it (fingerprint-gated, so an incompatible
+    /// snapshot is [`AbaError::SnapshotMismatch`]); neither → `None`.
+    pub fn get_or_load(&self, id: &str) -> AbaResult<Option<Arc<Mutex<OnlinePartition>>>> {
+        if !Self::valid_id(id) {
+            return Err(AbaError::InvalidInput(format!("invalid partition id '{id}'")));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(handle) = inner.map.get(id).cloned() {
+            touch(&mut inner.lru, id);
+            return Ok(Some(handle));
+        }
+        let path = self.snapshot_path(id);
+        if !path.exists() {
+            return Ok(None);
+        }
+        // Load while holding the registry lock: slower than dropping it,
+        // but it guarantees one load per id (no duplicate handles racing
+        // to exist for the same partition).
+        let part = OnlinePartition::load(&path, &self.cfg)?;
+        let handle = Arc::new(Mutex::new(part));
+        inner.map.insert(id.to_string(), Arc::clone(&handle));
+        inner.lru.push_back(id.to_string());
+        self.evict_over_capacity(&mut inner, id)?;
+        Ok(Some(handle))
+    }
+
+    /// Snapshot and drop LRU handles until at most `max_handles` remain
+    /// (never the just-touched `keep`).
+    fn evict_over_capacity(&self, inner: &mut Inner, keep: &str) -> AbaResult<()> {
+        while inner.map.len() > self.max_handles {
+            let Some(victim_pos) = inner.lru.iter().position(|v| v != keep) else {
+                return Ok(());
+            };
+            let victim = inner.lru.remove(victim_pos).expect("position is in range");
+            let Some(handle) = inner.map.remove(&victim) else {
+                continue;
+            };
+            // Taking the handle lock lets any in-flight operation on the
+            // victim finish before its state is frozen to disk.
+            let guard = handle.lock().unwrap();
+            guard.save(self.snapshot_path(&victim))?;
+            drop(guard);
+            self.metrics.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Snapshot every resident handle to disk and drop it — the
+    /// graceful-drain path. Returns how many snapshots were written.
+    pub fn drain_all(&self) -> AbaResult<usize> {
+        let mut inner = self.inner.lock().unwrap();
+        let ids: Vec<String> = inner.lru.iter().cloned().collect();
+        let mut written = 0usize;
+        for id in ids {
+            if let Some(handle) = inner.map.remove(&id) {
+                handle.lock().unwrap().save(self.snapshot_path(&id))?;
+                written += 1;
+            }
+        }
+        inner.lru.clear();
+        Ok(written)
+    }
+
+    /// Snapshot directory (for status/logging).
+    pub fn snapshot_dir(&self) -> &Path {
+        &self.snapshot_dir
+    }
+}
+
+/// Move `id` to the most-recently-used end.
+fn touch(lru: &mut VecDeque<String>, id: &str) {
+    if let Some(pos) = lru.iter().position(|v| v == id) {
+        lru.remove(pos);
+    }
+    lru.push_back(id.to_string());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthKind};
+    use crate::solver::Aba;
+
+    fn fresh_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("aba_registry_{name}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn solve(seed: u64, cfg: &AbaConfig) -> OnlinePartition {
+        let ds = generate(SynthKind::Uniform, 40, 3, seed, "r");
+        Aba::from_config(cfg.clone()).unwrap().partition_online(&ds.view(), 4).unwrap()
+    }
+
+    #[test]
+    fn id_validation() {
+        assert!(Registry::valid_id("alpha-2_B"));
+        assert!(!Registry::valid_id(""));
+        assert!(!Registry::valid_id("a/b"));
+        assert!(!Registry::valid_id("a b"));
+        assert!(!Registry::valid_id(&"x".repeat(65)));
+    }
+
+    #[test]
+    fn eviction_snapshots_and_warm_restart_is_bit_identical() {
+        let cfg = AbaConfig { auto_hier: false, ..AbaConfig::default() };
+        let metrics = Arc::new(Metrics::new());
+        let reg =
+            Registry::new(fresh_dir("evict"), 1, cfg.clone(), Arc::clone(&metrics)).unwrap();
+        let part_a = solve(1, &cfg);
+        let snap_a = part_a.snapshot_string();
+        reg.insert("a", part_a).unwrap();
+        // Capacity 1: inserting "b" evicts "a" to its snapshot file.
+        reg.insert("b", solve(2, &cfg)).unwrap();
+        assert_eq!(metrics.evictions.load(Ordering::Relaxed), 1);
+        assert_eq!(reg.handles(), 1);
+        assert!(reg.snapshot_path("a").exists());
+        // Warm restart reproduces the evicted state bit for bit.
+        let back = reg.get_or_load("a").unwrap().unwrap();
+        assert_eq!(back.lock().unwrap().snapshot_string(), snap_a);
+        // ... and pushed "b" out in turn.
+        assert!(reg.snapshot_path("b").exists());
+        assert_eq!(reg.handles(), 1);
+    }
+
+    #[test]
+    fn duplicate_ids_and_misses() {
+        let cfg = AbaConfig { auto_hier: false, ..AbaConfig::default() };
+        let reg =
+            Registry::new(fresh_dir("dup"), 4, cfg.clone(), Arc::new(Metrics::new())).unwrap();
+        reg.insert("a", solve(3, &cfg)).unwrap();
+        assert!(matches!(reg.insert("a", solve(4, &cfg)), Err(AbaError::InvalidInput(_))));
+        assert!(reg.get_or_load("nope").unwrap().is_none());
+        assert!(reg.contains("a"));
+        assert!(!reg.contains("nope"));
+    }
+
+    #[test]
+    fn incompatible_snapshot_surfaces_mismatch() {
+        let cfg = AbaConfig { auto_hier: false, ..AbaConfig::default() };
+        let dir = fresh_dir("fp");
+        let reg = Registry::new(&dir, 4, cfg.clone(), Arc::new(Metrics::new())).unwrap();
+        solve(5, &cfg).save(dir.join("old.json")).unwrap();
+        let other = AbaConfig {
+            solver: crate::assignment::SolverKind::Greedy,
+            ..AbaConfig::default()
+        };
+        let reg2 = Registry::new(&dir, 4, other, Arc::new(Metrics::new())).unwrap();
+        assert!(matches!(
+            reg2.get_or_load("old"),
+            Err(AbaError::SnapshotMismatch { .. })
+        ));
+        // The matching config loads it fine.
+        assert!(reg.get_or_load("old").unwrap().is_some());
+    }
+}

@@ -325,6 +325,14 @@ impl Aba {
         self.scratch.sparse_stats()
     }
 
+    /// Reset the accumulated [`Aba::sparse_stats`] counters to zero.
+    /// Serving processes call this between requests (paired with
+    /// [`crate::data::view::reset_gathered_bytes`]) so telemetry is
+    /// per-request rather than session-lifetime.
+    pub fn reset_sparse_stats(&mut self) {
+        self.scratch.reset_sparse_stats();
+    }
+
     /// The label-producing core shared by [`Aba::partition_online`] and
     /// the frozen [`Anticlusterer::partition_view`] path. Each branch
     /// validates exactly once: the constrained loop validates

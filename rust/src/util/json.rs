@@ -47,20 +47,50 @@ impl Json {
     }
 }
 
-/// Parse error with byte offset. Display/Error are hand-implemented:
-/// the offline vendor set ships no `thiserror`, and the library core's
-/// error story is the typed [`crate::AbaError`] anyway (callers convert
-/// via its `ParseError` variant).
+/// Parse error with byte offset and a context excerpt of the input
+/// around that offset (so a truncated or hand-edited snapshot file is
+/// diagnosable from the message alone). Display/Error are
+/// hand-implemented: the offline vendor set ships no `thiserror`, and
+/// the library core's error story is the typed [`crate::AbaError`]
+/// anyway (callers convert via its `ParseError` variant).
 #[derive(Debug)]
 pub struct JsonError {
     pub offset: usize,
     pub msg: String,
+    /// Up to ~20 bytes of input either side of `offset`, lossily
+    /// decoded, control characters shown as `·`, truncation marked
+    /// with `…`. Empty only for errors raised without input context.
+    pub context: String,
 }
 
 impl std::fmt::Display for JsonError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)?;
+        if !self.context.is_empty() {
+            write!(f, " (near \"{}\")", self.context)?;
+        }
+        Ok(())
     }
+}
+
+/// The error-context window: the input around `pos`, lossily decoded
+/// with control characters flattened to `·` and `…` marking truncated
+/// ends, clamped to a UTF-8 boundary-safe slice via lossy decoding.
+fn excerpt(bytes: &[u8], pos: usize) -> String {
+    const WINDOW: usize = 20;
+    let start = pos.saturating_sub(WINDOW);
+    let end = (pos + WINDOW).min(bytes.len());
+    let mut out = String::new();
+    if start > 0 {
+        out.push('…');
+    }
+    for c in String::from_utf8_lossy(&bytes[start..end]).chars() {
+        out.push(if c.is_control() { '·' } else { c });
+    }
+    if end < bytes.len() {
+        out.push('…');
+    }
+    out
 }
 
 impl std::error::Error for JsonError {}
@@ -72,7 +102,11 @@ struct Parser<'a> {
 
 impl<'a> Parser<'a> {
     fn err<T>(&self, msg: impl Into<String>) -> Result<T, JsonError> {
-        Err(JsonError { offset: self.pos, msg: msg.into() })
+        Err(JsonError {
+            offset: self.pos,
+            msg: msg.into(),
+            context: excerpt(self.bytes, self.pos),
+        })
     }
 
     fn peek(&self) -> Option<u8> {
@@ -215,15 +249,14 @@ impl<'a> Parser<'a> {
     fn hex4(&mut self) -> Result<u32, JsonError> {
         let mut cp = 0u32;
         for _ in 0..4 {
-            let c = self.bump().ok_or(JsonError {
-                offset: self.pos,
-                msg: "eof in \\u".into(),
-            })?;
-            cp = cp * 16
-                + (c as char).to_digit(16).ok_or(JsonError {
-                    offset: self.pos,
-                    msg: "bad hex".into(),
-                })?;
+            let c = match self.bump() {
+                Some(c) => c,
+                None => return self.err("eof in \\u"),
+            };
+            cp = match (c as char).to_digit(16) {
+                Some(digit) => cp * 16 + digit,
+                None => return self.err("bad hex"),
+            };
         }
         Ok(cp)
     }
@@ -369,6 +402,22 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("12 34").is_err());
         assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn errors_carry_offset_and_context() {
+        // A truncated snapshot-like document: the message must point at
+        // the failure byte and quote the surrounding input.
+        let doc = r#"{"format": 1, "ids": [0, 1, 2"#;
+        let e = parse(doc).unwrap_err();
+        assert_eq!(e.offset, doc.len());
+        assert!(e.context.contains("[0, 1, 2"), "context: {}", e.context);
+        let msg = e.to_string();
+        assert!(msg.contains(&format!("byte {}", doc.len())), "{msg}");
+        assert!(msg.contains("near"), "{msg}");
+        // Control characters are flattened so messages stay one line.
+        let e2 = parse("{\"a\"\n: }").unwrap_err();
+        assert!(!e2.context.contains('\n'), "context: {:?}", e2.context);
     }
 
     #[test]

@@ -1,0 +1,401 @@
+//! End-to-end tests for the `aba serve` subsystem: full HTTP lifecycle,
+//! evict → snapshot → warm-restart bit-identity, fingerprint-mismatch
+//! conflicts, concurrent handle operations, shard-merge invariants, and
+//! queue backpressure.
+
+use aba::algo::objective::ClusterStats;
+use aba::algo::AbaConfig;
+use aba::assignment::SolverKind;
+use aba::data::synth::{generate, SynthKind};
+use aba::data::Dataset;
+use aba::online::inspect_snapshot;
+use aba::runtime::Parallelism;
+use aba::serve::metrics::Metrics;
+use aba::serve::registry::Registry;
+use aba::serve::shard::solve_sharded;
+use aba::serve::{ServeConfig, Server};
+use aba::util::json::{self, Json};
+use aba::{Aba, Anticlusterer};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// A per-test snapshot directory, wiped on entry.
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("aba_serve_it_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn base_cfg() -> AbaConfig {
+    AbaConfig { auto_hier: false, ..AbaConfig::default() }
+}
+
+/// Headered CSV (`f0..f{d-1}`) for a dataset, as the service expects.
+fn csv_of(ds: &Dataset) -> String {
+    let header: Vec<String> = (0..ds.d).map(|j| format!("f{j}")).collect();
+    let mut out = header.join(",");
+    out.push('\n');
+    for i in 0..ds.n {
+        let cells: Vec<String> = ds.row(i).iter().map(|v| format!("{v}")).collect();
+        out.push_str(&cells.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+fn jobj(pairs: Vec<(&str, Json)>) -> String {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    json::to_string(&Json::Obj(m))
+}
+
+/// One-shot HTTP exchange; returns (status, raw response, body text).
+fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let raw = format!(
+        "{method} {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(raw.as_bytes()).unwrap();
+    let mut text = String::new();
+    s.read_to_string(&mut text).unwrap();
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable response: {text}"));
+    let body_start = text.find("\r\n\r\n").map(|p| p + 4).unwrap_or(text.len());
+    let resp_body = text[body_start..].to_string();
+    (status, text, resp_body)
+}
+
+fn parse_json(body: &str) -> Json {
+    json::parse(body).unwrap_or_else(|e| panic!("bad JSON response '{body}': {e}"))
+}
+
+#[test]
+fn serve_lifecycle_end_to_end() {
+    let dir = fresh_dir("lifecycle");
+    let server = Server::start(ServeConfig {
+        workers: 2,
+        snapshot_dir: dir.clone(),
+        cfg: base_cfg(),
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = server.addr();
+
+    // Create: 48 rows into k=4 anticlusters from inline CSV.
+    let ds = generate(SynthKind::Uniform, 48, 3, 21, "alpha");
+    let body = jobj(vec![
+        ("id", Json::Str("alpha".into())),
+        ("k", Json::Num(4.0)),
+        ("csv", Json::Str(csv_of(&ds))),
+    ]);
+    let (status, _, resp) = request(addr, "POST", "/v1/partitions", &body);
+    assert_eq!(status, 201, "{resp}");
+    let created = parse_json(&resp);
+    assert_eq!(created.get("n").and_then(Json::as_usize), Some(48));
+    assert_eq!(created.get("k").and_then(Json::as_usize), Some(4));
+
+    // Duplicate id is a conflict, not a clobber.
+    let (status, _, _) = request(addr, "POST", "/v1/partitions", &body);
+    assert_eq!(status, 409);
+
+    // Insert 8 arrivals; the response carries their stable ids.
+    let arrivals = generate(SynthKind::Uniform, 8, 3, 22, "arrivals");
+    let body = jobj(vec![("csv", Json::Str(csv_of(&arrivals)))]);
+    let (status, _, resp) = request(addr, "POST", "/v1/partitions/alpha/insert", &body);
+    assert_eq!(status, 200, "{resp}");
+    let inserted = parse_json(&resp);
+    let ids: Vec<f64> = inserted
+        .get("ids")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    assert_eq!(ids.len(), 8);
+    assert_eq!(inserted.get("n").and_then(Json::as_usize), Some(56));
+
+    // Remove the first 4 of them.
+    let body = jobj(vec![(
+        "ids",
+        Json::Arr(ids[..4].iter().map(|&i| Json::Num(i)).collect()),
+    )]);
+    let (status, _, resp) = request(addr, "POST", "/v1/partitions/alpha/remove", &body);
+    assert_eq!(status, 200, "{resp}");
+    assert_eq!(parse_json(&resp).get("n").and_then(Json::as_usize), Some(52));
+
+    // Refine with a small budget reports its swap accounting.
+    let (status, _, resp) = request(addr, "POST", "/v1/partitions/alpha/refine", "{}");
+    assert_eq!(status, 200, "{resp}");
+    assert!(parse_json(&resp).get("evaluated").is_some());
+
+    // Read back: balanced sizes summing to n, one label per row.
+    let (status, _, resp) = request(addr, "GET", "/v1/partitions/alpha", "");
+    assert_eq!(status, 200, "{resp}");
+    let got = parse_json(&resp);
+    assert_eq!(got.get("n").and_then(Json::as_usize), Some(52));
+    let sizes: Vec<usize> = got
+        .get("sizes")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    assert_eq!(sizes.iter().sum::<usize>(), 52);
+    assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    assert_eq!(got.get("labels").and_then(Json::as_arr).unwrap().len(), 52);
+
+    // Unknown partitions are 404, unknown routes too.
+    assert_eq!(request(addr, "GET", "/v1/partitions/ghost", "").0, 404);
+    assert_eq!(request(addr, "GET", "/v1/nope", "").0, 404);
+
+    // Metrics is plain text with the service counters.
+    let (status, _, resp) = request(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    assert!(resp.contains("aba_requests_total"), "{resp}");
+    assert!(resp.contains("aba_handles 1"), "{resp}");
+
+    // Drain: stop accepting, snapshot the resident handle, exit.
+    let (status, _, resp) = request(addr, "POST", "/v1/admin/drain", "");
+    assert_eq!(status, 200, "{resp}");
+    let written = server.wait().unwrap();
+    assert_eq!(written, 1);
+    let snap = dir.join("alpha.json");
+    assert!(snap.exists());
+    let info = inspect_snapshot(&snap).unwrap();
+    assert_eq!(info.n, 52);
+    assert_eq!(info.k, 4);
+}
+
+#[test]
+fn evict_snapshot_warm_restart_bit_identity() {
+    // Registry-level: capacity 1 forces an eviction, and the reloaded
+    // handle must serialize bit-identically to the evicted one.
+    let cfg = base_cfg();
+    let metrics = Arc::new(Metrics::new());
+    let reg = Registry::new(fresh_dir("evict"), 1, cfg.clone(), Arc::clone(&metrics)).unwrap();
+    let mut session = Aba::from_config(cfg.clone()).unwrap();
+
+    let ds = generate(SynthKind::GaussianMixture { components: 4, spread: 3.0 }, 60, 3, 31, "a");
+    let mut live = session.partition_online(&ds.view(), 4).unwrap();
+    // Churn before eviction so the snapshot carries non-trivial state.
+    let arrivals = generate(SynthKind::Uniform, 6, 3, 32, "arr");
+    let ids = live.insert_batch(&arrivals.view()).unwrap();
+    live.remove(&ids[..2]).unwrap();
+    live.refine(5_000);
+    let reference = live.snapshot_string();
+    reg.insert("a", live).unwrap();
+
+    let ds_b = generate(SynthKind::Uniform, 40, 3, 33, "b");
+    let live_b = session.partition_online(&ds_b.view(), 4).unwrap();
+    reg.insert("b", live_b).unwrap();
+    assert!(reg.snapshot_path("a").exists(), "capacity-1 insert must evict 'a'");
+
+    let back = reg.get_or_load("a").unwrap().unwrap();
+    assert_eq!(back.lock().unwrap().snapshot_string(), reference);
+}
+
+#[test]
+fn fingerprint_mismatch_is_http_409() {
+    let dir = fresh_dir("fp409");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Snapshot written under a Greedy-solver config...
+    let greedy = AbaConfig { solver: SolverKind::Greedy, ..base_cfg() };
+    let ds = generate(SynthKind::Uniform, 40, 3, 41, "m");
+    Aba::from_config(greedy.clone())
+        .unwrap()
+        .partition_online(&ds.view(), 4)
+        .unwrap()
+        .save(dir.join("mismatch.json"))
+        .unwrap();
+    // ... served under the default (LAPJV) config is a conflict.
+    let server = Server::start(ServeConfig {
+        workers: 1,
+        snapshot_dir: dir,
+        cfg: base_cfg(),
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let (status, _, resp) = request(server.addr(), "GET", "/v1/partitions/mismatch", "");
+    assert_eq!(status, 409, "{resp}");
+    assert!(resp.contains("fingerprint") || resp.contains("snapshot"), "{resp}");
+    server.drain().unwrap();
+}
+
+#[test]
+fn concurrent_ops_on_distinct_partitions_match_serial() {
+    // The server runs its solves under Threads(3); a local Serial
+    // session doing the identical operations must agree bit-for-bit
+    // (pool determinism), including across concurrent HTTP clients.
+    let threaded = AbaConfig { parallelism: Parallelism::Threads(3), ..base_cfg() };
+    let server = Server::start(ServeConfig {
+        workers: 3,
+        snapshot_dir: fresh_dir("conc"),
+        cfg: threaded,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = server.addr();
+
+    let ds = generate(SynthKind::GaussianMixture { components: 5, spread: 2.5 }, 90, 4, 51, "c");
+    let arrivals = generate(SynthKind::Uniform, 9, 4, 52, "carr");
+    let create_body = |id: &str| {
+        jobj(vec![
+            ("id", Json::Str(id.into())),
+            ("k", Json::Num(3.0)),
+            ("csv", Json::Str(csv_of(&ds))),
+        ])
+    };
+    // Create "a" and "b" from two threads at once.
+    let handles: Vec<_> = ["a", "b"]
+        .into_iter()
+        .map(|id| {
+            let body = create_body(id);
+            std::thread::spawn(move || request(addr, "POST", "/v1/partitions", &body).0)
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), 201);
+    }
+    // Concurrent inserts of the same arrivals into both partitions.
+    let insert_body = jobj(vec![("csv", Json::Str(csv_of(&arrivals)))]);
+    let handles: Vec<_> = ["a", "b"]
+        .into_iter()
+        .map(|id| {
+            let body = insert_body.clone();
+            std::thread::spawn(move || {
+                request(addr, "POST", &format!("/v1/partitions/{id}/insert"), &body).0
+            })
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), 200);
+    }
+
+    // Local reference: identical ops under Serial.
+    let mut session = Aba::from_config(base_cfg()).unwrap();
+    let mut reference = session.partition_online(&ds.view(), 3).unwrap();
+    reference.insert_batch(&arrivals.view()).unwrap();
+    let ref_sizes = reference.sizes();
+    let ref_entries = reference.entries();
+    let ref_obj = reference.objective();
+
+    for id in ["a", "b"] {
+        let (status, _, resp) = request(addr, "GET", &format!("/v1/partitions/{id}"), "");
+        assert_eq!(status, 200, "{resp}");
+        let got = parse_json(&resp);
+        assert_eq!(got.get("n").and_then(Json::as_usize), Some(99));
+        let sizes: Vec<usize> = got
+            .get("sizes")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert_eq!(sizes, ref_sizes);
+        let labels: Vec<(u64, u32)> = got
+            .get("labels")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|pair| {
+                let p = pair.as_arr().unwrap();
+                (p[0].as_f64().unwrap() as u64, p[1].as_f64().unwrap() as u32)
+            })
+            .collect();
+        assert_eq!(labels, ref_entries, "partition '{id}' diverged from the serial reference");
+        let obj = got.get("objective").and_then(Json::as_f64).unwrap();
+        assert!(
+            (obj - ref_obj).abs() <= 1e-6 * ref_obj.abs().max(1.0),
+            "objective {obj} vs serial {ref_obj}"
+        );
+    }
+    server.drain().unwrap();
+}
+
+#[test]
+fn shard_merge_balanced_and_close_to_flat() {
+    let ds = generate(SynthKind::GaussianMixture { components: 6, spread: 3.0 }, 200, 4, 61, "sh");
+    let cfg = base_cfg();
+
+    // Library-level invariants on >= 4 shards.
+    let labels = solve_sharded(&ds.view(), 5, 4, &cfg).unwrap();
+    assert_eq!(labels.len(), 200);
+    let mut sizes = vec![0usize; 5];
+    for &l in &labels {
+        assert!(l < 5);
+        sizes[l as usize] += 1;
+    }
+    assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1, "{sizes:?}");
+    let sharded_obj = ClusterStats::compute(ds.view(), &labels, 5).ssd_total();
+    let flat = Aba::from_config(cfg.clone()).unwrap().partition_view(&ds.view(), 5).unwrap();
+    let flat_obj = ClusterStats::compute(ds.view(), &flat.labels, 5).ssd_total();
+    assert!(
+        sharded_obj >= 0.9 * flat_obj,
+        "shard-merge objective {sharded_obj} below 0.9x flat {flat_obj}"
+    );
+
+    // The fan-out is a wall-clock knob only.
+    let threaded = AbaConfig { parallelism: Parallelism::Threads(3), ..cfg.clone() };
+    assert_eq!(labels, solve_sharded(&ds.view(), 5, 4, &threaded).unwrap());
+
+    // And the HTTP create path accepts `"shards": 4`.
+    let server = Server::start(ServeConfig {
+        workers: 1,
+        snapshot_dir: fresh_dir("shards"),
+        cfg,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let body = jobj(vec![
+        ("id", Json::Str("sharded".into())),
+        ("k", Json::Num(5.0)),
+        ("shards", Json::Num(4.0)),
+        ("csv", Json::Str(csv_of(&ds))),
+    ]);
+    let (status, _, resp) = request(server.addr(), "POST", "/v1/partitions", &body);
+    assert_eq!(status, 201, "{resp}");
+    assert_eq!(parse_json(&resp).get("n").and_then(Json::as_usize), Some(200));
+    server.drain().unwrap();
+}
+
+#[test]
+fn backpressure_returns_429_with_retry_after() {
+    // One slow worker (300 ms per request) and a queue of one: a burst
+    // of six concurrent requests must overflow into 429s.
+    let server = Server::start(ServeConfig {
+        workers: 1,
+        queue: 1,
+        test_delay_ms: 300,
+        snapshot_dir: fresh_dir("bp"),
+        cfg: base_cfg(),
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..6)
+        .map(|_| std::thread::spawn(move || request(addr, "GET", "/healthz", "")))
+        .collect();
+    let results: Vec<(u16, String, String)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let ok = results.iter().filter(|(s, _, _)| *s == 200).count();
+    let rejected: Vec<&(u16, String, String)> =
+        results.iter().filter(|(s, _, _)| *s == 429).collect();
+    assert!(ok >= 1, "no request got through");
+    assert!(!rejected.is_empty(), "burst of 6 into queue=1 produced no 429");
+    for (_, raw, _) in &results {
+        if raw.starts_with("HTTP/1.1 429") {
+            assert!(raw.contains("Retry-After:"), "{raw}");
+        }
+    }
+    assert!(server.metrics().rejected_429.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+    server.drain().unwrap();
+}
