@@ -28,7 +28,13 @@
 //! delta-maintained vs from-scratch objective gap. The
 //! `serve_throughput` section stands up an in-process `serve::Server`
 //! with fewer resident-handle slots than partitions and records req/s,
-//! p50/p99 request latency, and forced eviction count.
+//! p50/p99 request latency, and forced eviction count. The `certify`
+//! section measures the quality-certificate machinery at n = 200k:
+//! the `gap_pct` row stores the solve's certified optimality gap *in
+//! percent* in the `objective` column, and the `cert_serial` /
+//! `cert_threads` rows store the standalone certification wall time in
+//! `algo_secs`/`total_secs` (their `objective` column carries the
+//! certificate's upper bound).
 //!
 //! Set `ABA_BENCH_ONLY=section[,section...]` to run a subset of the
 //! sections (e.g. `ABA_BENCH_ONLY=large_k_sparse`). Filtered runs
@@ -476,6 +482,63 @@ fn main() {
         push("churn_updates", churn_secs, total_secs, delta_obj);
         push("refine", refine_secs, refine_secs, delta_obj);
         push("scratch_resolve", fresh.timings.algo_secs(), scratch_secs, fresh.objective);
+    }
+
+    if section_enabled("certify") {
+        // Quality certificates at production scale: how tight the TSS
+        // upper bound is on a real solve, and what a standalone
+        // certification pass costs serial vs pooled (the pass is one
+        // O(nd) sweep, so it should be noise next to the solve).
+        let (n, k, d) = (200_000usize, 100usize, 16usize);
+        println!("\n## quality certificates (N={n}, D={d}, K={k} flat)");
+        let ds = mk(n, d, 13);
+        let cert_cfg = AbaConfig { certify: true, ..flat.clone() };
+        let mut session = Aba::from_config(cert_cfg).unwrap();
+        let (part, solve_secs) = timed(|| session.partition(&ds, k).unwrap());
+        let attached = session.last_certificate().expect("certify knob was on").clone();
+        let gap_pct = 100.0 * part.gap();
+        println!(
+            "  solve {solve_secs:>7.3}s  ofv={:.1}  bound={:.1}  certified gap {gap_pct:.4}%",
+            part.objective,
+            part.upper_bound()
+        );
+        let (cert_serial, serial_secs) =
+            timed(|| aba::cert::bounds::certify(&ds.view(), k).unwrap());
+        let pool = aba::runtime::WorkerPool::new(auto_threads);
+        let (cert_par, par_secs) = timed(|| {
+            aba::cert::bounds::certify_with_pool(&ds.view(), k, Some(&pool)).unwrap()
+        });
+        assert_eq!(
+            cert_serial.upper_bound.to_bits(),
+            cert_par.upper_bound.to_bits(),
+            "pooled certification must be bit-identical"
+        );
+        println!(
+            "  certification: serial {serial_secs:>7.3}s | threads({auto_threads}) \
+             {par_secs:>7.3}s ({:>5.2}x) | bit-identical: yes | attached-cert pass {:.3}s",
+            serial_secs / par_secs.max(1e-9),
+            attached.secs
+        );
+        record(&mut recs, "certify", "solve_with_cert", &ds, k, 1, &part, solve_secs);
+        record(&mut recs, "certify", "gap_pct", &ds, k, 1, &part, solve_secs);
+        {
+            let r = recs.last_mut().unwrap();
+            r.objective = gap_pct;
+            r.algo_secs = attached.secs;
+            r.total_secs = attached.secs;
+        }
+        record(&mut recs, "certify", "cert_serial", &ds, k, 1, &part, serial_secs);
+        {
+            let r = recs.last_mut().unwrap();
+            r.objective = cert_serial.upper_bound;
+            r.algo_secs = serial_secs;
+        }
+        record(&mut recs, "certify", "cert_threads", &ds, k, auto_threads, &part, par_secs);
+        {
+            let r = recs.last_mut().unwrap();
+            r.objective = cert_par.upper_bound;
+            r.algo_secs = par_secs;
+        }
     }
 
     if section_enabled("serve_throughput") {

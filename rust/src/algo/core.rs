@@ -338,7 +338,7 @@ fn solve_batch_sparse(
     pool: Option<&WorkerPool>,
 ) -> Option<Vec<usize>> {
     debug_assert_eq!(xb.len(), m * d);
-    debug_assert!(c0 >= 1 && c0 < k);
+    debug_assert!((1..k).contains(&c0));
     if matches!(solver, SolverKind::Greedy) {
         return None; // no sparse mode for greedy; the caller gates this
     }

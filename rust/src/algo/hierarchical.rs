@@ -71,7 +71,7 @@ pub fn balanced_factorization(k: usize, l: usize) -> Option<Vec<usize>> {
     while d * d <= k {
         if k % d == 0 {
             for cand in [d, k / d] {
-                if cand >= 2 && cand < k {
+                if (2..k).contains(&cand) {
                     let gap = (cand as f64 - ideal).abs();
                     if gap < best_gap {
                         best_gap = gap;

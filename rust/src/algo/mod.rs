@@ -97,6 +97,73 @@ impl std::str::FromStr for Variant {
     }
 }
 
+/// The objective a session optimizes.
+///
+/// ABA itself maximizes *diversity* (the within-anticluster sum of
+/// squares, in both its centroid and pairwise forms). *Dispersion* —
+/// the minimum within-group pairwise distance — is a different
+/// objective with a different complexity landscape: NP-hard for
+/// `k >= 3`, but exactly solvable in polynomial time for `k == 2`
+/// under cardinality constraints via the coloring construction in
+/// [`crate::cert::two_color`]. Selecting
+/// [`Criterion::Dispersion`] therefore dispatches `k == 2` solves to
+/// that exact oracle and rejects everything else with a typed error
+/// rather than silently approximating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Criterion {
+    /// Maximize within-anticluster diversity (the paper's objective;
+    /// the default).
+    Diversity,
+    /// Maximize the minimum within-group pairwise distance. Exact for
+    /// `k == 2` (O(n² log n)); other `k` are rejected.
+    Dispersion,
+}
+
+impl Criterion {
+    /// Every criterion, in display order — single source of truth for
+    /// the CLI (`Display`, `FromStr`, help text).
+    pub const ALL: [Criterion; 2] = [Criterion::Diversity, Criterion::Dispersion];
+
+    /// The canonical (CLI) spelling.
+    pub const fn as_str(self) -> &'static str {
+        match self {
+            Criterion::Diversity => "diversity",
+            Criterion::Dispersion => "dispersion",
+        }
+    }
+
+    /// Accepted spellings joined with `|`, for help and error messages.
+    pub fn accepted() -> String {
+        Self::ALL
+            .iter()
+            .map(|v| v.as_str())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+}
+
+impl std::fmt::Display for Criterion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Criterion {
+    type Err = AbaError;
+    fn from_str(s: &str) -> AbaResult<Self> {
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|v| v.as_str() == s)
+            .ok_or_else(|| {
+                AbaError::InvalidInput(format!(
+                    "unknown criterion '{s}' (accepted: {})",
+                    Criterion::accepted()
+                ))
+            })
+    }
+}
+
 /// Configuration for an ABA run. Prefer building a
 /// [`crate::solver::Aba`] session via `Aba::builder()`, which owns this
 /// plus a backend and scratch.
@@ -132,6 +199,20 @@ pub struct AbaConfig {
     /// default on ABA's structured matrices (see the note on
     /// [`core::Scratch`]).
     pub lapjv_warm: Option<bool>,
+    /// The objective to optimize. [`Criterion::Dispersion`] routes
+    /// `k == 2` to the exact coloring solver and rejects other shapes;
+    /// excluded from [`AbaConfig::fingerprint`] because dispersion
+    /// sessions refuse to hand out online partitions at all.
+    pub criterion: Criterion,
+    /// Also compute a standalone, solver-independent quality
+    /// certificate ([`crate::cert::bounds::Certificate`]) on every
+    /// solve, retrievable via
+    /// [`crate::Aba::last_certificate`]. Off by default: the
+    /// partition-attached `upper_bound()`/`gap()` are free either way;
+    /// this knob adds the separately-timed O(nd) certification pass
+    /// (pool-parallel under `parallelism`) that the CLI and benches
+    /// report.
+    pub certify: bool,
 }
 
 impl AbaConfig {
@@ -164,6 +245,8 @@ impl Default for AbaConfig {
             strict_divisibility: false,
             candidates: CandidateMode::Auto,
             lapjv_warm: None,
+            criterion: Criterion::Diversity,
+            certify: false,
         }
     }
 }
@@ -371,6 +454,28 @@ mod tests {
         assert_eq!(Variant::accepted(), "base|small|auto");
         let err = "x".parse::<Variant>().unwrap_err();
         assert!(err.to_string().contains("base|small|auto"), "{err}");
+    }
+
+    #[test]
+    fn criterion_display_round_trips_with_fromstr() {
+        for c in Criterion::ALL {
+            assert_eq!(c.to_string().parse::<Criterion>().unwrap(), c);
+        }
+        assert_eq!(Criterion::accepted(), "diversity|dispersion");
+        let err = "minmax".parse::<Criterion>().unwrap_err();
+        assert!(err.to_string().contains("diversity|dispersion"), "{err}");
+    }
+
+    #[test]
+    fn criterion_does_not_perturb_the_fingerprint() {
+        // Snapshot compatibility: dispersion sessions never produce
+        // online partitions, so the fingerprint ignores the criterion
+        // (and the certify toggle) and existing snapshots keep loading.
+        let mut cfg = AbaConfig::default();
+        let base = cfg.fingerprint();
+        cfg.criterion = Criterion::Dispersion;
+        cfg.certify = true;
+        assert_eq!(cfg.fingerprint(), base);
     }
 
     #[test]

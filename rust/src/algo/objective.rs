@@ -21,6 +21,12 @@ pub struct ClusterStats {
     /// Per-anticluster sum of squared distances to the anticluster
     /// centroid (the "diversity" of Tables 6/10).
     pub ssd: Vec<f64>,
+    /// Between-group sum of squares `Σ_c m_c ||μ_c − μ||²` — the gap
+    /// term of the total-sum identity `TSS = ssd_total + bgss`. A sum
+    /// of non-negative terms, so `ssd_total + bgss >= ssd_total` holds
+    /// exactly in floating point; [`crate::Partition::upper_bound`] and
+    /// [`crate::Partition::gap`] are derived from it.
+    pub bgss: f64,
 }
 
 impl ClusterStats {
@@ -41,6 +47,19 @@ impl ClusterStats {
                 *s += v as f64;
             }
         }
+        // Global centroid from the per-cluster sums (O(kd)) — feeds the
+        // between-group term below without another pass over the rows.
+        let mut global = vec![0f64; d];
+        for c in 0..k {
+            for (g, s) in global.iter_mut().zip(&sums[c * d..(c + 1) * d]) {
+                *g += s;
+            }
+        }
+        if n > 0 {
+            for g in global.iter_mut() {
+                *g /= n as f64;
+            }
+        }
         let mut centroids = sums;
         for c in 0..k {
             if sizes[c] > 0 {
@@ -49,12 +68,24 @@ impl ClusterStats {
                 }
             }
         }
+        let mut bgss = 0f64;
+        for c in 0..k {
+            if sizes[c] == 0 {
+                continue;
+            }
+            let dev: f64 = centroids[c * d..(c + 1) * d]
+                .iter()
+                .zip(&global)
+                .map(|(&m, &g)| (m - g) * (m - g))
+                .sum();
+            bgss += sizes[c] as f64 * dev;
+        }
         let mut ssd = vec![0f64; k];
         for i in 0..n {
             let c = labels[i] as usize;
             ssd[c] += sq_dist_to_f64(ds.row(i), &centroids[c * d..(c + 1) * d]);
         }
-        Self { sizes, ssd }
+        Self { sizes, ssd, bgss }
     }
 
     /// Centroid-form objective: total SSD to anticluster centroids (the
@@ -70,6 +101,14 @@ impl ClusterStats {
             .zip(&self.ssd)
             .map(|(&n, &s)| n as f64 * s)
             .sum()
+    }
+
+    /// Total sum of squares around the global centroid, via the
+    /// identity `TSS = ssd_total + bgss`. Partition-independent up to
+    /// accumulation order; the partition-attached diversity upper
+    /// bound ([`crate::Partition::upper_bound`]).
+    pub fn total_ss(&self) -> f64 {
+        self.ssd_total() + self.bgss
     }
 
     /// Standard deviation of per-anticluster diversity (Table 6).
@@ -314,7 +353,7 @@ mod tests {
 
     #[test]
     fn diversity_stats() {
-        let stats = ClusterStats { sizes: vec![2, 2, 2], ssd: vec![1.0, 3.0, 5.0] };
+        let stats = ClusterStats { sizes: vec![2, 2, 2], ssd: vec![1.0, 3.0, 5.0], bgss: 0.0 };
         assert!((stats.diversity_sd() - (8.0f64 / 3.0).sqrt()).abs() < 1e-12);
         assert_eq!(stats.diversity_range(), 4.0);
         assert_eq!(stats.ssd_total(), 9.0);
@@ -324,15 +363,15 @@ mod tests {
     #[test]
     fn ratio_convention_matches_table11() {
         // Spread <= 1 counts as perfectly balanced.
-        let s = ClusterStats { sizes: vec![3, 4, 4], ssd: vec![0.0; 3] };
+        let s = ClusterStats { sizes: vec![3, 4, 4], ssd: vec![0.0; 3], bgss: 0.0 };
         assert_eq!(s.min_max_ratio_pct(), 100.0);
-        let s = ClusterStats { sizes: vec![2, 4], ssd: vec![0.0; 2] };
+        let s = ClusterStats { sizes: vec![2, 4], ssd: vec![0.0; 2], bgss: 0.0 };
         assert_eq!(s.min_max_ratio_pct(), 50.0);
     }
 
     #[test]
     fn single_cluster_sd_zero() {
-        let s = ClusterStats { sizes: vec![5], ssd: vec![2.0] };
+        let s = ClusterStats { sizes: vec![5], ssd: vec![2.0], bgss: 0.0 };
         assert_eq!(s.diversity_sd(), 0.0);
     }
 

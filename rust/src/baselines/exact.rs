@@ -82,7 +82,7 @@ pub fn solve<'a>(
     let ds: DataView<'a> = data.into();
     let n = ds.n();
     let d = ds.d();
-    assert!(k >= 1 && k <= n);
+    assert!((1..=n).contains(&k));
     // Per-object squared norms.
     let norms: Vec<f64> = (0..n)
         .map(|i| ds.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum())

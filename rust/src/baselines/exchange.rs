@@ -125,7 +125,7 @@ pub fn fast_anticlustering<'a>(
     let ds: DataView<'a> = data.into();
     let n = ds.n();
     let d = ds.d();
-    assert!(k >= 1 && k <= n);
+    assert!((1..=n).contains(&k));
     let start = Instant::now();
     let mut rng = Pcg32::new(cfg.seed);
 

@@ -44,7 +44,7 @@ impl Anticlusterer for RandomPartition {
 
 /// Random balanced partition of `n` objects into `k` groups.
 pub fn random_partition(n: usize, k: usize, seed: u64) -> Vec<u32> {
-    assert!(k >= 1 && k <= n);
+    assert!((1..=n).contains(&k));
     let mut rng = Pcg32::new(seed);
     let mut idx: Vec<usize> = (0..n).collect();
     rng.shuffle(&mut idx);
@@ -60,7 +60,7 @@ pub fn random_partition(n: usize, k: usize, seed: u64) -> Vec<u32> {
 /// `floor(|N_g|/K)..=ceil(|N_g|/K)` objects of category g.
 pub fn random_partition_categorical(categories: &[u32], k: usize, seed: u64) -> Vec<u32> {
     let n = categories.len();
-    assert!(k >= 1 && k <= n);
+    assert!((1..=n).contains(&k));
     let g = categories.iter().copied().max().map_or(0, |m| m as usize + 1);
     let mut rng = Pcg32::new(seed);
     let mut labels = vec![0u32; n];

@@ -1,0 +1,251 @@
+//! Scalable upper bounds on the anticlustering diversity objective.
+//!
+//! # The bound
+//!
+//! Write a partition's centroid-form diversity (what ABA maximizes) as
+//! the within-group sum of squares `WGSS(C) = Σ_c Σ_{i∈c} ||x_i − μ_c||²`.
+//! The classical total-sum decomposition says
+//!
+//! ```text
+//! TSS = WGSS(C) + BGSS(C),    BGSS(C) = Σ_c m_c ||μ_c − μ||² ≥ 0
+//! ```
+//!
+//! where `TSS = Σ_i ||x_i − μ||²` is partition-independent. Hence for
+//! *every* partition, `WGSS(C) ≤ TSS − bgss_lb` for any valid lower
+//! bound `bgss_lb` on the between-group term — this is the complement
+//! of bounding MSSC (minimum sum-of-squares clustering) from below:
+//! a lower bound on the clustering cost of the k group centroids
+//! tightens the anticlustering upper bound. We ship the cheap
+//! centroid relaxation of that family (group centroids uncon­strained,
+//! so the infimum of `BGSS` is 0 and `upper_bound = TSS`); the
+//! `bgss_lb` field keeps the seam open for stronger MSSC-style
+//! relaxations without an API change.
+//!
+//! The pairwise form `W(C) = Σ_c m_c · ssd_c` (Fact 1 of the paper)
+//! obeys `W(C) ≤ m_max · TSS` with `m_max = ⌈n/k⌉` under ABA's
+//! balanced cardinalities.
+//!
+//! # Cost and determinism
+//!
+//! [`certify`] makes one pass over the rows accumulating the first and
+//! second moments `(Σx, Σ||x||²)` in fixed 4096-row chunks; chunk
+//! partials are folded in chunk order, so serial and
+//! [`WorkerPool`]-parallel runs produce bit-identical certificates.
+//! That is O(nd) work total — million-scale instances certify in
+//! seconds on one core and fractions of a second on a pool.
+//!
+//! Partitions get the same bound for free: [`crate::Partition`] derives
+//! `upper_bound() = objective + BGSS(C)` from its [`ClusterStats`],
+//! which is exact in floating point (`BGSS` is a sum of non-negative
+//! terms), so the property `upper_bound() ≥ diversity objective` holds
+//! to the last bit.
+
+use std::time::Instant;
+
+use crate::algo::objective::ClusterStats;
+use crate::data::DataView;
+use crate::error::{AbaError, AbaResult};
+use crate::runtime::WorkerPool;
+
+/// Rows per accumulation chunk. Fixed so the fold order (and thus the
+/// f64 result) does not depend on thread count.
+const CHUNK: usize = 4096;
+
+/// A solver-independent quality certificate for one `(dataset, k)`
+/// instance: every balanced k-partition's diversity objective is at
+/// most [`Certificate::upper_bound`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Certificate {
+    /// Number of rows certified.
+    pub n: usize,
+    /// Number of anticlusters the bound is for.
+    pub k: usize,
+    /// Total sum of squares around the global centroid.
+    pub total_ss: f64,
+    /// Lower bound on the between-group term `BGSS` over balanced
+    /// k-partitions. Currently the centroid relaxation (0.0); kept as
+    /// a field so stronger MSSC-style bounds slot in transparently.
+    pub bgss_lb: f64,
+    /// Upper bound on the centroid-form diversity objective
+    /// (`total_ss − bgss_lb`).
+    pub upper_bound: f64,
+    /// Upper bound on the pairwise form `W(C) = Σ_c m_c · ssd_c`,
+    /// namely `⌈n/k⌉ · total_ss`.
+    pub pairwise_upper_bound: f64,
+    /// Wall-clock seconds spent computing the certificate.
+    pub secs: f64,
+}
+
+impl Certificate {
+    /// Relative optimality gap of `objective` against this
+    /// certificate's bound — see the free function [`gap`].
+    pub fn gap(&self, objective: f64) -> f64 {
+        gap(objective, self.upper_bound)
+    }
+}
+
+/// Relative optimality gap `(upper_bound − objective) / upper_bound`,
+/// clamped to `[0, 1]`. A gap of `0.0` means the solution provably
+/// attains the bound (or the instance is degenerate with
+/// `upper_bound == 0`); `0.02` means the solution is certified within
+/// 2% of optimal.
+pub fn gap(objective: f64, upper_bound: f64) -> f64 {
+    if upper_bound <= 0.0 {
+        return 0.0;
+    }
+    ((upper_bound - objective) / upper_bound).clamp(0.0, 1.0)
+}
+
+/// Diversity upper bound derived from a partition's per-cluster stats:
+/// `objective + BGSS` (the partition's own total-sum identity). Exact
+/// in floating point because `BGSS` is a sum of non-negative terms.
+pub(crate) fn upper_bound_from_stats(stats: &ClusterStats) -> f64 {
+    stats.ssd_total() + stats.bgss
+}
+
+/// Certify `(view, k)` serially. See [`certify_with_pool`].
+pub fn certify(view: &DataView, k: usize) -> AbaResult<Certificate> {
+    certify_with_pool(view, k, None)
+}
+
+/// Compute a [`Certificate`] for `(view, k)`: one chunked pass over
+/// the rows (spread over `pool` when given), folded deterministically.
+///
+/// Errors with [`AbaError::EmptyDataset`] / [`AbaError::InvalidK`] on
+/// degenerate instances; never looks at labels, so the bound applies
+/// to any solver's output on this data.
+pub fn certify_with_pool(
+    view: &DataView,
+    k: usize,
+    pool: Option<&WorkerPool>,
+) -> AbaResult<Certificate> {
+    let n = view.n();
+    let d = view.d();
+    if n == 0 {
+        return Err(AbaError::EmptyDataset);
+    }
+    if k == 0 || k > n {
+        return Err(AbaError::InvalidK {
+            k,
+            n,
+            reason: "certificates need 1 <= k <= n".into(),
+        });
+    }
+    let t0 = Instant::now();
+
+    let n_chunks = n.div_ceil(CHUNK);
+    let mut parts: Vec<(Vec<f64>, f64)> = vec![(vec![0.0; d], 0.0); n_chunks];
+    let fill = |ci: usize, slot: &mut (Vec<f64>, f64)| {
+        let lo = ci * CHUNK;
+        let hi = (lo + CHUNK).min(n);
+        for i in lo..hi {
+            let row = view.row(i);
+            for (acc, &x) in slot.0.iter_mut().zip(row) {
+                *acc += f64::from(x);
+            }
+            slot.1 += row.iter().map(|&x| f64::from(x) * f64::from(x)).sum::<f64>();
+        }
+    };
+    match pool {
+        Some(p) => p.run_mut(&mut parts, &fill),
+        None => {
+            for (ci, slot) in parts.iter_mut().enumerate() {
+                fill(ci, slot);
+            }
+        }
+    }
+
+    // Fold in chunk order: identical result for serial and pooled runs.
+    let mut sum = vec![0.0f64; d];
+    let mut sumsq = 0.0f64;
+    for (s, q) in &parts {
+        for (acc, v) in sum.iter_mut().zip(s) {
+            *acc += *v;
+        }
+        sumsq += *q;
+    }
+    let norm2: f64 = sum.iter().map(|s| s * s).sum();
+    let total_ss = (sumsq - norm2 / n as f64).max(0.0);
+
+    // Centroid relaxation of the MSSC-complement bound: with the k
+    // group centroids unconstrained, inf BGSS = 0. Stronger
+    // relaxations land here without touching callers.
+    let bgss_lb = 0.0;
+    let m_max = n.div_ceil(k);
+
+    Ok(Certificate {
+        n,
+        k,
+        total_ss,
+        bgss_lb,
+        upper_bound: total_ss - bgss_lb,
+        pairwise_upper_bound: m_max as f64 * total_ss,
+        secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthKind};
+    use crate::runtime::Parallelism;
+    use crate::solver::Anticlusterer;
+
+    #[test]
+    fn serial_and_pooled_certificates_are_bit_identical() {
+        let ds = generate(SynthKind::GaussianMixture { components: 4, spread: 2.5 }, 9000, 7, 11, "cert");
+        let pool = WorkerPool::new(3);
+        let a = certify(&ds.view(), 5).unwrap();
+        let b = certify_with_pool(&ds.view(), 5, Some(&pool)).unwrap();
+        assert_eq!(a.total_ss.to_bits(), b.total_ss.to_bits());
+        assert_eq!(a.upper_bound.to_bits(), b.upper_bound.to_bits());
+        assert!(a.total_ss > 0.0);
+        assert_eq!(a.pairwise_upper_bound, 1800.0 * a.total_ss);
+    }
+
+    #[test]
+    fn bound_dominates_every_solve() {
+        let ds = generate(SynthKind::Uniform, 240, 4, 3, "cert-dom");
+        let cert = certify(&ds.view(), 6).unwrap();
+        for par in [Parallelism::Serial, Parallelism::Threads(3)] {
+            let part = crate::Aba::builder()
+                .parallelism(par)
+                .build()
+                .unwrap()
+                .partition(&ds, 6)
+                .unwrap();
+            assert!(
+                part.objective <= cert.upper_bound + 1e-9 * cert.upper_bound.abs(),
+                "objective {} exceeds certificate bound {}",
+                part.objective,
+                cert.upper_bound
+            );
+            assert!(cert.gap(part.objective) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn gap_is_clamped_and_degenerate_safe() {
+        assert_eq!(gap(5.0, 0.0), 0.0);
+        assert_eq!(gap(10.0, 10.0), 0.0);
+        assert_eq!(gap(11.0, 10.0), 0.0); // fp overshoot clamps, never negative
+        assert!((gap(98.0, 100.0) - 0.02).abs() < 1e-12);
+        assert_eq!(gap(-1.0, 10.0), 1.0);
+    }
+
+    #[test]
+    fn degenerate_instances_error_typed() {
+        let ds = generate(SynthKind::Uniform, 10, 2, 1, "cert-k");
+        assert!(matches!(certify(&ds.view(), 0), Err(AbaError::InvalidK { .. })));
+        assert!(matches!(certify(&ds.view(), 11), Err(AbaError::InvalidK { .. })));
+    }
+
+    #[test]
+    fn constant_data_certifies_at_zero() {
+        let rows = vec![vec![2.5f32, -1.0]; 50];
+        let ds = crate::data::Dataset::from_rows("const", &rows).unwrap();
+        let cert = certify(&ds.view(), 5).unwrap();
+        assert_eq!(cert.upper_bound, 0.0);
+        assert_eq!(cert.gap(0.0), 0.0);
+    }
+}

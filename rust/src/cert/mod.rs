@@ -1,0 +1,36 @@
+//! Quality certificates: upper bounds, optimality gaps, and an exact
+//! K=2 dispersion oracle.
+//!
+//! ABA is a heuristic for an NP-hard maximization problem, so a raw
+//! objective value says nothing about solution quality on its own.
+//! This module supplies the evidence:
+//!
+//! - [`bounds`] — scalable upper bounds on the diversity objective via
+//!   the total-sum decomposition `TSS = WGSS + BGSS`. Any partition's
+//!   diversity (within-group sum of squares) is at most the total sum
+//!   of squares minus a lower bound on the between-group term, so
+//!   `upper_bound = TSS - bgss_lb` certifies every solver's output.
+//!   A single pass over the rows (chunked, optionally spread over the
+//!   [`WorkerPool`](crate::runtime::WorkerPool)) certifies
+//!   million-scale instances in seconds.
+//! - [`two_color`] — the exact polynomial cardinality-constrained
+//!   K=2 *dispersion* solver built on Tran & Mu's coloring
+//!   construction: binary-search the pairwise distances, forbid every
+//!   pair closer than the threshold from sharing a group (a proper
+//!   2-coloring of the conflict graph), and balance the color classes
+//!   with a per-component subset-sum. Used as a fast path in solver
+//!   dispatch (`k == 2` + the dispersion criterion) and as a ground
+//!   truth oracle for the test suite.
+//!
+//! Entry points: [`Partition::upper_bound`](crate::Partition::upper_bound)
+//! and [`Partition::gap`](crate::Partition::gap) on every solve result,
+//! [`AbaBuilder::certify`](crate::AbaBuilder::certify) for timed
+//! standalone certificates, `aba run --certify` on the CLI, and
+//! [`OnlinePartition::gap`](crate::OnlinePartition::gap) for live
+//! handles.
+
+pub mod bounds;
+pub mod two_color;
+
+pub use bounds::{certify, certify_with_pool, gap, Certificate};
+pub use two_color::{solve_balanced, solve_with_sizes, TwoColorResult};

@@ -1,0 +1,274 @@
+//! Exact cardinality-constrained K=2 dispersion via Tran & Mu's
+//! coloring construction.
+//!
+//! Maximizing *dispersion* (the minimum within-group pairwise
+//! distance) over balanced 2-partitions is polynomial, unlike the
+//! k ≥ 3 case: a partition has dispersion ≥ t exactly when every pair
+//! closer than t is split across the two groups — i.e. when the
+//! "conflict graph" on pairs with `d² < t` is properly 2-colored by
+//! the partition. That yields the construction:
+//!
+//! 1. Sort the n(n−1)/2 pairwise squared distances; the optimum is one
+//!    of the distinct values (or ∞ when both groups are singletons).
+//! 2. Binary-search the threshold. A threshold `t` is *feasible* when
+//!    the conflict graph is bipartite **and** the color classes can be
+//!    balanced to the requested cardinalities: each connected component
+//!    fixes its two sides up to a swap, so hitting the target size is a
+//!    per-component subset-sum over `(a_i, b_i)` side sizes.
+//! 3. Rebuild the partition at the largest feasible threshold.
+//!
+//! Feasibility is monotone (larger thresholds only add conflict
+//! edges), so the binary search is sound; infeasibility of the next
+//! distinct value certifies optimality of the returned partition.
+//! Total cost is `O(n² log n)` time and `O(n²)` memory — exact at a
+//! few thousand points, which is what the solver fast path
+//! (`k == 2` + [`Criterion::Dispersion`](crate::algo::Criterion)) and
+//! the test oracle need.
+
+use crate::algo::objective;
+use crate::data::DataView;
+use crate::error::{AbaError, AbaResult};
+
+/// An exact K=2 dispersion solution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TwoColorResult {
+    /// Group label in `{0, 1}` per object.
+    pub labels: Vec<u32>,
+    /// The partition's dispersion: minimum within-group squared
+    /// Euclidean distance (`f64::INFINITY` when both groups are
+    /// singletons). Provably maximal for the requested cardinalities.
+    pub dispersion: f64,
+}
+
+/// Solve with ABA's balanced cardinalities: group 0 gets `⌈n/2⌉`
+/// objects, group 1 the rest.
+pub fn solve_balanced(view: &DataView) -> AbaResult<TwoColorResult> {
+    solve_with_sizes(view, view.n().div_ceil(2))
+}
+
+/// Solve with an explicit cardinality: group 0 gets exactly `m0`
+/// objects (`1 <= m0 <= n-1`), group 1 the remaining `n − m0`.
+pub fn solve_with_sizes(view: &DataView, m0: usize) -> AbaResult<TwoColorResult> {
+    let n = view.n();
+    if n == 0 {
+        return Err(AbaError::EmptyDataset);
+    }
+    if n < 2 {
+        return Err(AbaError::InvalidK {
+            k: 2,
+            n,
+            reason: "two groups need at least two objects".into(),
+        });
+    }
+    if m0 == 0 || m0 >= n {
+        return Err(AbaError::InvalidInput(format!(
+            "group-0 cardinality must satisfy 1 <= m0 <= n-1, got m0={m0} for n={n}"
+        )));
+    }
+
+    // All pairwise squared distances, ascending; ties broken by index
+    // so the construction is deterministic.
+    let mut pairs: Vec<(f64, u32, u32)> = Vec::with_capacity(n * (n - 1) / 2);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            pairs.push((view.dist2(i, j), i as u32, j as u32));
+        }
+    }
+    pairs.sort_by(|a, b| a.partial_cmp(b).expect("finite distances"));
+
+    // Candidate thresholds: each distinct distance paired with the
+    // number of strictly-smaller pairs (the conflict-edge prefix), plus
+    // the ∞ sentinel (all pairs in conflict — feasible only at n = 2).
+    let mut cands: Vec<(f64, usize)> = Vec::new();
+    for (idx, &(d, _, _)) in pairs.iter().enumerate() {
+        if cands.last().map(|&(v, _)| v) != Some(d) {
+            cands.push((d, idx));
+        }
+    }
+    cands.push((f64::INFINITY, pairs.len()));
+
+    // Binary search the largest feasible threshold. Index 0 is always
+    // feasible: its conflict prefix is empty, so any split of the
+    // requested sizes works.
+    let mut lo = 0usize;
+    let mut best = color_and_balance(n, &pairs[..cands[0].1], m0)
+        .expect("empty conflict graph is always balanceable");
+    let mut hi = cands.len() - 1;
+    while lo < hi {
+        let mid = lo + (hi - lo).div_ceil(2);
+        match color_and_balance(n, &pairs[..cands[mid].1], m0) {
+            Some(labels) => {
+                best = labels;
+                lo = mid;
+            }
+            None => hi = mid - 1,
+        }
+    }
+
+    let dispersion = objective::dispersion(view, &best, 2);
+    debug_assert!(dispersion >= cands[lo].0 || dispersion.is_infinite());
+    Ok(TwoColorResult { labels: best, dispersion })
+}
+
+/// Properly 2-color the conflict graph given by `edges` and balance the
+/// component sides to put exactly `m0` vertices in group 0. Returns
+/// `None` when the graph is odd-cycled or no side-choice hits `m0`.
+fn color_and_balance(n: usize, edges: &[(f64, u32, u32)], m0: usize) -> Option<Vec<u32>> {
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for &(_, i, j) in edges {
+        adj[i as usize].push(j);
+        adj[j as usize].push(i);
+    }
+
+    // BFS 2-coloring per connected component; `comp_sides[c]` collects
+    // the component's vertices split by color.
+    let mut color: Vec<i8> = vec![-1; n];
+    let mut comp_sides: Vec<[Vec<u32>; 2]> = Vec::new();
+    let mut queue: Vec<u32> = Vec::new();
+    for start in 0..n {
+        if color[start] >= 0 {
+            continue;
+        }
+        let mut sides: [Vec<u32>; 2] = [Vec::new(), Vec::new()];
+        color[start] = 0;
+        sides[0].push(start as u32);
+        queue.clear();
+        queue.push(start as u32);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head] as usize;
+            head += 1;
+            let cu = color[u];
+            for &v in &adj[u] {
+                let v = v as usize;
+                if color[v] < 0 {
+                    color[v] = 1 - cu;
+                    sides[(1 - cu) as usize].push(v as u32);
+                    queue.push(v as u32);
+                } else if color[v] == cu {
+                    return None; // odd cycle: not 2-colorable
+                }
+            }
+        }
+        comp_sides.push(sides);
+    }
+
+    // Subset-sum over component side sizes: pick side 0 or side 1 of
+    // each component into group 0, hitting exactly m0. `choice[c][s]`
+    // remembers which side reached sum `s` after component `c`.
+    let nc = comp_sides.len();
+    let mut reach = vec![false; m0 + 1];
+    reach[0] = true;
+    let mut choice: Vec<Vec<Option<u8>>> = vec![vec![None; m0 + 1]; nc];
+    for (c, sides) in comp_sides.iter().enumerate() {
+        let (a, b) = (sides[0].len(), sides[1].len());
+        let mut next = vec![false; m0 + 1];
+        for s in 0..=m0 {
+            if !reach[s] {
+                continue;
+            }
+            // Prefer side 0 on ties for a deterministic reconstruction.
+            if s + a <= m0 && !next[s + a] {
+                next[s + a] = true;
+                choice[c][s + a] = Some(0);
+            }
+            if s + b <= m0 && !next[s + b] {
+                next[s + b] = true;
+                choice[c][s + b] = Some(1);
+            }
+        }
+        reach = next;
+    }
+    if !reach[m0] {
+        return None;
+    }
+
+    // Walk the choices back and emit labels.
+    let mut labels = vec![1u32; n];
+    let mut s = m0;
+    for c in (0..nc).rev() {
+        let side = choice[c][s].expect("reachable sum has a recorded choice") as usize;
+        for &v in &comp_sides[c][side] {
+            labels[v as usize] = 0;
+        }
+        s -= comp_sides[c][side].len();
+    }
+    debug_assert_eq!(s, 0);
+    Some(labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    fn ds_1d(xs: &[f32]) -> Dataset {
+        let rows: Vec<Vec<f32>> = xs.iter().map(|&x| vec![x]).collect();
+        Dataset::from_rows("two-color", &rows).unwrap()
+    }
+
+    #[test]
+    fn line_instance_has_known_optimum() {
+        // Points 0, 1, 10, 11: the optimal balanced split is {0,10} vs
+        // {1,11} (dispersion 100); any split keeping a near pair
+        // together scores at most 81.
+        let ds = ds_1d(&[0.0, 1.0, 10.0, 11.0]);
+        let res = solve_balanced(&ds.view()).unwrap();
+        assert_eq!(res.dispersion, 100.0);
+        assert_eq!(res.labels[0], res.labels[2]);
+        assert_eq!(res.labels[1], res.labels[3]);
+        assert_ne!(res.labels[0], res.labels[1]);
+    }
+
+    #[test]
+    fn two_points_disperse_to_infinity() {
+        let ds = ds_1d(&[3.0, 7.0]);
+        let res = solve_balanced(&ds.view()).unwrap();
+        assert!(res.dispersion.is_infinite());
+        let mut sorted = res.labels.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1]);
+    }
+
+    #[test]
+    fn duplicate_points_yield_zero_dispersion() {
+        let ds = ds_1d(&[5.0, 5.0, 5.0, 5.0]);
+        let res = solve_balanced(&ds.view()).unwrap();
+        assert_eq!(res.dispersion, 0.0);
+        assert_eq!(res.labels.iter().filter(|&&l| l == 0).count(), 2);
+    }
+
+    #[test]
+    fn unbalanced_cardinalities_are_respected() {
+        let ds = ds_1d(&[0.0, 1.0, 2.0, 30.0, 31.0]);
+        for m0 in 1..=4 {
+            let res = solve_with_sizes(&ds.view(), m0).unwrap();
+            assert_eq!(
+                res.labels.iter().filter(|&&l| l == 0).count(),
+                m0,
+                "m0={m0}"
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs_error_typed() {
+        let empty: Vec<Vec<f32>> = Vec::new();
+        let ds = Dataset::from_rows("e", &empty);
+        assert!(ds.is_err() || solve_balanced(&ds.unwrap().view()).is_err());
+        let one = ds_1d(&[1.0]);
+        assert!(matches!(
+            solve_balanced(&one.view()),
+            Err(AbaError::InvalidK { .. })
+        ));
+        let four = ds_1d(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(matches!(
+            solve_with_sizes(&four.view(), 0),
+            Err(AbaError::InvalidInput(_))
+        ));
+        assert!(matches!(
+            solve_with_sizes(&four.view(), 4),
+            Err(AbaError::InvalidInput(_))
+        ));
+    }
+}

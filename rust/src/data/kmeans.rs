@@ -32,7 +32,7 @@ pub fn kmeans<'a>(
 ) -> KMeansResult {
     let ds: DataView<'a> = data.into();
     let n = ds.n();
-    assert!(k >= 1 && k <= n, "k={k} out of range for n={n}");
+    assert!((1..=n).contains(&k), "k={k} out of range for n={n}");
     let d = ds.d();
     let mut rng = Pcg32::new(seed);
     let mut centroids = plus_plus_init(&ds, k, &mut rng);

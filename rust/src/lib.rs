@@ -31,6 +31,7 @@
 //! | [`algo::constraints`] | §4.3 (extension) | Must-link / cannot-link via super-object contraction and cost masking |
 //! | [`algo::hierarchical`] | §4.4, Lemma 1, Prop. 1 | Multi-level decomposition for large K, fanned out on the worker pool |
 //! | [`algo::objective`] | §3, Fact 1 | Both paper objectives, the per-cluster diversity stats, and the O(d) [`algo::objective::ClusterDelta`] add/remove deltas behind the online handles |
+//! | [`cert`] | §3 (objective), §7 (quality) | Quality certificates: scalable diversity upper bounds / optimality gaps, and the exact polynomial K=2 dispersion solver used as solver fast path and test oracle |
 //! | [`online`] | §1, §6 (serving) | Live [`OnlinePartition`] handles: delta-maintained insert/remove/refine with balance repair, plus fingerprinted save/load persistence |
 //! | [`serve`] | §6 (serving) | The `aba serve` HTTP service: a bounded accept/worker server managing concurrent [`OnlinePartition`] handles behind an LRU registry, with shard-and-merge solves and text metrics |
 //! | [`runtime`] | §5 (implementation) | Cost backends (native / Pallas-XLA via PJRT) and the [`runtime::pool`] parallel runtime |
@@ -173,6 +174,46 @@
 //! # Ok::<(), aba::AbaError>(())
 //! ```
 //!
+//! ## Quality certificates
+//!
+//! ABA is a heuristic for an NP-hard problem, so every result carries
+//! evidence of how good it is. The total-sum identity
+//! `TSS = WGSS + BGSS` makes the total sum of squares an upper bound
+//! on any balanced partition's diversity (see [`cert::bounds`] for the
+//! MSSC-relaxation framing), so each [`Partition`] reports
+//! [`Partition::upper_bound`] and a relative [`Partition::gap`] in
+//! `[0, 1]` for free — and live [`OnlinePartition`] handles maintain
+//! the same gap lazily off their per-cluster delta stats. Building a
+//! session with `.certify(true)` additionally times a standalone
+//! solver-independent [`cert::Certificate`] (one chunked O(nd) pass,
+//! pool-parallel, deterministic), which `aba run --certify` prints and
+//! the `certify` bench section records. For the *dispersion* objective
+//! at `k == 2`, [`cert::two_color`] is exact — available as a solver
+//! fast path via `.criterion(Criterion::Dispersion)` and as the test
+//! suite's ground-truth oracle ([`testing::oracle`]):
+//!
+//! ```
+//! use aba::{Aba, Anticlusterer};
+//! use aba::algo::Criterion;
+//! use aba::data::synth::{generate, SynthKind};
+//!
+//! let ds = generate(SynthKind::Uniform, 300, 6, 9, "certified");
+//! // --certify on the CLI does exactly this:
+//! let mut solver = Aba::builder().certify(true).build()?;
+//! let part = solver.partition(&ds, 10)?;
+//! assert!(part.upper_bound() >= part.objective);
+//! assert!((0.0..=1.0).contains(&part.gap()));
+//! let cert = solver.last_certificate().expect("certify(true) attaches one");
+//! assert!(cert.upper_bound >= part.objective);
+//! assert!(cert.gap(part.objective) < 0.25); // ABA lands close to the bound
+//!
+//! // Exact K=2 dispersion through the same session API.
+//! let mut exact = Aba::builder().criterion(Criterion::Dispersion).build()?;
+//! let two = exact.partition(&ds, 2)?;
+//! assert_eq!(two.sizes(), &[150, 150]);
+//! # Ok::<(), aba::AbaError>(())
+//! ```
+//!
 //! ## Serving
 //!
 //! The [`serve`] module wraps the online handles in a dependency-light
@@ -231,6 +272,7 @@
 pub mod algo;
 pub mod assignment;
 pub mod baselines;
+pub mod cert;
 pub mod data;
 pub mod error;
 pub mod experiments;

@@ -10,7 +10,7 @@
 //! aba selftest                          XLA artifacts vs native numerics check
 //! ```
 
-use aba::algo::{AbaConfig, Variant};
+use aba::algo::{AbaConfig, Criterion, Variant};
 use aba::assignment::{CandidateMode, SolverKind};
 use aba::data::synth::{catalog, load, Scale};
 use aba::experiments::{common::ExpOptions, figs, t11, t4, t4x, t8, t9};
@@ -66,7 +66,7 @@ fn print_help() {
                [--solver {solvers}] [--backend {backends}]\n\
                [--hier K1xK2[xK3]] [--threads {threads}] [--parallel]\n\
                [--candidates {candidates}] [--flat] [--strict] [--out labels.csv]\n\
-               [--save-partition part.json]\n\
+               [--save-partition part.json] [--certify] [--criterion {criterions}]\n\
            table t4|t6|t8|t9|t10|t11        regenerate a paper table\n\
                [--k K] [--datasets a,b|all] [--scale ...] [--quick]\n\
                [--time-limit SECS] [--out-dir DIR]\n\
@@ -85,6 +85,7 @@ fn print_help() {
            snapshot inspect FILE            print snapshot header without loading it\n\
            selftest                         XLA artifacts vs native check",
         variants = Variant::accepted(),
+        criterions = Criterion::accepted(),
         solvers = SolverKind::accepted(),
         backends = BackendKind::accepted(),
         threads = Parallelism::accepted(),
@@ -138,6 +139,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.has_flag("flat") {
         builder = builder.auto_hier(false);
     }
+    // `--criterion diversity|dispersion`: dispersion routes k=2 to the
+    // exact coloring solver (and rejects other k with a typed error).
+    let criterion = args
+        .get_parse::<Criterion>("criterion")?
+        .unwrap_or(Criterion::Diversity);
+    builder = builder.criterion(criterion);
+    // `--certify` attaches a timed, solver-independent quality
+    // certificate to the solve and prints objective/bound/gap below.
+    let certify = args.has_flag("certify");
+    builder = builder.certify(certify);
     // `--threads serial|auto|<n>` is the parallelism knob; the bare
     // `--parallel` flag is kept as an alias for `--threads auto`.
     let par = match args.get_parse::<Parallelism>("threads")? {
@@ -179,6 +190,29 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     println!("ofv (ssd)      {:.4}", part.objective);
     println!("W(C) pairwise  {:.4}", part.pairwise);
+    if criterion == Criterion::Dispersion {
+        println!(
+            "dispersion     {:.4} (exact k=2 optimum)",
+            aba::algo::objective::dispersion(&ds, &part.labels, part.k)
+        );
+    }
+    if certify {
+        // Partition-attached bound (free, from the solve's own stats)
+        // plus the standalone certificate's numbers and wall time.
+        println!(
+            "certificate    bound {:.4}  gap {:.4}%",
+            part.upper_bound(),
+            100.0 * part.gap()
+        );
+        if let Some(cert) = solver.last_certificate() {
+            println!(
+                "certify        total-sum {:.4}  pairwise bound {:.4}  ({} wall)",
+                cert.total_ss,
+                cert.pairwise_upper_bound,
+                fmt_secs(cert.secs)
+            );
+        }
+    }
     println!("diversity sd   {:.4}", stats.diversity_sd());
     println!("diversity rng  {:.4}", stats.diversity_range());
     println!(

@@ -238,6 +238,68 @@ impl OnlinePartition {
         self.clusters.iter().map(|cl| cl.cached_ssd).sum()
     }
 
+    /// Certified upper bound on the diversity objective of **any**
+    /// balanced k-partition of the handle's current contents:
+    /// `objective + BGSS` by the total-sum identity (see
+    /// [`crate::cert::bounds`]). Maintained lazily off the existing
+    /// per-cluster [`ClusterDelta`] stats — after the same
+    /// dirty-cluster refresh as [`OnlinePartition::objective`], the
+    /// between-group term folds the k `(m, S)` moments in O(kd); no
+    /// pass over the rows. `BGSS` is a sum of non-negative terms, so
+    /// `upper_bound() >= objective()` holds exactly in floating point.
+    pub fn upper_bound(&mut self) -> f64 {
+        let objective = self.objective(); // refreshes dirty clusters
+        objective + self.bgss()
+    }
+
+    /// Relative optimality gap `(upper_bound − objective) /
+    /// upper_bound` in `[0, 1]` (0 for empty or degenerate handles) —
+    /// the live analogue of [`Partition::gap`], reported by
+    /// `GET /v1/partitions/{id}` and the serve metrics.
+    pub fn gap(&mut self) -> f64 {
+        let objective = self.objective();
+        crate::cert::bounds::gap(objective, objective + self.bgss())
+    }
+
+    /// Between-group sum of squares `Σ_c m_c ||μ_c − μ||²` from the
+    /// maintained cluster moments. Callers refresh dirty clusters
+    /// first (via [`OnlinePartition::objective`]).
+    fn bgss(&self) -> f64 {
+        let n: usize = self.clusters.iter().map(|cl| cl.delta.len()).sum();
+        if n == 0 {
+            return 0.0;
+        }
+        let d = self.store.d;
+        let mut global = vec![0f64; d];
+        for cl in &self.clusters {
+            for (g, s) in global.iter_mut().zip(cl.delta.sum()) {
+                *g += s;
+            }
+        }
+        for g in global.iter_mut() {
+            *g /= n as f64;
+        }
+        let mut bgss = 0f64;
+        for cl in &self.clusters {
+            let m = cl.delta.len();
+            if m == 0 {
+                continue;
+            }
+            let dev: f64 = cl
+                .delta
+                .sum()
+                .iter()
+                .zip(&global)
+                .map(|(&s, &g)| {
+                    let diff = s / m as f64 - g;
+                    diff * diff
+                })
+                .sum();
+            bgss += m as f64 * dev;
+        }
+        bgss
+    }
+
     /// Per-anticluster SSD contributions (same maintenance as
     /// [`OnlinePartition::objective`]).
     pub fn cluster_objectives(&mut self) -> Vec<f64> {
@@ -1123,6 +1185,33 @@ mod tests {
         );
         assert!(max - min <= 1, "unbalanced: {sizes:?}");
         assert_eq!(sizes.iter().sum::<usize>(), p.len());
+    }
+
+    #[test]
+    fn gap_is_maintained_under_churn() {
+        let (mut p, _ds) = handle(80, 4, 31);
+        assert!(p.upper_bound() >= p.objective());
+        assert!((0.0..=1.0).contains(&p.gap()));
+        // Churn dirties clusters; the lazy bound must stay valid and
+        // agree with the frozen partition's stats-derived bound.
+        let arrivals = generate(SynthKind::Uniform, 20, 3, 32, "arrivals");
+        let ids = p.insert_batch(&arrivals.view()).unwrap();
+        p.remove(&ids[..8]).unwrap();
+        p.refine(5_000);
+        let (obj, ub, gap) = (p.objective(), p.upper_bound(), p.gap());
+        assert!(ub >= obj, "bound {ub} below objective {obj}");
+        assert!((0.0..=1.0).contains(&gap));
+        let frozen = p.into_partition();
+        let rel = (ub - frozen.upper_bound()).abs() / ub.max(1.0);
+        assert!(rel < 1e-9, "live {ub} vs frozen {}", frozen.upper_bound());
+    }
+
+    #[test]
+    fn empty_handle_has_zero_gap() {
+        let mut p =
+            OnlinePartition::empty(3, 2, &crate::algo::AbaConfig::default()).unwrap();
+        assert_eq!(p.upper_bound(), 0.0);
+        assert_eq!(p.gap(), 0.0);
     }
 
     #[test]

@@ -33,6 +33,12 @@ pub struct Metrics {
     pub dense_batches: AtomicU64,
     pub sparse_escalations: AtomicU64,
     pub sparse_fallbacks: AtomicU64,
+    /// Optimality gaps observed on create/get responses
+    /// ([`crate::OnlinePartition::gap`]), stored in parts-per-million:
+    /// count, most recent, and running maximum.
+    pub gap_observations: AtomicU64,
+    pub gap_last_ppm: AtomicU64,
+    pub gap_max_ppm: AtomicU64,
     /// Request latencies in microseconds, most recent `LATENCY_RING`.
     latencies_us: Mutex<VecDeque<u64>>,
 }
@@ -68,6 +74,16 @@ impl Metrics {
         self.sparse_fallbacks.fetch_add(s.fallback_batches as u64, Ordering::Relaxed);
     }
 
+    /// Record one partition's optimality gap (a fraction in `[0, 1]`,
+    /// stored as parts-per-million so the atomics stay integer).
+    /// Called wherever a handler computes a gap — create and get.
+    pub fn observe_gap(&self, gap: f64) {
+        let ppm = (gap.clamp(0.0, 1.0) * 1e6).round() as u64;
+        self.gap_observations.fetch_add(1, Ordering::Relaxed);
+        self.gap_last_ppm.store(ppm, Ordering::Relaxed);
+        self.gap_max_ppm.fetch_max(ppm, Ordering::Relaxed);
+    }
+
     /// (p50, p99) request latency in microseconds over the ring window.
     pub fn latency_percentiles_us(&self) -> (u64, u64) {
         let ring = self.latencies_us.lock().unwrap();
@@ -100,7 +116,10 @@ impl Metrics {
              aba_sparse_batches {}\n\
              aba_dense_batches {}\n\
              aba_sparse_escalations {}\n\
-             aba_sparse_fallbacks {}\n",
+             aba_sparse_fallbacks {}\n\
+             aba_gap_observations {}\n\
+             aba_gap_last_ppm {}\n\
+             aba_gap_max_ppm {}\n",
             g(&self.requests_total),
             g(&self.responses_2xx),
             g(&self.responses_4xx),
@@ -116,6 +135,9 @@ impl Metrics {
             g(&self.dense_batches),
             g(&self.sparse_escalations),
             g(&self.sparse_fallbacks),
+            g(&self.gap_observations),
+            g(&self.gap_last_ppm),
+            g(&self.gap_max_ppm),
         )
     }
 }
@@ -137,12 +159,28 @@ mod tests {
         assert_eq!(m.responses_4xx.load(Ordering::Relaxed), 1);
         assert_eq!(m.responses_5xx.load(Ordering::Relaxed), 1);
         let (p50, p99) = m.latency_percentiles_us();
-        assert!(p50 >= 100 && p50 <= 400, "{p50}");
+        assert!((100..=400).contains(&p50), "{p50}");
         assert_eq!(p99, 1000);
         let text = m.render(3);
         assert!(text.contains("aba_requests_total 7"), "{text}");
         assert!(text.contains("aba_handles 3"), "{text}");
         assert!(text.contains("aba_gathered_bytes "), "{text}");
+    }
+
+    #[test]
+    fn gap_observations_track_last_and_max() {
+        let m = Metrics::new();
+        m.observe_gap(0.25);
+        m.observe_gap(0.01);
+        assert_eq!(m.gap_observations.load(Ordering::Relaxed), 2);
+        assert_eq!(m.gap_last_ppm.load(Ordering::Relaxed), 10_000);
+        assert_eq!(m.gap_max_ppm.load(Ordering::Relaxed), 250_000);
+        // Out-of-range values clamp rather than wrap.
+        m.observe_gap(7.0);
+        assert_eq!(m.gap_max_ppm.load(Ordering::Relaxed), 1_000_000);
+        let text = m.render(0);
+        assert!(text.contains("aba_gap_last_ppm 1000000"), "{text}");
+        assert!(text.contains("aba_gap_observations 3"), "{text}");
     }
 
     #[test]

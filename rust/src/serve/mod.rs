@@ -448,6 +448,9 @@ fn create_partition(ctx: &Ctx, session: &mut Aba, req: &Request) -> Response {
     let mut part = part;
     let n = part.len();
     let objective = part.objective();
+    let upper_bound = part.upper_bound();
+    let gap = part.gap();
+    ctx.metrics.observe_gap(gap);
     if let Err(e) = ctx.registry.insert(&id, part) {
         return err_response(&e);
     }
@@ -458,6 +461,8 @@ fn create_partition(ctx: &Ctx, session: &mut Aba, req: &Request) -> Response {
             ("n", num(n as f64)),
             ("k", num(k as f64)),
             ("objective", num(objective)),
+            ("upper_bound", num(upper_bound)),
+            ("gap", num(gap)),
         ]),
     )
 }
@@ -489,6 +494,9 @@ fn get_partition(ctx: &Ctx, id: &str) -> Response {
             .collect(),
     );
     let objective = part.objective();
+    let upper_bound = part.upper_bound();
+    let gap = part.gap();
+    ctx.metrics.observe_gap(gap);
     Response::json(
         200,
         obj(vec![
@@ -497,6 +505,8 @@ fn get_partition(ctx: &Ctx, id: &str) -> Response {
             ("k", num(part.k() as f64)),
             ("d", num(part.d() as f64)),
             ("objective", num(objective)),
+            ("upper_bound", num(upper_bound)),
+            ("gap", num(gap)),
             ("sizes", sizes),
             ("labels", labels),
         ]),

@@ -31,8 +31,9 @@
 //! rather than paying construction and warm-up on every call (see
 //! `benches/bench_aba.rs` for the measured difference).
 
-use crate::algo::{self, AbaConfig, ClusterStats, Constraints, Variant};
+use crate::algo::{self, AbaConfig, ClusterStats, Constraints, Criterion, Variant};
 use crate::assignment::{CandidateMode, SolverKind, SparseStats};
+use crate::cert;
 use crate::data::{DataView, Dataset};
 use crate::error::{AbaError, AbaResult};
 use crate::online::OnlinePartition;
@@ -147,6 +148,24 @@ impl Partition {
     pub fn members_of(&self, c: usize) -> impl Iterator<Item = usize> + Clone + '_ {
         crate::metrics::members_of(&self.labels, c as u32)
     }
+
+    /// Certified upper bound on the centroid-form diversity objective
+    /// of **any** balanced partition of this data: `objective + BGSS`
+    /// by the total-sum identity `TSS = WGSS + BGSS` (see
+    /// [`crate::cert::bounds`]). `BGSS` is a sum of non-negative
+    /// terms, so `upper_bound() >= objective` holds exactly in
+    /// floating point. Free: derived from the stats every solve
+    /// already computes.
+    pub fn upper_bound(&self) -> f64 {
+        cert::bounds::upper_bound_from_stats(&self.stats)
+    }
+
+    /// Relative optimality gap `(upper_bound − objective) /
+    /// upper_bound` in `[0, 1]`: `0.02` certifies the solution within
+    /// 2% of the best possible diversity (0 on degenerate data).
+    pub fn gap(&self) -> f64 {
+        cert::bounds::gap(self.objective, self.upper_bound())
+    }
 }
 
 /// Builder for an [`Aba`] session. All knobs default to the paper's
@@ -244,6 +263,30 @@ impl AbaBuilder {
         self
     }
 
+    /// The objective to optimize ([`Criterion::Diversity`] by
+    /// default). [`Criterion::Dispersion`] dispatches `k == 2` solves
+    /// to the exact polynomial coloring algorithm
+    /// ([`crate::cert::two_color`]) and rejects `k != 2`, constrained
+    /// sessions, and online partitioning with typed errors — the
+    /// dispersion objective has no heuristic fallback in this crate.
+    pub fn criterion(mut self, c: Criterion) -> Self {
+        self.cfg.criterion = c;
+        self
+    }
+
+    /// Compute a standalone quality certificate
+    /// ([`crate::cert::bounds::Certificate`]) on every solve,
+    /// readable via [`Aba::last_certificate`]. The certification pass
+    /// is O(nd), runs on the session worker pool under a non-serial
+    /// [`AbaBuilder::parallelism`], and is timed separately from the
+    /// solve phases. `Partition::upper_bound()`/`gap()` work without
+    /// this knob; enable it when you want the certificate's wall time
+    /// reported (CLI `run --certify`, the `certify` bench section).
+    pub fn certify(mut self, on: bool) -> Self {
+        self.cfg.certify = on;
+        self
+    }
+
     /// Must-link / cannot-link constraints enforced on every partition.
     /// The constrained loop uses its own super-object ordering and
     /// masking-heavy dense costs, so `variant`, `hier`, `auto_hier`,
@@ -278,6 +321,7 @@ impl AbaBuilder {
             constraints: self.constraints,
             backend,
             scratch: algo::core::Scratch::with_lapjv_warm(warm),
+            last_cert: None,
         })
     }
 }
@@ -294,6 +338,7 @@ pub struct Aba {
     constraints: Option<Constraints>,
     backend: Box<dyn CostBackend>,
     scratch: algo::core::Scratch,
+    last_cert: Option<cert::Certificate>,
 }
 
 impl Aba {
@@ -325,6 +370,15 @@ impl Aba {
         self.scratch.sparse_stats()
     }
 
+    /// The quality certificate computed by the most recent solve, when
+    /// the session was built with [`AbaBuilder::certify`]`(true)`
+    /// (`None` otherwise, and before the first solve). Carries the
+    /// instance's total sum of squares, the diversity and pairwise
+    /// upper bounds, and the certification wall time.
+    pub fn last_certificate(&self) -> Option<&cert::Certificate> {
+        self.last_cert.as_ref()
+    }
+
     /// Reset the accumulated [`Aba::sparse_stats`] counters to zero.
     /// Serving processes call this between requests (paired with
     /// [`crate::data::view::reset_gathered_bytes`]) so telemetry is
@@ -342,6 +396,50 @@ impl Aba {
         view: &DataView<'_>,
         k: usize,
     ) -> AbaResult<(Vec<u32>, PhaseTimings)> {
+        let (labels, timings) = self.partition_labels_inner(view, k)?;
+        // The optional standalone certificate rides on every solve so
+        // both the frozen and online paths report it. Timed on its
+        // own: the O(nd) pass is not part of the solve phases.
+        self.last_cert = if self.cfg.certify {
+            let pool = self.scratch.pool_for(self.cfg.parallelism);
+            Some(cert::bounds::certify_with_pool(view, k, pool.as_deref())?)
+        } else {
+            None
+        };
+        Ok((labels, timings))
+    }
+
+    fn partition_labels_inner(
+        &mut self,
+        view: &DataView<'_>,
+        k: usize,
+    ) -> AbaResult<(Vec<u32>, PhaseTimings)> {
+        if self.cfg.criterion == Criterion::Dispersion {
+            // Exact-or-error: the crate has no dispersion heuristic, so
+            // anything the coloring oracle cannot solve is refused
+            // rather than silently scored under the wrong objective.
+            if self.constraints.is_some() {
+                return Err(AbaError::ConstraintInfeasible(
+                    "the dispersion criterion does not support must-link/cannot-link \
+                     constraints; use the diversity criterion"
+                        .into(),
+                ));
+            }
+            algo::validate(view.n(), k, self.cfg.strict_divisibility)?;
+            if k != 2 {
+                return Err(AbaError::InvalidInput(format!(
+                    "the dispersion criterion is exactly solvable only for k=2 \
+                     (got k={k}); use the diversity criterion for other k"
+                )));
+            }
+            let t = Instant::now();
+            let res = cert::two_color::solve_balanced(view)?;
+            let timings = PhaseTimings {
+                assign_secs: t.elapsed().as_secs_f64(),
+                ..PhaseTimings::default()
+            };
+            return Ok((res.labels, timings));
+        }
         if let Some(cons) = &self.constraints {
             // The constrained loop computes its costs directly through
             // the backend, so parallelism rides on the backend pool.
@@ -430,6 +528,13 @@ impl Aba {
                     .into(),
             ));
         }
+        if self.cfg.criterion == Criterion::Dispersion {
+            return Err(AbaError::InvalidInput(
+                "online partitions maintain the diversity objective; the dispersion \
+                 criterion has no incremental maintenance — use partition_view"
+                    .into(),
+            ));
+        }
         let (labels, timings) = self.partition_labels(view, k)?;
         Ok(OnlinePartition::from_labels(view, labels, k, self.cfg.clone(), timings))
     }
@@ -443,6 +548,13 @@ impl Aba {
         if self.constraints.is_some() {
             return Err(AbaError::ConstraintInfeasible(
                 "online partitions do not maintain must-link/cannot-link constraints"
+                    .into(),
+            ));
+        }
+        if self.cfg.criterion == Criterion::Dispersion {
+            return Err(AbaError::InvalidInput(
+                "online partitions maintain the diversity objective; the dispersion \
+                 criterion has no incremental maintenance"
                     .into(),
             ));
         }
@@ -706,6 +818,65 @@ mod tests {
         // Non-strict only warns.
         let mut lax = Aba::new().unwrap();
         assert!(lax.partition(&ds, 3).is_ok());
+    }
+
+    #[test]
+    fn partition_reports_valid_certificate_bound() {
+        let ds = generate(SynthKind::Uniform, 150, 4, 25, "s");
+        let part = Aba::new().unwrap().partition(&ds, 5).unwrap();
+        assert!(part.upper_bound() >= part.objective);
+        let g = part.gap();
+        assert!((0.0..=1.0).contains(&g), "gap {g}");
+        // The bound is the TSS identity: objective + bgss.
+        assert_eq!(part.upper_bound(), part.objective + part.stats.bgss);
+    }
+
+    #[test]
+    fn certify_knob_attaches_a_certificate() {
+        let ds = generate(SynthKind::Uniform, 200, 3, 26, "s");
+        let mut plain = Aba::new().unwrap();
+        plain.partition(&ds, 4).unwrap();
+        assert!(plain.last_certificate().is_none());
+        let mut certified = Aba::builder().certify(true).build().unwrap();
+        let part = certified.partition(&ds, 4).unwrap();
+        let cert = certified.last_certificate().expect("certificate attached");
+        assert_eq!(cert.n, 200);
+        assert_eq!(cert.k, 4);
+        assert!(cert.upper_bound >= part.objective);
+        // The standalone certificate and the stats-derived bound agree
+        // up to accumulation order.
+        let rel = (cert.upper_bound - part.upper_bound()).abs() / cert.upper_bound.max(1.0);
+        assert!(rel < 1e-9, "certificate {} vs stats {}", cert.upper_bound, part.upper_bound());
+        assert!(cert.secs >= 0.0);
+    }
+
+    #[test]
+    fn dispersion_criterion_solves_k2_exactly_and_rejects_the_rest() {
+        let rows: Vec<Vec<f32>> = vec![
+            vec![0.0], vec![1.0], vec![10.0], vec![11.0],
+        ];
+        let ds = crate::data::Dataset::from_rows("line", &rows).unwrap();
+        let mut session = Aba::builder()
+            .criterion(crate::algo::Criterion::Dispersion)
+            .build()
+            .unwrap();
+        let part = session.partition(&ds, 2).unwrap();
+        // The known optimum of the line instance: {0,10} vs {1,11}.
+        assert_eq!(crate::algo::objective::dispersion(&ds, &part.labels, 2), 100.0);
+        assert_eq!(part.sizes(), &[2, 2]);
+        // k != 2, online, and resume are typed refusals.
+        assert!(matches!(
+            session.partition(&ds, 4),
+            Err(AbaError::InvalidInput(_))
+        ));
+        assert!(matches!(
+            session.partition_online(&ds.view(), 2),
+            Err(AbaError::InvalidInput(_))
+        ));
+        assert!(matches!(
+            session.resume_online("nonexistent.json"),
+            Err(AbaError::InvalidInput(_))
+        ));
     }
 
     #[test]

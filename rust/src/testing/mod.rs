@@ -7,6 +7,8 @@
 
 use crate::rng::Pcg32;
 
+pub mod oracle;
+
 /// Runs a property over many deterministic seeds.
 pub struct PropRunner {
     root_seed: u64,

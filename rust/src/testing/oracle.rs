@@ -1,0 +1,84 @@
+//! Ground-truth oracles for tiny instances.
+//!
+//! The exact K=2 dispersion solver ([`crate::cert::two_color`]) is
+//! itself polynomial and serves as the production fast path; this
+//! module provides the *independent* brute-force reference the test
+//! suite checks it against, in the same spirit as the exhaustive
+//! checks in [`crate::baselines::ExactSolver`]'s tests: enumerate
+//! every cardinality-feasible 2-partition by bitmask and take the
+//! best. Exponential — guarded to `n <= 20`.
+
+use crate::data::DataView;
+
+/// Exhaustive K=2 dispersion optimum for `view` with exactly `m0`
+/// objects in group 0: returns `(dispersion, labels)` maximizing the
+/// minimum within-group squared distance (`f64::INFINITY` when both
+/// groups are singletons). Panics on `n > 20` (the search is
+/// `C(n, m0)` subsets) or infeasible `m0`.
+pub fn dispersion_k2_exhaustive(view: &DataView, m0: usize) -> (f64, Vec<u32>) {
+    let n = view.n();
+    assert!((2..=20).contains(&n), "exhaustive oracle is for 2 <= n <= 20, got n={n}");
+    assert!((1..n).contains(&m0), "need 1 <= m0 <= n-1, got m0={m0}");
+
+    let mut dist = vec![0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d2 = view.dist2(i, j);
+            dist[i * n + j] = d2;
+            dist[j * n + i] = d2;
+        }
+    }
+
+    let mut best = f64::NEG_INFINITY;
+    let mut best_mask = 0u32;
+    for mask in 0u32..(1u32 << n) {
+        if mask.count_ones() as usize != m0 {
+            continue;
+        }
+        // Dispersion of this split: min distance over same-side pairs.
+        let mut disp = f64::INFINITY;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if (mask >> i) & 1 == (mask >> j) & 1 {
+                    disp = disp.min(dist[i * n + j]);
+                }
+            }
+        }
+        if disp > best {
+            best = disp;
+            best_mask = mask;
+        }
+    }
+
+    let labels = (0..n)
+        .map(|i| if (best_mask >> i) & 1 == 1 { 0u32 } else { 1u32 })
+        .collect();
+    (best, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cert::two_color;
+    use crate::data::Dataset;
+
+    #[test]
+    fn oracle_agrees_with_the_coloring_solver_on_a_line() {
+        let rows: Vec<Vec<f32>> = [0.0f32, 1.0, 10.0, 11.0, 20.0, 21.0]
+            .iter()
+            .map(|&x| vec![x])
+            .collect();
+        let ds = Dataset::from_rows("line6", &rows).unwrap();
+        let (opt, labels) = dispersion_k2_exhaustive(&ds.view(), 3);
+        assert_eq!(labels.iter().filter(|&&l| l == 0).count(), 3);
+        let fast = two_color::solve_balanced(&ds.view()).unwrap();
+        assert_eq!(fast.dispersion, opt);
+    }
+
+    #[test]
+    fn two_point_instance_is_infinite() {
+        let ds = Dataset::from_rows("pair", &[vec![0.0f32], vec![5.0]]).unwrap();
+        let (opt, _) = dispersion_k2_exhaustive(&ds.view(), 1);
+        assert!(opt.is_infinite());
+    }
+}

@@ -1,0 +1,320 @@
+//! Integration tests for the quality-certificate subsystem
+//! ([`aba::cert`]): the cross-solver bound property, permutation
+//! invariance of standalone certificates, the exact K=2 dispersion
+//! coloring against the exhaustive oracle, and fuzzed robustness of
+//! snapshot JSON parsing.
+
+use aba::algo::{objective, Criterion};
+use aba::assignment::CandidateMode;
+use aba::baselines::exchange::ExchangeConfig;
+use aba::baselines::{FastAnticlustering, RandomPartition};
+use aba::cert;
+use aba::data::synth::{generate, SynthKind};
+use aba::data::Dataset;
+use aba::prop_assert;
+use aba::rng::Pcg32;
+use aba::runtime::Parallelism;
+use aba::testing::{oracle, PropRunner};
+use aba::util::json;
+use aba::{Aba, Anticlusterer, OnlinePartition, Partition};
+
+fn rand_dataset(rng: &mut Pcg32, max_n: usize, max_d: usize) -> Dataset {
+    let n = 8 + rng.gen_index(max_n - 8);
+    let d = 1 + rng.gen_index(max_d);
+    let kind = match rng.gen_index(3) {
+        0 => SynthKind::Uniform,
+        1 => SynthKind::GaussianMixture { components: 1 + rng.gen_index(5), spread: 3.0 },
+        _ => SynthKind::HeavyTail,
+    };
+    generate(kind, n, d, rng.next_u64(), "cert-prop")
+}
+
+/// The partition-attached bound invariants every solve must satisfy:
+/// `upper_bound() >= objective` exactly (the bound adds the
+/// non-negative BGSS term to the objective) and a gap in `[0, 1]`.
+fn check_bound(part: &Partition, who: &str) -> Result<(), String> {
+    prop_assert!(
+        part.upper_bound() >= part.objective,
+        "{who}: upper bound {} < objective {}",
+        part.upper_bound(),
+        part.objective
+    );
+    let g = part.gap();
+    prop_assert!((0.0..=1.0).contains(&g), "{who}: gap {g} outside [0, 1]");
+    Ok(())
+}
+
+/// Satellite 1a: `upper_bound() >= diversity objective` for every
+/// solver in the crate — ABA flat, hierarchical, sparse-candidates,
+/// and online-bootstrap, plus the exchange and random baselines —
+/// under both serial and threaded execution. The solver-independent
+/// certificate from [`cert::bounds::certify`] must dominate all of
+/// them too.
+#[test]
+fn prop_upper_bound_dominates_every_solver() {
+    PropRunner::new(10).run("upper bound dominates all solvers", |rng| {
+        let ds = rand_dataset(rng, 120, 5);
+        let k = 2 + rng.gen_index(ds.n / 2 - 1);
+        let standalone = cert::bounds::certify(&ds.view(), k).map_err(|e| e.to_string())?;
+        let dominated = |part: &Partition, who: &str| -> Result<(), String> {
+            check_bound(part, who)?;
+            let slack = 1e-9 * standalone.upper_bound.abs() + 1e-9;
+            prop_assert!(
+                part.objective <= standalone.upper_bound + slack,
+                "{who}: objective {} exceeds standalone certificate {}",
+                part.objective,
+                standalone.upper_bound
+            );
+            Ok(())
+        };
+
+        for par in [Parallelism::Serial, Parallelism::Threads(3)] {
+            let flat = Aba::builder()
+                .auto_hier(false)
+                .parallelism(par)
+                .build()
+                .map_err(|e| e.to_string())?
+                .partition(&ds, k)
+                .map_err(|e| e.to_string())?;
+            dominated(&flat, "aba flat")?;
+
+            let sparse = Aba::builder()
+                .candidates(CandidateMode::Fixed(2))
+                .parallelism(par)
+                .build()
+                .map_err(|e| e.to_string())?
+                .partition(&ds, k)
+                .map_err(|e| e.to_string())?;
+            dominated(&sparse, "aba sparse")?;
+
+            // Hierarchical needs prod(spec) == k, so it runs at its own
+            // fixed k = 4 (every case has n >= 8).
+            let hier = Aba::builder()
+                .hier(vec![2, 2])
+                .parallelism(par)
+                .build()
+                .map_err(|e| e.to_string())?
+                .partition(&ds, 4)
+                .map_err(|e| e.to_string())?;
+            check_bound(&hier, "aba hierarchical")?;
+
+            let mut session = Aba::builder()
+                .parallelism(par)
+                .build()
+                .map_err(|e| e.to_string())?;
+            let mut handle = session
+                .partition_online(&ds.view(), k)
+                .map_err(|e| e.to_string())?;
+            let live_obj = handle.objective();
+            let live_ub = handle.upper_bound();
+            prop_assert!(
+                live_ub >= live_obj,
+                "online handle: bound {live_ub} < objective {live_obj}"
+            );
+            let live_gap = handle.gap();
+            prop_assert!(
+                (0.0..=1.0).contains(&live_gap),
+                "online handle: gap {live_gap} outside [0, 1]"
+            );
+            dominated(&handle.into_partition(), "online bootstrap")?;
+        }
+
+        let fast = FastAnticlustering::new(ExchangeConfig::nearest(3, rng.next_u64()))
+            .partition(&ds, k)
+            .map_err(|e| e.to_string())?;
+        dominated(&fast, "fast_anticlustering")?;
+
+        let random = RandomPartition::new(rng.next_u64())
+            .partition(&ds, k)
+            .map_err(|e| e.to_string())?;
+        dominated(&random, "random baseline")?;
+        Ok(())
+    });
+}
+
+/// Satellite 1b: the standalone certificate is a function of the point
+/// *set*, so shuffling the row order must not move the bound (beyond
+/// f64 summation reordering).
+#[test]
+fn prop_certificate_bound_is_permutation_invariant() {
+    PropRunner::new(15).run("certificate permutation invariance", |rng| {
+        let ds = rand_dataset(rng, 150, 5);
+        let k = 2 + rng.gen_index(5);
+        let base = cert::bounds::certify(&ds.view(), k).map_err(|e| e.to_string())?;
+
+        let mut order: Vec<usize> = (0..ds.n).collect();
+        for i in (1..order.len()).rev() {
+            order.swap(i, rng.gen_index(i + 1));
+        }
+        let view = ds.view();
+        let rows: Vec<Vec<f32>> = order.iter().map(|&i| view.row(i).to_vec()).collect();
+        let shuffled = Dataset::from_rows("shuffled", &rows).map_err(|e| e.to_string())?;
+        let perm = cert::bounds::certify(&shuffled.view(), k).map_err(|e| e.to_string())?;
+
+        let scale = base.total_ss.abs().max(1.0);
+        prop_assert!(
+            (base.total_ss - perm.total_ss).abs() <= 1e-9 * scale,
+            "TSS moved under permutation: {} vs {}",
+            base.total_ss,
+            perm.total_ss
+        );
+        prop_assert!(
+            (base.upper_bound - perm.upper_bound).abs() <= 1e-9 * scale,
+            "bound moved under permutation: {} vs {}",
+            base.upper_bound,
+            perm.upper_bound
+        );
+        prop_assert!(
+            (base.pairwise_upper_bound - perm.pairwise_upper_bound).abs()
+                <= 1e-9 * base.pairwise_upper_bound.abs().max(1.0),
+            "pairwise bound moved under permutation: {} vs {}",
+            base.pairwise_upper_bound,
+            perm.pairwise_upper_bound
+        );
+        Ok(())
+    });
+}
+
+/// Satellite 2a: the polynomial K=2 coloring construction finds the
+/// exhaustively-verified dispersion optimum for every cardinality
+/// split on instances small enough to enumerate.
+#[test]
+fn prop_two_coloring_matches_exhaustive_oracle() {
+    PropRunner::new(30).run("k=2 coloring vs exhaustive oracle", |rng| {
+        let n = 4 + rng.gen_index(9); // 4..=12: oracle enumerates C(n, m0) splits
+        let d = 1 + rng.gen_index(3);
+        let kind = if rng.gen_index(2) == 0 {
+            SynthKind::Uniform
+        } else {
+            SynthKind::GaussianMixture { components: 2, spread: 2.0 }
+        };
+        let ds = generate(kind, n, d, rng.next_u64(), "oracle");
+        let m0 = 1 + rng.gen_index(n - 1); // 1..=n-1
+
+        let fast = cert::two_color::solve_with_sizes(&ds.view(), m0).map_err(|e| e.to_string())?;
+        let (opt, _) = oracle::dispersion_k2_exhaustive(&ds.view(), m0);
+        prop_assert!(
+            fast.dispersion == opt,
+            "n={n} m0={m0}: coloring found {} but oracle says {opt}",
+            fast.dispersion
+        );
+        prop_assert!(
+            fast.labels.iter().filter(|&&l| l == 0).count() == m0,
+            "n={n} m0={m0}: side-0 cardinality violated"
+        );
+
+        let balanced = cert::two_color::solve_balanced(&ds.view()).map_err(|e| e.to_string())?;
+        let (bal_opt, _) = oracle::dispersion_k2_exhaustive(&ds.view(), n.div_ceil(2));
+        prop_assert!(
+            balanced.dispersion == bal_opt,
+            "n={n} balanced: coloring found {} but oracle says {bal_opt}",
+            balanced.dispersion
+        );
+        Ok(())
+    });
+}
+
+/// Satellite 2b: an `Aba` session under the dispersion criterion routes
+/// K=2 through the exact coloring solver, so its dispersion gap against
+/// the oracle is pinned (tolerance covers floating point only); the
+/// default diversity criterion optimizes a different objective and may
+/// fall short, but can never *beat* the oracle.
+#[test]
+fn aba_k2_dispersion_gap_vs_oracle_is_pinned() {
+    const TOL: f64 = 1e-9;
+    for seed in [7u64, 21, 99] {
+        let ds = generate(
+            SynthKind::GaussianMixture { components: 3, spread: 2.0 },
+            12,
+            3,
+            seed,
+            "k2-oracle",
+        );
+        let (opt, _) = oracle::dispersion_k2_exhaustive(&ds.view(), 6);
+        let tol = TOL * opt.abs().max(1.0);
+
+        let exact = Aba::builder()
+            .criterion(Criterion::Dispersion)
+            .build()
+            .unwrap()
+            .partition(&ds, 2)
+            .unwrap();
+        let achieved = objective::dispersion(&ds, &exact.labels, 2);
+        assert!(
+            (achieved - opt).abs() <= tol,
+            "seed {seed}: exact path achieved {achieved}, oracle optimum {opt}"
+        );
+        assert_eq!(exact.sizes(), &[6, 6], "seed {seed}: balanced cardinalities");
+
+        let diversity = Aba::builder().build().unwrap().partition(&ds, 2).unwrap();
+        let div_disp = objective::dispersion(&ds, &diversity.labels, 2);
+        assert!(
+            div_disp <= opt + tol,
+            "seed {seed}: diversity solve dispersion {div_disp} beats the oracle {opt}"
+        );
+    }
+}
+
+/// Satellite 3: fuzzed snapshot parsing. Truncations and byte-level
+/// mutations of a valid snapshot document must never panic: the JSON
+/// layer reports a typed error with an in-range byte offset and a
+/// caret-context excerpt, and both snapshot entry points surface typed
+/// [`aba::AbaError`] values.
+///
+/// The mutation alphabet deliberately excludes digits: substituting
+/// digits can inflate header counts (`k`, `d`) into absurd-but-valid
+/// allocations, which is a capacity-validation concern, not the parse
+/// robustness under test here.
+#[test]
+fn prop_snapshot_json_fuzz_never_panics() {
+    let ds = generate(SynthKind::Uniform, 24, 3, 5, "fuzz-seed");
+    let mut session = Aba::builder().build().unwrap();
+    let handle = session.partition_online(&ds.view(), 4).unwrap();
+    let snapshot = handle.snapshot_string();
+    let cfg = session.config().clone();
+
+    // The pristine document round-trips through every entry point.
+    assert!(OnlinePartition::from_snapshot_str(&snapshot, &cfg).is_ok());
+    assert!(aba::online::inspect_snapshot_str(&snapshot).is_ok());
+
+    const ALPHABET: &[u8] = b"az!~\"{}[]:,x ";
+    PropRunner::new(300).run("snapshot fuzz", |rng| {
+        let mut bytes = snapshot.clone().into_bytes();
+        match rng.gen_index(3) {
+            0 => bytes.truncate(rng.gen_index(bytes.len())),
+            1 => {
+                let i = rng.gen_index(bytes.len());
+                bytes[i] = ALPHABET[rng.gen_index(ALPHABET.len())];
+            }
+            _ => {
+                let i = rng.gen_index(bytes.len() + 1);
+                bytes.insert(i, ALPHABET[rng.gen_index(ALPHABET.len())]);
+            }
+        }
+        // Snapshot documents are ASCII and so is the mutation alphabet.
+        let mutant = String::from_utf8(bytes).map_err(|e| e.to_string())?;
+
+        if let Err(e) = json::parse(&mutant) {
+            prop_assert!(
+                e.offset <= mutant.len(),
+                "offset {} past end of {}-byte input",
+                e.offset,
+                mutant.len()
+            );
+            let shown = e.to_string();
+            prop_assert!(shown.contains("byte"), "display lacks byte offset: {shown}");
+            prop_assert!(
+                mutant.is_empty() || !e.context.is_empty(),
+                "no caret context on non-empty input: {shown}"
+            );
+        }
+        // Typed error or clean success — never a panic.
+        if let Err(e) = OnlinePartition::from_snapshot_str(&mutant, &cfg) {
+            prop_assert!(!e.to_string().is_empty(), "empty error display");
+        }
+        if let Err(e) = aba::online::inspect_snapshot_str(&mutant) {
+            prop_assert!(!e.to_string().is_empty(), "empty error display");
+        }
+        Ok(())
+    });
+}

@@ -102,6 +102,8 @@ fn serve_lifecycle_end_to_end() {
     let created = parse_json(&resp);
     assert_eq!(created.get("n").and_then(Json::as_usize), Some(48));
     assert_eq!(created.get("k").and_then(Json::as_usize), Some(4));
+    let created_gap = created.get("gap").and_then(Json::as_f64).unwrap();
+    assert!((0.0..=1.0).contains(&created_gap), "gap {created_gap}");
 
     // Duplicate id is a conflict, not a clobber.
     let (status, _, _) = request(addr, "POST", "/v1/partitions", &body);
@@ -153,6 +155,14 @@ fn serve_lifecycle_end_to_end() {
     assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
     assert_eq!(got.get("labels").and_then(Json::as_arr).unwrap().len(), 52);
 
+    // Quality certificate: the served bound dominates the served
+    // objective and the gap is a valid fraction.
+    let obj = got.get("objective").and_then(Json::as_f64).unwrap();
+    let ub = got.get("upper_bound").and_then(Json::as_f64).unwrap();
+    let gap = got.get("gap").and_then(Json::as_f64).unwrap();
+    assert!(ub >= obj, "bound {ub} below objective {obj}");
+    assert!((0.0..=1.0).contains(&gap), "gap {gap}");
+
     // Unknown partitions are 404, unknown routes too.
     assert_eq!(request(addr, "GET", "/v1/partitions/ghost", "").0, 404);
     assert_eq!(request(addr, "GET", "/v1/nope", "").0, 404);
@@ -162,6 +172,9 @@ fn serve_lifecycle_end_to_end() {
     assert_eq!(status, 200);
     assert!(resp.contains("aba_requests_total"), "{resp}");
     assert!(resp.contains("aba_handles 1"), "{resp}");
+    // Gap telemetry: create + get each observed one gap.
+    assert!(resp.contains("aba_gap_observations 2"), "{resp}");
+    assert!(resp.contains("aba_gap_last_ppm"), "{resp}");
 
     // Drain: stop accepting, snapshot the resident handle, exit.
     let (status, _, resp) = request(addr, "POST", "/v1/admin/drain", "");
