@@ -36,6 +36,18 @@
 //! `algo_secs`/`total_secs` (their `objective` column carries the
 //! certificate's upper bound).
 //!
+//! The `kernel` section microbenchmarks the runtime-dispatched SIMD
+//! distance kernels themselves: `cost_block` and `row_norms` GFLOP/s at
+//! d ∈ {8, 32, 128} for each table the host can select (scalar always;
+//! the vector and FMA tables where the ISA exists), so the vector-vs-
+//! scalar speedup is a recorded number rather than an assumption. The
+//! `kernel_e2e` section runs the same two instances end to end under
+//! `--kernels scalar` and the Auto dispatch — the flat n = 200k dense
+//! solve and a large-K sparse solve — asserting label bit-identity and
+//! recording the before/after wall times. Every run also opens with one
+//! `env` record carrying `kernel_isa=<isa>` so cross-host comparisons
+//! of BENCH_aba.json know what the numbers ran on.
+//!
 //! Set `ABA_BENCH_ONLY=section[,section...]` to run a subset of the
 //! sections (e.g. `ABA_BENCH_ONLY=large_k_sparse`). Filtered runs
 //! write `BENCH_aba.partial.json` so they never truncate the canonical
@@ -44,7 +56,7 @@
 use aba::algo::{AbaConfig, Variant};
 use aba::assignment::{CandidateMode, SolverKind};
 use aba::data::synth::{generate, SynthKind};
-use aba::runtime::Parallelism;
+use aba::runtime::{KernelMode, Kernels, Parallelism};
 use aba::util::timer::timed;
 use aba::{Aba, Anticlusterer, Partition};
 
@@ -154,9 +166,109 @@ fn cold_partition(ds: &aba::data::Dataset, k: usize, cfg: &AbaConfig) -> (Partit
     })
 }
 
+/// Measure one kernel call repeated until the sample is long enough to
+/// time, returning (seconds per call). `flops_per_call` sizes the rep
+/// count so every measurement spends roughly the same work.
+fn time_kernel(flops_per_call: f64, mut call: impl FnMut()) -> f64 {
+    let reps = ((2.0e8 / flops_per_call) as usize).max(1);
+    call(); // warm-up: page in the buffers, settle the dispatch
+    let t = std::time::Instant::now();
+    for _ in 0..reps {
+        call();
+    }
+    t.elapsed().as_secs_f64() / reps as f64
+}
+
 fn main() {
     let mut recs: Vec<Rec> = Vec::new();
-    println!("# bench_aba — end-to-end runtime scaling");
+    let host_isa = Kernels::get().isa();
+    // The env record: one row describing what the whole run dispatched
+    // to, so cross-host BENCH_aba.json diffs are interpretable.
+    recs.push(Rec {
+        section: "env",
+        label: format!("kernel_isa={host_isa}"),
+        n: 0,
+        k: 0,
+        d: 0,
+        threads: Parallelism::Auto.effective_threads(),
+        algo_secs: 0.0,
+        total_secs: 0.0,
+        objective: 0.0,
+        gathered_bytes: 0,
+        cost_buffer_bytes: 0,
+    });
+    println!("# bench_aba — end-to-end runtime scaling (kernels: {host_isa})");
+
+    if section_enabled("kernel") {
+        // The SIMD microkernels in isolation: GFLOP/s of the tiled
+        // cost_block (2mkd flops) and row_norms (2md flops) per
+        // selectable table, against the scalar baseline. CI runs this
+        // section alone (`ABA_BENCH_ONLY=kernel`) — keep it seconds.
+        let (m, kc) = (1024usize, 256usize);
+        println!("\n## kernel microbench (m={m} rows x k={kc} centers, GFLOP/s)");
+        let mut rng = aba::rng::Pcg32::new(99);
+        for &d in &[8usize, 32, 128] {
+            let x: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let c: Vec<f32> = (0..kc * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut tables = vec![Kernels::select(KernelMode::Scalar)];
+            let auto = Kernels::select(KernelMode::Auto);
+            if auto.isa() != "scalar" {
+                tables.push(auto);
+            }
+            let fma = Kernels::select(KernelMode::Fma);
+            if fma.isa().contains("fma") {
+                tables.push(fma);
+            }
+            let mut scalar_cost_gflops = 0.0;
+            for kern in tables {
+                let mut xn = Vec::new();
+                let mut cn = Vec::new();
+                kern.row_norms(&c, kc, d, &mut cn);
+                let norm_flops = (2 * m * d) as f64;
+                let norm_secs = time_kernel(norm_flops, || {
+                    kern.row_norms(&x, m, d, &mut xn);
+                    std::hint::black_box(&mut xn);
+                });
+                let mut out = vec![0f32; m * kc];
+                let cost_flops = (2 * m * kc * d) as f64;
+                let cost_secs = time_kernel(cost_flops, || {
+                    kern.cost_block(&x, &xn, 0, m, d, &c, &cn, kc, &mut out);
+                    std::hint::black_box(&mut out);
+                });
+                let cost_gflops = cost_flops / cost_secs / 1e9;
+                let norm_gflops = norm_flops / norm_secs / 1e9;
+                let speedup = if kern.isa() == "scalar" {
+                    scalar_cost_gflops = cost_gflops;
+                    String::new()
+                } else {
+                    format!("  ({:.2}x scalar)", cost_gflops / scalar_cost_gflops.max(1e-9))
+                };
+                println!(
+                    "  d={d:>3} {:>8}: cost_block {cost_gflops:>6.2} | row_norms {norm_gflops:>6.2}{speedup}",
+                    kern.isa()
+                );
+                let mut push = |op: &str, secs: f64, gflops: f64| {
+                    recs.push(Rec {
+                        section: "kernel",
+                        label: format!("{op}_d{d}_{}", kern.isa()),
+                        n: m,
+                        k: kc,
+                        d,
+                        threads: 1,
+                        algo_secs: secs,
+                        total_secs: secs,
+                        // GFLOP/s in the objective column — the one
+                        // free numeric slot in the record shape.
+                        objective: gflops,
+                        gathered_bytes: 0,
+                        cost_buffer_bytes: 0,
+                    });
+                };
+                push("cost_block", cost_secs, cost_gflops);
+                push("row_norms", norm_secs, norm_gflops);
+            }
+        }
+    }
     // The flat baseline stays on the dense (exact) solve even where K
     // crosses the sparse Auto threshold — these sections measure the
     // dense machinery; `large_k_sparse` below measures the sparse path.
@@ -417,6 +529,42 @@ fn main() {
             r.total_secs = dense_per_batch;
             r.cost_buffer_bytes = dense_bytes;
         }
+    }
+
+    if section_enabled("kernel_e2e") {
+        // What the SIMD dispatch buys end to end: the flat dense solve
+        // at n = 200k and a large-K sparse solve, each run under the
+        // forced scalar fallback ("before") and the Auto selection
+        // ("after"). Auto preserves scalar reduction order, so the
+        // labels must not move a bit while the wall clock does.
+        println!("\n## kernel end-to-end: scalar fallback vs auto dispatch ({host_isa})");
+        let mut compare = |recs: &mut Vec<Rec>,
+                           label: &str,
+                           ds: &aba::data::Dataset,
+                           k: usize,
+                           cfg: &AbaConfig| {
+            let scalar_cfg = AbaConfig { kernels: Some(KernelMode::Scalar), ..cfg.clone() };
+            let auto_cfg = AbaConfig { kernels: Some(KernelMode::Auto), ..cfg.clone() };
+            let (sp, scalar_secs) = cold_partition(ds, k, &scalar_cfg);
+            let (ap, auto_secs) = cold_partition(ds, k, &auto_cfg);
+            assert_eq!(sp.labels, ap.labels, "{label}: kernel modes diverged");
+            println!(
+                "  {label:>14}: scalar {scalar_secs:>8.3}s | {host_isa} {auto_secs:>8.3}s \
+                 ({:.2}x) | labels bit-identical: yes",
+                scalar_secs / auto_secs.max(1e-9)
+            );
+            record(recs, "kernel_e2e", format!("{label}_scalar"), ds, k, 1, &sp, scalar_secs);
+            record(recs, "kernel_e2e", format!("{label}_auto"), ds, k, 1, &ap, auto_secs);
+        };
+        let flat_ds = mk(200_000, 16, 14);
+        compare(&mut recs, "flat_n200k", &flat_ds, 100, &flat);
+        let sparse_ds = mk(100_000, 16, 15);
+        let sparse_cfg = AbaConfig {
+            auto_hier: false,
+            candidates: CandidateMode::Auto, // k >= 512 -> sparse path
+            ..AbaConfig::default()
+        };
+        compare(&mut recs, "sparse_k2000", &sparse_ds, 2_000, &sparse_cfg);
     }
 
     if section_enabled("online_churn") {

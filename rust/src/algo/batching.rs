@@ -33,14 +33,7 @@ pub fn sorted_by_centroid_distance(
     let mut dist = Vec::with_capacity(n);
     match view.contiguous() {
         Some(x) => backend.centroid_distances(x, n, view.d(), &mu, &mut dist),
-        None => dist.extend((0..n).map(|i| {
-            let mut s = 0f64;
-            for (&a, &b) in view.row(i).iter().zip(&mu) {
-                let diff = (a - b) as f64;
-                s += diff * diff;
-            }
-            s
-        })),
+        None => dist.extend((0..n).map(|i| crate::runtime::simd::sq_dist(view.row(i), &mu))),
     }
     let mut idx: Vec<usize> = (0..n).collect();
     idx.sort_unstable_by(|&a, &b| dist[b].total_cmp(&dist[a]).then(a.cmp(&b)));

@@ -213,6 +213,14 @@ pub struct AbaConfig {
     /// (pool-parallel under `parallelism`) that the CLI and benches
     /// report.
     pub certify: bool,
+    /// Distance-kernel mode override
+    /// ([`crate::runtime::simd::KernelMode`]). `None` (default) consults
+    /// the `ABA_KERNELS` env var **once at session construction** —
+    /// never on the per-run hot path. `Auto` and `Scalar` are
+    /// bit-identical by construction; `Fma` trades bit-identity for a
+    /// contracted multiply-add. Excluded from
+    /// [`AbaConfig::fingerprint`], like the other wall-clock-only knobs.
+    pub kernels: Option<crate::runtime::KernelMode>,
 }
 
 impl AbaConfig {
@@ -247,6 +255,7 @@ impl Default for AbaConfig {
             lapjv_warm: None,
             criterion: Criterion::Diversity,
             certify: false,
+            kernels: None,
         }
     }
 }
@@ -476,6 +485,21 @@ mod tests {
         cfg.criterion = Criterion::Dispersion;
         cfg.certify = true;
         assert_eq!(cfg.fingerprint(), base);
+    }
+
+    #[test]
+    fn kernels_do_not_perturb_the_fingerprint() {
+        // Snapshot compatibility: the default and scalar kernel modes
+        // are bit-identical, and even the FMA mode only perturbs cost
+        // matrices (assignment inputs), not the maintained moments — so
+        // the kernel knob, like `parallelism` and `backend`, must not
+        // invalidate existing snapshots.
+        let mut cfg = AbaConfig::default();
+        let base = cfg.fingerprint();
+        for m in crate::runtime::KernelMode::ALL {
+            cfg.kernels = Some(m);
+            assert_eq!(cfg.fingerprint(), base, "mode={m}");
+        }
     }
 
     #[test]

@@ -10,8 +10,8 @@
 //! plus the per-anticluster diversity statistics (sd, range) of Tables
 //! 6/10 and the min/max size ratio of Table 11.
 
-use crate::data::dataset::sq_dist_to_f64;
 use crate::data::DataView;
+use crate::runtime::simd::{accumulate, add_assign_row, decumulate, sq_dist_to_f64};
 
 /// Per-anticluster statistics of a partition.
 #[derive(Clone, Debug)]
@@ -43,9 +43,7 @@ impl ClusterStats {
             let c = labels[i] as usize;
             assert!(c < k, "label {c} out of range (k={k})");
             sizes[c] += 1;
-            for (s, &v) in sums[c * d..(c + 1) * d].iter_mut().zip(ds.row(i)) {
-                *s += v as f64;
-            }
+            add_assign_row(&mut sums[c * d..(c + 1) * d], ds.row(i));
         }
         // Global centroid from the per-cluster sums (O(kd)) — feeds the
         // between-group term below without another pass over the rows.
@@ -209,16 +207,11 @@ impl ClusterDelta {
         self.q
     }
 
-    /// Fold a member in — O(d).
+    /// Fold a member in — O(d), via the objective-tier
+    /// [`accumulate`] kernel (f64, index order in every kernel mode).
     pub fn add(&mut self, row: &[f32]) {
         debug_assert_eq!(row.len(), self.s.len());
-        let mut xx = 0f64;
-        for (acc, &v) in self.s.iter_mut().zip(row) {
-            let v = v as f64;
-            *acc += v;
-            xx += v * v;
-        }
-        self.q += xx;
+        self.q += accumulate(&mut self.s, row);
         self.m += 1;
     }
 
@@ -226,13 +219,7 @@ impl ClusterDelta {
     pub fn remove(&mut self, row: &[f32]) {
         debug_assert!(self.m > 0, "remove from an empty ClusterDelta");
         debug_assert_eq!(row.len(), self.s.len());
-        let mut xx = 0f64;
-        for (acc, &v) in self.s.iter_mut().zip(row) {
-            let v = v as f64;
-            *acc -= v;
-            xx += v * v;
-        }
-        self.q -= xx;
+        self.q -= decumulate(&mut self.s, row);
         self.m -= 1;
     }
 

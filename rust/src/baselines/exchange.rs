@@ -141,17 +141,14 @@ pub fn fast_anticlustering<'a>(
     let mut sums = vec![0f64; k * d];
     let mut sumsq = vec![0f64; k];
     let mut counts = vec![0usize; k];
-    // Per-object squared norms, reused in the O(D) delta evaluation.
-    let norms: Vec<f64> = (0..n)
-        .map(|i| ds.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum())
-        .collect();
+    // Per-object squared norms, reused in the O(D) delta evaluation
+    // (objective tier: f64 index-order accumulation, see `runtime::simd`).
+    let norms: Vec<f64> = (0..n).map(|i| crate::runtime::simd::sumsq_f64(ds.row(i))).collect();
     for i in 0..n {
         let c = labels[i] as usize;
         counts[c] += 1;
         sumsq[c] += norms[i];
-        for (s, &v) in sums[c * d..(c + 1) * d].iter_mut().zip(ds.row(i)) {
-            *s += v as f64;
-        }
+        crate::runtime::simd::add_assign_row(&mut sums[c * d..(c + 1) * d], ds.row(i));
     }
     // ssd_k = SS_k - ||S_k||^2 / m_k.
     let cluster_ssd = |sums: &[f64], sumsq: &[f64], counts: &[usize], c: usize| -> f64 {

@@ -139,11 +139,9 @@ pub fn certify_with_pool(
         let lo = ci * CHUNK;
         let hi = (lo + CHUNK).min(n);
         for i in lo..hi {
-            let row = view.row(i);
-            for (acc, &x) in slot.0.iter_mut().zip(row) {
-                *acc += f64::from(x);
-            }
-            slot.1 += row.iter().map(|&x| f64::from(x) * f64::from(x)).sum::<f64>();
+            // Same objective-tier accumulate as `ClusterDelta::add`, so
+            // certificate moments and online moments share one fold.
+            slot.1 += crate::runtime::simd::accumulate(&mut slot.0, view.row(i));
         }
     };
     match pool {

@@ -137,29 +137,16 @@ impl Dataset {
     }
 }
 
-/// Squared Euclidean distance between two feature slices (f64 accumulate).
-#[inline]
-pub fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut s = 0f64;
-    for (&x, &y) in a.iter().zip(b) {
-        let diff = (x - y) as f64;
-        s += diff * diff;
-    }
-    s
-}
+/// Squared Euclidean distance between two feature slices — the
+/// objective-tier (f64-accumulating) `dist2`, re-exported from the one
+/// definition in [`crate::runtime::simd`] so `Dataset`, `DataView`, the
+/// kNN modules, and the backend verification paths all share it. See
+/// that module for the accumulation-precision policy.
+pub use crate::runtime::simd::sq_dist;
 
-/// Squared distance from a slice to an f64 centroid.
-#[inline]
-pub fn sq_dist_to_f64(a: &[f32], mu: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), mu.len());
-    let mut s = 0f64;
-    for (&x, &m) in a.iter().zip(mu) {
-        let diff = x as f64 - m;
-        s += diff * diff;
-    }
-    s
-}
+/// Squared distance from a slice to an f64 centroid (same policy; see
+/// [`crate::runtime::simd`]).
+pub use crate::runtime::simd::sq_dist_to_f64;
 
 #[cfg(test)]
 mod tests {

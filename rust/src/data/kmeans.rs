@@ -4,9 +4,9 @@
 //! experiments exactly as Croella et al. (2025) do, and (b) as a geometry
 //! probe in tests. Deterministic given the seed.
 
-use super::dataset::sq_dist_to_f64;
 use super::view::DataView;
 use crate::rng::Pcg32;
+use crate::runtime::simd::{add_assign_row, sq_dist_to_f64};
 
 /// Result of a k-means run.
 #[derive(Clone, Debug)]
@@ -64,9 +64,7 @@ pub fn kmeans<'a>(
         for i in 0..n {
             let c = labels[i] as usize;
             counts[c] += 1;
-            for (s, &v) in sums[c * d..(c + 1) * d].iter_mut().zip(ds.row(i)) {
-                *s += v as f64;
-            }
+            add_assign_row(&mut sums[c * d..(c + 1) * d], ds.row(i));
         }
         for c in 0..k {
             if counts[c] == 0 {

@@ -27,9 +27,7 @@ pub fn kplus_augment<'a>(data: impl Into<DataView<'a>>, moments: usize) -> Datas
     // Column means of the original features.
     let mut means = vec![0f64; d];
     for i in 0..n {
-        for (m, &v) in means.iter_mut().zip(ds.row(i)) {
-            *m += v as f64;
-        }
+        crate::runtime::simd::add_assign_row(&mut means, ds.row(i));
     }
     for m in means.iter_mut() {
         *m /= n as f64;

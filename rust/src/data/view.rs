@@ -195,16 +195,16 @@ impl<'a> DataView<'a> {
     pub fn global_centroid(&self) -> Vec<f32> {
         let mut acc = vec![0f64; self.d];
         for i in 0..self.n {
-            for (a, &v) in acc.iter_mut().zip(self.row(i)) {
-                *a += v as f64;
-            }
+            crate::runtime::simd::add_assign_row(&mut acc, self.row(i));
         }
         acc.iter().map(|&a| (a / self.n as f64) as f32).collect()
     }
 
-    /// Squared Euclidean distance between view rows `i` and `j`.
+    /// Squared Euclidean distance between view rows `i` and `j` — the
+    /// objective-tier f64-accumulating `dist2` (one definition for the
+    /// whole crate; see [`crate::runtime::simd`] for the policy).
     pub fn dist2(&self, i: usize, j: usize) -> f64 {
-        super::dataset::sq_dist(self.row(i), self.row(j))
+        crate::runtime::simd::sq_dist(self.row(i), self.row(j))
     }
 
     /// Materialize the view into an owned [`Dataset`] (gathers every

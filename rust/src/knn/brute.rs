@@ -1,7 +1,7 @@
 //! Brute-force kNN — oracle and high-dimensional fallback.
 
-use crate::data::dataset::sq_dist;
 use crate::data::DataView;
+use crate::runtime::simd::sq_dist;
 
 /// `k` nearest neighbors of every object (excluding self), row-major
 /// `n x k`. O(n² d) — fine for the sizes the exchange baseline handles.

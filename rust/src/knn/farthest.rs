@@ -17,17 +17,11 @@
 //! exclude saturated anticlusters *during* the search instead of
 //! post-filtering a too-short list.
 
-/// Squared Euclidean distance accumulated in f64 (matches the pruning
-/// bound arithmetic, so bound >= point distance holds exactly).
-fn sq_dist_f64(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut s = 0f64;
-    for (&x, &y) in a.iter().zip(b) {
-        let diff = (x - y) as f64;
-        s += diff * diff;
-    }
-    s
-}
+// Point distances use the crate-wide objective-tier `sq_dist`
+// (f64-accumulating, scalar in every kernel mode — see
+// `crate::runtime::simd`), which matches the pruning bound arithmetic,
+// so bound >= point distance holds exactly.
+use crate::runtime::simd::sq_dist;
 
 /// A kd-tree with per-node bounding boxes over `n` points in `d`
 /// dimensions, answering top-`C` farthest-point queries. The tree is
@@ -132,7 +126,7 @@ impl FarthestIndex {
         }
         let id = self.ids[mid] as usize;
         if valid(id) {
-            let dist = sq_dist_f64(q, &pts[id * self.d..(id + 1) * self.d]);
+            let dist = sq_dist(q, &pts[id * self.d..(id + 1) * self.d]);
             if best.len() < c || dist > best[best.len() - 1].0 {
                 let pos = best.partition_point(|&(d0, _)| d0 >= dist);
                 best.insert(pos, (dist, id as u32));
@@ -224,7 +218,7 @@ mod tests {
     ) -> Vec<(f64, u32)> {
         let mut all: Vec<(f64, u32)> = (0..n)
             .filter(|&i| valid(i))
-            .map(|i| (sq_dist_f64(q, &pts[i * d..(i + 1) * d]), i as u32))
+            .map(|i| (sq_dist(q, &pts[i * d..(i + 1) * d]), i as u32))
             .collect();
         all.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
         all.truncate(c);

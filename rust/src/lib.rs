@@ -34,7 +34,7 @@
 //! | [`cert`] | §3 (objective), §7 (quality) | Quality certificates: scalable diversity upper bounds / optimality gaps, and the exact polynomial K=2 dispersion solver used as solver fast path and test oracle |
 //! | [`online`] | §1, §6 (serving) | Live [`OnlinePartition`] handles: delta-maintained insert/remove/refine with balance repair, plus fingerprinted save/load persistence |
 //! | [`serve`] | §6 (serving) | The `aba serve` HTTP service: a bounded accept/worker server managing concurrent [`OnlinePartition`] handles behind an LRU registry, with shard-and-merge solves and text metrics |
-//! | [`runtime`] | §5 (implementation) | Cost backends (native / Pallas-XLA via PJRT) and the [`runtime::pool`] parallel runtime |
+//! | [`runtime`] | §5 (implementation) | Cost backends (native / Pallas-XLA via PJRT), the [`runtime::pool`] parallel runtime, and the [`runtime::simd`] runtime-dispatched distance kernels |
 //! | [`baselines`] | §5 (competitors) | `Rand`, the exchange heuristic, branch-and-bound |
 //! | [`data`] | §5, Table 2 | Dataset catalog, synthetic generators, k-means/k-plus seeding |
 //! | [`data::view`] | §4.4 (scale) | Zero-copy [`data::DataView`]s — the borrowed (matrix, index, categories) currency every consumer layer reads; what lets hierarchical levels descend without per-level matrix copies |
@@ -234,6 +234,40 @@
 //! `POST /v1/admin/drain`) stops accepting, finishes queued requests,
 //! and snapshots every resident handle. See the README's "Serving over
 //! HTTP" section for a curl quickstart.
+//!
+//! ## SIMD distance kernels
+//!
+//! Every squared-Euclidean distance flows through one runtime-dispatched
+//! table ([`runtime::Kernels`]), selected once at session construction:
+//! AVX2 on x86-64, NEON on aarch64, a scalar fallback everywhere — and
+//! the vector paths keep the scalar kernel's exact reduction order, so
+//! `auto` and `scalar` produce **bit-identical** partitions on every
+//! host (property-tested across the flat, hierarchical, sparse, and
+//! online paths). `fma` opts into fused-multiply-add contraction
+//! (faster, ULP-bounded rather than bit-identical). Select per session
+//! with the builder, per run with `--kernels auto|scalar|fma`, or
+//! process-wide with the `ABA_KERNELS` env var; the selection is
+//! reported in [`PhaseTimings::kernel_isa`], the CLI `cpu` line, and
+//! serve's `aba_kernel_isa` metric:
+//!
+//! ```
+//! use aba::{Aba, Anticlusterer};
+//! use aba::runtime::KernelMode;
+//! use aba::data::synth::{generate, SynthKind};
+//!
+//! let ds = generate(SynthKind::Uniform, 160, 8, 13, "simd");
+//! // `--kernels scalar` on the CLI does exactly this:
+//! let mut forced = Aba::builder().kernels(KernelMode::Scalar).build()?;
+//! let a = forced.partition(&ds, 8)?;
+//! assert_eq!(a.timings.kernel_isa, "scalar");
+//! // The default (auto) dispatch may pick a vector ISA, but the result
+//! // cannot move a bit.
+//! let b = Aba::builder().build()?.partition(&ds, 8)?;
+//! assert!(!b.timings.kernel_isa.is_empty());
+//! assert_eq!(a.labels, b.labels);
+//! assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+//! # Ok::<(), aba::AbaError>(())
+//! ```
 //!
 //! ## Parallel execution
 //!

@@ -15,7 +15,7 @@ use aba::assignment::{CandidateMode, SolverKind};
 use aba::data::synth::{catalog, load, Scale};
 use aba::experiments::{common::ExpOptions, figs, t11, t4, t4x, t8, t9};
 use aba::pipeline::{run_pipeline, BatchStrategy, PipelineConfig};
-use aba::runtime::{BackendKind, Parallelism};
+use aba::runtime::{BackendKind, KernelMode, Parallelism};
 use aba::util::args::{parse_hier, Args};
 use aba::util::fmt_secs;
 use aba::{Aba, Anticlusterer, OnlinePartition};
@@ -67,6 +67,7 @@ fn print_help() {
                [--hier K1xK2[xK3]] [--threads {threads}] [--parallel]\n\
                [--candidates {candidates}] [--flat] [--strict] [--out labels.csv]\n\
                [--save-partition part.json] [--certify] [--criterion {criterions}]\n\
+               [--kernels {kernels}]\n\
            table t4|t6|t8|t9|t10|t11        regenerate a paper table\n\
                [--k K] [--datasets a,b|all] [--scale ...] [--quick]\n\
                [--time-limit SECS] [--out-dir DIR]\n\
@@ -81,7 +82,8 @@ fn print_help() {
            serve [--addr HOST:PORT]         HTTP service over OnlinePartition handles\n\
                [--workers N] [--queue N] [--max-handles N] [--snapshot-dir DIR]\n\
                [--variant ...] [--solver ...] [--candidates ...] [--strict]\n\
-               [--threads {threads}]        (SIGTERM or POST /v1/admin/drain to stop)\n\
+               [--threads {threads}] [--kernels {kernels}]\n\
+                                            (SIGTERM or POST /v1/admin/drain to stop)\n\
            snapshot inspect FILE            print snapshot header without loading it\n\
            selftest                         XLA artifacts vs native check",
         variants = Variant::accepted(),
@@ -90,6 +92,7 @@ fn print_help() {
         backends = BackendKind::accepted(),
         threads = Parallelism::accepted(),
         candidates = CandidateMode::accepted(),
+        kernels = KernelMode::accepted(),
     );
 }
 
@@ -149,6 +152,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     // certificate to the solve and prints objective/bound/gap below.
     let certify = args.has_flag("certify");
     builder = builder.certify(certify);
+    // `--kernels auto|scalar|fma`: distance-kernel dispatch. Unset
+    // defers to the `ABA_KERNELS` env var, read once at construction.
+    if let Some(m) = args.get_parse::<KernelMode>("kernels")? {
+        builder = builder.kernels(m);
+    }
     // `--threads serial|auto|<n>` is the parallelism knob; the bare
     // `--parallel` flag is kept as an alias for `--threads auto`.
     let par = match args.get_parse::<Parallelism>("threads")? {
@@ -182,11 +190,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
     let stats = &part.stats;
     println!(
-        "cpu            {} s (order {}, assign {}, stats {})",
+        "cpu            {} s (order {}, assign {}, stats {}, kernels {})",
         fmt_secs(part.timings.total_secs),
         fmt_secs(part.timings.order_secs),
         fmt_secs(part.timings.assign_secs),
-        fmt_secs(part.timings.stats_secs)
+        fmt_secs(part.timings.stats_secs),
+        part.timings.kernel_isa
     );
     println!("ofv (ssd)      {:.4}", part.objective);
     println!("W(C) pairwise  {:.4}", part.pairwise);
@@ -455,7 +464,8 @@ fn cmd_update(args: &Args) -> Result<()> {
 
 /// Solver config for the serve session from CLI flags — the same
 /// fingerprint-participating four as `aba update`, plus parallelism
-/// (which shard-merge solves fan out on).
+/// (which shard-merge solves fan out on) and the kernel dispatch mode
+/// (neither participates in the fingerprint).
 fn serve_aba_config(args: &Args) -> Result<AbaConfig> {
     let mut cfg = AbaConfig::default();
     if let Some(v) = args.get_parse("variant")? {
@@ -470,6 +480,9 @@ fn serve_aba_config(args: &Args) -> Result<AbaConfig> {
     cfg.strict_divisibility = args.has_flag("strict");
     if let Some(p) = args.get_parse::<Parallelism>("threads")? {
         cfg.parallelism = p;
+    }
+    if let Some(m) = args.get_parse::<KernelMode>("kernels")? {
+        cfg.kernels = Some(m);
     }
     Ok(cfg)
 }
@@ -486,10 +499,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg: serve_aba_config(args)?,
         test_delay_ms: args.get_parse("test-delay-ms")?.unwrap_or(0),
     };
+    // CI's serve smoke greps this line; `/metrics` exposes the same
+    // selection as `aba_kernel_isa`.
+    let kernel_isa = match config.cfg.kernels {
+        Some(m) => aba::runtime::Kernels::select(m).isa(),
+        None => aba::runtime::Kernels::get().isa(),
+    };
     let snapshot_dir = config.snapshot_dir.clone();
     let server = aba::serve::Server::start(config)?;
     // CI and scripts parse this line to discover the bound port.
     println!("listening on {}", server.addr());
+    println!("distance kernels: {kernel_isa}");
     println!("snapshots in {} — SIGTERM or POST /v1/admin/drain to stop", snapshot_dir.display());
     let written = server.wait()?;
     println!("drained: {written} handle(s) snapshotted to {}", snapshot_dir.display());

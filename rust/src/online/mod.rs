@@ -285,16 +285,9 @@ impl OnlinePartition {
             if m == 0 {
                 continue;
             }
-            let dev: f64 = cl
-                .delta
-                .sum()
-                .iter()
-                .zip(&global)
-                .map(|(&s, &g)| {
-                    let diff = s / m as f64 - g;
-                    diff * diff
-                })
-                .sum();
+            // `global` is already a mean, so its count is exactly 1.0
+            // (division by 1.0 is exact — same folds as the inline loop).
+            let dev = crate::runtime::simd::centroid_sq_dist(cl.delta.sum(), m as f64, &global, 1.0);
             bgss += m as f64 * dev;
         }
         bgss
@@ -432,14 +425,7 @@ impl OnlinePartition {
         let mu = self.global_centroid_f64();
         let dist: Vec<f64> = slots
             .iter()
-            .map(|&slot| {
-                let mut s = 0f64;
-                for (&v, &m) in self.store.row(slot).iter().zip(&mu) {
-                    let diff = v as f64 - m;
-                    s += diff * diff;
-                }
-                s
-            })
+            .map(|&slot| crate::runtime::simd::sq_dist_to_f64(self.store.row(slot), &mu))
             .collect();
         let mut order: Vec<usize> = (0..b).collect();
         order.sort_unstable_by(|&x, &y| dist[y].total_cmp(&dist[x]).then(x.cmp(&y)));

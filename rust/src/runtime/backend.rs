@@ -15,12 +15,19 @@
 //! [`CostBackend::set_pool`]: large batch-cost requests are then split
 //! into row chunks and computed concurrently (see [`super::pool`]),
 //! bit-identically to the serial path.
+//!
+//! The actual arithmetic lives in [`super::simd`]: backends hold a
+//! [`Kernels`] dispatch table (installed via [`CostBackend::set_kernels`]
+//! from the session's `.kernels(..)` knob, defaulting to the
+//! process-wide [`Kernels::get`]) and call its `row_norms` /
+//! `cost_block` entries.
 
 #[cfg(feature = "xla")]
 use super::artifacts::Manifest;
 #[cfg(feature = "xla")]
 use super::client::XlaRuntime;
 use super::pool::WorkerPool;
+use super::simd::{self, Kernels};
 use crate::error::AbaError;
 #[cfg(feature = "xla")]
 use anyhow::Result;
@@ -104,6 +111,12 @@ pub trait CostBackend {
     /// [`Parallelism`]: super::Parallelism
     fn set_pool(&mut self, _pool: Option<Arc<WorkerPool>>) {}
 
+    /// Install the distance-kernel dispatch table (see
+    /// [`super::simd::Kernels`]). Called once per session build from the
+    /// `.kernels(..)` knob; backends that do their own arithmetic (XLA)
+    /// forward it to their native fallback.
+    fn set_kernels(&mut self, _kernels: Kernels) {}
+
     /// Descriptive name for logs/benches.
     fn name(&self) -> &'static str;
 }
@@ -116,7 +129,7 @@ pub trait CostBackend {
 /// pool installed (see [`CostBackend::set_pool`]) large cost matrices
 /// are chunk-parallelized over batch rows — bit-identically to the
 /// serial path, since every entry goes through the same row kernel
-/// (`cost_rows`).
+/// ([`Kernels::cost_block`]).
 #[derive(Default)]
 pub struct NativeBackend {
     /// Scratch: per-centroid squared norms.
@@ -126,104 +139,41 @@ pub struct NativeBackend {
     /// Worker pool for the chunk-parallel path, shared with the owning
     /// session.
     pool: Option<Arc<WorkerPool>>,
+    /// Distance-kernel dispatch table; `Default` resolves to the
+    /// process-wide selection ([`Kernels::get`]), sessions may override
+    /// via [`CostBackend::set_kernels`].
+    kernels: Kernels,
 }
-
-/// 8-lane unrolled dot product. The multiple independent accumulators
-/// break the f32 dependency chain so LLVM auto-vectorizes (a plain
-/// `zip().map().sum()` cannot be reordered and stays scalar) — measured
-/// ~3x on the cost-matrix hot path (EXPERIMENTS.md §Perf).
-#[inline]
-fn dot8(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0f32; 8];
-    let chunks = a.len() / 8;
-    for t in 0..chunks {
-        let (abase, bbase) = (&a[t * 8..t * 8 + 8], &b[t * 8..t * 8 + 8]);
-        for l in 0..8 {
-            acc[l] += abase[l] * bbase[l];
-        }
-    }
-    let mut dot = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
-    for t in chunks * 8..a.len() {
-        dot += a[t] * b[t];
-    }
-    dot
-}
-
-/// Squared L2 norm of every `d`-row of `v`, via the same [`dot8`] the
-/// cost kernel uses (so precomputed and inline norms are bit-identical).
-fn row_norms(v: &[f32], rows: usize, d: usize, out: &mut Vec<f32>) {
-    debug_assert_eq!(v.len(), rows * d);
-    out.clear();
-    out.extend(v.chunks_exact(d).map(|r| dot8(r, r)));
-}
-
-/// Centroid-tile width for [`cost_rows`]: 64 centroids x 64 features x
-/// 4 bytes = 16 KiB, comfortably L1-resident alongside the x row.
-const TILE_COLS: usize = 64;
 
 /// Minimum `m * k * d` before the pooled path engages; below it, the
 /// ~10us pool dispatch costs more than the loop (one 64x64x32 matrix
 /// sits right at the threshold).
 const PAR_COST_MIN_WORK: usize = 1 << 17;
 
-/// Write rows `r0..r1` of the `m x k` cost matrix into `out`
-/// (`(r1 - r0) * k` entries): `||x_i||^2 + ||c_j||^2 - 2 <x_i, c_j>`
-/// with precomputed row norms `xn` (indexed by global row) and centroid
-/// norms `cn` — the same decomposition as the L1 Pallas kernel. Tiled
-/// over centroid blocks so the active slice of `c` stays cache-resident
-/// while `x` streams. The single kernel behind both the serial and the
-/// chunk-parallel path: each entry depends only on its own row/column,
-/// so any row split or tile shape yields bit-identical results.
-#[allow(clippy::too_many_arguments)]
-fn cost_rows(
-    x: &[f32],
-    xn: &[f32],
-    r0: usize,
-    r1: usize,
-    d: usize,
-    c: &[f32],
-    cn: &[f32],
-    k: usize,
-    out: &mut [f32],
-) {
-    debug_assert_eq!(out.len(), (r1 - r0) * k);
-    let mut jt = 0;
-    while jt < k {
-        let jhi = (jt + TILE_COLS).min(k);
-        for i in r0..r1 {
-            let xi = &x[i * d..(i + 1) * d];
-            let row = &mut out[(i - r0) * k..(i - r0) * k + k];
-            for (j, cj) in c[jt * d..jhi * d].chunks_exact(d).enumerate() {
-                let j = jt + j;
-                row[j] = (xn[i] + cn[j] - 2.0 * dot8(xi, cj)).max(0.0);
-            }
-        }
-        jt = jhi;
-    }
-}
-
 /// Tight-loop cost matrix: `out[i*k + j] = ||x_i - c_j||^2`. One-shot
-/// serial entry point over the shared `cost_rows` kernel;
-/// [`NativeBackend`] adds norm scratch reuse and optional
-/// chunk-parallelism on top.
+/// serial entry point over the process-default [`Kernels`] table;
+/// [`NativeBackend`] adds norm scratch reuse, a per-session kernel
+/// override, and optional chunk-parallelism on top.
 pub fn cost_matrix_native(x: &[f32], m: usize, d: usize, c: &[f32], k: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len(), m * d);
     debug_assert_eq!(c.len(), k * d);
     debug_assert_eq!(out.len(), m * k);
+    let kern = Kernels::get();
     let mut cn = Vec::new();
-    row_norms(c, k, d, &mut cn);
+    kern.row_norms(c, k, d, &mut cn);
     let mut xn = Vec::new();
-    row_norms(x, m, d, &mut xn);
-    cost_rows(x, &xn, 0, m, d, c, &cn, k, out);
+    kern.row_norms(x, m, d, &mut xn);
+    kern.cost_block(x, &xn, 0, m, d, c, &cn, k, out);
 }
 
 /// Chunk-parallel cost matrix: contiguous row chunks of `out`, one pool
-/// task per chunk through [`WorkerPool::run_mut`], all via [`cost_rows`]
-/// — bit-identical to the serial path for any thread count.
+/// task per chunk through [`WorkerPool::run_mut`], all via the same
+/// [`Kernels::cost_block`] — bit-identical to the serial path for any
+/// thread count.
 #[allow(clippy::too_many_arguments)]
 fn cost_matrix_pooled(
     pool: &WorkerPool,
+    kern: Kernels,
     x: &[f32],
     xn: &[f32],
     m: usize,
@@ -242,7 +192,7 @@ fn cost_matrix_pooled(
         .collect();
     pool.run_mut(&mut chunks, &|_ti, (r0, chunk)| {
         let rows = chunk.len() / k;
-        cost_rows(x, xn, *r0, *r0 + rows, d, c, cn, k, chunk);
+        kern.cost_block(x, xn, *r0, *r0 + rows, d, c, cn, k, chunk);
     });
 }
 
@@ -257,14 +207,15 @@ impl CostBackend for NativeBackend {
         out: &mut Vec<f32>,
     ) {
         out.resize(m * k, 0.0);
-        row_norms(c, k, d, &mut self.c_norms);
-        row_norms(x, m, d, &mut self.x_norms);
+        let kern = self.kernels;
+        kern.row_norms(c, k, d, &mut self.c_norms);
+        kern.row_norms(x, m, d, &mut self.x_norms);
         let (cn, xn) = (&self.c_norms[..], &self.x_norms[..]);
         match self.pool.as_deref() {
             Some(pool) if m >= 2 && m * k * d >= PAR_COST_MIN_WORK => {
-                cost_matrix_pooled(pool, x, xn, m, d, c, cn, k, out);
+                cost_matrix_pooled(pool, kern, x, xn, m, d, c, cn, k, out);
             }
-            _ => cost_rows(x, xn, 0, m, d, c, cn, k, out),
+            _ => kern.cost_block(x, xn, 0, m, d, c, cn, k, out),
         }
     }
 
@@ -280,18 +231,17 @@ impl CostBackend for NativeBackend {
         debug_assert_eq!(mu.len(), d);
         out.clear();
         out.reserve(n);
-        for xi in x.chunks_exact(d) {
-            let mut s = 0f64;
-            for (&a, &b) in xi.iter().zip(mu) {
-                let diff = (a - b) as f64;
-                s += diff * diff;
-            }
-            out.push(s);
-        }
+        // Objective tier: f64 accumulation in index order, scalar in
+        // every kernel mode by policy (see `runtime::simd`).
+        out.extend(x.chunks_exact(d).map(|xi| simd::sq_dist(xi, mu)));
     }
 
     fn set_pool(&mut self, pool: Option<Arc<WorkerPool>>) {
         self.pool = pool;
+    }
+
+    fn set_kernels(&mut self, kernels: Kernels) {
+        self.kernels = kernels;
     }
 
     fn name(&self) -> &'static str {
@@ -447,6 +397,11 @@ impl CostBackend for XlaBackend {
         self.native.set_pool(pool);
     }
 
+    fn set_kernels(&mut self, kernels: Kernels) {
+        // PJRT does its own arithmetic; the table covers the fallback.
+        self.native.set_kernels(kernels);
+    }
+
     fn name(&self) -> &'static str {
         "xla"
     }
@@ -488,11 +443,7 @@ mod tests {
         NativeBackend::default().batch_costs(&x, m, d, &c, k, &mut out);
         for i in 0..m {
             for j in 0..k {
-                let mut want = 0f64;
-                for t in 0..d {
-                    let diff = (x[i * d + t] - c[j * d + t]) as f64;
-                    want += diff * diff;
-                }
+                let want = simd::sq_dist(&x[i * d..(i + 1) * d], &c[j * d..(j + 1) * d]);
                 let got = out[i * k + j] as f64;
                 assert!((got - want).abs() < 1e-3, "({i},{j}): {got} vs {want}");
             }
@@ -509,11 +460,7 @@ mod tests {
         NativeBackend::default().centroid_distances(&x, n, d, &mu, &mut out);
         assert_eq!(out.len(), n);
         for i in 0..n {
-            let mut want = 0f64;
-            for t in 0..d {
-                let diff = (x[i * d + t] - mu[t]) as f64;
-                want += diff * diff;
-            }
+            let want = simd::sq_dist(&x[i * d..(i + 1) * d], &mu);
             assert!((out[i] - want).abs() < 1e-6);
         }
     }
@@ -535,6 +482,25 @@ mod tests {
             pooled.batch_costs(&x, m, d, &c, k, &mut b);
             // Exact f32 equality, not tolerance: the parallel split must
             // not change a single bit.
+            assert_eq!(a, b, "m={m} k={k} d={d}");
+        }
+    }
+
+    #[test]
+    fn scalar_kernels_bit_identical_to_default_selection() {
+        // The auto-selected vector table must not change a single bit
+        // relative to the forced scalar reference (on hosts without a
+        // vector ISA both tables are scalar and this holds trivially).
+        let mut rng = Pcg32::new(79);
+        for &(m, k, d) in &[(13usize, 7usize, 5usize), (33, 70, 16), (96, 64, 32)] {
+            let x = rand_mat(&mut rng, m, d);
+            let c = rand_mat(&mut rng, k, d);
+            let mut auto = NativeBackend::default();
+            let mut scalar = NativeBackend::default();
+            scalar.set_kernels(Kernels::select(crate::runtime::KernelMode::Scalar));
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            auto.batch_costs(&x, m, d, &c, k, &mut a);
+            scalar.batch_costs(&x, m, d, &c, k, &mut b);
             assert_eq!(a, b, "m={m} k={k} d={d}");
         }
     }

@@ -13,7 +13,10 @@
 //!   selectable per run,
 //! * [`pool`] — the session worker pool ([`Parallelism`] /
 //!   [`WorkerPool`]) behind chunk-parallel cost matrices and the
-//!   hierarchical subproblem fan-out.
+//!   hierarchical subproblem fan-out,
+//! * [`simd`] — the runtime-dispatched distance microkernels
+//!   ([`Kernels`] / [`KernelMode`]) every squared-Euclidean hot path
+//!   funnels through, and the crate's accumulation-precision policy.
 //!
 //! Python never runs here; the binary is self-contained once artifacts
 //! are built.
@@ -23,9 +26,11 @@ pub mod backend;
 #[cfg(feature = "xla")]
 pub mod client;
 pub mod pool;
+pub mod simd;
 
 pub use backend::{make_backend, BackendKind, CostBackend, NativeBackend};
 pub use pool::{Parallelism, WorkerPool};
+pub use simd::{KernelMode, Kernels};
 #[cfg(feature = "xla")]
 pub use backend::XlaBackend;
 #[cfg(feature = "xla")]

@@ -1,0 +1,938 @@
+//! Runtime-dispatched SIMD microkernels for the squared-Euclidean hot
+//! paths, plus the crate's single accumulation-precision policy.
+//!
+//! # Two precision tiers, one home
+//!
+//! Every distance/moment computation in the crate lives here, in one of
+//! two documented tiers:
+//!
+//! * **f32 cost tier** — the per-batch cost matrices and row norms the
+//!   assignment solver consumes ([`Kernels::cost_block`],
+//!   [`Kernels::row_norms`], [`Kernels::dot`]). Accumulated in f32 over
+//!   8 vertical lanes; this is the tier that vectorizes.
+//! * **f64 objective tier** — everything that feeds objectives,
+//!   orderings, or maintained moments ([`sq_dist`], [`sq_dist_to_f64`],
+//!   [`accumulate`] / [`decumulate`], [`add_assign_row`], [`sumsq_f64`],
+//!   [`centroid_sq_dist`]). These accumulate in f64 **in index order**
+//!   and deliberately stay scalar in every kernel mode: f64 chains are
+//!   order-sensitive, and the crate's bit-identity contracts (serial ≡
+//!   threaded, view ≡ owned, delta ≡ recompute, save ≡ load) are defined
+//!   against this exact order.
+//!
+//! # Dispatch and the bit-identity contract
+//!
+//! [`Kernels`] is a table of function pointers selected **once** — at
+//! session construction (builder `.kernels(..)`, CLI `--kernels`) or
+//! lazily for the process default ([`Kernels::get`], which consults the
+//! `ABA_KERNELS` environment variable a single time). The default mode
+//! ([`KernelMode::Auto`]) picks the widest ISA whose kernels are
+//! **bit-identical** to the scalar reference: the vector `dot` keeps the
+//! same 8 vertical f32 accumulator lanes as the scalar kernel (separate
+//! multiply and add, never a fused one) and combines them in the same
+//! fixed reduction tree, so by IEEE-754 every lane performs the same
+//! correctly-rounded operations in the same order and the result cannot
+//! differ. The property suite asserts this across the flat,
+//! hierarchical, sparse, and online solver paths.
+//!
+//! | mode | x86_64 | aarch64 | other | numeric contract |
+//! |---|---|---|---|---|
+//! | `auto` | AVX2 (mul + add) | NEON (mul + add) | scalar | bit-identical to `scalar` |
+//! | `scalar` | 8-lane unrolled | 8-lane unrolled | same | the reference |
+//! | `fma` | AVX2 + FMA (`vfmadd`) | falls back to auto | scalar | ULP-bounded, not bit-equal |
+//!
+//! [`KernelMode::Fma`] is opt-in precisely because fused multiply-add
+//! contracts the intermediate rounding: it is slightly *more* accurate
+//! (and a touch faster) but not bit-equal to the scalar reference, so it
+//! is gated by ULP-bound tests and the `kernel` bench section's
+//! objective-gap records instead of the bit-identity suite. Requesting a
+//! mode the host cannot honor falls back down the same table (the
+//! selected ISA is always visible via [`Kernels::isa`], surfaced in
+//! `Partition` timings, `BENCH_aba.json`, and serve's `/metrics`).
+
+use crate::error::AbaError;
+use std::sync::OnceLock;
+
+/// Kernel-selection knob: builder `.kernels(..)`, CLI `--kernels`, env
+/// `ABA_KERNELS`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Widest available bit-identical vector path (the default).
+    Auto,
+    /// Force the scalar reference kernels on any host.
+    Scalar,
+    /// FMA-contracted fast path — ULP-close to, but not bit-equal with,
+    /// the scalar reference. Falls back to `Auto` where unavailable.
+    Fma,
+}
+
+impl KernelMode {
+    /// Every mode, in display order — the single source of the accepted
+    /// CLI/env values.
+    pub const ALL: [KernelMode; 3] = [KernelMode::Auto, KernelMode::Scalar, KernelMode::Fma];
+
+    /// The canonical (CLI/env) spelling.
+    pub const fn as_str(self) -> &'static str {
+        match self {
+            KernelMode::Auto => "auto",
+            KernelMode::Scalar => "scalar",
+            KernelMode::Fma => "fma",
+        }
+    }
+
+    /// Accepted spellings joined with `|`, for help and error messages.
+    pub fn accepted() -> String {
+        Self::ALL
+            .iter()
+            .map(|m| m.as_str())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+}
+
+impl std::fmt::Display for KernelMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for KernelMode {
+    type Err = AbaError;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|m| m.as_str() == s)
+            .ok_or_else(|| {
+                AbaError::InvalidInput(format!(
+                    "unknown kernel mode '{s}' (accepted: {})",
+                    KernelMode::accepted()
+                ))
+            })
+    }
+}
+
+/// The kernel mode requested by the `ABA_KERNELS` environment variable
+/// (unset or unparsable → [`KernelMode::Auto`]). Consulted once by
+/// [`Kernels::get`] and once per session build when the builder leaves
+/// the knob unset — never on the hot path.
+pub fn kernel_mode_env_default() -> KernelMode {
+    match std::env::var("ABA_KERNELS") {
+        // An exported-but-empty variable (common in CI matrices) means
+        // "no override", not a parse error worth warning about.
+        Ok(v) if v.trim().is_empty() => KernelMode::Auto,
+        Ok(v) => v.parse().unwrap_or_else(|_| {
+            log::warn!(
+                "ignoring invalid ABA_KERNELS='{v}' (accepted: {})",
+                KernelMode::accepted()
+            );
+            KernelMode::Auto
+        }),
+        Err(_) => KernelMode::Auto,
+    }
+}
+
+type DotFn = fn(&[f32], &[f32]) -> f32;
+type RowNormsFn = fn(&[f32], usize, &mut Vec<f32>);
+type CostBlockFn =
+    fn(&[f32], &[f32], usize, usize, usize, &[f32], &[f32], usize, &mut [f32]);
+
+/// A dispatch table of f32-tier kernels, selected once per session (or
+/// once per process for [`Kernels::get`]). Copy — holding one is free.
+#[derive(Clone, Copy, Debug)]
+pub struct Kernels {
+    isa: &'static str,
+    mode: KernelMode,
+    dot: DotFn,
+    row_norms: RowNormsFn,
+    cost_block: CostBlockFn,
+}
+
+static PROCESS_DEFAULT: OnceLock<Kernels> = OnceLock::new();
+
+impl Kernels {
+    /// The scalar reference table — the numeric anchor every vector path
+    /// is bit-identical to.
+    pub fn scalar() -> Self {
+        Kernels {
+            isa: "scalar",
+            mode: KernelMode::Scalar,
+            dot: dot_scalar,
+            row_norms: row_norms_scalar,
+            cost_block: cost_block_scalar,
+        }
+    }
+
+    /// Select a table for `mode`, probing CPU features at most once per
+    /// call. Unavailable requests degrade (`fma` → `auto` → `scalar`)
+    /// rather than fail; [`Kernels::isa`] reports what was picked.
+    pub fn select(mode: KernelMode) -> Self {
+        match mode {
+            KernelMode::Scalar => Self::scalar(),
+            KernelMode::Auto => vector_table()
+                .map(|t| Kernels { mode: KernelMode::Auto, ..t })
+                .unwrap_or_else(|| Kernels { mode: KernelMode::Auto, ..Self::scalar() }),
+            KernelMode::Fma => fma_table()
+                .or_else(vector_table)
+                .map(|t| Kernels { mode: KernelMode::Fma, ..t })
+                .unwrap_or_else(|| Kernels { mode: KernelMode::Fma, ..Self::scalar() }),
+        }
+    }
+
+    /// The process-default table: [`kernel_mode_env_default`] resolved
+    /// through [`Kernels::select`], memoized on first use. Free-function
+    /// consumers (`cost_matrix_native`, serve metrics) read this;
+    /// sessions override it per builder.
+    pub fn get() -> Kernels {
+        *PROCESS_DEFAULT.get_or_init(|| Kernels::select(kernel_mode_env_default()))
+    }
+
+    /// The instruction set actually selected: `"scalar"`, `"avx2"`,
+    /// `"avx2+fma"`, or `"neon"`.
+    pub fn isa(&self) -> &'static str {
+        self.isa
+    }
+
+    /// The mode this table was requested under (the effective ISA may be
+    /// narrower — see [`Kernels::select`]).
+    pub fn mode(&self) -> KernelMode {
+        self.mode
+    }
+
+    /// f32 dot product — 8 vertical accumulator lanes, fixed reduction
+    /// order (see the module docs for the bit-identity contract).
+    #[inline]
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        (self.dot)(a, b)
+    }
+
+    /// Squared L2 norm of every `d`-row of `x` into `out` (cleared),
+    /// via the same dot kernel the cost tier uses — so precomputed and
+    /// inline norms are bit-identical.
+    pub fn row_norms(&self, x: &[f32], rows: usize, d: usize, out: &mut Vec<f32>) {
+        debug_assert_eq!(x.len(), rows * d);
+        (self.row_norms)(x, d, out)
+    }
+
+    /// Write rows `r0..r1` of the `m x k` cost matrix into `out`
+    /// (`(r1 - r0) * k` entries): `||x_i||² + ||c_j||² − 2⟨x_i, c_j⟩`
+    /// clamped at 0, with precomputed row norms `xn` (indexed by global
+    /// row) and centroid norms `cn`. Tiled over centroid blocks so the
+    /// active slice of `c` stays L1-resident while `x` streams; each
+    /// entry depends only on its own row/column, so any row split or
+    /// tile shape yields bit-identical results.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub fn cost_block(
+        &self,
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        (self.cost_block)(x, xn, r0, r1, d, c, cn, k, out)
+    }
+}
+
+impl Default for Kernels {
+    fn default() -> Self {
+        Kernels::get()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared kernel bodies
+// ---------------------------------------------------------------------------
+
+/// Centroid-tile width for [`Kernels::cost_block`]: 64 centroids x 64
+/// features x 4 bytes = 16 KiB, comfortably L1-resident alongside the x
+/// row.
+const TILE_COLS: usize = 64;
+
+/// The fixed 8-lane reduction tree every dot kernel (scalar and vector)
+/// funnels through — the order half of the bit-identity contract.
+#[inline(always)]
+fn reduce8(acc: &[f32; 8]) -> f32 {
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// 8-lane unrolled scalar dot product — the reference kernel. The
+/// multiple independent accumulators break the f32 dependency chain so
+/// LLVM auto-vectorizes even without the explicit paths below (a plain
+/// `zip().map().sum()` cannot be reordered and stays scalar) — measured
+/// ~3x on the cost-matrix hot path (EXPERIMENTS.md §Perf).
+#[inline]
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 8];
+    let chunks = a.len() / 8;
+    for t in 0..chunks {
+        let (abase, bbase) = (&a[t * 8..t * 8 + 8], &b[t * 8..t * 8 + 8]);
+        for l in 0..8 {
+            acc[l] += abase[l] * bbase[l];
+        }
+    }
+    let mut dot = reduce8(&acc);
+    for t in chunks * 8..a.len() {
+        dot += a[t] * b[t];
+    }
+    dot
+}
+
+/// Generic row-norms body, monomorphized per ISA so `dot` inlines.
+#[inline(always)]
+fn row_norms_impl<F: Fn(&[f32], &[f32]) -> f32>(dot: F, x: &[f32], d: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(x.chunks_exact(d).map(|r| dot(r, r)));
+}
+
+/// Generic cost-block body, monomorphized per ISA so `dot` inlines into
+/// the tiled loop (see [`Kernels::cost_block`] for the semantics).
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn cost_block_impl<F: Fn(&[f32], &[f32]) -> f32>(
+    dot: F,
+    x: &[f32],
+    xn: &[f32],
+    r0: usize,
+    r1: usize,
+    d: usize,
+    c: &[f32],
+    cn: &[f32],
+    k: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (r1 - r0) * k);
+    let mut jt = 0;
+    while jt < k {
+        let jhi = (jt + TILE_COLS).min(k);
+        for i in r0..r1 {
+            let xi = &x[i * d..(i + 1) * d];
+            let row = &mut out[(i - r0) * k..(i - r0) * k + k];
+            for (j, cj) in c[jt * d..jhi * d].chunks_exact(d).enumerate() {
+                let j = jt + j;
+                row[j] = (xn[i] + cn[j] - 2.0 * dot(xi, cj)).max(0.0);
+            }
+        }
+        jt = jhi;
+    }
+}
+
+fn row_norms_scalar(x: &[f32], d: usize, out: &mut Vec<f32>) {
+    row_norms_impl(dot_scalar, x, d, out);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn cost_block_scalar(
+    x: &[f32],
+    xn: &[f32],
+    r0: usize,
+    r1: usize,
+    d: usize,
+    c: &[f32],
+    cn: &[f32],
+    k: usize,
+    out: &mut [f32],
+) {
+    cost_block_impl(dot_scalar, x, xn, r0, r1, d, c, cn, k, out);
+}
+
+// ---------------------------------------------------------------------------
+// x86_64: AVX2 (bit-identical) and AVX2+FMA (contracted) paths
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{cost_block_impl, reduce8, row_norms_impl};
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_setzero_ps,
+        _mm256_storeu_ps,
+    };
+
+    /// AVX2 dot body: per 8-wide chunk each lane performs exactly the
+    /// multiply-then-add of the scalar kernel's matching accumulator, and
+    /// the vector register is spilled to an array and reduced through the
+    /// same [`reduce8`] tree — bit-identical by IEEE-754.
+    ///
+    /// `#[inline(always)]` with no `#[target_feature]` of its own: the
+    /// callers below carry the feature, so after monomorphization the
+    /// intrinsics inline into AVX2-enabled code.
+    ///
+    /// # Safety
+    /// Callers must only reach this after `avx2` was detected.
+    #[inline(always)]
+    unsafe fn dot_avx2_body(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / 8;
+        let mut acc = _mm256_setzero_ps();
+        for (ca, cb) in a.chunks_exact(8).zip(b.chunks_exact(8)) {
+            let va = _mm256_loadu_ps(ca.as_ptr());
+            let vb = _mm256_loadu_ps(cb.as_ptr());
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut dot = reduce8(&lanes);
+        for t in chunks * 8..a.len() {
+            dot += a[t] * b[t];
+        }
+        dot
+    }
+
+    /// FMA dot body: same lane layout, but multiply-add is fused
+    /// (`vfmadd`), including the scalar tail — ULP-close to the scalar
+    /// reference, not bit-equal.
+    ///
+    /// # Safety
+    /// Callers must only reach this after `avx2` and `fma` were detected.
+    #[inline(always)]
+    unsafe fn dot_fma_body(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / 8;
+        let mut acc = _mm256_setzero_ps();
+        for (ca, cb) in a.chunks_exact(8).zip(b.chunks_exact(8)) {
+            let va = _mm256_loadu_ps(ca.as_ptr());
+            let vb = _mm256_loadu_ps(cb.as_ptr());
+            acc = _mm256_fmadd_ps(va, vb, acc);
+        }
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut dot = reduce8(&lanes);
+        for t in chunks * 8..a.len() {
+            dot = a[t].mul_add(b[t], dot);
+        }
+        dot
+    }
+
+    // Safe `fn`-pointer wrappers. `#[target_feature]` functions must be
+    // `unsafe fn` on this toolchain and cannot coerce to plain `fn`
+    // pointers, so each wrapper pairs a feature-enabled unsafe inner
+    // with a safe outer; the table constructors below only hand these
+    // out after `is_x86_feature_detected!` succeeded, which is what
+    // makes the inner calls sound.
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_avx2_inner(a: &[f32], b: &[f32]) -> f32 {
+        dot_avx2_body(a, b)
+    }
+
+    pub fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: gated on runtime avx2 detection in `vector_table`.
+        unsafe { dot_avx2_inner(a, b) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn row_norms_avx2_inner(x: &[f32], d: usize, out: &mut Vec<f32>) {
+        // SAFETY: closure bodies do not inherit the enclosing unsafety;
+        // the feature gate that makes this sound is the caller's.
+        row_norms_impl(|a, b| unsafe { dot_avx2_body(a, b) }, x, d, out);
+    }
+
+    pub fn row_norms_avx2(x: &[f32], d: usize, out: &mut Vec<f32>) {
+        // SAFETY: gated on runtime avx2 detection in `vector_table`.
+        unsafe { row_norms_avx2_inner(x, d, out) }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    unsafe fn cost_block_avx2_inner(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        // SAFETY: as in `row_norms_avx2_inner`.
+        cost_block_impl(|a, b| unsafe { dot_avx2_body(a, b) }, x, xn, r0, r1, d, c, cn, k, out);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn cost_block_avx2(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        // SAFETY: gated on runtime avx2 detection in `vector_table`.
+        unsafe { cost_block_avx2_inner(x, xn, r0, r1, d, c, cn, k, out) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dot_fma_inner(a: &[f32], b: &[f32]) -> f32 {
+        dot_fma_body(a, b)
+    }
+
+    pub fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: gated on runtime avx2+fma detection in `fma_table`.
+        unsafe { dot_fma_inner(a, b) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn row_norms_fma_inner(x: &[f32], d: usize, out: &mut Vec<f32>) {
+        // SAFETY: as in `row_norms_avx2_inner`.
+        row_norms_impl(|a, b| unsafe { dot_fma_body(a, b) }, x, d, out);
+    }
+
+    pub fn row_norms_fma(x: &[f32], d: usize, out: &mut Vec<f32>) {
+        // SAFETY: gated on runtime avx2+fma detection in `fma_table`.
+        unsafe { row_norms_fma_inner(x, d, out) }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn cost_block_fma_inner(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        // SAFETY: as in `row_norms_avx2_inner`.
+        cost_block_impl(|a, b| unsafe { dot_fma_body(a, b) }, x, xn, r0, r1, d, c, cn, k, out);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn cost_block_fma(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        // SAFETY: gated on runtime avx2+fma detection in `fma_table`.
+        unsafe { cost_block_fma_inner(x, xn, r0, r1, d, c, cn, k, out) }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn vector_table() -> Option<Kernels> {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Some(Kernels {
+            isa: "avx2",
+            mode: KernelMode::Auto,
+            dot: x86::dot_avx2,
+            row_norms: x86::row_norms_avx2,
+            cost_block: x86::cost_block_avx2,
+        })
+    } else {
+        None
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn fma_table() -> Option<Kernels> {
+    if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma") {
+        Some(Kernels {
+            isa: "avx2+fma",
+            mode: KernelMode::Fma,
+            dot: x86::dot_fma,
+            row_norms: x86::row_norms_fma,
+            cost_block: x86::cost_block_fma,
+        })
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64: NEON (bit-identical) path
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{cost_block_impl, reduce8, row_norms_impl};
+    use std::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32};
+
+    /// NEON dot body: two 4-wide registers cover the scalar kernel's 8
+    /// accumulator lanes (lanes 0..3 and 4..7), multiply-then-add, same
+    /// [`reduce8`] tree — bit-identical by IEEE-754.
+    ///
+    /// # Safety
+    /// Callers must only reach this after `neon` was detected.
+    #[inline(always)]
+    unsafe fn dot_neon_body(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / 8;
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        for (ca, cb) in a.chunks_exact(8).zip(b.chunks_exact(8)) {
+            lo = vaddq_f32(lo, vmulq_f32(vld1q_f32(ca.as_ptr()), vld1q_f32(cb.as_ptr())));
+            hi = vaddq_f32(
+                hi,
+                vmulq_f32(vld1q_f32(ca.as_ptr().add(4)), vld1q_f32(cb.as_ptr().add(4))),
+            );
+        }
+        let mut lanes = [0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), lo);
+        vst1q_f32(lanes.as_mut_ptr().add(4), hi);
+        let mut dot = reduce8(&lanes);
+        for t in chunks * 8..a.len() {
+            dot += a[t] * b[t];
+        }
+        dot
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_neon_inner(a: &[f32], b: &[f32]) -> f32 {
+        dot_neon_body(a, b)
+    }
+
+    pub fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: gated on runtime neon detection in `vector_table`.
+        unsafe { dot_neon_inner(a, b) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn row_norms_neon_inner(x: &[f32], d: usize, out: &mut Vec<f32>) {
+        // SAFETY: closure bodies do not inherit the enclosing unsafety;
+        // the feature gate that makes this sound is the caller's.
+        row_norms_impl(|a, b| unsafe { dot_neon_body(a, b) }, x, d, out);
+    }
+
+    pub fn row_norms_neon(x: &[f32], d: usize, out: &mut Vec<f32>) {
+        // SAFETY: gated on runtime neon detection in `vector_table`.
+        unsafe { row_norms_neon_inner(x, d, out) }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    unsafe fn cost_block_neon_inner(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        // SAFETY: as in `row_norms_neon_inner`.
+        cost_block_impl(|a, b| unsafe { dot_neon_body(a, b) }, x, xn, r0, r1, d, c, cn, k, out);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn cost_block_neon(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        // SAFETY: gated on runtime neon detection in `vector_table`.
+        unsafe { cost_block_neon_inner(x, xn, r0, r1, d, c, cn, k, out) }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn vector_table() -> Option<Kernels> {
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        Some(Kernels {
+            isa: "neon",
+            mode: KernelMode::Auto,
+            dot: arm::dot_neon,
+            row_norms: arm::row_norms_neon,
+            cost_block: arm::cost_block_neon,
+        })
+    } else {
+        None
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn vector_table() -> Option<Kernels> {
+    None
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn fma_table() -> Option<Kernels> {
+    None
+}
+
+// ---------------------------------------------------------------------------
+// f64 objective tier — scalar in every mode, by policy (see module docs)
+// ---------------------------------------------------------------------------
+
+/// Squared Euclidean distance between two f32 rows: per coordinate the
+/// f32 difference is widened to f64 and squared, accumulated in index
+/// order. The objective-tier `dist2` every consumer shares
+/// (`Dataset::dist2`, `DataView::dist2`, batch ordering, kNN, pruning
+/// bounds — the bound ≥ distance comparisons in [`crate::knn::farthest`]
+/// hold exactly because both sides use this accumulation).
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let diff = (x - y) as f64;
+        s += diff * diff;
+    }
+    s
+}
+
+/// Squared Euclidean distance from an f32 row to an f64 centroid (each
+/// coordinate widened before subtracting) — the Lloyd/objective variant.
+#[inline]
+pub fn sq_dist_to_f64(a: &[f32], mu: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), mu.len());
+    let mut s = 0f64;
+    for (&x, &m) in a.iter().zip(mu) {
+        let diff = x as f64 - m;
+        s += diff * diff;
+    }
+    s
+}
+
+/// Fold `row` into the f64 running sums `acc` (`acc[j] += row[j]`) and
+/// return the row's squared norm `Σ row[j]²`, both accumulated in index
+/// order — the moment update of `ClusterDelta::add` and the certificate
+/// chunk folds, kept here so the two stay bit-identical by construction.
+#[inline]
+pub fn accumulate(acc: &mut [f64], row: &[f32]) -> f64 {
+    debug_assert_eq!(acc.len(), row.len());
+    let mut xx = 0f64;
+    for (a, &v) in acc.iter_mut().zip(row) {
+        let v = v as f64;
+        *a += v;
+        xx += v * v;
+    }
+    xx
+}
+
+/// Inverse of [`accumulate`]: fold `row` out of `acc` and return the
+/// row's squared norm (`ClusterDelta::remove`).
+#[inline]
+pub fn decumulate(acc: &mut [f64], row: &[f32]) -> f64 {
+    debug_assert_eq!(acc.len(), row.len());
+    let mut xx = 0f64;
+    for (a, &v) in acc.iter_mut().zip(row) {
+        let v = v as f64;
+        *a -= v;
+        xx += v * v;
+    }
+    xx
+}
+
+/// `acc[j] += row[j]` in f64, index order — the column-sum update behind
+/// centroid and column-mean accumulation.
+#[inline]
+pub fn add_assign_row(acc: &mut [f64], row: &[f32]) {
+    debug_assert_eq!(acc.len(), row.len());
+    for (a, &v) in acc.iter_mut().zip(row) {
+        *a += v as f64;
+    }
+}
+
+/// Squared L2 norm of an f32 row accumulated in f64, index order.
+#[inline]
+pub fn sumsq_f64(row: &[f32]) -> f64 {
+    row.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+/// Squared distance between two centroids given as f64 *sums* with
+/// member counts: `Σ_j (sa[j]/ma − sb[j]/mb)²`. Pass `mb = 1.0` when `sb`
+/// already is a mean (division by 1.0 is exact). Ward merge costs and
+/// the online BGSS term share this one accumulation.
+#[inline]
+pub fn centroid_sq_dist(sa: &[f64], ma: f64, sb: &[f64], mb: f64) -> f64 {
+    debug_assert_eq!(sa.len(), sb.len());
+    let mut dist2 = 0f64;
+    for (&a, &b) in sa.iter().zip(sb) {
+        let diff = a / ma - b / mb;
+        dist2 += diff * diff;
+    }
+    dist2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn rand_vec(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    fn dot_ref_f64(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    }
+
+    #[test]
+    fn mode_display_round_trips() {
+        for m in KernelMode::ALL {
+            assert_eq!(m.to_string().parse::<KernelMode>().unwrap(), m);
+        }
+        assert_eq!(KernelMode::accepted(), "auto|scalar|fma");
+        let err = "avx512".parse::<KernelMode>().unwrap_err();
+        assert!(err.to_string().contains("auto|scalar|fma"), "{err}");
+    }
+
+    #[test]
+    fn scalar_table_reports_scalar_everywhere() {
+        let k = Kernels::select(KernelMode::Scalar);
+        assert_eq!(k.isa(), "scalar");
+        assert_eq!(k.mode(), KernelMode::Scalar);
+    }
+
+    #[test]
+    fn auto_dot_bit_identical_to_scalar() {
+        // On a host with AVX2/NEON this is the vector-vs-scalar
+        // bit-identity microtest; on a host without, both tables are
+        // scalar and it holds trivially.
+        let auto = Kernels::select(KernelMode::Auto);
+        let scalar = Kernels::scalar();
+        let mut rng = Pcg32::new(901);
+        for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 100, 128, 257] {
+            let a = rand_vec(&mut rng, len);
+            let b = rand_vec(&mut rng, len);
+            let (va, vs) = (auto.dot(&a, &b), scalar.dot(&a, &b));
+            assert_eq!(va.to_bits(), vs.to_bits(), "len={len} isa={}", auto.isa());
+            let want = dot_ref_f64(&a, &b);
+            assert!((vs as f64 - want).abs() < 1e-3 * (1.0 + want.abs()), "len={len}");
+        }
+    }
+
+    #[test]
+    fn auto_row_norms_and_cost_block_bit_identical_to_scalar() {
+        let auto = Kernels::select(KernelMode::Auto);
+        let scalar = Kernels::scalar();
+        let mut rng = Pcg32::new(902);
+        // k > TILE_COLS exercises tiling; ragged d exercises the tail.
+        for &(m, k, d) in &[(5usize, 9usize, 4usize), (17, 70, 13), (3, 65, 32), (8, 128, 8)] {
+            let x = rand_vec(&mut rng, m * d);
+            let c = rand_vec(&mut rng, k * d);
+            let (mut xn_a, mut xn_s) = (Vec::new(), Vec::new());
+            auto.row_norms(&x, m, d, &mut xn_a);
+            scalar.row_norms(&x, m, d, &mut xn_s);
+            assert_eq!(xn_a, xn_s, "row_norms m={m} d={d}");
+            let (mut cn_a, mut cn_s) = (Vec::new(), Vec::new());
+            auto.row_norms(&c, k, d, &mut cn_a);
+            scalar.row_norms(&c, k, d, &mut cn_s);
+            let (mut out_a, mut out_s) = (vec![0f32; m * k], vec![0f32; m * k]);
+            auto.cost_block(&x, &xn_a, 0, m, d, &c, &cn_a, k, &mut out_a);
+            scalar.cost_block(&x, &xn_s, 0, m, d, &c, &cn_s, k, &mut out_s);
+            assert_eq!(out_a, out_s, "cost_block m={m} k={k} d={d}");
+            // And against the direct f64 definition, with tolerance.
+            for i in 0..m {
+                for j in 0..k {
+                    let want = sq_dist(&x[i * d..(i + 1) * d], &c[j * d..(j + 1) * d]);
+                    let got = out_s[i * k + j] as f64;
+                    assert!((got - want).abs() < 1e-3 * (1.0 + want), "({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fma_mode_is_ulp_close_to_scalar() {
+        let fma = Kernels::select(KernelMode::Fma);
+        assert_eq!(fma.mode(), KernelMode::Fma);
+        let scalar = Kernels::scalar();
+        let mut rng = Pcg32::new(903);
+        for len in [8usize, 32, 128, 1000] {
+            let a = rand_vec(&mut rng, len);
+            let b = rand_vec(&mut rng, len);
+            let (vf, vs) = (fma.dot(&a, &b) as f64, scalar.dot(&a, &b) as f64);
+            let want = dot_ref_f64(&a, &b);
+            // Contraction only ever tightens the error bound; both stay
+            // within a few f32 ULPs of the f64 reference. The magnitude
+            // scale is Σ|a||b|, against which per-step rounding is bound.
+            let scale: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+            let tol = 1e-5 * (1.0 + scale);
+            assert!((vf - want).abs() <= tol, "len={len}: fma {vf} vs ref {want}");
+            assert!((vf - vs).abs() <= tol, "len={len}: fma {vf} vs scalar {vs}");
+        }
+    }
+
+    #[test]
+    fn env_scalar_forces_the_fallback_on_any_host() {
+        // Other tests may race this env var, but the worst outcome is a
+        // concurrently-initialized process default landing on `scalar`,
+        // which is bit-identical to `auto` — results cannot change.
+        std::env::set_var("ABA_KERNELS", "scalar");
+        assert_eq!(kernel_mode_env_default(), KernelMode::Scalar);
+        assert_eq!(Kernels::select(kernel_mode_env_default()).isa(), "scalar");
+        std::env::set_var("ABA_KERNELS", "no-such-mode");
+        assert_eq!(kernel_mode_env_default(), KernelMode::Auto);
+        // Exported-but-empty (CI matrices) means "no override".
+        std::env::set_var("ABA_KERNELS", "");
+        assert_eq!(kernel_mode_env_default(), KernelMode::Auto);
+        std::env::remove_var("ABA_KERNELS");
+        assert_eq!(kernel_mode_env_default(), KernelMode::Auto);
+    }
+
+    #[test]
+    fn accumulate_decumulate_round_trip() {
+        let mut rng = Pcg32::new(904);
+        let row = rand_vec(&mut rng, 11);
+        let mut acc = vec![0f64; 11];
+        let xx = accumulate(&mut acc, &row);
+        assert!((xx - sumsq_f64(&row)).abs() < 1e-12 * (1.0 + xx));
+        assert_eq!(decumulate(&mut acc, &row), xx);
+        assert!(acc.iter().all(|&v| v.abs() < 1e-12));
+        let mut means = vec![0f64; 11];
+        add_assign_row(&mut means, &row);
+        for (m, &v) in means.iter().zip(&row) {
+            assert_eq!(*m, v as f64);
+        }
+    }
+
+    #[test]
+    fn centroid_sq_dist_matches_direct_means() {
+        let sa = [2.0f64, 4.0, 6.0];
+        let sb = [1.0f64, 1.0, 1.0];
+        // means: [1, 2, 3] vs [0.5, 0.5, 0.5] -> 0.25 + 2.25 + 6.25
+        let got = centroid_sq_dist(&sa, 2.0, &sb, 2.0);
+        assert!((got - 8.75).abs() < 1e-12, "{got}");
+        // mb = 1.0 treats sb as an already-divided mean, exactly.
+        assert_eq!(centroid_sq_dist(&sa, 2.0, &sb, 1.0), {
+            let mut s = 0f64;
+            for (a, b) in sa.iter().zip(&sb) {
+                let diff = a / 2.0 - b;
+                s += diff * diff;
+            }
+            s
+        });
+    }
+
+    #[test]
+    fn sq_dist_variants_agree() {
+        let mut rng = Pcg32::new(905);
+        let a = rand_vec(&mut rng, 9);
+        let b = rand_vec(&mut rng, 9);
+        let mu: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+        let d32 = sq_dist(&a, &b);
+        let d64 = sq_dist_to_f64(&a, &mu);
+        // Same values, different widening points: equal up to f32
+        // subtraction vs f64 subtraction of f32-representable values —
+        // here both are exact per coordinate difference of the widened
+        // pair only when the f32 subtraction does not round; allow ULPs.
+        assert!((d32 - d64).abs() < 1e-6 * (1.0 + d64), "{d32} vs {d64}");
+        assert_eq!(sq_dist(&a, &a), 0.0);
+    }
+}

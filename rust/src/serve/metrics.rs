@@ -97,8 +97,10 @@ impl Metrics {
     }
 
     /// The `GET /metrics` text document. `handles` is the registry's
-    /// current resident handle count.
-    pub fn render(&self, handles: usize) -> String {
+    /// current resident handle count; `kernel_isa` is the serving
+    /// session's distance-kernel selection ([`crate::Aba::kernel_isa`])
+    /// — the one textual gauge in the document.
+    pub fn render(&self, handles: usize, kernel_isa: &str) -> String {
         let (p50, p99) = self.latency_percentiles_us();
         let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
         format!(
@@ -119,7 +121,8 @@ impl Metrics {
              aba_sparse_fallbacks {}\n\
              aba_gap_observations {}\n\
              aba_gap_last_ppm {}\n\
-             aba_gap_max_ppm {}\n",
+             aba_gap_max_ppm {}\n\
+             aba_kernel_isa {}\n",
             g(&self.requests_total),
             g(&self.responses_2xx),
             g(&self.responses_4xx),
@@ -138,6 +141,7 @@ impl Metrics {
             g(&self.gap_observations),
             g(&self.gap_last_ppm),
             g(&self.gap_max_ppm),
+            kernel_isa,
         )
     }
 }
@@ -161,10 +165,11 @@ mod tests {
         let (p50, p99) = m.latency_percentiles_us();
         assert!((100..=400).contains(&p50), "{p50}");
         assert_eq!(p99, 1000);
-        let text = m.render(3);
+        let text = m.render(3, "avx2");
         assert!(text.contains("aba_requests_total 7"), "{text}");
         assert!(text.contains("aba_handles 3"), "{text}");
         assert!(text.contains("aba_gathered_bytes "), "{text}");
+        assert!(text.contains("aba_kernel_isa avx2"), "{text}");
     }
 
     #[test]
@@ -178,7 +183,7 @@ mod tests {
         // Out-of-range values clamp rather than wrap.
         m.observe_gap(7.0);
         assert_eq!(m.gap_max_ppm.load(Ordering::Relaxed), 1_000_000);
-        let text = m.render(0);
+        let text = m.render(0, "scalar");
         assert!(text.contains("aba_gap_last_ppm 1000000"), "{text}");
         assert!(text.contains("aba_gap_observations 3"), "{text}");
     }

@@ -383,7 +383,7 @@ fn route(ctx: &Ctx, session: &mut Aba, req: &Request) -> Response {
     match (req.method.as_str(), segs.as_slice()) {
         ("GET", ["healthz"]) => Response::text(200, "ok\n".into()),
         ("GET", ["metrics"]) => {
-            Response::text(200, ctx.metrics.render(ctx.registry.handles()))
+            Response::text(200, ctx.metrics.render(ctx.registry.handles(), session.kernel_isa()))
         }
         ("POST", ["v1", "admin", "drain"]) => {
             ctx.shared.trigger_shutdown();

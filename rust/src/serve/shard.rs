@@ -43,12 +43,7 @@ fn merge_cost(a: &ClusterDelta, b: &ClusterDelta) -> f64 {
     if ma == 0.0 || mb == 0.0 {
         return 0.0;
     }
-    let mut dist2 = 0f64;
-    for (sa, sb) in a.sum().iter().zip(b.sum()) {
-        let diff = sa / ma - sb / mb;
-        dist2 += diff * diff;
-    }
-    ma * mb / (ma + mb) * dist2
+    ma * mb / (ma + mb) * crate::runtime::simd::centroid_sq_dist(a.sum(), ma, b.sum(), mb)
 }
 
 /// Solve `view` into `k` anticlusters via `shards` independent shard

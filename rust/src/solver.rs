@@ -37,7 +37,7 @@ use crate::cert;
 use crate::data::{DataView, Dataset};
 use crate::error::{AbaError, AbaResult};
 use crate::online::OnlinePartition;
-use crate::runtime::{make_backend, BackendKind, CostBackend, Parallelism};
+use crate::runtime::{make_backend, BackendKind, CostBackend, KernelMode, Kernels, Parallelism};
 use std::time::Instant;
 
 /// A configured, reusable anticlustering algorithm.
@@ -76,6 +76,11 @@ pub struct PhaseTimings {
     pub stats_secs: f64,
     /// Sum of the phases.
     pub total_secs: f64,
+    /// The distance-kernel ISA the solve ran with (`"scalar"`, `"avx2"`,
+    /// `"avx2+fma"`, `"neon"` — see [`crate::runtime::Kernels::isa`]).
+    /// Empty for algorithms that do not go through the kernel layer's
+    /// f32 cost tier (the baselines).
+    pub kernel_isa: &'static str,
 }
 
 impl PhaseTimings {
@@ -287,6 +292,18 @@ impl AbaBuilder {
         self
     }
 
+    /// Override the distance-kernel dispatch mode for this session. The
+    /// default (unset) consults the `ABA_KERNELS` env var once, here at
+    /// construction — the per-run hot path never reads the environment.
+    /// [`KernelMode::Auto`] and [`KernelMode::Scalar`] are bit-identical
+    /// to each other on every host; [`KernelMode::Fma`] opts into
+    /// fused-multiply-add contraction (ULP-bounded, not bit-identical).
+    /// The selection is surfaced as [`PhaseTimings::kernel_isa`].
+    pub fn kernels(mut self, mode: KernelMode) -> Self {
+        self.cfg.kernels = Some(mode);
+        self
+    }
+
     /// Must-link / cannot-link constraints enforced on every partition.
     /// The constrained loop uses its own super-object ordering and
     /// masking-heavy dense costs, so `variant`, `hier`, `auto_hier`,
@@ -309,7 +326,15 @@ impl AbaBuilder {
                 )));
             }
         }
-        let backend = make_backend(self.cfg.backend)?;
+        let mut backend = make_backend(self.cfg.backend)?;
+        // Like the warm-start hoist below: kernel dispatch happens
+        // exactly once, here — runtime CPU-feature detection and the
+        // `ABA_KERNELS` env var are never consulted on the hot path.
+        let kernels = match self.cfg.kernels {
+            Some(mode) => Kernels::select(mode),
+            None => Kernels::get(),
+        };
+        backend.set_kernels(kernels);
         // The satellite of the warm-start hoist: the env var is read
         // exactly once, here, unless the builder overrode it.
         let warm = self
@@ -320,6 +345,7 @@ impl AbaBuilder {
             cfg: self.cfg,
             constraints: self.constraints,
             backend,
+            kernels,
             scratch: algo::core::Scratch::with_lapjv_warm(warm),
             last_cert: None,
         })
@@ -337,6 +363,7 @@ pub struct Aba {
     cfg: AbaConfig,
     constraints: Option<Constraints>,
     backend: Box<dyn CostBackend>,
+    kernels: Kernels,
     scratch: algo::core::Scratch,
     last_cert: Option<cert::Certificate>,
 }
@@ -360,6 +387,13 @@ impl Aba {
     /// The session's configuration.
     pub fn config(&self) -> &AbaConfig {
         &self.cfg
+    }
+
+    /// The distance-kernel ISA this session dispatches to (`"scalar"`,
+    /// `"avx2"`, `"avx2+fma"`, `"neon"`). Fixed at [`AbaBuilder::build`];
+    /// also stamped on every solve as [`PhaseTimings::kernel_isa`].
+    pub fn kernel_isa(&self) -> &'static str {
+        self.kernels.isa()
     }
 
     /// Telemetry for the candidate-pruned assignment path, accumulated
@@ -396,7 +430,10 @@ impl Aba {
         view: &DataView<'_>,
         k: usize,
     ) -> AbaResult<(Vec<u32>, PhaseTimings)> {
-        let (labels, timings) = self.partition_labels_inner(view, k)?;
+        let (labels, mut timings) = self.partition_labels_inner(view, k)?;
+        // Stamp the effective kernel ISA once here so both the frozen
+        // and online paths report it.
+        timings.kernel_isa = self.kernels.isa();
         // The optional standalone certificate rides on every solve so
         // both the frozen and online paths report it. Timed on its
         // own: the O(nd) pass is not part of the solve phases.
@@ -877,6 +914,29 @@ mod tests {
             session.resume_online("nonexistent.json"),
             Err(AbaError::InvalidInput(_))
         ));
+    }
+
+    #[test]
+    fn kernel_isa_is_stamped_and_scalar_mode_is_bit_identical() {
+        let ds = generate(
+            SynthKind::GaussianMixture { components: 3, spread: 2.0 },
+            400,
+            9,
+            31,
+            "s",
+        );
+        let mut default = Aba::new().unwrap();
+        let a = default.partition(&ds, 8).unwrap();
+        // The stamp reports whatever the host selected; it is never empty
+        // on the session path.
+        assert!(!a.timings.kernel_isa.is_empty());
+        let mut scalar = Aba::builder().kernels(KernelMode::Scalar).build().unwrap();
+        let b = scalar.partition(&ds, 8).unwrap();
+        assert_eq!(b.timings.kernel_isa, "scalar");
+        // Auto's vector path preserves scalar `dot8` reduction order, so
+        // forcing the fallback must not move a single bit.
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
     }
 
     #[test]

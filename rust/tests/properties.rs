@@ -258,6 +258,73 @@ fn parallel_flat_large_k_matches_serial() {
 }
 
 #[test]
+fn prop_scalar_kernels_bit_identical_to_auto_selection() {
+    // The Auto-selected vector kernels keep scalar `dot8`'s exact
+    // reduction order (8 vertical lanes, same combine tree, same tail),
+    // so forcing `KernelMode::Scalar` must not move a single bit — on
+    // any host, across the flat, explicit-hierarchical, sparse
+    // large-K, and online-bootstrap dispatch paths, serial and pooled.
+    use aba::assignment::CandidateMode;
+    use aba::runtime::{KernelMode, Parallelism};
+    PropRunner::new(10).run("scalar kernels == auto kernels", |rng| {
+        let ds = rand_dataset(rng, 280, 7);
+        let mode = rng.gen_index(4);
+        let par = if rng.gen_index(2) == 0 { Parallelism::Serial } else { Parallelism::Threads(3) };
+        let mut hier: Option<Vec<usize>> = None;
+        if mode == 1 {
+            let (k1, k2) = (2 + rng.gen_index(2), 2 + rng.gen_index(2));
+            if k1 * k2 <= ds.n {
+                hier = Some(vec![k1, k2]);
+            }
+        }
+        let k: usize = match &hier {
+            Some(spec) => spec.iter().product(),
+            None if mode == 2 => (8 + rng.gen_index(25)).min(ds.n),
+            None => 1 + rng.gen_index(ds.n.min(24)),
+        };
+        let build = |km: KernelMode| -> Result<aba::Aba, String> {
+            let mut b = Aba::builder().parallelism(par).kernels(km);
+            if let Some(spec) = &hier {
+                b = b.hier(spec.clone());
+            }
+            if mode == 2 {
+                // Force the candidate-pruned sparse assignment path.
+                b = b.auto_hier(false).candidates(CandidateMode::Fixed(4));
+            }
+            b.build().map_err(|e| e.to_string())
+        };
+        let solve = |km: KernelMode| -> Result<aba::Partition, String> {
+            let mut s = build(km)?;
+            if mode == 3 {
+                // Online bootstrap: same labels contract as frozen.
+                let live = s.partition_online(&ds.view(), k).map_err(|e| e.to_string())?;
+                Ok(live.into_partition())
+            } else {
+                s.partition(&ds, k).map_err(|e| e.to_string())
+            }
+        };
+        let auto = solve(KernelMode::Auto)?;
+        let scalar = solve(KernelMode::Scalar)?;
+        prop_assert!(scalar.timings.kernel_isa == "scalar", "forced mode ignored");
+        prop_assert!(
+            auto.labels == scalar.labels,
+            "labels diverge (n={} k={k} mode={mode} isa={})",
+            ds.n,
+            auto.timings.kernel_isa
+        );
+        prop_assert!(
+            auto.objective.to_bits() == scalar.objective.to_bits(),
+            "objective {} vs {} (n={} k={k} mode={mode})",
+            auto.objective,
+            scalar.objective,
+            ds.n
+        );
+        prop_assert!(auto.pairwise.to_bits() == scalar.pairwise.to_bits(), "pairwise diverges");
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_view_path_bit_identical_to_owned_copy_path() {
     // The zero-copy DataView path must be observationally identical to
     // materializing the same subset into an owned Dataset first: labels

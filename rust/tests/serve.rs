@@ -175,6 +175,13 @@ fn serve_lifecycle_end_to_end() {
     // Gap telemetry: create + get each observed one gap.
     assert!(resp.contains("aba_gap_observations 2"), "{resp}");
     assert!(resp.contains("aba_gap_last_ppm"), "{resp}");
+    // The kernel gauge carries a concrete ISA token, never empty.
+    let isa_line = resp.lines().find(|l| l.starts_with("aba_kernel_isa")).unwrap();
+    assert!(
+        ["scalar", "avx2", "avx2+fma", "neon"]
+            .contains(&isa_line.trim_start_matches("aba_kernel_isa").trim()),
+        "{isa_line}"
+    );
 
     // Drain: stop accepting, snapshot the resident handle, exit.
     let (status, _, resp) = request(addr, "POST", "/v1/admin/drain", "");
