@@ -37,16 +37,22 @@
 //! certificate's upper bound).
 //!
 //! The `kernel` section microbenchmarks the runtime-dispatched SIMD
-//! distance kernels themselves: `cost_block` and `row_norms` GFLOP/s at
-//! d ∈ {8, 32, 128} for each table the host can select (scalar always;
-//! the vector and FMA tables where the ISA exists), so the vector-vs-
-//! scalar speedup is a recorded number rather than an assumption. The
-//! `kernel_e2e` section runs the same two instances end to end under
-//! `--kernels scalar` and the Auto dispatch — the flat n = 200k dense
-//! solve and a large-K sparse solve — asserting label bit-identity and
-//! recording the before/after wall times. Every run also opens with one
-//! `env` record carrying `kernel_isa=<isa>` so cross-host comparisons
-//! of BENCH_aba.json know what the numbers ran on.
+//! distance kernels themselves: `cost_block`, the cache-blocked
+//! `cost_panel`, and `row_norms` GFLOP/s at d ∈ {8, 32, 128} for each
+//! table the host can select (scalar always; the vector and FMA tables
+//! where the ISA exists; the relaxed-determinism fast-math table where
+//! it beats scalar), so the vector-vs-scalar speedup is a recorded
+//! number rather than an assumption. The `kernel_e2e` section runs the
+//! same two instances end to end under `--kernels scalar`, the Auto
+//! dispatch, and `--kernels fast-math` — the flat n = 200k dense solve
+//! and a large-K sparse solve. Scalar vs Auto asserts label
+//! bit-identity; the fast-math arm is *never* identity-gated (its
+//! contract is relaxed) — instead its objective gap vs scalar is
+//! recorded in ppm in the `{label}_fastmath_gap_ppm` row's `objective`
+//! column, which is what CI and cross-PR diffs gate on. Every run also
+//! opens with one `env` record carrying `kernel_isa=<isa>` plus the
+//! capture host's CPU model so cross-host comparisons of BENCH_aba.json
+//! know what the numbers ran on.
 //!
 //! Set `ABA_BENCH_ONLY=section[,section...]` to run a subset of the
 //! sections (e.g. `ABA_BENCH_ONLY=large_k_sparse`). Filtered runs
@@ -78,6 +84,21 @@ fn section_enabled(name: &str) -> bool {
 
 fn mk(n: usize, d: usize, seed: u64) -> aba::data::Dataset {
     generate(SynthKind::GaussianMixture { components: 8, spread: 3.0 }, n, d, seed, "bench")
+}
+
+/// Capture-host CPU model for the `env` record (so BENCH_aba.json rows
+/// are attributable to hardware). Best-effort: /proc/cpuinfo on Linux,
+/// "unknown" elsewhere — never a reason to fail a bench run.
+fn host_model() -> String {
+    std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("model name"))
+                .and_then(|l| l.split(':').nth(1))
+                .map(|m| m.trim().replace('"', ""))
+        })
+        .unwrap_or_else(|| "unknown".to_string())
 }
 
 /// One machine-readable measurement for `BENCH_aba.json`.
@@ -186,7 +207,7 @@ fn main() {
     // to, so cross-host BENCH_aba.json diffs are interpretable.
     recs.push(Rec {
         section: "env",
-        label: format!("kernel_isa={host_isa}"),
+        label: format!("kernel_isa={host_isa}; host={}", host_model()),
         n: 0,
         k: 0,
         d: 0,
@@ -235,7 +256,16 @@ fn main() {
                     kern.cost_block(&x, &xn, 0, m, d, &c, &cn, kc, &mut out);
                     std::hint::black_box(&mut out);
                 });
+                // The cache-blocked panel kernel over the same tile: in
+                // the deterministic tiers it is the same per-entry math
+                // (only the streaming order differs), so the delta here
+                // is pure blocking; in fast-math it is register-blocked.
+                let panel_secs = time_kernel(cost_flops, || {
+                    kern.cost_panel(&x, &xn, 0, m, d, &c, &cn, kc, &mut out);
+                    std::hint::black_box(&mut out);
+                });
                 let cost_gflops = cost_flops / cost_secs / 1e9;
+                let panel_gflops = cost_flops / panel_secs / 1e9;
                 let norm_gflops = norm_flops / norm_secs / 1e9;
                 let speedup = if kern.isa() == "scalar" {
                     scalar_cost_gflops = cost_gflops;
@@ -244,7 +274,7 @@ fn main() {
                     format!("  ({:.2}x scalar)", cost_gflops / scalar_cost_gflops.max(1e-9))
                 };
                 println!(
-                    "  d={d:>3} {:>8}: cost_block {cost_gflops:>6.2} | row_norms {norm_gflops:>6.2}{speedup}",
+                    "  d={d:>3} {:>8}: cost_block {cost_gflops:>6.2} | cost_panel {panel_gflops:>6.2} | row_norms {norm_gflops:>6.2}{speedup}",
                     kern.isa()
                 );
                 let mut push = |op: &str, secs: f64, gflops: f64| {
@@ -265,7 +295,45 @@ fn main() {
                     });
                 };
                 push("cost_block", cost_secs, cost_gflops);
+                push("cost_panel", panel_secs, panel_gflops);
                 push("row_norms", norm_secs, norm_gflops);
+            }
+            // The relaxed-determinism fast-math table, where it exists
+            // (AVX-512F, else AVX2+FMA; on scalar-only hosts the tier
+            // degrades to the rows already recorded above). Labelled
+            // `fastmath_<isa>` because its AVX2 fallback shares the
+            // hardware ISA string with the deterministic FMA table.
+            let fast = Kernels::select(KernelMode::FastMath);
+            if fast.isa() != "scalar" {
+                let mut xn = Vec::new();
+                let mut cn = Vec::new();
+                fast.row_norms(&x, m, d, &mut xn);
+                fast.row_norms(&c, kc, d, &mut cn);
+                let mut out = vec![0f32; m * kc];
+                let cost_flops = (2 * m * kc * d) as f64;
+                let fast_secs = time_kernel(cost_flops, || {
+                    fast.cost_panel(&x, &xn, 0, m, d, &c, &cn, kc, &mut out);
+                    std::hint::black_box(&mut out);
+                });
+                let fast_gflops = cost_flops / fast_secs / 1e9;
+                println!(
+                    "  d={d:>3} fast-math({}): cost_panel {fast_gflops:>6.2}  ({:.2}x scalar)",
+                    fast.isa(),
+                    fast_gflops / scalar_cost_gflops.max(1e-9)
+                );
+                recs.push(Rec {
+                    section: "kernel",
+                    label: format!("cost_panel_d{d}_fastmath_{}", fast.isa()),
+                    n: m,
+                    k: kc,
+                    d,
+                    threads: 1,
+                    algo_secs: fast_secs,
+                    total_secs: fast_secs,
+                    objective: fast_gflops,
+                    gathered_bytes: 0,
+                    cost_buffer_bytes: 0,
+                });
             }
         }
     }
@@ -534,10 +602,14 @@ fn main() {
     if section_enabled("kernel_e2e") {
         // What the SIMD dispatch buys end to end: the flat dense solve
         // at n = 200k and a large-K sparse solve, each run under the
-        // forced scalar fallback ("before") and the Auto selection
-        // ("after"). Auto preserves scalar reduction order, so the
-        // labels must not move a bit while the wall clock does.
-        println!("\n## kernel end-to-end: scalar fallback vs auto dispatch ({host_isa})");
+        // forced scalar fallback ("before"), the Auto selection
+        // ("after"), and the relaxed-determinism fast-math tier. Auto
+        // preserves scalar reduction order, so its labels must not move
+        // a bit while the wall clock does. Fast-math's labels MAY move
+        // (that is its contract) — so it is never identity-asserted;
+        // instead its objective gap vs scalar is recorded in ppm in the
+        // `{label}_fastmath_gap_ppm` row, the number the contract gates.
+        println!("\n## kernel end-to-end: scalar fallback vs auto vs fast-math ({host_isa})");
         let mut compare = |recs: &mut Vec<Rec>,
                            label: &str,
                            ds: &aba::data::Dataset,
@@ -545,16 +617,39 @@ fn main() {
                            cfg: &AbaConfig| {
             let scalar_cfg = AbaConfig { kernels: Some(KernelMode::Scalar), ..cfg.clone() };
             let auto_cfg = AbaConfig { kernels: Some(KernelMode::Auto), ..cfg.clone() };
+            let fast_cfg = AbaConfig { kernels: Some(KernelMode::FastMath), ..cfg.clone() };
             let (sp, scalar_secs) = cold_partition(ds, k, &scalar_cfg);
             let (ap, auto_secs) = cold_partition(ds, k, &auto_cfg);
+            let (fp, fast_secs) = cold_partition(ds, k, &fast_cfg);
             assert_eq!(sp.labels, ap.labels, "{label}: kernel modes diverged");
+            let gap_ppm =
+                1e6 * (fp.objective - sp.objective).abs() / sp.objective.abs().max(1e-9);
             println!(
                 "  {label:>14}: scalar {scalar_secs:>8.3}s | {host_isa} {auto_secs:>8.3}s \
                  ({:.2}x) | labels bit-identical: yes",
                 scalar_secs / auto_secs.max(1e-9)
             );
+            println!(
+                "  {label:>14}: fast-math ({}) {fast_secs:>8.3}s ({:.2}x scalar, \
+                 {:.2}x auto) | objective gap {gap_ppm:.2} ppm",
+                fp.timings.kernel_isa,
+                scalar_secs / fast_secs.max(1e-9),
+                auto_secs / fast_secs.max(1e-9)
+            );
             record(recs, "kernel_e2e", format!("{label}_scalar"), ds, k, 1, &sp, scalar_secs);
             record(recs, "kernel_e2e", format!("{label}_auto"), ds, k, 1, &ap, auto_secs);
+            record(recs, "kernel_e2e", format!("{label}_fastmath"), ds, k, 1, &fp, fast_secs);
+            record(
+                recs,
+                "kernel_e2e",
+                format!("{label}_fastmath_gap_ppm"),
+                ds,
+                k,
+                1,
+                &fp,
+                fast_secs,
+            );
+            recs.last_mut().unwrap().objective = gap_ppm;
         };
         let flat_ds = mk(200_000, 16, 14);
         compare(&mut recs, "flat_n200k", &flat_ds, 100, &flat);

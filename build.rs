@@ -1,0 +1,38 @@
+//! Build probe for the AVX-512 kernel arm.
+//!
+//! The crate's MSRV (1.75) predates stable AVX-512 intrinsics and
+//! `#[target_feature(enable = "avx512f")]` (both stabilized in 1.89), so
+//! the AVX-512 fast-math kernels in `runtime/simd.rs` are gated behind a
+//! `aba_avx512` cfg that this script emits only when the compiling
+//! `rustc` is new enough. Older toolchains simply compile without the
+//! arm and `KernelMode::FastMath` degrades to the AVX2+FMA table — the
+//! same graceful fallback a host without the ISA gets at runtime.
+
+use std::process::Command;
+
+/// `(major, minor)` of the compiling rustc, or `None` when the version
+/// string cannot be parsed (pessimistic: no cfg gets emitted).
+fn rustc_version() -> Option<(u32, u32)> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (abc123 2025-07-01)" — second whitespace field.
+    let version = text.split_whitespace().nth(1)?;
+    let mut parts = version.split(['.', '-', '+']);
+    let major = parts.next()?.parse().ok()?;
+    let minor = parts.next()?.parse().ok()?;
+    Some((major, minor))
+}
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    let version = rustc_version();
+    // `rustc-check-cfg` itself needs cargo >= 1.80; on older toolchains
+    // the custom cfg is also absent, so nothing trips `unexpected_cfgs`.
+    if matches!(version, Some((major, minor)) if major > 1 || (major == 1 && minor >= 80)) {
+        println!("cargo:rustc-check-cfg=cfg(aba_avx512)");
+    }
+    if matches!(version, Some((major, minor)) if major > 1 || (major == 1 && minor >= 89)) {
+        println!("cargo:rustc-cfg=aba_avx512");
+    }
+}

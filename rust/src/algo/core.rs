@@ -461,6 +461,39 @@ pub fn run_with_order<'a>(
     )
 }
 
+/// Floor for engaging the pooled centroid mirror: below ~64k elements
+/// the f64→f32 cast loop finishes faster than one pool dispatch.
+const PAR_MIRROR_MIN: usize = 1 << 16;
+
+/// Mirror the f64 centroid state into the backend's f32 buffer. The
+/// cast is elementwise — no accumulation — so the pooled chunked copy
+/// is bit-identical to the serial loop for any thread count and chunk
+/// shape; at large `k * d` (the sparse large-K regime rebuilds this
+/// mirror every batch) the copy is memory-bound and splits cleanly.
+fn mirror_centroids_f32(pool: Option<&WorkerPool>, src: &[f64], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    match pool {
+        Some(pool) if src.len() >= PAR_MIRROR_MIN => {
+            let chunk = src.len().div_ceil(pool.threads() * 4).max(1 << 12);
+            let mut chunks: Vec<(usize, &mut [f32])> = dst
+                .chunks_mut(chunk)
+                .enumerate()
+                .map(|(ci, c)| (ci * chunk, c))
+                .collect();
+            pool.run_mut(&mut chunks, &|_ti, (o0, c)| {
+                for (dd, &s) in c.iter_mut().zip(&src[*o0..*o0 + c.len()]) {
+                    *dd = s as f32;
+                }
+            });
+        }
+        _ => {
+            for (dd, &s) in dst.iter_mut().zip(src) {
+                *dd = s as f32;
+            }
+        }
+    }
+}
+
 /// Run Algorithm 1 over the given processing order, reusing the caller's
 /// [`Scratch`] across calls (the session hot path). `par` selects the
 /// execution strategy — see the module docs; any setting produces
@@ -496,6 +529,11 @@ pub fn run_with_order_scratch(
     // clears any pool installed by a previous run.
     let pool = scratch.pool_for(par);
     backend.set_pool(pool.clone());
+    // The sparse candidate index evaluates distances too: install the
+    // backend's kernel table so leaf scans and box bounds run on the
+    // same tier as the cost matrices (scalar-identical in every
+    // deterministic mode).
+    scratch.sparse.index.set_kernels(backend.kernels());
     let d = ds.d();
     let mut labels = vec![u32::MAX; n];
 
@@ -581,10 +619,9 @@ pub fn run_with_order_scratch(
         let m = hi - lo;
         let batch = &order[lo..hi];
         debug_assert_eq!(xb.len(), m * d, "batch {t} was staged with the wrong shape");
-        // Mirror centroids to f32 for the backend / candidate index.
-        for (dst, &src) in centroids_f32.iter_mut().zip(centroids.iter()) {
-            *dst = src as f32;
-        }
+        // Mirror centroids to f32 for the backend / candidate index —
+        // chunked over the pool at large k*d, bit-identical to serial.
+        mirror_centroids_f32(pool.as_deref(), centroids, centroids_f32);
         if !use_sparse {
             // Dense path: cost matrix through the backend (Pallas/XLA
             // artifact or native), then §4.3 masking.
@@ -686,6 +723,23 @@ mod tests {
         let order =
             crate::algo::batching::build_order(&ds.view(), k, crate::algo::Variant::Base, &mut be);
         run_with_order(ds, k, &order, SolverKind::Lapjv, &mut be).unwrap()
+    }
+
+    #[test]
+    fn pooled_centroid_mirror_is_bit_identical_to_serial() {
+        let mut rng = crate::rng::Pcg32::new(911);
+        // Above and below the pooled floor, ragged against the chunk size.
+        for len in [100usize, PAR_MIRROR_MIN, PAR_MIRROR_MIN + 4097] {
+            let src: Vec<f64> = (0..len).map(|_| rng.normal_f32(0.0, 3.0) as f64).collect();
+            let (mut serial, mut pooled) = (vec![0f32; len], vec![0f32; len]);
+            mirror_centroids_f32(None, &src, &mut serial);
+            let pool = WorkerPool::new(3);
+            mirror_centroids_f32(Some(&pool), &src, &mut pooled);
+            assert!(
+                serial.iter().zip(&pooled).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "len={len}"
+            );
+        }
     }
 
     #[test]

@@ -218,7 +218,9 @@ pub struct AbaConfig {
     /// the `ABA_KERNELS` env var **once at session construction** —
     /// never on the per-run hot path. `Auto` and `Scalar` are
     /// bit-identical by construction; `Fma` trades bit-identity for a
-    /// contracted multiply-add. Excluded from
+    /// contracted multiply-add; `FastMath` relaxes determinism entirely
+    /// (blocked FMA panels, AVX-512 where available — labels may
+    /// differ, objective gap bench-gated in ppm). Excluded from
     /// [`AbaConfig::fingerprint`], like the other wall-clock-only knobs.
     pub kernels: Option<crate::runtime::KernelMode>,
 }

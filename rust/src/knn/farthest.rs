@@ -17,11 +17,14 @@
 //! exclude saturated anticlusters *during* the search instead of
 //! post-filtering a too-short list.
 
-// Point distances use the crate-wide objective-tier `sq_dist`
-// (f64-accumulating, scalar in every kernel mode — see
-// `crate::runtime::simd`), which matches the pruning bound arithmetic,
-// so bound >= point distance holds exactly.
-use crate::runtime::simd::sq_dist;
+// Point distances and bounding-box bounds go through the session
+// `Kernels` table (`sq_dist` / `bbox_far`, installed via
+// `set_kernels`). Every table pairs the two lane-for-lane — in the
+// deterministic modes both are the scalar objective-tier loops, in
+// fast-math both vectorize with one shared chunk structure — so
+// bound >= point distance holds exactly in every mode (see
+// `crate::runtime::simd`).
+use crate::runtime::simd::Kernels;
 
 /// A kd-tree with per-node bounding boxes over `n` points in `d`
 /// dimensions, answering top-`C` farthest-point queries. The tree is
@@ -35,11 +38,24 @@ pub struct FarthestIndex {
     ids: Vec<u32>,
     bb_lo: Vec<f32>,
     bb_hi: Vec<f32>,
+    /// Distance-kernel table for leaf scans and box bounds. `Default` is
+    /// the process selection; sessions install their own via
+    /// [`FarthestIndex::set_kernels`]. Deterministic tables dispatch
+    /// both entries to the scalar objective-tier loops, so results are
+    /// unchanged from a private-loop implementation.
+    kern: Kernels,
 }
 
 impl FarthestIndex {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Install the session's distance-kernel table (leaf `sq_dist` and
+    /// box `bbox_far` evaluations). Called once per session; queries
+    /// never re-probe CPU features.
+    pub fn set_kernels(&mut self, kern: Kernels) {
+        self.kern = kern;
     }
 
     /// Points indexed.
@@ -90,17 +106,13 @@ impl FarthestIndex {
     }
 
     /// Max possible squared distance from `q` to the bounding box stored
-    /// at node `mid` (per-dimension farthest corner).
+    /// at node `mid` (per-dimension farthest corner), via the session
+    /// kernel table.
     fn bbox_bound(&self, q: &[f32], mid: usize) -> f64 {
         let d = self.d;
         let lo = &self.bb_lo[mid * d..(mid + 1) * d];
         let hi = &self.bb_hi[mid * d..(mid + 1) * d];
-        let mut s = 0f64;
-        for t in 0..d {
-            let far = (q[t] - lo[t]).abs().max((q[t] - hi[t]).abs()) as f64;
-            s += far * far;
-        }
-        s
+        self.kern.bbox_far(q, lo, hi)
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -126,7 +138,7 @@ impl FarthestIndex {
         }
         let id = self.ids[mid] as usize;
         if valid(id) {
-            let dist = sq_dist(q, &pts[id * self.d..(id + 1) * self.d]);
+            let dist = self.kern.sq_dist(q, &pts[id * self.d..(id + 1) * self.d]);
             if best.len() < c || dist > best[best.len() - 1].0 {
                 let pos = best.partition_point(|&(d0, _)| d0 >= dist);
                 best.insert(pos, (dist, id as u32));
@@ -201,6 +213,8 @@ fn build_rec(
 mod tests {
     use super::*;
     use crate::rng::Pcg32;
+    use crate::runtime::simd::sq_dist;
+    use crate::runtime::KernelMode;
 
     fn rand_pts(rng: &mut Pcg32, n: usize, d: usize) -> Vec<f32> {
         (0..n * d).map(|_| rng.normal_f32(0.0, 2.0)).collect()
@@ -248,6 +262,40 @@ mod tests {
                 for w in best.windows(2) {
                     assert!(w[0].0 >= w[1].0);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_math_kernels_still_match_brute_force() {
+        // Under the relaxed tier the per-point distances may differ from
+        // scalar in the last ULPs, but the search must still return the
+        // true farthest set: the bound/distance pair is constructed so
+        // pruning never cuts a winner. Brute force is computed with the
+        // same fast `sq_dist`, so sums compare within f64 noise.
+        let fast = Kernels::select(KernelMode::FastMath);
+        let mut rng = Pcg32::new(75);
+        for &(n, d, c) in &[(300usize, 3usize, 8usize), (200, 6, 16), (150, 16, 5)] {
+            let pts = rand_pts(&mut rng, n, d);
+            let mut index = FarthestIndex::new();
+            index.set_kernels(fast);
+            index.build(&pts, n, d);
+            let mut best = Vec::new();
+            for _ in 0..10 {
+                let q: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+                index.farthest_into(&pts, &q, c, &|_| true, &mut best);
+                let mut all: Vec<(f64, u32)> = (0..n)
+                    .map(|i| (fast.sq_dist(&q, &pts[i * d..(i + 1) * d]), i as u32))
+                    .collect();
+                all.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+                all.truncate(c);
+                let got_sum: f64 = best.iter().map(|&(dd, _)| dd).sum();
+                let want_sum: f64 = all.iter().map(|&(dd, _)| dd).sum();
+                assert!(
+                    (got_sum - want_sum).abs() < 1e-9 * want_sum.max(1.0),
+                    "n={n} d={d} c={c} isa={}: {got_sum} vs {want_sum}",
+                    fast.isa()
+                );
             }
         }
     }

@@ -244,9 +244,18 @@
 //! `auto` and `scalar` produce **bit-identical** partitions on every
 //! host (property-tested across the flat, hierarchical, sparse, and
 //! online paths). `fma` opts into fused-multiply-add contraction
-//! (faster, ULP-bounded rather than bit-identical). Select per session
-//! with the builder, per run with `--kernels auto|scalar|fma`, or
-//! process-wide with the `ABA_KERNELS` env var; the selection is
+//! (faster, ULP-bounded rather than bit-identical). `fast-math` opts
+//! into the **relaxed-determinism** tier for the large-K regime:
+//! cache-blocked, register-blocked FMA cost micro-kernels — AVX-512F
+//! where the hardware and toolchain (rustc ≥ 1.89) allow, else
+//! AVX2+FMA, degrading cleanly to `auto` — with free reduction order.
+//! Under `fast-math`, partitions stay valid and balanced and the k-d
+//! pruning bound still dominates the true distance, but labels may
+//! differ from scalar at near-ties; the objective gap is property-
+//! tested and bench-tracked *in ppm*, never bit-identity-gated, and
+//! `auto`/`scalar`/`fma` determinism is unchanged. Select per session
+//! with the builder, per run with `--kernels auto|scalar|fma|fast-math`,
+//! or process-wide with the `ABA_KERNELS` env var; the selection is
 //! reported in [`PhaseTimings::kernel_isa`], the CLI `cpu` line, and
 //! serve's `aba_kernel_isa` metric:
 //!
@@ -266,6 +275,13 @@
 //! assert!(!b.timings.kernel_isa.is_empty());
 //! assert_eq!(a.labels, b.labels);
 //! assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+//! // `--kernels fast-math` on the CLI does exactly this: the relaxed
+//! // tier still yields a valid balanced partition (its objective is
+//! // ppm-close to scalar, but *not* asserted bit-identical).
+//! let mut fast = Aba::builder().kernels(KernelMode::FastMath).build()?;
+//! let c = fast.partition(&ds, 8)?;
+//! assert!(!c.timings.kernel_isa.is_empty());
+//! assert_eq!(c.labels.len(), 160);
 //! # Ok::<(), aba::AbaError>(())
 //! ```
 //!

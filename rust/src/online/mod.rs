@@ -56,7 +56,7 @@ use crate::data::dataset::sq_dist;
 use crate::data::{DataView, Dataset};
 use crate::error::{AbaError, AbaResult};
 use crate::knn::farthest::FarthestIndex;
-use crate::runtime::{NativeBackend, Parallelism};
+use crate::runtime::{Kernels, NativeBackend, Parallelism};
 use crate::solver::{Partition, PhaseTimings};
 use state::{ClusterState, RowStore};
 use std::collections::BTreeSet;
@@ -100,6 +100,14 @@ impl OnlinePartition {
     fn with_parts(k: usize, d: usize, cfg: AbaConfig) -> Self {
         let mut lapjv = Lapjv::new();
         lapjv.warm_start = cfg.lapjv_warm.unwrap_or_else(warm_start_env_default);
+        // Resolve the handle's kernel table once, from the same knob the
+        // batch session uses, so sparse insert rounds evaluate centroid
+        // distances on the selected tier.
+        let mut farthest = FarthestIndex::new();
+        farthest.set_kernels(match cfg.kernels {
+            Some(mode) => Kernels::select(mode),
+            None => Kernels::get(),
+        });
         Self {
             k,
             n_cats: 0,
@@ -109,7 +117,7 @@ impl OnlinePartition {
             touched: BTreeSet::new(),
             cfg,
             lapjv,
-            farthest: FarthestIndex::new(),
+            farthest,
             sparse_jv: SparseLapjv::new(),
             sparse_auction: SparseAuction::new(),
             cost: Vec::new(),

@@ -20,7 +20,8 @@
 //! [`Kernels`] dispatch table (installed via [`CostBackend::set_kernels`]
 //! from the session's `.kernels(..)` knob, defaulting to the
 //! process-wide [`Kernels::get`]) and call its `row_norms` /
-//! `cost_block` entries.
+//! `cost_panel` entries — pool row-chunking composes with the kernel's
+//! own L2 centroid-panel tiling.
 
 #[cfg(feature = "xla")]
 use super::artifacts::Manifest;
@@ -117,6 +118,15 @@ pub trait CostBackend {
     /// forward it to their native fallback.
     fn set_kernels(&mut self, _kernels: Kernels) {}
 
+    /// The distance-kernel table this backend computes with — the
+    /// session reads it back to install the same table on auxiliary
+    /// structures (the sparse candidate index, the online handle's
+    /// farthest index). Backends that ignore `set_kernels` report the
+    /// process default.
+    fn kernels(&self) -> Kernels {
+        Kernels::get()
+    }
+
     /// Descriptive name for logs/benches.
     fn name(&self) -> &'static str;
 }
@@ -127,9 +137,11 @@ pub trait CostBackend {
 
 /// Pure-Rust backend; the perf-tuned reference implementation. With a
 /// pool installed (see [`CostBackend::set_pool`]) large cost matrices
-/// are chunk-parallelized over batch rows — bit-identically to the
-/// serial path, since every entry goes through the same row kernel
-/// ([`Kernels::cost_block`]).
+/// are chunk-parallelized over batch rows. In the deterministic kernel
+/// tiers this is bit-identical to the serial path, since every entry
+/// goes through the same per-entry dot ([`Kernels::cost_panel`]); the
+/// fast-math tier's row-quad micro-kernel makes chunk boundaries
+/// observable at the ULP level, which its relaxed contract permits.
 #[derive(Default)]
 pub struct NativeBackend {
     /// Scratch: per-centroid squared norms.
@@ -163,12 +175,14 @@ pub fn cost_matrix_native(x: &[f32], m: usize, d: usize, c: &[f32], k: usize, ou
     kern.row_norms(c, k, d, &mut cn);
     let mut xn = Vec::new();
     kern.row_norms(x, m, d, &mut xn);
-    kern.cost_block(x, &xn, 0, m, d, c, &cn, k, out);
+    kern.cost_panel(x, &xn, 0, m, d, c, &cn, k, out);
 }
 
 /// Chunk-parallel cost matrix: contiguous row chunks of `out`, one pool
-/// task per chunk through [`WorkerPool::run_mut`], all via the same
-/// [`Kernels::cost_block`] — bit-identical to the serial path for any
+/// task per chunk through [`WorkerPool::run_mut`], each chunk computed
+/// by the same L2-panel-blocked [`Kernels::cost_panel`] as the serial
+/// path — pool chunking composes with panel tiling, and in the
+/// deterministic tiers the result is bit-identical to serial for any
 /// thread count.
 #[allow(clippy::too_many_arguments)]
 fn cost_matrix_pooled(
@@ -192,7 +206,7 @@ fn cost_matrix_pooled(
         .collect();
     pool.run_mut(&mut chunks, &|_ti, (r0, chunk)| {
         let rows = chunk.len() / k;
-        kern.cost_block(x, xn, *r0, *r0 + rows, d, c, cn, k, chunk);
+        kern.cost_panel(x, xn, *r0, *r0 + rows, d, c, cn, k, chunk);
     });
 }
 
@@ -215,7 +229,7 @@ impl CostBackend for NativeBackend {
             Some(pool) if m >= 2 && m * k * d >= PAR_COST_MIN_WORK => {
                 cost_matrix_pooled(pool, kern, x, xn, m, d, c, cn, k, out);
             }
-            _ => kern.cost_block(x, xn, 0, m, d, c, cn, k, out),
+            _ => kern.cost_panel(x, xn, 0, m, d, c, cn, k, out),
         }
     }
 
@@ -242,6 +256,10 @@ impl CostBackend for NativeBackend {
 
     fn set_kernels(&mut self, kernels: Kernels) {
         self.kernels = kernels;
+    }
+
+    fn kernels(&self) -> Kernels {
+        self.kernels
     }
 
     fn name(&self) -> &'static str {
@@ -400,6 +418,10 @@ impl CostBackend for XlaBackend {
     fn set_kernels(&mut self, kernels: Kernels) {
         // PJRT does its own arithmetic; the table covers the fallback.
         self.native.set_kernels(kernels);
+    }
+
+    fn kernels(&self) -> Kernels {
+        self.native.kernels()
     }
 
     fn name(&self) -> &'static str {

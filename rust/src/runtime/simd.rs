@@ -8,8 +8,9 @@
 //!
 //! * **f32 cost tier** — the per-batch cost matrices and row norms the
 //!   assignment solver consumes ([`Kernels::cost_block`],
-//!   [`Kernels::row_norms`], [`Kernels::dot`]). Accumulated in f32 over
-//!   8 vertical lanes; this is the tier that vectorizes.
+//!   [`Kernels::cost_panel`], [`Kernels::row_norms`], [`Kernels::dot`]).
+//!   Accumulated in f32 over 8 vertical lanes; this is the tier that
+//!   vectorizes.
 //! * **f64 objective tier** — everything that feeds objectives,
 //!   orderings, or maintained moments ([`sq_dist`], [`sq_dist_to_f64`],
 //!   [`accumulate`] / [`decumulate`], [`add_assign_row`], [`sumsq_f64`],
@@ -17,7 +18,11 @@
 //!   and deliberately stay scalar in every kernel mode: f64 chains are
 //!   order-sensitive, and the crate's bit-identity contracts (serial ≡
 //!   threaded, view ≡ owned, delta ≡ recompute, save ≡ load) are defined
-//!   against this exact order.
+//!   against this exact order. The single, documented exception is
+//!   [`KernelMode::FastMath`], whose relaxed contract (below) lets the
+//!   *candidate-search* distances ([`Kernels::sq_dist`],
+//!   [`Kernels::bbox_far`]) vectorize too — final objectives and
+//!   certificates still always go through the scalar index-order tier.
 //!
 //! # Dispatch and the bit-identity contract
 //!
@@ -39,6 +44,7 @@
 //! | `auto` | AVX2 (mul + add) | NEON (mul + add) | scalar | bit-identical to `scalar` |
 //! | `scalar` | 8-lane unrolled | 8-lane unrolled | same | the reference |
 //! | `fma` | AVX2 + FMA (`vfmadd`) | falls back to auto | scalar | ULP-bounded, not bit-equal |
+//! | `fast-math` | AVX-512F, else AVX2 + FMA | falls back to auto | scalar | relaxed: labels may differ, objective gap bench-gated in ppm |
 //!
 //! [`KernelMode::Fma`] is opt-in precisely because fused multiply-add
 //! contracts the intermediate rounding: it is slightly *more* accurate
@@ -48,6 +54,30 @@
 //! mode the host cannot honor falls back down the same table (the
 //! selected ISA is always visible via [`Kernels::isa`], surfaced in
 //! `Partition` timings, `BENCH_aba.json`, and serve's `/metrics`).
+//!
+//! # The fast-math tier and its relaxed-determinism contract
+//!
+//! [`KernelMode::FastMath`] is the large-K throughput tier. It swaps the
+//! per-entry dot kernels for a **register-blocked panel micro-kernel**
+//! (4 object rows × 1 centroid per micro-tile, fused multiply-add,
+//! centroid panels sized to stay L2-resident so the `k×d` matrix streams
+//! once per row *quad* instead of once per row), adds an **AVX-512F
+//! arm** when both the toolchain (rustc ≥ 1.89, probed by `build.rs`)
+//! and the host support it, and vectorizes the candidate-search f64
+//! distances with free reduction order. The contract is deliberately
+//! weaker than every other mode:
+//!
+//! * **labels may differ from `scalar`** — reduction order is free, so
+//!   near-ties in the assignment step can resolve differently;
+//! * **the objective gap is bench-gated in ppm** (`kernel_e2e` section
+//!   of `BENCH_aba.json`) and property-tested to stay small — never
+//!   bit-identity-gated;
+//! * **pruning stays exact**: [`Kernels::bbox_far`] and
+//!   [`Kernels::sq_dist`] share one lane/chunk structure, and IEEE-754
+//!   correctly-rounded ops are monotone, so `bound ≥ distance` holds
+//!   exactly even under fast-math (see `knn::farthest`);
+//! * snapshot fingerprints are unaffected — the kernels knob is
+//!   excluded from [`crate::AbaConfig`]'s fingerprint in every mode.
 
 use crate::error::AbaError;
 use std::sync::OnceLock;
@@ -63,12 +93,23 @@ pub enum KernelMode {
     /// FMA-contracted fast path — ULP-close to, but not bit-equal with,
     /// the scalar reference. Falls back to `Auto` where unavailable.
     Fma,
+    /// Relaxed-determinism throughput tier: register-blocked FMA panel
+    /// kernels, AVX-512F when toolchain + host allow, vectorized
+    /// candidate-search distances. Labels may differ from `scalar`; the
+    /// objective gap is bench-gated in ppm (see the module docs). Falls
+    /// back through `fma` → `auto` → `scalar` where unavailable.
+    FastMath,
 }
 
 impl KernelMode {
     /// Every mode, in display order — the single source of the accepted
     /// CLI/env values.
-    pub const ALL: [KernelMode; 3] = [KernelMode::Auto, KernelMode::Scalar, KernelMode::Fma];
+    pub const ALL: [KernelMode; 4] = [
+        KernelMode::Auto,
+        KernelMode::Scalar,
+        KernelMode::Fma,
+        KernelMode::FastMath,
+    ];
 
     /// The canonical (CLI/env) spelling.
     pub const fn as_str(self) -> &'static str {
@@ -76,6 +117,7 @@ impl KernelMode {
             KernelMode::Auto => "auto",
             KernelMode::Scalar => "scalar",
             KernelMode::Fma => "fma",
+            KernelMode::FastMath => "fast-math",
         }
     }
 
@@ -135,6 +177,8 @@ type DotFn = fn(&[f32], &[f32]) -> f32;
 type RowNormsFn = fn(&[f32], usize, &mut Vec<f32>);
 type CostBlockFn =
     fn(&[f32], &[f32], usize, usize, usize, &[f32], &[f32], usize, &mut [f32]);
+type SqDistFn = fn(&[f32], &[f32]) -> f64;
+type BboxFarFn = fn(&[f32], &[f32], &[f32]) -> f64;
 
 /// A dispatch table of f32-tier kernels, selected once per session (or
 /// once per process for [`Kernels::get`]). Copy — holding one is free.
@@ -145,6 +189,9 @@ pub struct Kernels {
     dot: DotFn,
     row_norms: RowNormsFn,
     cost_block: CostBlockFn,
+    cost_panel: CostBlockFn,
+    sq_dist: SqDistFn,
+    bbox_far: BboxFarFn,
 }
 
 static PROCESS_DEFAULT: OnceLock<Kernels> = OnceLock::new();
@@ -159,12 +206,16 @@ impl Kernels {
             dot: dot_scalar,
             row_norms: row_norms_scalar,
             cost_block: cost_block_scalar,
+            cost_panel: cost_panel_scalar,
+            sq_dist,
+            bbox_far: bbox_far_scalar,
         }
     }
 
     /// Select a table for `mode`, probing CPU features at most once per
-    /// call. Unavailable requests degrade (`fma` → `auto` → `scalar`)
-    /// rather than fail; [`Kernels::isa`] reports what was picked.
+    /// call. Unavailable requests degrade (`fast-math` → `fma` → `auto`
+    /// → `scalar`) rather than fail; [`Kernels::isa`] reports what was
+    /// picked.
     pub fn select(mode: KernelMode) -> Self {
         match mode {
             KernelMode::Scalar => Self::scalar(),
@@ -175,6 +226,11 @@ impl Kernels {
                 .or_else(vector_table)
                 .map(|t| Kernels { mode: KernelMode::Fma, ..t })
                 .unwrap_or_else(|| Kernels { mode: KernelMode::Fma, ..Self::scalar() }),
+            KernelMode::FastMath => fast_table()
+                .or_else(fma_table)
+                .or_else(vector_table)
+                .map(|t| Kernels { mode: KernelMode::FastMath, ..t })
+                .unwrap_or_else(|| Kernels { mode: KernelMode::FastMath, ..Self::scalar() }),
         }
     }
 
@@ -187,7 +243,7 @@ impl Kernels {
     }
 
     /// The instruction set actually selected: `"scalar"`, `"avx2"`,
-    /// `"avx2+fma"`, or `"neon"`.
+    /// `"avx2+fma"`, `"avx512f"`, or `"neon"`.
     pub fn isa(&self) -> &'static str {
         self.isa
     }
@@ -236,6 +292,52 @@ impl Kernels {
     ) {
         (self.cost_block)(x, xn, r0, r1, d, c, cn, k, out)
     }
+
+    /// Cache-blocked variant of [`Kernels::cost_block`], same signature
+    /// and semantics: the centroid matrix is walked in L2-sized *panels*
+    /// (outer loop) so for large `k` the `k×d` panel streams from cache
+    /// once per row block instead of once per row. In the deterministic
+    /// tiers every entry is produced by the same per-entry dot as
+    /// `cost_block`, so the two are bit-identical; the fast-math tier
+    /// swaps in the register-blocked FMA micro-kernel (4 rows × 1
+    /// centroid, free reduction order). This is what
+    /// `CostBackend::batch_costs` routes through.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub fn cost_panel(
+        &self,
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        (self.cost_panel)(x, xn, r0, r1, d, c, cn, k, out)
+    }
+
+    /// Candidate-search squared distance (f64). Every deterministic mode
+    /// dispatches to the scalar index-order [`sq_dist`]; fast-math
+    /// vectorizes the accumulation (relaxed contract — see module docs).
+    #[inline]
+    pub fn sq_dist(&self, a: &[f32], b: &[f32]) -> f64 {
+        (self.sq_dist)(a, b)
+    }
+
+    /// Farthest-corner squared-distance bound of a query against an
+    /// axis-aligned box `[lo, hi]`: `Σ_t max(|q_t − lo_t|, |q_t − hi_t|)²`.
+    /// Paired with [`Kernels::sq_dist`] lane-for-lane in every table so
+    /// that `bbox_far(q, lo, hi) ≥ sq_dist(q, p)` holds *exactly* for any
+    /// `p` inside the box — the pruning invariant `knn::farthest` relies
+    /// on (IEEE-754 rounding is monotone, and per coordinate the bound's
+    /// addend dominates the distance's addend).
+    #[inline]
+    pub fn bbox_far(&self, q: &[f32], lo: &[f32], hi: &[f32]) -> f64 {
+        (self.bbox_far)(q, lo, hi)
+    }
 }
 
 impl Default for Kernels {
@@ -252,6 +354,23 @@ impl Default for Kernels {
 /// features x 4 bytes = 16 KiB, comfortably L1-resident alongside the x
 /// row.
 const TILE_COLS: usize = 64;
+
+/// f32 budget for one centroid panel of [`Kernels::cost_panel`]:
+/// 32 Ki floats = 128 KiB — half a typical L2, leaving headroom for the
+/// streaming object rows and the output slice.
+const PANEL_F32: usize = 32 * 1024;
+
+/// Centroid-panel width in columns for feature count `d`, never below
+/// one L1 tile.
+#[inline]
+fn panel_cols(d: usize) -> usize {
+    (PANEL_F32 / d.max(1)).max(TILE_COLS)
+}
+
+/// How many object rows one fast-math micro-tile covers: four rows share
+/// every centroid-chunk load, quadrupling the FMA work per byte streamed
+/// from the panel.
+const PANEL_ROWS: usize = 4;
 
 /// The fixed 8-lane reduction tree every dot kernel (scalar and vector)
 /// funnels through — the order half of the bit-identity contract.
@@ -322,6 +441,48 @@ fn cost_block_impl<F: Fn(&[f32], &[f32]) -> f32>(
     }
 }
 
+/// Generic panel-blocked cost body for the deterministic tiers: an outer
+/// L2-sized centroid-panel loop wrapped around the same per-entry
+/// arithmetic as [`cost_block_impl`]. Each entry depends only on its own
+/// row and column and is produced by the same `dot`, so any panel/tile
+/// shape is bit-identical to `cost_block` — only the streaming order
+/// (and therefore cache traffic at large `k`) changes.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn cost_panel_impl<F: Fn(&[f32], &[f32]) -> f32>(
+    dot: F,
+    x: &[f32],
+    xn: &[f32],
+    r0: usize,
+    r1: usize,
+    d: usize,
+    c: &[f32],
+    cn: &[f32],
+    k: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (r1 - r0) * k);
+    let pc = panel_cols(d);
+    let mut jp = 0;
+    while jp < k {
+        let jp_hi = (jp + pc).min(k);
+        for i in r0..r1 {
+            let xi = &x[i * d..(i + 1) * d];
+            let row = &mut out[(i - r0) * k..(i - r0) * k + k];
+            let mut jt = jp;
+            while jt < jp_hi {
+                let jhi = (jt + TILE_COLS).min(jp_hi);
+                for (j, cj) in c[jt * d..jhi * d].chunks_exact(d).enumerate() {
+                    let j = jt + j;
+                    row[j] = (xn[i] + cn[j] - 2.0 * dot(xi, cj)).max(0.0);
+                }
+                jt = jhi;
+            }
+        }
+        jp = jp_hi;
+    }
+}
+
 fn row_norms_scalar(x: &[f32], d: usize, out: &mut Vec<f32>) {
     row_norms_impl(dot_scalar, x, d, out);
 }
@@ -341,16 +502,51 @@ fn cost_block_scalar(
     cost_block_impl(dot_scalar, x, xn, r0, r1, d, c, cn, k, out);
 }
 
+#[allow(clippy::too_many_arguments)]
+fn cost_panel_scalar(
+    x: &[f32],
+    xn: &[f32],
+    r0: usize,
+    r1: usize,
+    d: usize,
+    c: &[f32],
+    cn: &[f32],
+    k: usize,
+    out: &mut [f32],
+) {
+    cost_panel_impl(dot_scalar, x, xn, r0, r1, d, c, cn, k, out);
+}
+
+/// Scalar farthest-corner bound, the reference for
+/// [`Kernels::bbox_far`]: f32 subtract / abs / max per coordinate (the
+/// monotone mirror of [`sq_dist`]'s f32 subtract), widened to f64,
+/// squared, accumulated in index order. For any `p` with
+/// `lo ≤ p ≤ hi` per coordinate, `|q−p| ≤ max(|q−lo|, |q−hi|)` survives
+/// correctly-rounded f32 arithmetic, so `bbox_far ≥ sq_dist` holds
+/// exactly.
+fn bbox_far_scalar(q: &[f32], lo: &[f32], hi: &[f32]) -> f64 {
+    debug_assert_eq!(q.len(), lo.len());
+    debug_assert_eq!(q.len(), hi.len());
+    let mut s = 0f64;
+    for t in 0..q.len() {
+        let far = (q[t] - lo[t]).abs().max((q[t] - hi[t]).abs()) as f64;
+        s += far * far;
+    }
+    s
+}
+
 // ---------------------------------------------------------------------------
 // x86_64: AVX2 (bit-identical) and AVX2+FMA (contracted) paths
 // ---------------------------------------------------------------------------
 
 #[cfg(target_arch = "x86_64")]
 mod x86 {
-    use super::{cost_block_impl, reduce8, row_norms_impl};
+    use super::{cost_block_impl, cost_panel_impl, panel_cols, reduce8, row_norms_impl, PANEL_ROWS};
     use std::arch::x86_64::{
-        _mm256_add_ps, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_setzero_ps,
-        _mm256_storeu_ps,
+        _mm256_add_ps, _mm256_andnot_pd, _mm256_cvtps_pd, _mm256_fmadd_pd, _mm256_fmadd_ps,
+        _mm256_loadu_ps, _mm256_max_pd, _mm256_mul_ps, _mm256_set1_pd, _mm256_setzero_pd,
+        _mm256_setzero_ps, _mm256_storeu_pd, _mm256_storeu_ps, _mm256_sub_pd, _mm_loadu_ps,
+        __m256,
     };
 
     /// AVX2 dot body: per 8-wide chunk each lane performs exactly the
@@ -523,6 +719,541 @@ mod x86 {
         // SAFETY: gated on runtime avx2+fma detection in `fma_table`.
         unsafe { cost_block_fma_inner(x, xn, r0, r1, d, c, cn, k, out) }
     }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    unsafe fn cost_panel_avx2_inner(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        // SAFETY: as in `row_norms_avx2_inner`.
+        cost_panel_impl(|a, b| unsafe { dot_avx2_body(a, b) }, x, xn, r0, r1, d, c, cn, k, out);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn cost_panel_avx2(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        // SAFETY: gated on runtime avx2 detection in `vector_table`.
+        unsafe { cost_panel_avx2_inner(x, xn, r0, r1, d, c, cn, k, out) }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn cost_panel_fma_inner(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        // SAFETY: as in `row_norms_avx2_inner`.
+        cost_panel_impl(|a, b| unsafe { dot_fma_body(a, b) }, x, xn, r0, r1, d, c, cn, k, out);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn cost_panel_fma(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        // SAFETY: gated on runtime avx2+fma detection in `fma_table`.
+        unsafe { cost_panel_fma_inner(x, xn, r0, r1, d, c, cn, k, out) }
+    }
+
+    // -----------------------------------------------------------------
+    // Fast-math tier (AVX2+FMA arm): register-blocked panel micro-kernel
+    // and vectorized candidate-search f64 distances. Reduction order is
+    // free here — these are only ever reachable from
+    // `KernelMode::FastMath` tables.
+    // -----------------------------------------------------------------
+
+    /// Free-order horizontal sum of one 8-lane f32 register.
+    ///
+    /// # Safety
+    /// Callers must only reach this after `avx2` was detected.
+    #[inline(always)]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+        lanes.iter().sum()
+    }
+
+    /// Register-blocked fast-math panel kernel: [`PANEL_ROWS`] object
+    /// rows × 1 centroid per micro-tile, so each centroid chunk is
+    /// loaded once and feeds four independent `vfmadd` chains; centroid
+    /// panels are L2-sized via [`panel_cols`] so for large `k` the
+    /// `k×d` matrix streams from cache once per row quad.
+    ///
+    /// # Safety
+    /// Callers must only reach this after `avx2` and `fma` were
+    /// detected.
+    #[allow(clippy::too_many_arguments)]
+    #[inline(always)]
+    unsafe fn cost_panel_fast_body(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), (r1 - r0) * k);
+        let pc = panel_cols(d);
+        let chunks = d / 8;
+        let mut jp = 0;
+        while jp < k {
+            let jp_hi = (jp + pc).min(k);
+            let mut i = r0;
+            while i + PANEL_ROWS <= r1 {
+                let rows = [
+                    &x[i * d..(i + 1) * d],
+                    &x[(i + 1) * d..(i + 2) * d],
+                    &x[(i + 2) * d..(i + 3) * d],
+                    &x[(i + 3) * d..(i + 4) * d],
+                ];
+                for j in jp..jp_hi {
+                    let cj = &c[j * d..(j + 1) * d];
+                    let mut acc = [_mm256_setzero_ps(); PANEL_ROWS];
+                    for t in 0..chunks {
+                        let vc = _mm256_loadu_ps(cj.as_ptr().add(t * 8));
+                        for (a, row) in acc.iter_mut().zip(&rows) {
+                            *a = _mm256_fmadd_ps(_mm256_loadu_ps(row.as_ptr().add(t * 8)), vc, *a);
+                        }
+                    }
+                    let mut dots = [0f32; PANEL_ROWS];
+                    for (s, a) in dots.iter_mut().zip(&acc) {
+                        *s = hsum256(*a);
+                    }
+                    for t in chunks * 8..d {
+                        let cv = cj[t];
+                        for (s, row) in dots.iter_mut().zip(&rows) {
+                            *s = row[t].mul_add(cv, *s);
+                        }
+                    }
+                    for (r, &dot) in dots.iter().enumerate() {
+                        out[(i - r0 + r) * k + j] = (xn[i + r] + cn[j] - 2.0 * dot).max(0.0);
+                    }
+                }
+                i += PANEL_ROWS;
+            }
+            // Ragged row tail: per-row fused dot, same panel residency.
+            while i < r1 {
+                let xi = &x[i * d..(i + 1) * d];
+                let row = &mut out[(i - r0) * k..(i - r0) * k + k];
+                for j in jp..jp_hi {
+                    let dot = dot_fma_body(xi, &c[j * d..(j + 1) * d]);
+                    row[j] = (xn[i] + cn[j] - 2.0 * dot).max(0.0);
+                }
+                i += 1;
+            }
+            jp = jp_hi;
+        }
+    }
+
+    /// Vectorized candidate-search squared distance: four f64 lanes
+    /// (f32 chunk converted up, subtracted, `vfmadd`-squared), free-order
+    /// reduction, fused scalar tail.
+    ///
+    /// # Safety
+    /// Callers must only reach this after `avx2` and `fma` were
+    /// detected.
+    #[inline(always)]
+    unsafe fn sq_dist_fast_body(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / 4;
+        let mut acc = _mm256_setzero_pd();
+        for t in 0..chunks {
+            let va = _mm256_cvtps_pd(_mm_loadu_ps(a.as_ptr().add(t * 4)));
+            let vb = _mm256_cvtps_pd(_mm_loadu_ps(b.as_ptr().add(t * 4)));
+            let diff = _mm256_sub_pd(va, vb);
+            acc = _mm256_fmadd_pd(diff, diff, acc);
+        }
+        let mut lanes = [0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        for t in chunks * 4..a.len() {
+            let diff = a[t] as f64 - b[t] as f64;
+            s = diff.mul_add(diff, s);
+        }
+        s
+    }
+
+    /// Vectorized farthest-corner bound with *exactly* the lane/chunk
+    /// structure of [`sq_dist_fast_body`]: per coordinate both sides
+    /// compute an f64 subtraction of converted f32s, and since
+    /// `lo ≤ p ≤ hi` puts the real `q−p` between `q−hi` and `q−lo`,
+    /// monotonicity of correctly-rounded IEEE-754 ops gives
+    /// `|fl(q−p)| ≤ max(|fl(q−lo)|, |fl(q−hi)|)` per lane, which FMA
+    /// accumulation and the shared reduction preserve — so
+    /// `bound ≥ distance` holds exactly even in the fast-math tier.
+    ///
+    /// # Safety
+    /// Callers must only reach this after `avx2` and `fma` were
+    /// detected.
+    #[inline(always)]
+    unsafe fn bbox_far_fast_body(q: &[f32], lo: &[f32], hi: &[f32]) -> f64 {
+        debug_assert_eq!(q.len(), lo.len());
+        debug_assert_eq!(q.len(), hi.len());
+        let sign = _mm256_set1_pd(-0.0);
+        let chunks = q.len() / 4;
+        let mut acc = _mm256_setzero_pd();
+        for t in 0..chunks {
+            let vq = _mm256_cvtps_pd(_mm_loadu_ps(q.as_ptr().add(t * 4)));
+            let vl = _mm256_cvtps_pd(_mm_loadu_ps(lo.as_ptr().add(t * 4)));
+            let vh = _mm256_cvtps_pd(_mm_loadu_ps(hi.as_ptr().add(t * 4)));
+            let dl = _mm256_andnot_pd(sign, _mm256_sub_pd(vq, vl));
+            let dh = _mm256_andnot_pd(sign, _mm256_sub_pd(vq, vh));
+            let far = _mm256_max_pd(dl, dh);
+            acc = _mm256_fmadd_pd(far, far, acc);
+        }
+        let mut lanes = [0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        for t in chunks * 4..q.len() {
+            let far = (q[t] as f64 - lo[t] as f64).abs().max((q[t] as f64 - hi[t] as f64).abs());
+            s = far.mul_add(far, s);
+        }
+        s
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn cost_panel_fast_inner(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        cost_panel_fast_body(x, xn, r0, r1, d, c, cn, k, out)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn cost_panel_fast(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        // SAFETY: gated on runtime avx2+fma detection in `fast_table`.
+        unsafe { cost_panel_fast_inner(x, xn, r0, r1, d, c, cn, k, out) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn sq_dist_fast_inner(a: &[f32], b: &[f32]) -> f64 {
+        sq_dist_fast_body(a, b)
+    }
+
+    pub fn sq_dist_fast(a: &[f32], b: &[f32]) -> f64 {
+        // SAFETY: gated on runtime avx2+fma detection in `fast_table`.
+        unsafe { sq_dist_fast_inner(a, b) }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn bbox_far_fast_inner(q: &[f32], lo: &[f32], hi: &[f32]) -> f64 {
+        bbox_far_fast_body(q, lo, hi)
+    }
+
+    pub fn bbox_far_fast(q: &[f32], lo: &[f32], hi: &[f32]) -> f64 {
+        // SAFETY: gated on runtime avx2+fma detection in `fast_table`.
+        unsafe { bbox_far_fast_inner(q, lo, hi) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86_64: AVX-512F fast-math arm. Compiled only when build.rs found a
+// toolchain with stable AVX-512 intrinsics (rustc >= 1.89); selected only
+// when the host reports `avx512f` at runtime; reachable only from
+// `KernelMode::FastMath` — 16-lane reductions cannot be bit-identical to
+// the 8-lane scalar reference, so this arm never backs `auto` or `fma`.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(target_arch = "x86_64", aba_avx512))]
+mod x86_avx512 {
+    use super::{panel_cols, row_norms_impl, PANEL_ROWS};
+    use std::arch::x86_64::{
+        _mm256_loadu_ps, _mm512_abs_pd, _mm512_cvtps_pd, _mm512_fmadd_pd, _mm512_fmadd_ps,
+        _mm512_loadu_ps, _mm512_max_pd, _mm512_setzero_pd, _mm512_setzero_ps, _mm512_storeu_pd,
+        _mm512_storeu_ps, _mm512_sub_pd, __m512,
+    };
+
+    /// Free-order horizontal sum of one 16-lane f32 register.
+    ///
+    /// # Safety
+    /// Callers must only reach this after `avx512f` was detected.
+    #[inline(always)]
+    unsafe fn hsum512(v: __m512) -> f32 {
+        let mut lanes = [0f32; 16];
+        _mm512_storeu_ps(lanes.as_mut_ptr(), v);
+        lanes.iter().sum()
+    }
+
+    /// 16-lane fused dot with free reduction order (fast-math only).
+    ///
+    /// # Safety
+    /// Callers must only reach this after `avx512f` was detected.
+    #[inline(always)]
+    unsafe fn dot_avx512_body(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / 16;
+        let mut acc = _mm512_setzero_ps();
+        for t in 0..chunks {
+            acc = _mm512_fmadd_ps(
+                _mm512_loadu_ps(a.as_ptr().add(t * 16)),
+                _mm512_loadu_ps(b.as_ptr().add(t * 16)),
+                acc,
+            );
+        }
+        let mut dot = hsum512(acc);
+        for t in chunks * 16..a.len() {
+            dot = a[t].mul_add(b[t], dot);
+        }
+        dot
+    }
+
+    /// The 512-bit sibling of `x86::cost_panel_fast_body`: same
+    /// [`PANEL_ROWS`]-row micro-tile and [`panel_cols`] L2 panels, twice
+    /// the lane width per centroid-chunk load.
+    ///
+    /// # Safety
+    /// Callers must only reach this after `avx512f` was detected.
+    #[allow(clippy::too_many_arguments)]
+    #[inline(always)]
+    unsafe fn cost_panel_avx512_body(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), (r1 - r0) * k);
+        let pc = panel_cols(d);
+        let chunks = d / 16;
+        let mut jp = 0;
+        while jp < k {
+            let jp_hi = (jp + pc).min(k);
+            let mut i = r0;
+            while i + PANEL_ROWS <= r1 {
+                let rows = [
+                    &x[i * d..(i + 1) * d],
+                    &x[(i + 1) * d..(i + 2) * d],
+                    &x[(i + 2) * d..(i + 3) * d],
+                    &x[(i + 3) * d..(i + 4) * d],
+                ];
+                for j in jp..jp_hi {
+                    let cj = &c[j * d..(j + 1) * d];
+                    let mut acc = [_mm512_setzero_ps(); PANEL_ROWS];
+                    for t in 0..chunks {
+                        let vc = _mm512_loadu_ps(cj.as_ptr().add(t * 16));
+                        for (a, row) in acc.iter_mut().zip(&rows) {
+                            *a = _mm512_fmadd_ps(
+                                _mm512_loadu_ps(row.as_ptr().add(t * 16)),
+                                vc,
+                                *a,
+                            );
+                        }
+                    }
+                    let mut dots = [0f32; PANEL_ROWS];
+                    for (s, a) in dots.iter_mut().zip(&acc) {
+                        *s = hsum512(*a);
+                    }
+                    for t in chunks * 16..d {
+                        let cv = cj[t];
+                        for (s, row) in dots.iter_mut().zip(&rows) {
+                            *s = row[t].mul_add(cv, *s);
+                        }
+                    }
+                    for (r, &dot) in dots.iter().enumerate() {
+                        out[(i - r0 + r) * k + j] = (xn[i + r] + cn[j] - 2.0 * dot).max(0.0);
+                    }
+                }
+                i += PANEL_ROWS;
+            }
+            while i < r1 {
+                let xi = &x[i * d..(i + 1) * d];
+                let row = &mut out[(i - r0) * k..(i - r0) * k + k];
+                for j in jp..jp_hi {
+                    let dot = dot_avx512_body(xi, &c[j * d..(j + 1) * d]);
+                    row[j] = (xn[i] + cn[j] - 2.0 * dot).max(0.0);
+                }
+                i += 1;
+            }
+            jp = jp_hi;
+        }
+    }
+
+    /// Eight f64 lanes per chunk (f32 half-register converted up), fused
+    /// square-accumulate, free-order reduction.
+    ///
+    /// # Safety
+    /// Callers must only reach this after `avx512f` was detected.
+    #[inline(always)]
+    unsafe fn sq_dist_avx512_body(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / 8;
+        let mut acc = _mm512_setzero_pd();
+        for t in 0..chunks {
+            let va = _mm512_cvtps_pd(_mm256_loadu_ps(a.as_ptr().add(t * 8)));
+            let vb = _mm512_cvtps_pd(_mm256_loadu_ps(b.as_ptr().add(t * 8)));
+            let diff = _mm512_sub_pd(va, vb);
+            acc = _mm512_fmadd_pd(diff, diff, acc);
+        }
+        let mut lanes = [0f64; 8];
+        _mm512_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = lanes.iter().sum();
+        for t in chunks * 8..a.len() {
+            let diff = a[t] as f64 - b[t] as f64;
+            s = diff.mul_add(diff, s);
+        }
+        s
+    }
+
+    /// Farthest-corner bound with the exact lane/chunk structure of
+    /// [`sq_dist_avx512_body`] — same monotonicity argument as the AVX2
+    /// fast pair, so `bound ≥ distance` holds exactly.
+    ///
+    /// # Safety
+    /// Callers must only reach this after `avx512f` was detected.
+    #[inline(always)]
+    unsafe fn bbox_far_avx512_body(q: &[f32], lo: &[f32], hi: &[f32]) -> f64 {
+        debug_assert_eq!(q.len(), lo.len());
+        debug_assert_eq!(q.len(), hi.len());
+        let chunks = q.len() / 8;
+        let mut acc = _mm512_setzero_pd();
+        for t in 0..chunks {
+            let vq = _mm512_cvtps_pd(_mm256_loadu_ps(q.as_ptr().add(t * 8)));
+            let vl = _mm512_cvtps_pd(_mm256_loadu_ps(lo.as_ptr().add(t * 8)));
+            let vh = _mm512_cvtps_pd(_mm256_loadu_ps(hi.as_ptr().add(t * 8)));
+            let dl = _mm512_abs_pd(_mm512_sub_pd(vq, vl));
+            let dh = _mm512_abs_pd(_mm512_sub_pd(vq, vh));
+            let far = _mm512_max_pd(dl, dh);
+            acc = _mm512_fmadd_pd(far, far, acc);
+        }
+        let mut lanes = [0f64; 8];
+        _mm512_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = lanes.iter().sum();
+        for t in chunks * 8..q.len() {
+            let far = (q[t] as f64 - lo[t] as f64).abs().max((q[t] as f64 - hi[t] as f64).abs());
+            s = far.mul_add(far, s);
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn dot_avx512_inner(a: &[f32], b: &[f32]) -> f32 {
+        dot_avx512_body(a, b)
+    }
+
+    pub fn dot_avx512(a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: gated on runtime avx512f detection in `fast_table`.
+        unsafe { dot_avx512_inner(a, b) }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn row_norms_avx512_inner(x: &[f32], d: usize, out: &mut Vec<f32>) {
+        // SAFETY: closure bodies do not inherit the enclosing unsafety;
+        // the feature gate that makes this sound is the caller's.
+        row_norms_impl(|a, b| unsafe { dot_avx512_body(a, b) }, x, d, out);
+    }
+
+    pub fn row_norms_avx512(x: &[f32], d: usize, out: &mut Vec<f32>) {
+        // SAFETY: gated on runtime avx512f detection in `fast_table`.
+        unsafe { row_norms_avx512_inner(x, d, out) }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn cost_panel_avx512_inner(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        cost_panel_avx512_body(x, xn, r0, r1, d, c, cn, k, out)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn cost_panel_avx512(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        // SAFETY: gated on runtime avx512f detection in `fast_table`.
+        unsafe { cost_panel_avx512_inner(x, xn, r0, r1, d, c, cn, k, out) }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn sq_dist_avx512_inner(a: &[f32], b: &[f32]) -> f64 {
+        sq_dist_avx512_body(a, b)
+    }
+
+    pub fn sq_dist_avx512(a: &[f32], b: &[f32]) -> f64 {
+        // SAFETY: gated on runtime avx512f detection in `fast_table`.
+        unsafe { sq_dist_avx512_inner(a, b) }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn bbox_far_avx512_inner(q: &[f32], lo: &[f32], hi: &[f32]) -> f64 {
+        bbox_far_avx512_body(q, lo, hi)
+    }
+
+    pub fn bbox_far_avx512(q: &[f32], lo: &[f32], hi: &[f32]) -> f64 {
+        // SAFETY: gated on runtime avx512f detection in `fast_table`.
+        unsafe { bbox_far_avx512_inner(q, lo, hi) }
+    }
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -534,6 +1265,9 @@ fn vector_table() -> Option<Kernels> {
             dot: x86::dot_avx2,
             row_norms: x86::row_norms_avx2,
             cost_block: x86::cost_block_avx2,
+            cost_panel: x86::cost_panel_avx2,
+            sq_dist,
+            bbox_far: bbox_far_scalar,
         })
     } else {
         None
@@ -549,6 +1283,44 @@ fn fma_table() -> Option<Kernels> {
             dot: x86::dot_fma,
             row_norms: x86::row_norms_fma,
             cost_block: x86::cost_block_fma,
+            cost_panel: x86::cost_panel_fma,
+            sq_dist,
+            bbox_far: bbox_far_scalar,
+        })
+    } else {
+        None
+    }
+}
+
+/// The relaxed-determinism table: AVX-512F when the toolchain compiled
+/// the arm (`build.rs` cfg) and the host has it, else the AVX2+FMA
+/// register-blocked micro-kernels. `None` sends `select` down the
+/// deterministic fallback chain.
+#[cfg(target_arch = "x86_64")]
+fn fast_table() -> Option<Kernels> {
+    #[cfg(aba_avx512)]
+    if std::arch::is_x86_feature_detected!("avx512f") {
+        return Some(Kernels {
+            isa: "avx512f",
+            mode: KernelMode::FastMath,
+            dot: x86_avx512::dot_avx512,
+            row_norms: x86_avx512::row_norms_avx512,
+            cost_block: x86_avx512::cost_panel_avx512,
+            cost_panel: x86_avx512::cost_panel_avx512,
+            sq_dist: x86_avx512::sq_dist_avx512,
+            bbox_far: x86_avx512::bbox_far_avx512,
+        });
+    }
+    if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma") {
+        Some(Kernels {
+            isa: "avx2+fma",
+            mode: KernelMode::FastMath,
+            dot: x86::dot_fma,
+            row_norms: x86::row_norms_fma,
+            cost_block: x86::cost_panel_fast,
+            cost_panel: x86::cost_panel_fast,
+            sq_dist: x86::sq_dist_fast,
+            bbox_far: x86::bbox_far_fast,
         })
     } else {
         None
@@ -561,7 +1333,7 @@ fn fma_table() -> Option<Kernels> {
 
 #[cfg(target_arch = "aarch64")]
 mod arm {
-    use super::{cost_block_impl, reduce8, row_norms_impl};
+    use super::{cost_block_impl, cost_panel_impl, reduce8, row_norms_impl};
     use std::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32};
 
     /// NEON dot body: two 4-wide registers cover the scalar kernel's 8
@@ -647,6 +1419,39 @@ mod arm {
         // SAFETY: gated on runtime neon detection in `vector_table`.
         unsafe { cost_block_neon_inner(x, xn, r0, r1, d, c, cn, k, out) }
     }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    unsafe fn cost_panel_neon_inner(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        // SAFETY: as in `row_norms_neon_inner`.
+        cost_panel_impl(|a, b| unsafe { dot_neon_body(a, b) }, x, xn, r0, r1, d, c, cn, k, out);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn cost_panel_neon(
+        x: &[f32],
+        xn: &[f32],
+        r0: usize,
+        r1: usize,
+        d: usize,
+        c: &[f32],
+        cn: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        // SAFETY: gated on runtime neon detection in `vector_table`.
+        unsafe { cost_panel_neon_inner(x, xn, r0, r1, d, c, cn, k, out) }
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -658,6 +1463,9 @@ fn vector_table() -> Option<Kernels> {
             dot: arm::dot_neon,
             row_norms: arm::row_norms_neon,
             cost_block: arm::cost_block_neon,
+            cost_panel: arm::cost_panel_neon,
+            sq_dist,
+            bbox_far: bbox_far_scalar,
         })
     } else {
         None
@@ -671,6 +1479,13 @@ fn vector_table() -> Option<Kernels> {
 
 #[cfg(not(target_arch = "x86_64"))]
 fn fma_table() -> Option<Kernels> {
+    None
+}
+
+/// No dedicated fast-math kernels off x86-64 yet: `select` falls through
+/// to `fma` → `auto` → `scalar`, which on aarch64 lands on NEON.
+#[cfg(not(target_arch = "x86_64"))]
+fn fast_table() -> Option<Kernels> {
     None
 }
 
@@ -787,9 +1602,9 @@ mod tests {
         for m in KernelMode::ALL {
             assert_eq!(m.to_string().parse::<KernelMode>().unwrap(), m);
         }
-        assert_eq!(KernelMode::accepted(), "auto|scalar|fma");
+        assert_eq!(KernelMode::accepted(), "auto|scalar|fma|fast-math");
         let err = "avx512".parse::<KernelMode>().unwrap_err();
-        assert!(err.to_string().contains("auto|scalar|fma"), "{err}");
+        assert!(err.to_string().contains("auto|scalar|fma|fast-math"), "{err}");
     }
 
     #[test]
@@ -866,6 +1681,106 @@ mod tests {
             let tol = 1e-5 * (1.0 + scale);
             assert!((vf - want).abs() <= tol, "len={len}: fma {vf} vs ref {want}");
             assert!((vf - vs).abs() <= tol, "len={len}: fma {vf} vs scalar {vs}");
+        }
+    }
+
+    #[test]
+    fn panel_kernel_bit_identical_to_cost_block_in_deterministic_tiers() {
+        // `cost_panel` only reorders streaming in the non-fast tiers;
+        // every entry is the same per-entry dot, so the panel and the
+        // per-row kernel must agree to the bit on every deterministic
+        // table (including a degraded `fma` on hosts without the ISA).
+        let mut rng = Pcg32::new(906);
+        for mode in [KernelMode::Scalar, KernelMode::Auto, KernelMode::Fma] {
+            let kern = Kernels::select(mode);
+            for &(m, k, d) in &[(1usize, 9usize, 4usize), (6, 70, 13), (5, 130, 32), (7, 65, 8)] {
+                let x = rand_vec(&mut rng, m * d);
+                let c = rand_vec(&mut rng, k * d);
+                let (mut xn, mut cn) = (Vec::new(), Vec::new());
+                kern.row_norms(&x, m, d, &mut xn);
+                kern.row_norms(&c, k, d, &mut cn);
+                let (mut block, mut panel) = (vec![0f32; m * k], vec![0f32; m * k]);
+                kern.cost_block(&x, &xn, 0, m, d, &c, &cn, k, &mut block);
+                kern.cost_panel(&x, &xn, 0, m, d, &c, &cn, k, &mut panel);
+                assert_eq!(block, panel, "mode={mode} isa={} m={m} k={k} d={d}", kern.isa());
+            }
+        }
+    }
+
+    #[test]
+    fn fast_math_is_ppm_close_and_its_bound_still_dominates() {
+        let fast = Kernels::select(KernelMode::FastMath);
+        assert_eq!(fast.mode(), KernelMode::FastMath);
+        let scalar = Kernels::scalar();
+        let mut rng = Pcg32::new(907);
+        for &(m, k, d) in &[(4usize, 9usize, 3usize), (9, 70, 16), (6, 33, 29), (8, 130, 8)] {
+            let x = rand_vec(&mut rng, m * d);
+            let c = rand_vec(&mut rng, k * d);
+            let (mut xn_f, mut cn_f) = (Vec::new(), Vec::new());
+            fast.row_norms(&x, m, d, &mut xn_f);
+            fast.row_norms(&c, k, d, &mut cn_f);
+            let (mut xn_s, mut cn_s) = (Vec::new(), Vec::new());
+            scalar.row_norms(&x, m, d, &mut xn_s);
+            scalar.row_norms(&c, k, d, &mut cn_s);
+            let (mut out_f, mut out_s) = (vec![0f32; m * k], vec![0f32; m * k]);
+            fast.cost_panel(&x, &xn_f, 0, m, d, &c, &cn_f, k, &mut out_f);
+            scalar.cost_block(&x, &xn_s, 0, m, d, &c, &cn_s, k, &mut out_s);
+            for (idx, (&f, &s)) in out_f.iter().zip(&out_s).enumerate() {
+                // Costs are O(d)-sized sums of O(1) terms; a relative
+                // guard of 1e-4 is orders looser than the observed
+                // fused-vs-split rounding and still catches indexing or
+                // tiling bugs outright.
+                let scale = xn_s[idx / k] as f64 + cn_s[idx % k] as f64;
+                assert!(
+                    (f as f64 - s as f64).abs() <= 1e-4 * (1.0 + scale),
+                    "entry {idx}: fast {f} vs scalar {s} (isa={})",
+                    fast.isa()
+                );
+            }
+        }
+        // The pruning invariant of the fast tier: for points inside the
+        // box, the vectorized bound dominates the vectorized distance —
+        // exactly, not approximately.
+        for d in [1usize, 3, 7, 8, 15, 16, 32, 57] {
+            let a = rand_vec(&mut rng, d);
+            let b = rand_vec(&mut rng, d);
+            let q = rand_vec(&mut rng, d);
+            let lo: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| x.min(y)).collect();
+            let hi: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| x.max(y)).collect();
+            for p in [&a, &b, &lo, &hi] {
+                assert!(
+                    fast.bbox_far(&q, &lo, &hi) >= fast.sq_dist(&q, p),
+                    "d={d} isa={}",
+                    fast.isa()
+                );
+            }
+            // ppm-scale agreement with the scalar objective tier.
+            let (df, ds) = (fast.sq_dist(&a, &b), sq_dist(&a, &b));
+            assert!((df - ds).abs() <= 1e-9 + 1e-5 * ds, "d={d}: {df} vs {ds}");
+        }
+    }
+
+    #[test]
+    fn avx512_kernels_are_ulp_close_to_scalar_or_skip() {
+        // Exercises the AVX-512 arm only where it exists: the fast-math
+        // table reports `avx512f` only when build.rs compiled the arm
+        // (rustc >= 1.89) *and* the host has the ISA — everywhere else
+        // this test degrades to a clean skip.
+        let fast = Kernels::select(KernelMode::FastMath);
+        if fast.isa() != "avx512f" {
+            eprintln!("skipping avx512 checks: fast-math selected '{}'", fast.isa());
+            return;
+        }
+        let scalar = Kernels::scalar();
+        let mut rng = Pcg32::new(908);
+        for len in [1usize, 7, 8, 15, 16, 17, 31, 32, 33, 64, 257, 1000] {
+            let a = rand_vec(&mut rng, len);
+            let b = rand_vec(&mut rng, len);
+            let (vf, vs) = (fast.dot(&a, &b) as f64, scalar.dot(&a, &b) as f64);
+            let scale: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+            assert!((vf - vs).abs() <= 1e-5 * (1.0 + scale), "len={len}: {vf} vs {vs}");
+            let (df, ds) = (fast.sq_dist(&a, &b), sq_dist(&a, &b));
+            assert!((df - ds).abs() <= 1e-9 + 1e-5 * ds, "len={len}: {df} vs {ds}");
         }
     }
 

@@ -77,9 +77,9 @@ pub struct PhaseTimings {
     /// Sum of the phases.
     pub total_secs: f64,
     /// The distance-kernel ISA the solve ran with (`"scalar"`, `"avx2"`,
-    /// `"avx2+fma"`, `"neon"` — see [`crate::runtime::Kernels::isa`]).
-    /// Empty for algorithms that do not go through the kernel layer's
-    /// f32 cost tier (the baselines).
+    /// `"avx2+fma"`, `"avx512f"`, `"neon"` — see
+    /// [`crate::runtime::Kernels::isa`]). Empty for algorithms that do
+    /// not go through the kernel layer's f32 cost tier (the baselines).
     pub kernel_isa: &'static str,
 }
 
@@ -297,8 +297,13 @@ impl AbaBuilder {
     /// construction — the per-run hot path never reads the environment.
     /// [`KernelMode::Auto`] and [`KernelMode::Scalar`] are bit-identical
     /// to each other on every host; [`KernelMode::Fma`] opts into
-    /// fused-multiply-add contraction (ULP-bounded, not bit-identical).
-    /// The selection is surfaced as [`PhaseTimings::kernel_isa`].
+    /// fused-multiply-add contraction (ULP-bounded, not bit-identical);
+    /// [`KernelMode::FastMath`] opts into the relaxed-determinism
+    /// throughput tier (register-blocked FMA panels, AVX-512 where
+    /// available — labels may differ from scalar, objective gap
+    /// bench-gated in ppm). The selection is surfaced as
+    /// [`PhaseTimings::kernel_isa`] and never enters snapshot
+    /// fingerprints.
     pub fn kernels(mut self, mode: KernelMode) -> Self {
         self.cfg.kernels = Some(mode);
         self
@@ -390,8 +395,9 @@ impl Aba {
     }
 
     /// The distance-kernel ISA this session dispatches to (`"scalar"`,
-    /// `"avx2"`, `"avx2+fma"`, `"neon"`). Fixed at [`AbaBuilder::build`];
-    /// also stamped on every solve as [`PhaseTimings::kernel_isa`].
+    /// `"avx2"`, `"avx2+fma"`, `"avx512f"`, `"neon"`). Fixed at
+    /// [`AbaBuilder::build`]; also stamped on every solve as
+    /// [`PhaseTimings::kernel_isa`].
     pub fn kernel_isa(&self) -> &'static str {
         self.kernels.isa()
     }

@@ -325,6 +325,77 @@ fn prop_scalar_kernels_bit_identical_to_auto_selection() {
 }
 
 #[test]
+fn prop_fast_math_objective_gap_stays_ppm_scale() {
+    // The relaxed-determinism contract of `KernelMode::FastMath`: labels
+    // may differ from the scalar reference (free reduction order flips
+    // near-ties in the assignment step), but the partition must stay
+    // valid and balanced and its objective must stay within ppm-scale of
+    // scalar — across the flat, explicit-hierarchical, sparse large-K,
+    // and online-bootstrap dispatch paths, serial and pooled. The
+    // ceiling here is deliberately coarse (1%, i.e. 10^4 ppm, vs the
+    // ~1-digit ppm gaps the bench records): random tiny datasets make
+    // near-tie cascades worst-case, and the tight gate lives in
+    // `BENCH_aba.json`'s kernel_e2e records, per the contract.
+    use aba::assignment::CandidateMode;
+    use aba::runtime::{KernelMode, Parallelism};
+    PropRunner::new(10).run("fast-math objective gap in ppm", |rng| {
+        let ds = rand_dataset(rng, 280, 7);
+        let mode = rng.gen_index(4);
+        let par = if rng.gen_index(2) == 0 { Parallelism::Serial } else { Parallelism::Threads(3) };
+        let mut hier: Option<Vec<usize>> = None;
+        if mode == 1 {
+            let (k1, k2) = (2 + rng.gen_index(2), 2 + rng.gen_index(2));
+            if k1 * k2 <= ds.n {
+                hier = Some(vec![k1, k2]);
+            }
+        }
+        let k: usize = match &hier {
+            Some(spec) => spec.iter().product(),
+            None if mode == 2 => (8 + rng.gen_index(25)).min(ds.n),
+            None => 1 + rng.gen_index(ds.n.min(24)),
+        };
+        let solve = |km: KernelMode| -> Result<aba::Partition, String> {
+            let mut b = Aba::builder().parallelism(par).kernels(km);
+            if let Some(spec) = &hier {
+                b = b.hier(spec.clone());
+            }
+            if mode == 2 {
+                b = b.auto_hier(false).candidates(CandidateMode::Fixed(4));
+            }
+            let mut s = b.build().map_err(|e| e.to_string())?;
+            if mode == 3 {
+                let live = s.partition_online(&ds.view(), k).map_err(|e| e.to_string())?;
+                Ok(live.into_partition())
+            } else {
+                s.partition(&ds, k).map_err(|e| e.to_string())
+            }
+        };
+        let fast = solve(KernelMode::FastMath)?;
+        let scalar = solve(KernelMode::Scalar)?;
+        prop_assert!(!fast.timings.kernel_isa.is_empty(), "isa not stamped");
+        prop_assert!(fast.labels.len() == ds.n, "label length");
+        prop_assert!(fast.labels.iter().all(|&l| (l as usize) < k), "label range");
+        let stats = ClusterStats::compute(&ds, &fast.labels, k);
+        let (min, max) = (
+            *stats.sizes.iter().min().unwrap(),
+            *stats.sizes.iter().max().unwrap(),
+        );
+        prop_assert!(max - min <= 1, "balance n={} k={k} mode={mode}", ds.n);
+        let gap_ppm =
+            (fast.objective - scalar.objective).abs() / scalar.objective.max(1e-9) * 1e6;
+        prop_assert!(
+            gap_ppm <= 10_000.0,
+            "objective gap {gap_ppm:.1} ppm (fast {} vs scalar {}, n={} k={k} mode={mode} isa={})",
+            fast.objective,
+            scalar.objective,
+            ds.n,
+            fast.timings.kernel_isa
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_view_path_bit_identical_to_owned_copy_path() {
     // The zero-copy DataView path must be observationally identical to
     // materializing the same subset into an owned Dataset first: labels

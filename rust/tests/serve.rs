@@ -178,7 +178,7 @@ fn serve_lifecycle_end_to_end() {
     // The kernel gauge carries a concrete ISA token, never empty.
     let isa_line = resp.lines().find(|l| l.starts_with("aba_kernel_isa")).unwrap();
     assert!(
-        ["scalar", "avx2", "avx2+fma", "neon"]
+        ["scalar", "avx2", "avx2+fma", "avx512f", "neon"]
             .contains(&isa_line.trim_start_matches("aba_kernel_isa").trim()),
         "{isa_line}"
     );
