@@ -36,6 +36,11 @@
 //! `algo_secs`/`total_secs` (their `objective` column carries the
 //! certificate's upper bound).
 //!
+//! The `pareto` section runs the bicriterion multi-restart engine and
+//! records front size, hypervolume vs the single-ABA solution's
+//! (diversity, dispersion) reference point, and restarts/sec serial vs
+//! pooled — with a serial-vs-pooled front bit-identity assert.
+//!
 //! The `kernel` section microbenchmarks the runtime-dispatched SIMD
 //! distance kernels themselves: `cost_block`, the cache-blocked
 //! `cost_panel`, and `row_norms` GFLOP/s at d ∈ {8, 32, 128} for each
@@ -883,6 +888,82 @@ fn main() {
         push("p50_latency", p50_us as f64 / 1e6, p50_us as f64 / 1e6, rps);
         push("p99_latency", p99_us as f64 / 1e6, p99_us as f64 / 1e6, rps);
         push("evictions", 0.0, wall, evictions as f64);
+    }
+
+    if section_enabled("pareto") {
+        // The bicriterion Pareto engine: multi-restart interchange
+        // search producing a diversity/dispersion front. Serial vs
+        // pooled runs must be bit-identical (the engine's determinism
+        // contract), so the threaded row is pure wall clock. The
+        // hypervolume is measured against the single-ABA solution's own
+        // (diversity, dispersion) point nudged epsilon inward — any
+        // positive value is front area *beyond* the one-objective
+        // solver. CI runs this section (`ABA_BENCH_ONLY=..,pareto`) —
+        // keep it seconds.
+        let (n, k, d) = (2_000usize, 10usize, 8usize);
+        let pcfg = aba::pareto::ParetoConfig {
+            restarts: 8,
+            passes: 2,
+            partners: 6,
+            ..Default::default()
+        };
+        let restarts = pcfg.restarts;
+        println!("\n## bicriterion pareto front (N={n}, D={d}, K={k}; {restarts} restarts)");
+        let ds = mk(n, d, 16);
+        let view = ds.view();
+        let aba_part = Aba::from_config(flat.clone()).unwrap().partition(&ds, k).unwrap();
+        let aba_disp = aba::algo::objective::dispersion(&view, &aba_part.labels, k);
+        let (serial, serial_secs) = timed(|| {
+            aba::pareto::pareto_front(&view, k, &pcfg, Some(&aba_part.labels), None).unwrap()
+        });
+        let pool = aba::runtime::WorkerPool::new(auto_threads);
+        let (pooled, pooled_secs) = timed(|| {
+            aba::pareto::pareto_front(&view, k, &pcfg, Some(&aba_part.labels), Some(&pool))
+                .unwrap()
+        });
+        assert_eq!(serial, pooled, "pooled pareto front must be bit-identical to serial");
+        let ref_point = (aba_part.objective * (1.0 - 1e-9), aba_disp * (1.0 - 1e-9));
+        let hv = serial.hypervolume(ref_point);
+        println!(
+            "  front: {} point(s) | hypervolume vs single-ABA point {hv:.3} | \
+             diversity {:.1}..{:.1}, dispersion {:.4}..{:.4}",
+            serial.points.len(),
+            serial.best_dispersion().map_or(0.0, |p| p.diversity),
+            serial.best_diversity().map_or(0.0, |p| p.diversity),
+            serial.best_diversity().map_or(0.0, |p| p.dispersion),
+            serial.best_dispersion().map_or(0.0, |p| p.dispersion),
+        );
+        println!(
+            "  restarts: serial {serial_secs:>7.3}s ({:.2}/s) | threads({auto_threads}) \
+             {pooled_secs:>7.3}s ({:.2}/s, {:.2}x) | fronts bit-identical: yes",
+            restarts as f64 / serial_secs.max(1e-9),
+            restarts as f64 / pooled_secs.max(1e-9),
+            serial_secs / pooled_secs.max(1e-9)
+        );
+        let mut push = |label: &str, threads: usize, secs: f64, objective: f64| {
+            recs.push(Rec {
+                section: "pareto",
+                label: label.into(),
+                n,
+                k,
+                d,
+                threads,
+                algo_secs: secs,
+                total_secs: secs,
+                objective,
+                gathered_bytes: 0,
+                cost_buffer_bytes: 0,
+            });
+        };
+        push("front_size", 1, serial_secs, serial.points.len() as f64);
+        push("hypervolume_vs_aba", 1, serial_secs, hv);
+        push("restarts_per_sec_serial", 1, serial_secs, restarts as f64 / serial_secs.max(1e-9));
+        push(
+            "restarts_per_sec_threads",
+            auto_threads,
+            pooled_secs,
+            restarts as f64 / pooled_secs.max(1e-9),
+        );
     }
 
     // A filtered run must not truncate the canonical cross-PR record,

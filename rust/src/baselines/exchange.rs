@@ -115,6 +115,27 @@ impl Anticlusterer for FastAnticlustering {
     }
 }
 
+/// Seed-stream layout shared by every restart-style consumer of a
+/// single `u64` seed (this baseline and [`crate::pareto`]'s engine):
+/// stream 0 drives the initial partition, stream 1 drives partner /
+/// neighbor draws. Derived with [`Pcg32::stream`], so the two streams
+/// are independent of each other's draw counts.
+const STREAM_INIT: u64 = 0;
+const STREAM_PARTNERS: u64 = 1;
+
+/// The balanced random starting partition for a given seed
+/// (category-aware when the view carries categories). Exposed so tests
+/// and other engines can reproduce the exact starting point of
+/// [`fast_anticlustering`] without re-deriving the seeding scheme.
+pub fn initial_partition<'a>(data: impl Into<DataView<'a>>, k: usize, seed: u64) -> Vec<u32> {
+    let ds: DataView<'a> = data.into();
+    let mut rng = Pcg32::stream(seed, STREAM_INIT);
+    match ds.categories() {
+        Some(cats) => random_part::random_partition_categorical(&cats, k, rng.next_u64()),
+        None => random_part::random_partition(ds.n(), k, rng.next_u64()),
+    }
+}
+
 /// Run the exchange heuristic. Accepts a `&Dataset` or a zero-copy
 /// [`DataView`] subset.
 pub fn fast_anticlustering<'a>(
@@ -127,15 +148,12 @@ pub fn fast_anticlustering<'a>(
     let d = ds.d();
     assert!((1..=n).contains(&k));
     let start = Instant::now();
-    let mut rng = Pcg32::new(cfg.seed);
+    let mut rng = Pcg32::stream(cfg.seed, STREAM_PARTNERS);
 
     // Initial random partition (category-aware when present). For
     // identity views `categories()` is a zero-copy borrow.
     let categories = ds.categories();
-    let mut labels = match &categories {
-        Some(cats) => random_part::random_partition_categorical(cats, k, rng.next_u64()),
-        None => random_part::random_partition(n, k, rng.next_u64()),
-    };
+    let mut labels = initial_partition(&ds, k, cfg.seed);
 
     // Cluster state: S_k (feature sums), SS_k (sum of ||x||^2), m_k.
     let mut sums = vec![0f64; k * d];
@@ -274,11 +292,8 @@ mod tests {
         );
         let k = 6;
         let seed = 5;
-        let init = random_part::random_partition(ds.n, k, {
-            // replicate the internal seeding path
-            let mut r = Pcg32::new(seed);
-            r.next_u64()
-        });
+        // The exposed seeding helper reproduces the internal start.
+        let init = initial_partition(&ds, k, seed);
         let init_obj = ClusterStats::compute(&ds, &init, k).ssd_total();
         let res = fast_anticlustering(&ds, k, &ExchangeConfig::random(20, seed));
         let obj = ClusterStats::compute(&ds, &res.labels, k).ssd_total();

@@ -32,6 +32,7 @@
 //! | [`algo::hierarchical`] | §4.4, Lemma 1, Prop. 1 | Multi-level decomposition for large K, fanned out on the worker pool |
 //! | [`algo::objective`] | §3, Fact 1 | Both paper objectives, the per-cluster diversity stats, and the O(d) [`algo::objective::ClusterDelta`] add/remove deltas behind the online handles |
 //! | [`cert`] | §3 (objective), §7 (quality) | Quality certificates: scalable diversity upper bounds / optimality gaps, and the exact polynomial K=2 dispersion solver used as solver fast path and test oracle |
+//! | [`pareto`] | §3 (bicriterion) | Multi-restart bicriterion interchange engine (MBPI-style) producing deterministic diversity/dispersion Pareto fronts over ABA seeds |
 //! | [`online`] | §1, §6 (serving) | Live [`OnlinePartition`] handles: delta-maintained insert/remove/refine with balance repair, plus fingerprinted save/load persistence |
 //! | [`serve`] | §6 (serving) | The `aba serve` HTTP service: a bounded accept/worker server managing concurrent [`OnlinePartition`] handles behind an LRU registry, with shard-and-merge solves and text metrics |
 //! | [`runtime`] | §5 (implementation) | Cost backends (native / Pallas-XLA via PJRT), the [`runtime::pool`] parallel runtime, and the [`runtime::simd`] runtime-dispatched distance kernels |
@@ -214,6 +215,49 @@
 //! # Ok::<(), aba::AbaError>(())
 //! ```
 //!
+//! ## Bicriterion Pareto search
+//!
+//! A single ABA solve maximizes diversity alone; the [`pareto`]
+//! subsystem makes the diversity/dispersion trade-off explicit.
+//! [`Aba::pareto_front`] runs a multi-restart bicriterion interchange
+//! engine — restarts seeded from the session's own ABA solution,
+//! `fast_anticlustering`, and random partitions under weight-sampled
+//! scalarizations — and returns a non-dominated front of partitions,
+//! each carrying both criteria plus the same diversity certificate
+//! (upper bound, gap) a [`Partition`] reports. Restarts fan out on the
+//! session worker pool under per-restart [`rng::Pcg32::stream`] seed
+//! streams, so Serial and Threads(n) fronts are **bit-identical**
+//! (property-tested). `aba pareto` on the CLI does exactly this:
+//!
+//! ```
+//! use aba::pareto::ParetoConfig;
+//! use aba::data::synth::{generate, SynthKind};
+//! use aba::Aba;
+//!
+//! let ds = generate(SynthKind::GaussianMixture { components: 4, spread: 4.0 },
+//!                   120, 4, 42, "front");
+//! let cfg = ParetoConfig { restarts: 6, seed: 7, ..Default::default() };
+//! let mut session = Aba::builder().pareto(cfg).build()?;
+//! let front = session.pareto_front(&ds.view(), 6)?;
+//! // Points arrive diversity-descending / dispersion-ascending; the
+//! // extremes weakly dominate the single-ABA solution's pair.
+//! assert!(!front.points.is_empty());
+//! for pair in front.points.windows(2) {
+//!     assert!(pair[0].diversity > pair[1].diversity);
+//!     assert!(pair[0].dispersion < pair[1].dispersion);
+//! }
+//! let best = front.best_diversity().unwrap();
+//! assert!(best.upper_bound >= best.diversity && (0.0..=1.0).contains(&best.gap));
+//! // One number for "how much front is there": hypervolume vs a
+//! // reference point at the origin.
+//! assert!(front.hypervolume((0.0, 0.0)) > 0.0);
+//! # Ok::<(), aba::AbaError>(())
+//! ```
+//!
+//! Balanced partitions with `n < 2k` would force singleton anticlusters
+//! (undefined, infinite dispersion) — refused up front with a typed
+//! [`AbaError::InvalidK`] instead of leaking `inf` into front output.
+//!
 //! ## Serving
 //!
 //! The [`serve`] module wraps the online handles in a dependency-light
@@ -330,6 +374,7 @@ pub mod graph;
 pub mod knn;
 pub mod metrics;
 pub mod online;
+pub mod pareto;
 pub mod pipeline;
 pub mod rng;
 pub mod runtime;

@@ -4,6 +4,7 @@
 //! ```text
 //! aba datasets                          list the synthetic Table-2 catalog
 //! aba run --dataset travel --k 50       run ABA, print objective + stats
+//! aba pareto --dataset travel --k 10    bicriterion diversity/dispersion front
 //! aba table t4|t6|t8|t9|t10|t11         regenerate a paper table
 //! aba fig f5|f6|f7                      regenerate a paper figure
 //! aba pipeline --k 100 --epochs 3       stream mini-batches into the SGD consumer
@@ -14,6 +15,7 @@ use aba::algo::{AbaConfig, Criterion, Variant};
 use aba::assignment::{CandidateMode, SolverKind};
 use aba::data::synth::{catalog, load, Scale};
 use aba::experiments::{common::ExpOptions, figs, t11, t4, t4x, t8, t9};
+use aba::pareto::ParetoConfig;
 use aba::pipeline::{run_pipeline, BatchStrategy, PipelineConfig};
 use aba::runtime::{BackendKind, KernelMode, Parallelism};
 use aba::util::args::{parse_hier, Args};
@@ -38,6 +40,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     match cmd {
         "datasets" => cmd_datasets(),
         "run" => cmd_run(&args),
+        "pareto" => cmd_pareto(&args),
         "table" => cmd_table(&args),
         "fig" => cmd_fig(&args),
         "pipeline" => cmd_pipeline(&args),
@@ -68,6 +71,9 @@ fn print_help() {
                [--candidates {candidates}] [--flat] [--strict] [--out labels.csv]\n\
                [--save-partition part.json] [--certify] [--criterion {criterions}]\n\
                [--kernels {kernels}]\n\
+           pareto --dataset NAME --k K      bicriterion diversity/dispersion Pareto front\n\
+               [--restarts R] [--archive-cap C] [--passes P] [--partners P] [--seed S]\n\
+               [--scale paper|small|tiny] [--threads {threads}]\n\
            table t4|t6|t8|t9|t10|t11        regenerate a paper table\n\
                [--k K] [--datasets a,b|all] [--scale ...] [--quick]\n\
                [--time-limit SECS] [--out-dir DIR]\n\
@@ -249,6 +255,75 @@ fn cmd_run(args: &Args) -> Result<()> {
         aba::data::csv::save_labels(&part.labels, path)?;
         println!("labels written to {path}");
     }
+    Ok(())
+}
+
+/// `aba pareto`: multi-restart bicriterion interchange search on a
+/// catalog dataset, printing the diversity/dispersion Pareto front with
+/// per-point certificate upper bounds and gaps (see `aba::pareto`).
+fn cmd_pareto(args: &Args) -> Result<()> {
+    let name = args.get("dataset").unwrap_or("travel");
+    let scale: Scale = args.get_parse("scale")?.unwrap_or(Scale::Small);
+    let k: usize = args.get_parse("k")?.unwrap_or(10);
+    let mut cfg = ParetoConfig::default();
+    if let Some(r) = args.get_parse("restarts")? {
+        cfg.restarts = r;
+    }
+    if let Some(c) = args.get_parse("archive-cap")? {
+        cfg.archive_cap = c;
+    }
+    if let Some(p) = args.get_parse("passes")? {
+        cfg.passes = p;
+    }
+    if let Some(p) = args.get_parse("partners")? {
+        cfg.partners = p;
+    }
+    if let Some(s) = args.get_parse("seed")? {
+        cfg.seed = s;
+    }
+    let par = match args.get_parse::<Parallelism>("threads")? {
+        Some(p) => p,
+        None if args.has_flag("parallel") => Parallelism::Auto,
+        None => Parallelism::Serial,
+    };
+    let ds = load(name, scale)?;
+    println!(
+        "dataset {} (n={}, d={}), k={k}, restarts={}, threads={}",
+        ds.name,
+        ds.n,
+        ds.d,
+        cfg.restarts,
+        par.effective_threads()
+    );
+    let restarts = cfg.restarts;
+    let mut session = Aba::builder().parallelism(par).pareto(cfg).build()?;
+    let t = std::time::Instant::now();
+    // Surfaces the typed singleton-cluster precondition (n < 2k means a
+    // balanced partition has a one-object cluster, so dispersion is
+    // infinite and the bicriterion front degenerates) as a CLI error.
+    let front = session.pareto_front(&ds.view(), k)?;
+    let secs = t.elapsed().as_secs_f64();
+    println!(
+        "front          {} point(s) from {restarts} restart(s) in {} ({:.1} restarts/s)",
+        front.points.len(),
+        fmt_secs(secs),
+        restarts as f64 / secs.max(1e-9)
+    );
+    println!("hypervolume    {:.4} (vs origin)", front.hypervolume((0.0, 0.0)));
+    let mut t2 = aba::util::table::Table::new(
+        "diversity/dispersion Pareto front (both maximized)",
+        &["point", "diversity", "dispersion", "upper bound", "gap %"],
+    );
+    for (i, p) in front.points.iter().enumerate() {
+        t2.row(vec![
+            i.to_string(),
+            format!("{:.4}", p.diversity),
+            format!("{:.4}", p.dispersion),
+            format!("{:.4}", p.upper_bound),
+            format!("{:.2}", 100.0 * p.gap),
+        ]);
+    }
+    println!("{}", t2.render());
     Ok(())
 }
 

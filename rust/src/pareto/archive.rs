@@ -1,0 +1,252 @@
+//! Non-dominated archive of partitions over (diversity, dispersion).
+//!
+//! Both criteria are maximized. The archive keeps a mutually
+//! non-dominated set of [`ParetoPoint`]s sorted by diversity descending
+//! (equivalently dispersion ascending — on a front the two orders
+//! coincide), with deterministic tie-breaking: a candidate whose
+//! (diversity, dispersion) pair is weakly dominated by an incumbent —
+//! including an exact duplicate — is rejected, so the first partition to
+//! reach a point owns it. When the archive exceeds its configured
+//! capacity it thins by crowding distance (NSGA-II style), never
+//! dropping the two extreme points, removing the lowest-index point of
+//! minimal crowding — all comparisons on exact `f64` values, so the
+//! archive contents are a pure function of the insertion sequence.
+
+/// One partition on (or once on) the front.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParetoPoint {
+    /// Anticluster label per object (view-relative row order).
+    pub labels: Vec<u32>,
+    /// Centroid-form diversity objective (total within-anticluster SSD).
+    pub diversity: f64,
+    /// Minimum within-anticluster pairwise squared distance.
+    pub dispersion: f64,
+}
+
+/// Bounded non-dominated archive (both criteria maximized).
+#[derive(Clone, Debug)]
+pub struct Archive {
+    /// Sorted by diversity descending / dispersion ascending.
+    points: Vec<ParetoPoint>,
+    cap: usize,
+}
+
+/// `a` weakly dominates `b`: no worse on either criterion.
+#[inline]
+fn weakly_dominates(a: (f64, f64), b: (f64, f64)) -> bool {
+    a.0 >= b.0 && a.1 >= b.1
+}
+
+impl Archive {
+    /// An empty archive holding at most `cap` points (`cap >= 2` so the
+    /// two extremes always survive thinning).
+    pub fn new(cap: usize) -> Self {
+        Self { points: Vec::new(), cap: cap.max(2) }
+    }
+
+    /// Configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Points currently on the front, diversity descending.
+    pub fn points(&self) -> &[ParetoPoint] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Consume the archive, yielding the front (diversity descending).
+    pub fn into_points(self) -> Vec<ParetoPoint> {
+        self.points
+    }
+
+    /// Offer a point. Returns `true` if it entered the archive (it may
+    /// still be thinned away later by a capacity squeeze).
+    pub fn insert(&mut self, p: ParetoPoint) -> bool {
+        let key = (p.diversity, p.dispersion);
+        if !key.0.is_finite() || !key.1.is_finite() {
+            return false; // degenerate partitions never enter the front
+        }
+        if self
+            .points
+            .iter()
+            .any(|q| weakly_dominates((q.diversity, q.dispersion), key))
+        {
+            return false; // an incumbent is at least as good everywhere
+        }
+        self.points
+            .retain(|q| !weakly_dominates(key, (q.diversity, q.dispersion)));
+        // Insertion sort position: diversity descending. Survivors never
+        // tie with `key` on diversity (a tie would have resolved above).
+        let pos = self
+            .points
+            .iter()
+            .position(|q| q.diversity < p.diversity)
+            .unwrap_or(self.points.len());
+        self.points.insert(pos, p);
+        while self.points.len() > self.cap {
+            self.thin_once();
+        }
+        true
+    }
+
+    /// Drain another archive into this one (its insertion order).
+    pub fn merge(&mut self, other: Archive) {
+        for p in other.points {
+            self.insert(p);
+        }
+    }
+
+    /// Remove the lowest-index interior point of minimal crowding
+    /// distance. Requires `len() > 2`.
+    fn thin_once(&mut self) {
+        debug_assert!(self.points.len() > 2);
+        let last = self.points.len() - 1;
+        let div_span =
+            (self.points[0].diversity - self.points[last].diversity).max(f64::MIN_POSITIVE);
+        let disp_span =
+            (self.points[last].dispersion - self.points[0].dispersion).max(f64::MIN_POSITIVE);
+        let mut victim = 1usize;
+        let mut best = f64::INFINITY;
+        for i in 1..last {
+            let crowd = (self.points[i - 1].diversity - self.points[i + 1].diversity) / div_span
+                + (self.points[i + 1].dispersion - self.points[i - 1].dispersion) / disp_span;
+            if crowd < best {
+                best = crowd;
+                victim = i;
+            }
+        }
+        self.points.remove(victim);
+    }
+}
+
+/// 2-D hypervolume (both criteria maximized) of `points` against a
+/// reference point `(ref_div, ref_disp)`: the area weakly dominated by
+/// the set and dominating the reference. Points not strictly better
+/// than the reference on both criteria contribute nothing.
+pub fn hypervolume(points: &[(f64, f64)], ref_point: (f64, f64)) -> f64 {
+    let mut ps: Vec<(f64, f64)> = points
+        .iter()
+        .copied()
+        .filter(|&(a, b)| a > ref_point.0 && b > ref_point.1)
+        .collect();
+    // Diversity descending; the dominated-area sweep below only credits
+    // dispersion above the running maximum, so dominated entries in the
+    // list contribute zero and need no explicit filtering.
+    ps.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap_or(std::cmp::Ordering::Equal));
+    let mut hv = 0f64;
+    let mut prev_disp = ref_point.1;
+    for (div, disp) in ps {
+        if disp > prev_disp {
+            hv += (div - ref_point.0) * (disp - prev_disp);
+            prev_disp = disp;
+        }
+    }
+    hv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn pt(div: f64, disp: f64) -> ParetoPoint {
+        ParetoPoint { labels: vec![0], diversity: div, dispersion: disp }
+    }
+
+    fn is_front(points: &[ParetoPoint]) -> bool {
+        for (i, a) in points.iter().enumerate() {
+            for (j, b) in points.iter().enumerate() {
+                if i != j
+                    && weakly_dominates((a.diversity, a.dispersion), (b.diversity, b.dispersion))
+                {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    #[test]
+    fn dominated_points_are_rejected_and_evicted() {
+        let mut ar = Archive::new(10);
+        assert!(ar.insert(pt(5.0, 1.0)));
+        assert!(ar.insert(pt(3.0, 2.0)));
+        assert!(!ar.insert(pt(4.0, 0.5))); // dominated by (5, 1)
+        assert!(!ar.insert(pt(5.0, 1.0))); // exact duplicate: keep incumbent
+        assert!(ar.insert(pt(6.0, 1.5))); // evicts (5, 1)
+        let keys: Vec<(f64, f64)> =
+            ar.points().iter().map(|p| (p.diversity, p.dispersion)).collect();
+        assert_eq!(keys, vec![(6.0, 1.5), (3.0, 2.0)]);
+    }
+
+    #[test]
+    fn non_domination_invariant_under_random_inserts() {
+        // Property: after any insertion sequence, the archive is a
+        // mutually non-dominated set, sorted by diversity descending,
+        // within capacity, and still holds both extreme points.
+        let mut rng = Pcg32::new(42);
+        for cap in [2usize, 3, 8, 64] {
+            let mut ar = Archive::new(cap);
+            let mut best_div = f64::NEG_INFINITY;
+            let mut best_disp = f64::NEG_INFINITY;
+            for _ in 0..500 {
+                let div = (rng.gen_below(50) as f64) / 3.0;
+                let disp = (rng.gen_below(50) as f64) / 7.0;
+                best_div = best_div.max(div.max(0.0));
+                best_disp = best_disp.max(disp.max(0.0));
+                ar.insert(pt(div, disp));
+                assert!(ar.len() <= cap);
+                assert!(is_front(ar.points()), "dominated pair survived");
+                for w in ar.points().windows(2) {
+                    assert!(w[0].diversity > w[1].diversity);
+                    assert!(w[0].dispersion < w[1].dispersion);
+                }
+            }
+            // Thinning never drops the extremes.
+            assert_eq!(ar.points()[0].diversity, best_div);
+            assert_eq!(ar.points()[ar.len() - 1].dispersion, best_disp);
+        }
+    }
+
+    #[test]
+    fn non_finite_points_never_enter() {
+        let mut ar = Archive::new(4);
+        assert!(!ar.insert(pt(f64::INFINITY, 1.0)));
+        assert!(!ar.insert(pt(1.0, f64::NAN)));
+        assert!(ar.is_empty());
+    }
+
+    #[test]
+    fn merge_is_insertion_in_order() {
+        let mut a = Archive::new(8);
+        a.insert(pt(5.0, 1.0));
+        let mut b = Archive::new(8);
+        b.insert(pt(6.0, 2.0));
+        b.insert(pt(4.0, 3.0));
+        a.merge(b);
+        assert_eq!(a.len(), 2); // (5,1) evicted by (6,2)
+        assert!(is_front(a.points()));
+    }
+
+    #[test]
+    fn hypervolume_rectangles() {
+        // Two staircase points over the origin.
+        let hv = hypervolume(&[(2.0, 1.0), (1.0, 3.0)], (0.0, 0.0));
+        // (2,1): 2x1 = 2; (1,3) adds 1 * (3-1) = 2.
+        assert_eq!(hv, 4.0);
+        // Points at or below the reference contribute nothing.
+        assert_eq!(hypervolume(&[(0.0, 5.0), (5.0, 0.0)], (0.0, 0.0)), 0.0);
+        // Dominated points add nothing.
+        let hv2 = hypervolume(&[(2.0, 1.0), (1.0, 3.0), (1.0, 0.5)], (0.0, 0.0));
+        assert_eq!(hv2, 4.0);
+        assert_eq!(hypervolume(&[], (0.0, 0.0)), 0.0);
+    }
+}

@@ -1,0 +1,331 @@
+//! Multi-restart bicriterion driver (the MBPI shape of Brusco et al.).
+//!
+//! Each restart is a self-contained unit of work: restart `r` draws all
+//! of its randomness from [`Pcg32::stream`]`(seed, r)` (the same
+//! stream-split scheme as [`crate::baselines::exchange`]), seeds a
+//! starting partition from one of three sources in rotation — the
+//! caller's ABA solution, a [`fast_anticlustering`] run, or a balanced
+//! random partition — samples a scalarization weight `w ∈ [0, 1)`, and
+//! runs [`Interchange`] passes, feeding every visited state into a
+//! restart-local [`Archive`].
+//!
+//! Restarts fan out over the session [`WorkerPool`] with `run_mut`;
+//! because each restart touches only its own slot and its own seed
+//! stream, and the local archives are merged serially in restart
+//! order afterwards, **Serial and Threads(n) produce bit-identical
+//! fronts** (property-tested).
+
+use super::archive::{hypervolume, Archive, ParetoPoint};
+use super::interchange::Interchange;
+use crate::algo::objective::ClusterStats;
+use crate::baselines::exchange::{fast_anticlustering, initial_partition, ExchangeConfig};
+use crate::data::DataView;
+use crate::error::{AbaError, AbaResult};
+use crate::rng::Pcg32;
+use crate::runtime::WorkerPool;
+
+/// Knobs of the multi-restart bicriterion engine.
+#[derive(Clone, Debug)]
+pub struct ParetoConfig {
+    /// Independent restarts (each one interchange search).
+    pub restarts: usize,
+    /// Maximum points the front may hold (crowding-thinned beyond).
+    pub archive_cap: usize,
+    /// Interchange passes per restart (a restart stops early once a
+    /// pass applies no swap).
+    pub passes: usize,
+    /// Candidate exchange partners drawn per object per pass.
+    pub partners: usize,
+    /// Root seed of the per-restart [`Pcg32::stream`] split.
+    pub seed: u64,
+}
+
+impl Default for ParetoConfig {
+    fn default() -> Self {
+        Self { restarts: 12, archive_cap: 24, passes: 3, partners: 8, seed: 0xA17C }
+    }
+}
+
+/// One partition on the returned front, with its diversity certificate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrontPoint {
+    /// Anticluster label per object (view-relative row order).
+    pub labels: Vec<u32>,
+    /// Centroid-form diversity objective (total within-anticluster SSD).
+    pub diversity: f64,
+    /// Minimum within-anticluster pairwise squared distance.
+    pub dispersion: f64,
+    /// Certified upper bound on the diversity of **any** balanced
+    /// k-partition of this data: `diversity + BGSS` (see
+    /// [`crate::cert::bounds`]); `>= diversity` exactly in fp.
+    pub upper_bound: f64,
+    /// Relative diversity optimality gap in `[0, 1]`.
+    pub gap: f64,
+}
+
+/// A diversity/dispersion Pareto front (both criteria maximized),
+/// sorted by diversity descending — equivalently dispersion ascending.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParetoFront {
+    pub points: Vec<FrontPoint>,
+    /// Restarts that produced it.
+    pub restarts: usize,
+}
+
+impl ParetoFront {
+    /// The diversity-extreme point (first: maximum diversity).
+    pub fn best_diversity(&self) -> Option<&FrontPoint> {
+        self.points.first()
+    }
+
+    /// The dispersion-extreme point (last: maximum dispersion).
+    pub fn best_dispersion(&self) -> Option<&FrontPoint> {
+        self.points.last()
+    }
+
+    /// 2-D hypervolume against a reference `(diversity, dispersion)`
+    /// point — e.g. the single-ABA solution's pair scaled down, so the
+    /// front's improvement over the one-objective solver is one number.
+    pub fn hypervolume(&self, ref_point: (f64, f64)) -> f64 {
+        let pts: Vec<(f64, f64)> =
+            self.points.iter().map(|p| (p.diversity, p.dispersion)).collect();
+        hypervolume(&pts, ref_point)
+    }
+}
+
+/// Preconditions of the bicriterion engine, surfaced as typed errors at
+/// the API boundary: beyond the standard shape checks, a balanced
+/// partition with `n < 2k` forces singleton anticlusters, whose
+/// dispersion is undefined (`objective::dispersion` returns
+/// `f64::INFINITY`) — refused up front instead of leaking `inf` into
+/// front output.
+pub fn validate(n: usize, k: usize) -> AbaResult<()> {
+    crate::algo::validate(n, k, false)?;
+    if n < 2 * k {
+        return Err(AbaError::InvalidK {
+            k,
+            n,
+            reason: format!(
+                "bicriterion search needs every anticluster to hold at least two objects \
+                 (n >= 2k, got n={n} < {}); singleton anticlusters have undefined \
+                 (infinite) dispersion",
+                2 * k
+            ),
+        });
+    }
+    Ok(())
+}
+
+/// Run the engine. `aba_seed` is the single-ABA solution used as the
+/// rotation's first seed source (and therefore always on or weakly
+/// dominated by the returned front); `pool` fans restarts out when
+/// present — the front is bit-identical either way.
+pub fn pareto_front(
+    view: &DataView<'_>,
+    k: usize,
+    cfg: &ParetoConfig,
+    aba_seed: Option<&[u32]>,
+    pool: Option<&WorkerPool>,
+) -> AbaResult<ParetoFront> {
+    validate(view.n(), k)?;
+    if cfg.restarts == 0 {
+        return Err(AbaError::InvalidInput("pareto: restarts must be >= 1".into()));
+    }
+    if let Some(seed) = aba_seed {
+        if seed.len() != view.n() {
+            return Err(AbaError::BadShape(format!(
+                "pareto: ABA seed labels have {} rows, view has {}",
+                seed.len(),
+                view.n()
+            )));
+        }
+    }
+    let mut slots: Vec<Option<Archive>> = (0..cfg.restarts).map(|_| None).collect();
+    let work = |r: usize, slot: &mut Option<Archive>| {
+        *slot = Some(run_restart(view, k, cfg, aba_seed, r));
+    };
+    match pool {
+        Some(p) if p.threads() > 1 => p.run_mut(&mut slots, &work),
+        _ => {
+            for (r, slot) in slots.iter_mut().enumerate() {
+                work(r, slot);
+            }
+        }
+    }
+    let mut archive = Archive::new(cfg.archive_cap);
+    for local in slots.into_iter().flatten() {
+        archive.merge(local);
+    }
+    let points = archive
+        .into_points()
+        .into_iter()
+        .map(|p| certify(view, k, p))
+        .collect();
+    Ok(ParetoFront { points, restarts: cfg.restarts })
+}
+
+/// Attach the diversity certificate (upper bound + gap) to a front
+/// point — same construction as [`crate::Partition::upper_bound`].
+fn certify(view: &DataView<'_>, k: usize, p: ParetoPoint) -> FrontPoint {
+    let stats = ClusterStats::compute(view, &p.labels, k);
+    let upper_bound = p.diversity + stats.bgss;
+    let gap = crate::cert::bounds::gap(p.diversity, upper_bound);
+    FrontPoint {
+        labels: p.labels,
+        diversity: p.diversity,
+        dispersion: p.dispersion,
+        upper_bound,
+        gap,
+    }
+}
+
+/// One restart: deterministic given `(view, k, cfg, aba_seed, r)`.
+fn run_restart(
+    view: &DataView<'_>,
+    k: usize,
+    cfg: &ParetoConfig,
+    aba_seed: Option<&[u32]>,
+    r: usize,
+) -> Archive {
+    let mut rng = Pcg32::stream(cfg.seed, r as u64);
+    let w = rng.f64();
+    let labels = match (r % 3, aba_seed) {
+        (0, Some(seed)) => seed.to_vec(),
+        (1, _) => {
+            let p = cfg.partners.max(2);
+            fast_anticlustering(view, k, &ExchangeConfig::random(p, rng.next_u64())).labels
+        }
+        _ => initial_partition(view, k, rng.next_u64()),
+    };
+    let mut local = Archive::new(cfg.archive_cap);
+    let mut search = Interchange::new(view.clone(), labels, k);
+    local.insert(ParetoPoint {
+        labels: search.labels().to_vec(),
+        diversity: search.diversity(),
+        dispersion: search.dispersion(),
+    });
+    for _ in 0..cfg.passes {
+        let swaps = search.pass(&mut rng, w, cfg.partners, |labels, div, disp| {
+            local.insert(ParetoPoint {
+                labels: labels.to_vec(),
+                diversity: div,
+                dispersion: disp,
+            });
+        });
+        if swaps == 0 {
+            break;
+        }
+    }
+    local
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::objective::dispersion;
+    use crate::data::synth::{generate, SynthKind};
+    use crate::data::Dataset;
+    use crate::solver::{Aba, Anticlusterer};
+
+    fn gaussian(n: usize, d: usize, seed: u64) -> Dataset {
+        generate(SynthKind::GaussianMixture { components: 4, spread: 4.0 }, n, d, seed, "g")
+    }
+
+    fn front_key(f: &ParetoFront) -> Vec<(u64, u64, Vec<u32>)> {
+        f.points
+            .iter()
+            .map(|p| (p.diversity.to_bits(), p.dispersion.to_bits(), p.labels.clone()))
+            .collect()
+    }
+
+    /// The determinism contract: Serial and Threads(3) runs produce
+    /// bit-identical fronts, on flat, categorical, and zero-copy
+    /// subset (hier-style) views.
+    #[test]
+    fn serial_and_pooled_fronts_bit_identical() {
+        let flat = gaussian(90, 4, 61);
+        let cats: Vec<u32> = (0..90).map(|i| (i % 2) as u32).collect();
+        let categorical = gaussian(90, 4, 62).with_categories(cats).unwrap();
+        let parent = gaussian(150, 4, 63);
+        let idx: Vec<usize> = (0..90).map(|i| i + 30).collect();
+        let hier_view = parent.view().select(&idx);
+        let views: Vec<DataView<'_>> = vec![flat.view(), categorical.view(), hier_view];
+        let pool = WorkerPool::new(3);
+        let cfg = ParetoConfig { restarts: 7, passes: 2, partners: 6, ..Default::default() };
+        for (t, view) in views.into_iter().enumerate() {
+            let k = 5;
+            let serial = pareto_front(&view, k, &cfg, None, None).unwrap();
+            let pooled = pareto_front(&view, k, &cfg, None, Some(&pool)).unwrap();
+            assert_eq!(front_key(&serial), front_key(&pooled), "view {t}");
+            assert!(!serial.points.is_empty());
+        }
+    }
+
+    /// The front weakly dominates the ABA seed's (diversity,
+    /// dispersion) point at its extremes, and every reported point is
+    /// internally consistent with a recompute.
+    #[test]
+    fn front_dominates_aba_seed_and_is_consistent() {
+        let ds = gaussian(120, 4, 64);
+        let view = ds.view();
+        let k = 6;
+        let aba = Aba::new().unwrap().partition(&ds, k).unwrap();
+        let aba_div = super::super::interchange::recompute_diversity(&view, &aba.labels, k);
+        let aba_disp = dispersion(&view, &aba.labels, k);
+        let cfg = ParetoConfig { restarts: 6, ..Default::default() };
+        let front = pareto_front(&view, k, &cfg, Some(&aba.labels), None).unwrap();
+        let best_div = front.best_diversity().unwrap();
+        let best_disp = front.best_dispersion().unwrap();
+        assert!(best_div.diversity >= aba_div, "{} < {aba_div}", best_div.diversity);
+        assert!(best_disp.dispersion >= aba_disp, "{} < {aba_disp}", best_disp.dispersion);
+        for p in &front.points {
+            assert_eq!(
+                p.diversity.to_bits(),
+                super::super::interchange::recompute_diversity(&view, &p.labels, k).to_bits()
+            );
+            assert_eq!(p.dispersion.to_bits(), dispersion(&view, &p.labels, k).to_bits());
+            assert!(p.upper_bound >= p.diversity);
+            assert!((0.0..=1.0).contains(&p.gap));
+        }
+        assert!(front.hypervolume((0.0, 0.0)) > 0.0);
+    }
+
+    /// Satellite: the singleton-dispersion precondition is a typed
+    /// error, not `inf` in output.
+    #[test]
+    fn singleton_clusters_are_a_typed_error() {
+        let ds = gaussian(9, 3, 65);
+        let err = pareto_front(&ds.view(), 5, &ParetoConfig::default(), None, None).unwrap_err();
+        match err {
+            AbaError::InvalidK { k, n, reason } => {
+                assert_eq!((k, n), (5, 9));
+                assert!(reason.contains("dispersion"), "{reason}");
+            }
+            other => panic!("expected InvalidK, got {other:?}"),
+        }
+        // n == 2k is the smallest legal instance.
+        let ds = gaussian(10, 3, 66);
+        let cfg = ParetoConfig { restarts: 2, ..Default::default() };
+        assert!(pareto_front(&ds.view(), 5, &cfg, None, None).is_ok());
+    }
+
+    #[test]
+    fn zero_restarts_rejected() {
+        let ds = gaussian(20, 3, 67);
+        let cfg = ParetoConfig { restarts: 0, ..Default::default() };
+        assert!(matches!(
+            pareto_front(&ds.view(), 2, &cfg, None, None),
+            Err(AbaError::InvalidInput(_))
+        ));
+    }
+
+    #[test]
+    fn mismatched_seed_shape_rejected() {
+        let ds = gaussian(20, 3, 68);
+        let seed = vec![0u32; 7];
+        assert!(matches!(
+            pareto_front(&ds.view(), 2, &ParetoConfig::default(), Some(&seed), None),
+            Err(AbaError::BadShape(_))
+        ));
+    }
+}

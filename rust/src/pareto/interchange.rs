@@ -1,0 +1,435 @@
+//! Bicriterion pairwise-interchange local search.
+//!
+//! One search state holds a balanced partition and maintains both
+//! criteria under object swaps:
+//!
+//! * **Diversity** (total within-anticluster SSD) is priced in O(d) per
+//!   candidate by cloning the two touched [`ClusterDelta`]s into
+//!   scratch and folding the swap through them. Applied swaps rebuild
+//!   the two touched clusters *canonically* (ascending member order via
+//!   [`ClusterDelta::from_rows`]) — the online subsystem's convention —
+//!   so the maintained total is **bit-identical** to a from-scratch
+//!   recompute ([`recompute_diversity`]) at every step.
+//! * **Dispersion** (minimum within-anticluster pairwise squared
+//!   distance) is maintained by [`DispersionState`]: a per-cluster
+//!   *near-pair threshold list* holding every pair at distance ≤ τ_c.
+//!   Because any listed survivor is ≤ τ_c while every unlisted pair is
+//!   > τ_c, the list alone prices "minimum with member x swapped out"
+//!   exactly; when a removal drains a list the cluster falls back to a
+//!   full scan / rebuild. Minima are folds over exact `f64` distance
+//!   values, so incremental maintenance is bit-identical to
+//!   [`crate::algo::objective::dispersion`] by construction (and
+//!   property-tested to be).
+//!
+//! Candidate swaps are scored by a weighted scalarization
+//! `w·Δdiversity/scale_div + (1−w)·Δdispersion/scale_disp` (scales
+//! frozen at the starting point); the per-object best strictly
+//! improving swap is applied, one pass touching every object once.
+//! Swaps exchange two objects' memberships, so anticluster sizes (and
+//! per-category counts in categorical mode) are invariant.
+
+use crate::algo::objective::ClusterDelta;
+use crate::data::DataView;
+use crate::metrics::members_of;
+use crate::rng::Pcg32;
+use std::borrow::Cow;
+
+/// Minimum scalarized score for a swap to count as improving.
+const GAIN_EPS: f64 = 1e-9;
+
+/// Canonical from-scratch diversity recompute: per-cluster
+/// [`ClusterDelta::from_rows`] in ascending member order, summed in
+/// cluster order — the bit-identity anchor for the maintained value.
+pub fn recompute_diversity(ds: &DataView<'_>, labels: &[u32], k: usize) -> f64 {
+    (0..k)
+        .map(|c| {
+            ClusterDelta::from_rows(ds.d(), members_of(labels, c as u32).map(|i| ds.row(i))).ssd()
+        })
+        .sum()
+}
+
+/// Incrementally maintained dispersion state: per-cluster sorted member
+/// lists, near-pair threshold lists, and cached exact minima.
+#[derive(Clone, Debug)]
+pub struct DispersionState {
+    /// `members[c]`: ascending view-row ids of anticluster `c`.
+    members: Vec<Vec<u32>>,
+    /// `pairs[c]`: every within-cluster pair `(i, j, dist2)` with
+    /// `dist2 <= tau[c]` (`i < j`).
+    pairs: Vec<Vec<(u32, u32, f64)>>,
+    tau: Vec<f64>,
+    /// Cached exact per-cluster minima (`INFINITY` below two members).
+    min: Vec<f64>,
+}
+
+impl DispersionState {
+    pub fn build(ds: &DataView<'_>, labels: &[u32], k: usize) -> Self {
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for (i, &c) in labels.iter().enumerate() {
+            members[c as usize].push(i as u32);
+        }
+        let mut st = Self {
+            members,
+            pairs: vec![Vec::new(); k],
+            tau: vec![f64::INFINITY; k],
+            min: vec![f64::INFINITY; k],
+        };
+        for c in 0..k {
+            st.rebuild_cluster(ds, c);
+        }
+        st
+    }
+
+    /// Near pairs to keep for a cluster of `m` members.
+    fn keep_target(m: usize) -> usize {
+        (4 * m).max(16)
+    }
+
+    fn rebuild_cluster(&mut self, ds: &DataView<'_>, c: usize) {
+        let ms = &self.members[c];
+        let m = ms.len();
+        self.pairs[c].clear();
+        if m < 2 {
+            self.tau[c] = f64::INFINITY;
+            self.min[c] = f64::INFINITY;
+            return;
+        }
+        let mut all: Vec<f64> = Vec::with_capacity(m * (m - 1) / 2);
+        for (a, &i) in ms.iter().enumerate() {
+            for &j in &ms[a + 1..] {
+                all.push(ds.dist2(i as usize, j as usize));
+            }
+        }
+        let keep = Self::keep_target(m).min(all.len());
+        let mut sorted = all.clone();
+        sorted.sort_by(|x, y| x.partial_cmp(y).expect("finite distances"));
+        let tau = sorted[keep - 1];
+        self.tau[c] = tau;
+        let mut flat = all.into_iter();
+        for (a, &i) in ms.iter().enumerate() {
+            for &j in &ms[a + 1..] {
+                let d2 = flat.next().expect("pair count");
+                if d2 <= tau {
+                    self.pairs[c].push((i, j, d2));
+                }
+            }
+        }
+        self.min[c] = sorted[0];
+    }
+
+    /// Exact global dispersion (minimum over clusters).
+    pub fn dispersion(&self) -> f64 {
+        self.min.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Exact minimum of one cluster.
+    pub fn cluster_min(&self, c: usize) -> f64 {
+        self.min[c]
+    }
+
+    /// Price the minimum of cluster `c` after member `out` is replaced
+    /// by non-member `inc` — exact, without mutating. Listed survivors
+    /// are ≤ τ_c while unlisted pairs are > τ_c, so the list minimum is
+    /// the true minimum whenever any survivor remains; otherwise the
+    /// remaining members are scanned in full.
+    pub fn price_swap(&self, ds: &DataView<'_>, c: usize, out: u32, inc: u32) -> f64 {
+        let ms = &self.members[c];
+        let mut best = f64::INFINITY;
+        let mut survivors = 0usize;
+        for &(a, b, d2) in &self.pairs[c] {
+            if a != out && b != out {
+                survivors += 1;
+                best = best.min(d2);
+            }
+        }
+        if survivors == 0 && ms.len() >= 3 {
+            for (ai, &i) in ms.iter().enumerate() {
+                if i == out {
+                    continue;
+                }
+                for &j in &ms[ai + 1..] {
+                    if j != out {
+                        best = best.min(ds.dist2(i as usize, j as usize));
+                    }
+                }
+            }
+        }
+        for &i in ms {
+            if i != out {
+                best = best.min(ds.dist2(inc as usize, i as usize));
+            }
+        }
+        best
+    }
+
+    /// Apply a swap on cluster `c`: member `out` leaves, `inc` arrives.
+    pub fn apply_swap(&mut self, ds: &DataView<'_>, c: usize, out: u32, inc: u32) {
+        let pos = self.members[c].binary_search(&out).expect("departing member present");
+        self.members[c].remove(pos);
+        self.pairs[c].retain(|&(a, b, _)| a != out && b != out);
+        let tau = self.tau[c];
+        for &i in &self.members[c] {
+            let d2 = ds.dist2(inc as usize, i as usize);
+            if d2 <= tau {
+                self.pairs[c].push((inc.min(i), inc.max(i), d2));
+            }
+        }
+        let pos = self.members[c].binary_search(&inc).expect_err("arriving member absent");
+        self.members[c].insert(pos, inc);
+        let m = self.members[c].len();
+        if m < 2 {
+            self.min[c] = f64::INFINITY;
+            self.pairs[c].clear();
+        } else if self.pairs[c].is_empty() || self.pairs[c].len() > 4 * Self::keep_target(m) {
+            // Drained (threshold no longer witnesses the minimum) or
+            // bloated (stale τ lists too many pairs): re-tighten.
+            self.rebuild_cluster(ds, c);
+        } else {
+            self.min[c] = self.pairs[c].iter().map(|p| p.2).fold(f64::INFINITY, f64::min);
+        }
+    }
+}
+
+/// One bicriterion local-search state over a balanced partition.
+pub struct Interchange<'a> {
+    ds: DataView<'a>,
+    k: usize,
+    labels: Vec<u32>,
+    cats: Option<Cow<'a, [u32]>>,
+    deltas: Vec<ClusterDelta>,
+    disp: DispersionState,
+    diversity: f64,
+    div_scale: f64,
+    disp_scale: f64,
+    scratch_a: ClusterDelta,
+    scratch_b: ClusterDelta,
+}
+
+impl<'a> Interchange<'a> {
+    pub fn new(ds: DataView<'a>, labels: Vec<u32>, k: usize) -> Self {
+        assert_eq!(labels.len(), ds.n());
+        let d = ds.d();
+        let deltas: Vec<ClusterDelta> = (0..k)
+            .map(|c| ClusterDelta::from_rows(d, members_of(&labels, c as u32).map(|i| ds.row(i))))
+            .collect();
+        let diversity: f64 = deltas.iter().map(|cd| cd.ssd()).sum();
+        let disp = DispersionState::build(&ds, &labels, k);
+        let dispersion = disp.dispersion();
+        let cats = ds.categories();
+        Self {
+            k,
+            labels,
+            cats,
+            deltas,
+            disp,
+            diversity,
+            div_scale: if diversity > 0.0 { diversity } else { 1.0 },
+            disp_scale: if dispersion.is_finite() && dispersion > 0.0 { dispersion } else { 1.0 },
+            scratch_a: ClusterDelta::new(d),
+            scratch_b: ClusterDelta::new(d),
+            ds,
+        }
+    }
+
+    pub fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    /// Maintained diversity — bit-identical to [`recompute_diversity`].
+    pub fn diversity(&self) -> f64 {
+        self.diversity
+    }
+
+    /// Maintained dispersion — bit-identical to
+    /// [`crate::algo::objective::dispersion`].
+    pub fn dispersion(&self) -> f64 {
+        self.disp.dispersion()
+    }
+
+    /// Scalarized score of swapping objects `i` and `j` under weight
+    /// `w` (1 = pure diversity, 0 = pure dispersion). O(d + L).
+    fn price(&mut self, i: usize, j: usize, w: f64) -> f64 {
+        let (a, b) = (self.labels[i] as usize, self.labels[j] as usize);
+        let (xi, xj) = (self.ds.row(i), self.ds.row(j));
+        self.scratch_a.clone_from(&self.deltas[a]);
+        self.scratch_a.remove(xi);
+        self.scratch_a.add(xj);
+        self.scratch_b.clone_from(&self.deltas[b]);
+        self.scratch_b.remove(xj);
+        self.scratch_b.add(xi);
+        let new_div = self.diversity - self.deltas[a].ssd() - self.deltas[b].ssd()
+            + self.scratch_a.ssd()
+            + self.scratch_b.ssd();
+        let mut new_disp = f64::INFINITY;
+        for c in 0..self.k {
+            if c != a && c != b {
+                new_disp = new_disp.min(self.disp.cluster_min(c));
+            }
+        }
+        new_disp = new_disp.min(self.disp.price_swap(&self.ds, a, i as u32, j as u32));
+        new_disp = new_disp.min(self.disp.price_swap(&self.ds, b, j as u32, i as u32));
+        w * (new_div - self.diversity) / self.div_scale
+            + (1.0 - w) * (new_disp - self.disp.dispersion()) / self.disp_scale
+    }
+
+    /// Apply the swap `i <-> j`, rebuilding the two touched clusters
+    /// canonically so both maintained criteria stay recompute-exact.
+    fn apply(&mut self, i: usize, j: usize) {
+        let (a, b) = (self.labels[i] as usize, self.labels[j] as usize);
+        self.disp.apply_swap(&self.ds, a, i as u32, j as u32);
+        self.disp.apply_swap(&self.ds, b, j as u32, i as u32);
+        self.labels[i] = b as u32;
+        self.labels[j] = a as u32;
+        let d = self.ds.d();
+        let da =
+            ClusterDelta::from_rows(d, members_of(&self.labels, a as u32).map(|r| self.ds.row(r)));
+        let db =
+            ClusterDelta::from_rows(d, members_of(&self.labels, b as u32).map(|r| self.ds.row(r)));
+        self.deltas[a] = da;
+        self.deltas[b] = db;
+        self.diversity = self.deltas.iter().map(|cd| cd.ssd()).sum();
+    }
+
+    /// One full pass: for each object, draw `partners` random candidate
+    /// partners from `rng`, apply the best strictly improving swap
+    /// (same-category only in categorical mode), and report each new
+    /// state through `on_swap(labels, diversity, dispersion)`. Returns
+    /// the number of swaps applied.
+    pub fn pass(
+        &mut self,
+        rng: &mut Pcg32,
+        w: f64,
+        partners: usize,
+        mut on_swap: impl FnMut(&[u32], f64, f64),
+    ) -> usize {
+        let n = self.ds.n();
+        let mut swaps = 0usize;
+        for i in 0..n {
+            let a = self.labels[i] as usize;
+            let mut best: Option<(usize, f64)> = None;
+            for _ in 0..partners {
+                let j = rng.gen_index(n);
+                if j == i || self.labels[j] as usize == a {
+                    continue;
+                }
+                if let Some(cats) = &self.cats {
+                    if cats[i] != cats[j] {
+                        continue;
+                    }
+                }
+                let score = self.price(i, j, w);
+                if score > GAIN_EPS && best.map_or(true, |(_, s)| score > s) {
+                    best = Some((j, score));
+                }
+            }
+            if let Some((j, _)) = best {
+                self.apply(i, j);
+                swaps += 1;
+                on_swap(&self.labels, self.diversity, self.disp.dispersion());
+            }
+        }
+        swaps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::objective::dispersion;
+    use crate::baselines::random_part::random_partition;
+    use crate::data::synth::{generate, SynthKind};
+    use crate::data::Dataset;
+
+    fn gaussian(n: usize, d: usize, seed: u64) -> Dataset {
+        generate(SynthKind::GaussianMixture { components: 4, spread: 4.0 }, n, d, seed, "g")
+    }
+
+    /// The satellite matrix: maintained criteria must equal the
+    /// from-scratch recomputes bit for bit after every pass, on flat,
+    /// categorical, and zero-copy subset (hier-style) views.
+    #[test]
+    fn maintained_criteria_bit_identical_to_recompute() {
+        let flat = gaussian(120, 5, 31);
+        let cats: Vec<u32> = (0..120).map(|i| (i % 2) as u32).collect();
+        let categorical = gaussian(120, 5, 32).with_categories(cats).unwrap();
+        let parent = gaussian(200, 5, 33);
+        let idx: Vec<usize> = (0..120).map(|i| i + 40).collect();
+        let hier_view = parent.view().select(&idx);
+        let views: Vec<DataView<'_>> =
+            vec![flat.view(), categorical.view(), hier_view];
+        for (t, view) in views.into_iter().enumerate() {
+            let k = 6;
+            let labels = random_partition(view.n(), k, 100 + t as u64);
+            let mut search = Interchange::new(view.clone(), labels, k);
+            let mut rng = Pcg32::new(7 + t as u64);
+            for (pass, w) in [1.0, 0.5, 0.0, 0.8].into_iter().enumerate() {
+                search.pass(&mut rng, w, 8, |_, _, _| {});
+                let div = recompute_diversity(&view, search.labels(), k);
+                let disp = dispersion(&view, search.labels(), k);
+                assert_eq!(
+                    search.diversity().to_bits(),
+                    div.to_bits(),
+                    "view {t} pass {pass}: diversity {} vs recompute {div}",
+                    search.diversity()
+                );
+                assert_eq!(
+                    search.dispersion().to_bits(),
+                    disp.to_bits(),
+                    "view {t} pass {pass}: dispersion {} vs recompute {disp}",
+                    search.dispersion()
+                );
+            }
+        }
+    }
+
+    /// `price_swap` must predict the post-swap cluster minimum exactly.
+    #[test]
+    fn dispersion_pricing_matches_applied_swap() {
+        let ds = gaussian(80, 4, 40);
+        let view = ds.view();
+        let k = 4;
+        let labels = random_partition(80, k, 9);
+        let mut st = DispersionState::build(&view, &labels, k);
+        let mut labels = labels;
+        let mut rng = Pcg32::new(11);
+        for _ in 0..200 {
+            let i = rng.gen_index(80);
+            let j = rng.gen_index(80);
+            let (a, b) = (labels[i] as usize, labels[j] as usize);
+            if i == j || a == b {
+                continue;
+            }
+            let pa = st.price_swap(&view, a, i as u32, j as u32);
+            let pb = st.price_swap(&view, b, j as u32, i as u32);
+            st.apply_swap(&view, a, i as u32, j as u32);
+            st.apply_swap(&view, b, j as u32, i as u32);
+            labels[i] = b as u32;
+            labels[j] = a as u32;
+            assert_eq!(st.cluster_min(a).to_bits(), pa.to_bits());
+            assert_eq!(st.cluster_min(b).to_bits(), pb.to_bits());
+            assert_eq!(st.dispersion().to_bits(), dispersion(&view, &labels, k).to_bits());
+        }
+    }
+
+    #[test]
+    fn swaps_preserve_sizes_and_categories() {
+        let n = 90;
+        let cats: Vec<u32> = (0..n).map(|i| (i % 3) as u32).collect();
+        let ds = gaussian(n, 3, 50).with_categories(cats.clone()).unwrap();
+        let view = ds.view();
+        let k = 3;
+        let labels = crate::baselines::random_part::random_partition_categorical(&cats, k, 4);
+        let init = labels.clone();
+        let mut search = Interchange::new(view, labels, k);
+        let mut rng = Pcg32::new(3);
+        let swaps = search.pass(&mut rng, 0.7, 10, |_, _, _| {});
+        assert!(swaps > 0, "expected the pass to find improving swaps");
+        // Per-category-per-cluster counts are invariant under swaps.
+        for g in 0..3u32 {
+            for c in 0..k as u32 {
+                let cnt = |ls: &[u32]| (0..n).filter(|&i| cats[i] == g && ls[i] == c).count();
+                assert_eq!(cnt(&init), cnt(search.labels()), "category {g} cluster {c}");
+            }
+        }
+    }
+}

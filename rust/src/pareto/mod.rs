@@ -1,0 +1,39 @@
+//! Bicriterion Pareto search over the diversity/dispersion trade-off.
+//!
+//! ABA optimizes a single diversity objective, but the bicriterion
+//! anticlustering literature (Brusco, Cradit & Steinley's MBPI; §3 of
+//! the paper) asks for the *trade-off* between
+//!
+//! * **diversity** — total within-anticluster SSD (maximized), and
+//! * **dispersion** — the minimum within-anticluster pairwise squared
+//!   distance (maximized),
+//!
+//! made explicit as a Pareto set of partitions. This subsystem provides
+//! exactly that, in three layers:
+//!
+//! * [`archive`] — a bounded non-dominated [`Archive`] with
+//!   deterministic tie-breaking and crowding-style thinning, plus the
+//!   2-D [`hypervolume`] indicator;
+//! * [`interchange`] — the bicriterion pairwise-[`Interchange`] local
+//!   search: O(d) diversity pricing through
+//!   [`crate::algo::objective::ClusterDelta`], incremental dispersion
+//!   through a per-cluster near-pair threshold list
+//!   ([`DispersionState`]), both maintained bit-identical to
+//!   from-scratch recomputes;
+//! * [`engine`] — the multi-restart driver: restarts seeded from ABA
+//!   solutions, `fast_anticlustering`, and random partitions under
+//!   weight-sampled scalarizations, fanned out on the session
+//!   [`crate::runtime::WorkerPool`] with per-restart
+//!   [`crate::rng::Pcg32::stream`] seed streams so Serial ≡ Threads(n)
+//!   fronts are bit-identical.
+//!
+//! Entry points: [`crate::Aba::pareto_front`] (sessions), `aba pareto`
+//! (CLI), `POST /v1/partitions/{id}/pareto` (serve).
+
+pub mod archive;
+pub mod engine;
+pub mod interchange;
+
+pub use archive::{hypervolume, Archive, ParetoPoint};
+pub use engine::{pareto_front, FrontPoint, ParetoConfig, ParetoFront};
+pub use interchange::{recompute_diversity, DispersionState, Interchange};

@@ -33,6 +33,12 @@ pub struct Metrics {
     pub dense_batches: AtomicU64,
     pub sparse_escalations: AtomicU64,
     pub sparse_fallbacks: AtomicU64,
+    /// Bicriterion Pareto requests served
+    /// (`POST /v1/partitions/{id}/pareto`), the restarts they ran, and
+    /// the size of the most recent front (gauge).
+    pub pareto_requests: AtomicU64,
+    pub pareto_restarts: AtomicU64,
+    pub pareto_front_size_last: AtomicU64,
     /// Optimality gaps observed on create/get responses
     /// ([`crate::OnlinePartition::gap`]), stored in parts-per-million:
     /// count, most recent, and running maximum.
@@ -72,6 +78,14 @@ impl Metrics {
         self.dense_batches.fetch_add(s.dense_batches as u64, Ordering::Relaxed);
         self.sparse_escalations.fetch_add(s.escalations as u64, Ordering::Relaxed);
         self.sparse_fallbacks.fetch_add(s.fallback_batches as u64, Ordering::Relaxed);
+    }
+
+    /// Record one bicriterion Pareto solve: the restarts it ran and the
+    /// front size it produced.
+    pub fn observe_pareto(&self, restarts: usize, front_size: usize) {
+        self.pareto_requests.fetch_add(1, Ordering::Relaxed);
+        self.pareto_restarts.fetch_add(restarts as u64, Ordering::Relaxed);
+        self.pareto_front_size_last.store(front_size as u64, Ordering::Relaxed);
     }
 
     /// Record one partition's optimality gap (a fraction in `[0, 1]`,
@@ -122,6 +136,9 @@ impl Metrics {
              aba_gap_observations {}\n\
              aba_gap_last_ppm {}\n\
              aba_gap_max_ppm {}\n\
+             aba_pareto_requests_total {}\n\
+             aba_pareto_restarts_total {}\n\
+             aba_pareto_front_size_last {}\n\
              aba_kernel_isa {}\n",
             g(&self.requests_total),
             g(&self.responses_2xx),
@@ -141,6 +158,9 @@ impl Metrics {
             g(&self.gap_observations),
             g(&self.gap_last_ppm),
             g(&self.gap_max_ppm),
+            g(&self.pareto_requests),
+            g(&self.pareto_restarts),
+            g(&self.pareto_front_size_last),
             kernel_isa,
         )
     }
@@ -186,6 +206,20 @@ mod tests {
         let text = m.render(0, "scalar");
         assert!(text.contains("aba_gap_last_ppm 1000000"), "{text}");
         assert!(text.contains("aba_gap_observations 3"), "{text}");
+    }
+
+    #[test]
+    fn pareto_counters_accumulate_and_render() {
+        let m = Metrics::new();
+        m.observe_pareto(12, 5);
+        m.observe_pareto(4, 3);
+        assert_eq!(m.pareto_requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.pareto_restarts.load(Ordering::Relaxed), 16);
+        assert_eq!(m.pareto_front_size_last.load(Ordering::Relaxed), 3);
+        let text = m.render(0, "scalar");
+        assert!(text.contains("aba_pareto_requests_total 2"), "{text}");
+        assert!(text.contains("aba_pareto_restarts_total 16"), "{text}");
+        assert!(text.contains("aba_pareto_front_size_last 3"), "{text}");
     }
 
     #[test]

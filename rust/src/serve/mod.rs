@@ -18,6 +18,7 @@
 //! | `POST /v1/partitions/{id}/insert`  | stream new rows in (inline CSV)     |
 //! | `POST /v1/partitions/{id}/remove`  | retire rows by id                   |
 //! | `POST /v1/partitions/{id}/refine`  | budgeted swap repair                |
+//! | `POST /v1/partitions/{id}/pareto`  | bicriterion front ([`crate::pareto`]) |
 //! | `GET  /metrics`                    | text telemetry ([`metrics`])        |
 //! | `GET  /healthz`                    | liveness                            |
 //! | `POST /v1/admin/drain`             | graceful drain (as does `SIGTERM`)  |
@@ -394,6 +395,7 @@ fn route(ctx: &Ctx, session: &mut Aba, req: &Request) -> Response {
         ("POST", ["v1", "partitions", id, "insert"]) => op_insert(ctx, id, req),
         ("POST", ["v1", "partitions", id, "remove"]) => op_remove(ctx, id, req),
         ("POST", ["v1", "partitions", id, "refine"]) => op_refine(ctx, id, req),
+        ("POST", ["v1", "partitions", id, "pareto"]) => op_pareto(ctx, id, req),
         _ => Response::error(404, &format!("no route for {} {}", req.method, req.path)),
     }
 }
@@ -602,6 +604,82 @@ fn op_refine(ctx: &Ctx, id: &str, req: &Request) -> Response {
             ("evaluated", num(stats.evaluated as f64)),
             ("swapped", num(stats.swapped as f64)),
             ("est_gain", num(stats.est_gain)),
+        ]),
+    )
+}
+
+/// `POST /v1/partitions/{id}/pareto` — body `{}` or any of
+/// `{"restarts": .., "archive_cap": .., "passes": .., "partners": ..,
+/// "seed": ..}`; runs the bicriterion multi-restart engine
+/// ([`crate::pareto`]) over the handle's current contents and returns
+/// the diversity/dispersion front with per-point certificate bounds.
+fn op_pareto(ctx: &Ctx, id: &str, req: &Request) -> Response {
+    let body = match parse_body(req) {
+        Ok(b) => b,
+        Err(resp) => return resp,
+    };
+    let mut cfg = crate::pareto::ParetoConfig::default();
+    if let Some(r) = body.get("restarts").and_then(Json::as_usize) {
+        cfg.restarts = r;
+    }
+    if let Some(c) = body.get("archive_cap").and_then(Json::as_usize) {
+        cfg.archive_cap = c;
+    }
+    if let Some(p) = body.get("passes").and_then(Json::as_usize) {
+        cfg.passes = p;
+    }
+    if let Some(p) = body.get("partners").and_then(Json::as_usize) {
+        cfg.partners = p;
+    }
+    if let Some(s) = body.get("seed").and_then(Json::as_usize) {
+        cfg.seed = s as u64;
+    }
+    let handle = match load_handle(ctx, id) {
+        Ok(h) => h,
+        Err(resp) => return resp,
+    };
+    // Copy the handle's contents out under the lock, then release it —
+    // the multi-restart search must not block other requests on this
+    // partition. `to_dataset` rows follow `entries()` ascending-id
+    // order, so the handle's labels line up with the dataset rows and
+    // seed restart 0: the front starts from (and must weakly dominate)
+    // the served partition's own point.
+    let part = handle.lock().unwrap();
+    let ds = match part.to_dataset(id) {
+        Ok(ds) => ds,
+        Err(e) => return err_response(&e),
+    };
+    let seed_labels: Vec<u32> = part.entries().into_iter().map(|(_, lab)| lab).collect();
+    let k = part.k();
+    drop(part);
+    let front =
+        match crate::pareto::engine::pareto_front(&ds.view(), k, &cfg, Some(&seed_labels), None) {
+            Ok(f) => f,
+            Err(e) => return err_response(&e),
+        };
+    ctx.metrics.observe_pareto(cfg.restarts, front.points.len());
+    let points = Json::Arr(
+        front
+            .points
+            .iter()
+            .map(|p| {
+                let mut m = BTreeMap::new();
+                m.insert("diversity".to_string(), num(p.diversity));
+                m.insert("dispersion".to_string(), num(p.dispersion));
+                m.insert("upper_bound".to_string(), num(p.upper_bound));
+                m.insert("gap".to_string(), num(p.gap));
+                Json::Obj(m)
+            })
+            .collect(),
+    );
+    Response::json(
+        200,
+        obj(vec![
+            ("id", Json::Str(id.to_string())),
+            ("restarts", num(front.restarts as f64)),
+            ("front_size", num(front.points.len() as f64)),
+            ("hypervolume", num(front.hypervolume((0.0, 0.0)))),
+            ("front", points),
         ]),
     )
 }

@@ -37,6 +37,7 @@ use crate::cert;
 use crate::data::{DataView, Dataset};
 use crate::error::{AbaError, AbaResult};
 use crate::online::OnlinePartition;
+use crate::pareto::{ParetoConfig, ParetoFront};
 use crate::runtime::{make_backend, BackendKind, CostBackend, KernelMode, Kernels, Parallelism};
 use std::time::Instant;
 
@@ -180,6 +181,7 @@ impl Partition {
 pub struct AbaBuilder {
     cfg: AbaConfig,
     constraints: Option<Constraints>,
+    pareto: Option<ParetoConfig>,
 }
 
 impl AbaBuilder {
@@ -309,6 +311,17 @@ impl AbaBuilder {
         self
     }
 
+    /// Configuration for [`Aba::pareto_front`] (the bicriterion
+    /// multi-restart engine of [`crate::pareto`]). Optional: sessions
+    /// built without it fall back to [`ParetoConfig::default`] when
+    /// `pareto_front` is called. Like `constraints`, this rides on the
+    /// session beside [`AbaConfig`] — it never enters config
+    /// fingerprints or snapshots.
+    pub fn pareto(mut self, cfg: ParetoConfig) -> Self {
+        self.pareto = Some(cfg);
+        self
+    }
+
     /// Must-link / cannot-link constraints enforced on every partition.
     /// The constrained loop uses its own super-object ordering and
     /// masking-heavy dense costs, so `variant`, `hier`, `auto_hier`,
@@ -349,6 +362,7 @@ impl AbaBuilder {
         Ok(Aba {
             cfg: self.cfg,
             constraints: self.constraints,
+            pareto: self.pareto,
             backend,
             kernels,
             scratch: algo::core::Scratch::with_lapjv_warm(warm),
@@ -367,6 +381,7 @@ impl AbaBuilder {
 pub struct Aba {
     cfg: AbaConfig,
     constraints: Option<Constraints>,
+    pareto: Option<ParetoConfig>,
     backend: Box<dyn CostBackend>,
     kernels: Kernels,
     scratch: algo::core::Scratch,
@@ -386,7 +401,7 @@ impl Aba {
 
     /// A session from an existing [`AbaConfig`].
     pub fn from_config(cfg: AbaConfig) -> AbaResult<Self> {
-        AbaBuilder { cfg, constraints: None }.build()
+        AbaBuilder { cfg, constraints: None, pareto: None }.build()
     }
 
     /// The session's configuration.
@@ -602,6 +617,34 @@ impl Aba {
             ));
         }
         OnlinePartition::load(path, &self.cfg)
+    }
+
+    /// Diversity/dispersion Pareto front over `view` (see
+    /// [`crate::pareto`]): the session solves once with ABA to anchor
+    /// the front, then runs the multi-restart bicriterion interchange
+    /// engine under this session's [`AbaBuilder::pareto`] configuration
+    /// (defaults when unset), fanning restarts out on the session
+    /// worker pool — Serial and Threads(n) fronts are bit-identical.
+    ///
+    /// Typed refusals: `n < 2k` ([`AbaError::InvalidK`] — balanced
+    /// singleton anticlusters have undefined dispersion) and
+    /// constrained sessions ([`AbaError::ConstraintInfeasible`] — the
+    /// interchange does not maintain pairwise constraints).
+    pub fn pareto_front(&mut self, view: &DataView<'_>, k: usize) -> AbaResult<ParetoFront> {
+        crate::pareto::engine::validate(view.n(), k)?;
+        if self.constraints.is_some() {
+            return Err(AbaError::ConstraintInfeasible(
+                "the bicriterion interchange does not maintain must-link/cannot-link \
+                 constraints; use partition_view for constrained sessions"
+                    .into(),
+            ));
+        }
+        let cfg = self.pareto.clone().unwrap_or_default();
+        // The session's own ABA solution seeds the restart rotation
+        // (and is therefore weakly dominated by the returned front).
+        let (aba_labels, _) = self.partition_labels(view, k)?;
+        let pool = self.scratch.pool_for(self.cfg.parallelism);
+        crate::pareto::engine::pareto_front(view, k, &cfg, Some(&aba_labels), pool.as_deref())
     }
 }
 
@@ -943,6 +986,47 @@ mod tests {
         // forcing the fallback must not move a single bit.
         assert_eq!(a.labels, b.labels);
         assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    }
+
+    #[test]
+    fn pareto_front_rides_the_session() {
+        let ds = generate(
+            SynthKind::GaussianMixture { components: 4, spread: 4.0 },
+            90,
+            4,
+            27,
+            "s",
+        );
+        let mut session = Aba::builder()
+            .pareto(ParetoConfig { restarts: 4, seed: 3, ..Default::default() })
+            .parallelism(Parallelism::Threads(2))
+            .build()
+            .unwrap();
+        let aba = session.partition(&ds, 5).unwrap();
+        let front = session.pareto_front(&ds.view(), 5).unwrap();
+        assert!(!front.points.is_empty());
+        // The ABA seed anchors the diversity extreme: the front's best
+        // diversity can only weakly dominate the single solve's.
+        let best = front.best_diversity().unwrap();
+        assert!(best.diversity >= aba.objective * (1.0 - 1e-9));
+        // Same run on a serial session: bit-identical front.
+        let mut serial = Aba::builder()
+            .pareto(ParetoConfig { restarts: 4, seed: 3, ..Default::default() })
+            .build()
+            .unwrap();
+        let front2 = serial.pareto_front(&ds.view(), 5).unwrap();
+        assert_eq!(front, front2);
+        // Typed refusals at the session boundary.
+        assert!(matches!(
+            session.pareto_front(&ds.view(), 60),
+            Err(AbaError::InvalidK { .. })
+        ));
+        let cons = crate::algo::Constraints { must_link: vec![vec![0, 1]], cannot_link: vec![] };
+        let mut constrained = Aba::builder().constraints(cons).build().unwrap();
+        assert!(matches!(
+            constrained.pareto_front(&ds.view(), 5),
+            Err(AbaError::ConstraintInfeasible(_))
+        ));
     }
 
     #[test]

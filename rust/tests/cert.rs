@@ -255,6 +255,42 @@ fn aba_k2_dispersion_gap_vs_oracle_is_pinned() {
     }
 }
 
+/// Satellite 2c: at K=2 the bicriterion Pareto front's dispersion
+/// extreme is pinned to the exact coloring optimum
+/// ([`aba::cert::two_color`]). Seeding the engine with the coloring's
+/// labels puts the optimum in the archive, so the front must hold it —
+/// and since the coloring is exact, no balanced 2-partition the search
+/// visits can beat it.
+#[test]
+fn pareto_front_dispersion_extreme_matches_two_color_oracle() {
+    use aba::pareto::{pareto_front, ParetoConfig};
+    for seed in [3u64, 11, 42] {
+        let ds = generate(
+            SynthKind::GaussianMixture { components: 3, spread: 2.5 },
+            16,
+            3,
+            seed,
+            "k2-front",
+        );
+        let view = ds.view();
+        let exact = cert::two_color::solve_balanced(&view).unwrap();
+        let opt = objective::dispersion(&view, &exact.labels, 2);
+        let cfg = ParetoConfig { restarts: 5, seed, ..Default::default() };
+        let front = pareto_front(&view, 2, &cfg, Some(&exact.labels), None).unwrap();
+        let best = front.best_dispersion().unwrap();
+        assert!(
+            best.dispersion <= opt,
+            "seed {seed}: front dispersion {} beats the exact optimum {opt}",
+            best.dispersion
+        );
+        assert_eq!(
+            best.dispersion.to_bits(),
+            opt.to_bits(),
+            "seed {seed}: front dropped the seeded dispersion optimum {opt}"
+        );
+    }
+}
+
 /// Satellite 3: fuzzed snapshot parsing. Truncations and byte-level
 /// mutations of a valid snapshot document must never panic: the JSON
 /// layer reports a typed error with an in-range byte offset and a

@@ -388,6 +388,72 @@ fn shard_merge_balanced_and_close_to_flat() {
 }
 
 #[test]
+fn pareto_endpoint_returns_front_and_counts_in_metrics() {
+    let server = Server::start(ServeConfig {
+        workers: 1,
+        snapshot_dir: fresh_dir("pareto"),
+        cfg: base_cfg(),
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = server.addr();
+
+    let ds = generate(SynthKind::GaussianMixture { components: 4, spread: 3.0 }, 48, 3, 71, "pf");
+    let body = jobj(vec![
+        ("id", Json::Str("pf".into())),
+        ("k", Json::Num(4.0)),
+        ("csv", Json::Str(csv_of(&ds))),
+    ]);
+    let (status, _, resp) = request(addr, "POST", "/v1/partitions", &body);
+    assert_eq!(status, 201, "{resp}");
+    let served_obj = parse_json(&resp).get("objective").and_then(Json::as_f64).unwrap();
+
+    let body = jobj(vec![("restarts", Json::Num(5.0)), ("seed", Json::Num(9.0))]);
+    let (status, _, resp) = request(addr, "POST", "/v1/partitions/pf/pareto", &body);
+    assert_eq!(status, 200, "{resp}");
+    let got = parse_json(&resp);
+    let front_size = got.get("front_size").and_then(Json::as_usize).unwrap();
+    assert!(front_size >= 1, "{resp}");
+    assert!(got.get("hypervolume").and_then(Json::as_f64).unwrap() > 0.0, "{resp}");
+    let front = got.get("front").and_then(Json::as_arr).unwrap();
+    assert_eq!(front.len(), front_size);
+    for p in front {
+        let div = p.get("diversity").and_then(Json::as_f64).unwrap();
+        let ub = p.get("upper_bound").and_then(Json::as_f64).unwrap();
+        let gap = p.get("gap").and_then(Json::as_f64).unwrap();
+        assert!(ub >= div, "bound {ub} below diversity {div}");
+        assert!((0.0..=1.0).contains(&gap), "gap {gap}");
+    }
+    // Restart 0 seeds from the handle's own labels, so the front's
+    // diversity extreme weakly dominates the served partition's point.
+    let best_div = front[0].get("diversity").and_then(Json::as_f64).unwrap();
+    assert!(
+        best_div >= served_obj * (1.0 - 1e-9),
+        "front diversity {best_div} below served objective {served_obj}"
+    );
+
+    // A balanced k=4 split of 7 rows has a singleton cluster, so the
+    // dispersion criterion is degenerate — a typed 400, not a crash.
+    let tiny = generate(SynthKind::Uniform, 7, 3, 72, "tiny");
+    let body = jobj(vec![
+        ("id", Json::Str("tiny".into())),
+        ("k", Json::Num(4.0)),
+        ("csv", Json::Str(csv_of(&tiny))),
+    ]);
+    assert_eq!(request(addr, "POST", "/v1/partitions", &body).0, 201);
+    let (status, _, resp) = request(addr, "POST", "/v1/partitions/tiny/pareto", "{}");
+    assert_eq!(status, 400, "{resp}");
+    assert!(resp.contains("dispersion"), "{resp}");
+
+    let (status, _, resp) = request(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    assert!(resp.contains("aba_pareto_requests_total 1"), "{resp}");
+    assert!(resp.contains("aba_pareto_restarts_total 5"), "{resp}");
+    assert!(resp.contains(&format!("aba_pareto_front_size_last {front_size}")), "{resp}");
+    server.drain().unwrap();
+}
+
+#[test]
 fn backpressure_returns_429_with_retry_after() {
     // One slow worker (300 ms per request) and a queue of one: a burst
     // of six concurrent requests must overflow into 429s.
